@@ -1,0 +1,67 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/load_hlo/ and its README.
+
+Run once at build time (``make artifacts``); Python never executes on the
+Rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pagerank(n: int) -> str:
+    lowered = jax.jit(model.pagerank_step).lower(*model.pagerank_step_spec(n))
+    return to_hlo_text(lowered)
+
+
+def lower_modularity(n: int, c: int) -> str:
+    lowered = jax.jit(model.modularity).lower(*model.modularity_spec(n, c))
+    return to_hlo_text(lowered)
+
+
+ARTIFACTS = {
+    # name -> thunk producing HLO text
+    "pagerank_step_256": lambda: lower_pagerank(256),
+    "pagerank_step_512": lambda: lower_pagerank(512),
+    "modularity_256": lambda: lower_modularity(256, 64),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.only] if args.only else list(ARTIFACTS)
+    for name in names:
+        text = ARTIFACTS[name]()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is the *definition* of correct; pytest asserts the Pallas /
+model outputs against these with tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(m, x):
+    """Oracle for kernels.spmv.blocked_matmul."""
+    return jnp.dot(m, x, preferred_element_type=jnp.float32)
+
+
+def pagerank_step_ref(m_norm, r, dangling, uniform, alpha):
+    """Oracle mirroring model.pagerank_step.
+
+    Args:
+      m_norm: (n, n) f32 — column-normalized transposed adjacency:
+        ``M[u, v] = 1/outdeg(v)`` if edge v->u else 0 (dangling columns 0).
+      r: (n, s) f32 — current rank columns (each sums to 1 over real rows).
+      dangling: (n, 1) f32 — 1.0 where the vertex is real *and* dangling
+        (outdeg 0), else 0.0; padded rows 0.
+      uniform: (n, 1) f32 — 1/n_real on real rows, 0 on padded rows (this
+        doubles as the real-vertex mask scaled by 1/n_real).
+      alpha: () f32 — damping factor.
+
+    Returns: (n, s) f32 next rank columns.
+    """
+    spread = jnp.dot(m_norm, r, preferred_element_type=jnp.float32)
+    dangling_mass = jnp.sum(r * dangling, axis=0, keepdims=True)  # (1, s)
+    return alpha * (spread + uniform * dangling_mass) + (1.0 - alpha) * uniform
+
+
+def modularity_ref(adj, onehot, two_m):
+    """Louvain modularity Q (oracle).
+
+    Q = (1/2m) * sum_ij (A_ij - k_i k_j / 2m) * [c_i == c_j]
+      = (1/2m) * [ tr(S^T A S) - ||k^T S||^2 / 2m ]
+
+    Args:
+      adj: (n, n) f32 symmetric weighted adjacency (padded rows/cols 0).
+      onehot: (n, c) f32 community one-hot (padded rows all-zero).
+      two_m: () f32 — total weight 2m = sum(adj).
+    """
+    k = jnp.sum(adj, axis=1)  # (n,)
+    intra = jnp.sum(jnp.dot(adj, onehot) * onehot)
+    ks = jnp.dot(k, onehot)  # (c,)
+    return (intra - jnp.sum(ks * ks) / two_m) / two_m

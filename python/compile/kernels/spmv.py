@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: blocked dense matmul-accumulate.
+
+This is the numeric hot-spot of the AOT-compiled PageRank power-iteration
+step (and the Louvain modularity scorer): ``Y = M @ X`` where ``M`` is a
+padded dense (column-normalized, transposed) adjacency tile grid and ``X``
+holds one column per concurrent source (the paper's multi-source theme —
+s = 8 lanes lets the same executable drive multi-source personalized
+PageRank).
+
+TPU-idiomatic structure (see DESIGN.md §Hardware-Adaptation):
+  * tiles are (BLOCK x BLOCK) with BLOCK = 128 — MXU-aligned, 64 KiB per
+    f32 tile, three live tiles = 192 KiB << 16 MiB VMEM;
+  * the BlockSpec grid expresses the HBM<->VMEM schedule: grid =
+    (rows/BLOCK, cols/BLOCK), the output tile is revisited across the
+    contraction dimension and accumulated in VMEM;
+  * ``interpret=True`` because the CPU PJRT plugin cannot execute Mosaic
+    custom-calls; real-TPU numbers are estimated in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128  # MXU-aligned tile edge
+
+
+def _matmul_kernel(m_ref, x_ref, o_ref):
+    """One (i, k) grid step: o[i] += m[i, k] @ x[k].
+
+    Grid iteration order is row-major, so for a fixed output row-tile ``i``
+    all contraction steps ``k`` run consecutively while ``o_ref`` stays
+    resident in VMEM — a classic accumulate-in-place schedule.
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        m_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def blocked_matmul(m: jax.Array, x: jax.Array, *, block: int = BLOCK) -> jax.Array:
+    """Compute ``m @ x`` with the Pallas tile kernel.
+
+    Args:
+      m: (n, n) f32 — padded dense operator (n must be a multiple of block).
+      x: (n, s) f32 — s right-hand-side columns (s multiple of 8).
+      block: tile edge; must divide both n and s-padded extents.
+
+    Returns:
+      (n, s) f32 product.
+    """
+    n, n2 = m.shape
+    if n != n2:
+        raise ValueError(f"m must be square, got {m.shape}")
+    if n % block:
+        raise ValueError(f"n={n} not a multiple of block={block}")
+    s = x.shape[1]
+    sblock = min(block, s)
+    if s % sblock:
+        raise ValueError(f"s={s} not a multiple of sblock={sblock}")
+
+    grid = (n // block, n // block)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, k: (i, k)),
+            pl.BlockSpec((block, sblock), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, sblock), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(m, x)

@@ -1,0 +1,74 @@
+"""Layer-2 JAX model: the AOT-compiled compute graphs.
+
+Two computations are lowered to HLO text by ``aot.py`` and executed from the
+Rust coordinator through PJRT (see ``rust/src/runtime/``):
+
+  * ``pagerank_step`` — one damped power-iteration step over a padded dense
+    operator, s = 8 rank columns at once (multi-source personalized
+    PageRank shares the executable). The contraction runs through the
+    Layer-1 Pallas tile kernel.
+  * ``modularity`` — Louvain modularity Q for a padded dense adjacency and
+    community one-hot; the ``A @ S`` product runs through the same Pallas
+    kernel.
+
+Shapes are static per artifact (HLO has no dynamic shapes): the Rust side
+pads the active subgraph to the artifact size and masks padded rows with
+zeros, which both computations are closed under (zero rows/cols contribute
+nothing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spmv import blocked_matmul
+
+# Lane count for the rank matrix: one PageRank vector per lane.
+LANES = 8
+
+
+def pagerank_step(m_norm, r, dangling, uniform, alpha):
+    """One damped PageRank step: ``r' = a (M r + u m_d) + (1-a) u``.
+
+    Args / semantics match ``kernels.ref.pagerank_step_ref``; the only
+    difference is that the (n, n) x (n, s) contraction is the Pallas
+    blocked-matmul kernel instead of ``jnp.dot``.
+    """
+    spread = blocked_matmul(m_norm, r)
+    dangling_mass = jnp.sum(r * dangling, axis=0, keepdims=True)  # (1, s)
+    return (alpha * (spread + uniform * dangling_mass) + (1.0 - alpha) * uniform,)
+
+
+def modularity(adj, onehot, two_m):
+    """Louvain modularity Q (see ``kernels.ref.modularity_ref``).
+
+    ``A @ S`` is the Pallas kernel; the rank-1 degree correction stays in
+    plain XLA ops (it is O(n*c), negligible next to the O(n^2 c) product).
+    """
+    k = jnp.sum(adj, axis=1)
+    intra = jnp.sum(blocked_matmul(adj, onehot) * onehot)
+    ks = jnp.dot(k, onehot)
+    return ((intra - jnp.sum(ks * ks) / two_m) / two_m,)
+
+
+def pagerank_step_spec(n: int):
+    """ShapeDtypeStructs for lowering ``pagerank_step`` at size n."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),      # m_norm
+        jax.ShapeDtypeStruct((n, LANES), f32),  # r
+        jax.ShapeDtypeStruct((n, 1), f32),      # dangling
+        jax.ShapeDtypeStruct((n, 1), f32),      # uniform
+        jax.ShapeDtypeStruct((), f32),          # alpha
+    )
+
+
+def modularity_spec(n: int, c: int):
+    """ShapeDtypeStructs for lowering ``modularity`` at size (n, c)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),  # adj
+        jax.ShapeDtypeStruct((n, c), f32),  # onehot
+        jax.ShapeDtypeStruct((), f32),      # two_m
+    )

@@ -1,0 +1,84 @@
+"""Layer-1 correctness: Pallas blocked matmul vs the pure-jnp oracle.
+
+This is the CORE numeric signal: if the kernel drifts from ref.py, every
+artifact the Rust runtime executes is wrong.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.spmv import BLOCK, blocked_matmul
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def _rand(shape, dtype=np.float32, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("n", [128, 256, 384, 512])
+@pytest.mark.parametrize("s", [8, 16, 128])
+def test_matmul_matches_ref_grid(n, s):
+    m = _rand((n, n))
+    x = _rand((n, s))
+    got = blocked_matmul(jnp.asarray(m), jnp.asarray(x))
+    want = ref.matmul_ref(jnp.asarray(m), jnp.asarray(x))
+    # tolerance scales with contraction length (tile-wise accumulation
+    # order differs from the oracle's single dot)
+    tol = 1e-6 * n
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(min_value=1, max_value=4),
+    sb=st.integers(min_value=1, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_matmul_hypothesis_shapes(nb, sb, seed, scale):
+    """Sweep block-multiple shapes and magnitudes against the oracle."""
+    rng = np.random.default_rng(seed)
+    n, s = nb * BLOCK, sb * 8
+    m = (rng.standard_normal((n, n)) * scale).astype(np.float32)
+    x = (rng.standard_normal((n, s)) * scale).astype(np.float32)
+    got = np.asarray(blocked_matmul(jnp.asarray(m), jnp.asarray(x)))
+    want = np.asarray(ref.matmul_ref(jnp.asarray(m), jnp.asarray(x)))
+    # accumulation-order differences scale with n and magnitude^2
+    tol = 3e-5 * scale * scale * n
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=tol)
+
+
+def test_matmul_rejects_unaligned():
+    with pytest.raises(ValueError):
+        blocked_matmul(jnp.zeros((100, 100)), jnp.zeros((100, 8)))
+    with pytest.raises(ValueError):
+        blocked_matmul(jnp.zeros((128, 256)), jnp.zeros((256, 8)))
+
+
+def test_matmul_zero_and_identity():
+    n = 256
+    x = jnp.asarray(_rand((n, 8)))
+    z = np.asarray(blocked_matmul(jnp.zeros((n, n)), x))
+    np.testing.assert_array_equal(z, np.zeros((n, 8), np.float32))
+    i = np.asarray(blocked_matmul(jnp.eye(n), x))
+    np.testing.assert_allclose(i, np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_block_structure_independence():
+    """Same product whether n spans 2 or 4 tiles (padding with zeros)."""
+    n, s = 256, 8
+    m = _rand((n, n))
+    x = _rand((n, s))
+    mp = np.zeros((512, 512), np.float32)
+    mp[:n, :n] = m
+    xp = np.zeros((512, s), np.float32)
+    xp[:n] = x
+    small = np.asarray(blocked_matmul(jnp.asarray(m), jnp.asarray(x)))
+    big = np.asarray(blocked_matmul(jnp.asarray(mp), jnp.asarray(xp)))
+    np.testing.assert_allclose(big[:n], small, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(big[n:], np.zeros((512 - n, s), np.float32))

@@ -1,0 +1,125 @@
+"""Layer-2 correctness: pagerank_step / modularity vs oracles + invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+def _random_graph_operator(n_real, n_pad, rng, edge_p=0.05):
+    """Random directed graph -> (m_norm, dangling, uniform, adj) padded."""
+    adj = (rng.random((n_real, n_real)) < edge_p).astype(np.float32)
+    np.fill_diagonal(adj, 0.0)
+    outdeg = adj.sum(axis=1)
+    m = np.zeros((n_pad, n_pad), np.float32)
+    # M[u, v] = A[v, u] / outdeg(v)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        col = np.where(outdeg > 0, 1.0 / outdeg, 0.0)
+    m[:n_real, :n_real] = adj.T * col[None, :]
+    dang = np.zeros((n_pad, 1), np.float32)
+    dang[:n_real, 0] = (outdeg == 0).astype(np.float32)
+    uni = np.zeros((n_pad, 1), np.float32)
+    uni[:n_real, 0] = 1.0 / n_real
+    return m, dang, uni, adj
+
+
+def _uniform_rank(n_real, n_pad, s=model.LANES):
+    r = np.zeros((n_pad, s), np.float32)
+    r[:n_real] = 1.0 / n_real
+    return r
+
+
+@pytest.mark.parametrize("n_real,n_pad", [(100, 256), (256, 256), (400, 512)])
+def test_pagerank_step_matches_oracle(n_real, n_pad):
+    m, dang, uni, _ = _random_graph_operator(n_real, n_pad, RNG)
+    r = _uniform_rank(n_real, n_pad)
+    alpha = jnp.float32(0.85)
+    (got,) = model.pagerank_step(
+        jnp.asarray(m), jnp.asarray(r), jnp.asarray(dang), jnp.asarray(uni), alpha
+    )
+    want = ref.pagerank_step_ref(
+        jnp.asarray(m), jnp.asarray(r), jnp.asarray(dang), jnp.asarray(uni), alpha
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), edge_p=st.sampled_from([0.0, 0.02, 0.2]))
+def test_pagerank_step_conserves_mass(seed, edge_p):
+    """Rank columns must keep summing to 1 (stochastic operator invariant)."""
+    rng = np.random.default_rng(seed)
+    n_real, n_pad = 200, 256
+    m, dang, uni, _ = _random_graph_operator(n_real, n_pad, rng, edge_p)
+    r = _uniform_rank(n_real, n_pad)
+    alpha = jnp.float32(0.85)
+    for _ in range(3):
+        (r,) = model.pagerank_step(
+            jnp.asarray(m), jnp.asarray(r), jnp.asarray(dang), jnp.asarray(uni), alpha
+        )
+        r = np.asarray(r)
+        np.testing.assert_allclose(r.sum(axis=0), np.ones(model.LANES), rtol=1e-4)
+        assert (r[n_real:] == 0).all(), "padded rows must stay zero"
+        assert (r >= 0).all()
+
+
+def test_pagerank_fixpoint_on_cycle():
+    """On a directed cycle the uniform vector is the exact fixpoint."""
+    n_real, n_pad = 256, 256
+    adj = np.zeros((n_real, n_real), np.float32)
+    for v in range(n_real):
+        adj[v, (v + 1) % n_real] = 1.0
+    m = adj.T.copy()  # outdeg = 1 everywhere
+    dang = np.zeros((n_pad, 1), np.float32)
+    uni = np.full((n_pad, 1), 1.0 / n_real, np.float32)
+    r = _uniform_rank(n_real, n_pad)
+    (r2,) = model.pagerank_step(
+        jnp.asarray(m), jnp.asarray(r), jnp.asarray(dang), jnp.asarray(uni),
+        jnp.float32(0.85),
+    )
+    np.testing.assert_allclose(np.asarray(r2), r, rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("n_real", [64, 200, 256])
+def test_modularity_matches_oracle(n_real):
+    n_pad, c = 256, 64
+    rng = np.random.default_rng(n_real)
+    adj_r = (rng.random((n_real, n_real)) < 0.1).astype(np.float32)
+    adj_r = np.triu(adj_r, 1)
+    adj_r = adj_r + adj_r.T
+    adj = np.zeros((n_pad, n_pad), np.float32)
+    adj[:n_real, :n_real] = adj_r
+    memb = rng.integers(0, c, n_real)
+    onehot = np.zeros((n_pad, c), np.float32)
+    onehot[np.arange(n_real), memb] = 1.0
+    two_m = jnp.float32(adj.sum())
+    (got,) = model.modularity(jnp.asarray(adj), jnp.asarray(onehot), two_m)
+    want = ref.modularity_ref(jnp.asarray(adj), jnp.asarray(onehot), two_m)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_modularity_extremes():
+    """Q near max for two perfect cliques split correctly; lower when merged."""
+    n_pad, c = 256, 64
+    half = 32
+    adj = np.zeros((n_pad, n_pad), np.float32)
+    adj[:half, :half] = 1.0
+    adj[half : 2 * half, half : 2 * half] = 1.0
+    np.fill_diagonal(adj, 0.0)
+    two_m = jnp.float32(adj.sum())
+
+    split = np.zeros((n_pad, c), np.float32)
+    split[:half, 0] = 1.0
+    split[half : 2 * half, 1] = 1.0
+    merged = np.zeros((n_pad, c), np.float32)
+    merged[: 2 * half, 0] = 1.0
+
+    (q_split,) = model.modularity(jnp.asarray(adj), jnp.asarray(split), two_m)
+    (q_merged,) = model.modularity(jnp.asarray(adj), jnp.asarray(merged), two_m)
+    assert float(q_split) == pytest.approx(0.5, abs=1e-3)
+    assert float(q_merged) == pytest.approx(0.0, abs=1e-6)
+    assert float(q_split) > float(q_merged)

@@ -1,0 +1,56 @@
+//! Figure 3 — coreness: unoptimized (p2p, no pruning) vs pruning vs
+//! pruning + hybrid messaging, plus the switchover-threshold ablation.
+//!
+//! Paper shape: pruning+hybrid ≈ 2.3× over pruning alone, ≈ 60× over
+//! unoptimized.
+
+use graphyti::algs::coreness::{coreness, CorenessOptions, MessageMode};
+use graphyti::coordinator::benchkit::{banner, bench_scale, open_sem, rmat_workload, FigTable};
+
+fn main() {
+    let scale = bench_scale().min(15);
+    let (base, cfg) = rmat_workload(scale, 16, false, "fig3");
+    banner(
+        "Figure 3",
+        "coreness: minimize messaging + prune computation",
+        &format!("R-MAT scale {scale}, undirected, cache=1/7 adj, io_delay={}us", cfg.io_delay_us),
+    );
+
+    let mut t = FigTable::new();
+    let g = open_sem(&base, &cfg);
+    let unopt = coreness(&g, CorenessOptions::unoptimized(), &cfg.engine());
+    t.add("unoptimized (p2p, no prune)", &unopt.report);
+
+    let g = open_sem(&base, &cfg);
+    let pruned = coreness(&g, CorenessOptions::pruned(), &cfg.engine());
+    t.add("pruning (multicast)", &pruned.report);
+
+    let g = open_sem(&base, &cfg);
+    let graphyti = coreness(&g, CorenessOptions::graphyti(), &cfg.engine());
+    t.add("pruning + hybrid (Graphyti)", &graphyti.report);
+    t.print();
+
+    assert_eq!(unopt.core, pruned.core);
+    assert_eq!(unopt.core, graphyti.core);
+    println!(
+        "\nhybrid vs pruned: {:.2}x   graphyti vs unopt: {:.2}x   (paper: 2.3x and 60x)",
+        pruned.report.wall.as_secs_f64() / graphyti.report.wall.as_secs_f64(),
+        unopt.report.wall.as_secs_f64() / graphyti.report.wall.as_secs_f64()
+    );
+
+    // ablation: hybrid switchover threshold (DESIGN.md §6)
+    println!("\nablation: hybrid switchover fraction (paper uses 0.10)");
+    let mut t = FigTable::new();
+    for frac in [0.0, 0.05, 0.10, 0.25, 0.5, 1.0] {
+        let g = open_sem(&base, &cfg);
+        let opts = CorenessOptions {
+            mode: MessageMode::Hybrid,
+            prune: true,
+            switch_frac: frac,
+            scan_activation: false,
+        };
+        let r = coreness(&g, opts, &cfg.engine());
+        t.add(&format!("switch_frac={frac:.2}"), &r.report);
+    }
+    t.print();
+}

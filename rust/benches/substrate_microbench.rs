@@ -1,0 +1,90 @@
+//! Substrate microbenchmarks: the SAFS-substitute in isolation —
+//! page-cache hit/miss latency, batch merging, and engine messaging
+//! throughput. These are the quantities the perf pass (EXPERIMENTS.md
+//! §Perf) iterates on.
+
+use std::sync::Arc;
+
+use graphyti::safs::{IoConfig, IoPool, IoStats, PageCache, SemFile, PAGE_SIZE};
+use graphyti::util::{bench, fmt_bytes, XorShift};
+
+fn main() {
+    println!("\n=== substrate microbenchmarks ===");
+
+    // workload file: 64 MiB
+    let path = std::env::temp_dir().join("graphyti-substrate-bench.dat");
+    let len = 64 * 1024 * 1024usize;
+    if std::fs::metadata(&path).map(|m| m.len() as usize).unwrap_or(0) != len {
+        let mut data = vec![0u8; len];
+        let mut rng = XorShift::new(1);
+        for b in data.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        std::fs::write(&path, &data).unwrap();
+    }
+
+    // --- cache hit path -------------------------------------------------
+    let stats = Arc::new(IoStats::new());
+    let cache = Arc::new(PageCache::new(32 * 1024 * 1024, stats.clone()));
+    let pool = Arc::new(IoPool::new(IoConfig::default(), stats.clone()));
+    let f = SemFile::open(&path, cache, pool).unwrap();
+    // warm 16 MiB
+    f.read(0, 16 * 1024 * 1024).unwrap();
+    let mut rng = XorShift::new(2);
+    let r = bench("cache-hit read (4 KiB, warm)", 100, 2000, || {
+        let page = rng.next_below(4096);
+        let got = f.read(page * PAGE_SIZE as u64, PAGE_SIZE).unwrap();
+        std::hint::black_box(got);
+    });
+    println!("{}", r.report());
+
+    // --- cache miss path (cold region, tiny cache) -----------------------
+    let stats = Arc::new(IoStats::new());
+    let cache = Arc::new(PageCache::new(64 * PAGE_SIZE, stats.clone()));
+    let pool = Arc::new(IoPool::new(IoConfig::default(), stats.clone()));
+    let f2 = SemFile::open(&path, cache, pool).unwrap();
+    let mut off = 0u64;
+    let r = bench("cache-miss read (4 KiB, cold)", 10, 1000, || {
+        let got = f2.read(off % (len as u64 - PAGE_SIZE as u64), PAGE_SIZE).unwrap();
+        off += 257 * PAGE_SIZE as u64; // stride past the cache
+        std::hint::black_box(got);
+    });
+    println!("{}", r.report());
+
+    // --- batched + merged reads ------------------------------------------
+    let stats = Arc::new(IoStats::new());
+    let cache = Arc::new(PageCache::new(64 * PAGE_SIZE, stats.clone()));
+    let pool = Arc::new(IoPool::new(IoConfig { threads: 4, ..Default::default() }, stats.clone()));
+    let f3 = SemFile::open(&path, cache, pool).unwrap();
+    let mut base = 0u64;
+    let r = bench("batch read 64x4KiB contiguous (merged)", 5, 500, || {
+        let ranges: Vec<(u64, usize)> =
+            (0..64).map(|i| (base + i * PAGE_SIZE as u64, PAGE_SIZE)).collect();
+        let got = f3.read_ranges(&ranges).unwrap();
+        base = (base + 65 * PAGE_SIZE as u64) % (len as u64 / 2);
+        std::hint::black_box(got);
+    });
+    println!("{}", r.report());
+    let s = stats.snapshot();
+    println!(
+        "  merge effectiveness: {} logical misses -> {} physical reads ({} merged)",
+        s.cache_misses, s.physical_reads, s.merged_requests
+    );
+
+    // --- scattered batch (no merging possible) ----------------------------
+    let stats = Arc::new(IoStats::new());
+    let cache = Arc::new(PageCache::new(64 * PAGE_SIZE, stats.clone()));
+    let pool = Arc::new(IoPool::new(IoConfig { threads: 4, ..Default::default() }, stats));
+    let f4 = SemFile::open(&path, cache, pool).unwrap();
+    let mut rng = XorShift::new(3);
+    let r = bench("batch read 64x4KiB scattered (parallel)", 5, 500, || {
+        let ranges: Vec<(u64, usize)> = (0..64)
+            .map(|_| (rng.next_below((len - PAGE_SIZE) as u64 / PAGE_SIZE as u64) * PAGE_SIZE as u64, PAGE_SIZE))
+            .collect();
+        let got = f4.read_ranges(&ranges).unwrap();
+        std::hint::black_box(got);
+    });
+    println!("{}", r.report());
+
+    println!("\nfile: {} at {}", fmt_bytes(len as u64), path.display());
+}

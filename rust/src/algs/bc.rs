@@ -1,0 +1,408 @@
+//! Betweenness centrality (Brandes) — §4.4: *develop asynchronous
+//! applications* and *utilize functional constructs*.
+//!
+//! Per source, Brandes has three phases: BFS (distances + shortest-path
+//! counts σ), backward propagation (dependency δ, by descending BFS
+//! level), and accumulation into BC. Three variants:
+//!
+//! * [`BcVariant::UniSource`] — one engine run per source: the baseline
+//!   whose narrow frontiers and per-phase barriers the paper criticizes.
+//! * [`BcVariant::MultiSourceSync`] — up to 32 sources as bit lanes in
+//!   one run, but *phase-synchronous*: no lane starts backward
+//!   propagation until every lane finished BFS. Lanes with shallow BFS
+//!   trees idle while deep lanes finish — the cost of phase synchrony.
+//! * [`BcVariant::MultiSourceAsync`] — the Graphyti design: each lane
+//!   flows into its own backward phase the moment its BFS quiesces, so
+//!   forward messages of one lane and backward messages of another share
+//!   rounds (and fetched pages). Activation metadata carries the lane
+//!   *and* phase, exactly as the paper describes.
+//!
+//! Lockstep correctness: the engine delivers all round-*r−1* messages in
+//! round *r*'s message phase *before* the vertex phase, so σ at level *L*
+//! is complete before level-*L* vertices forward it, and δ at level *L−1*
+//! is complete before those vertices propagate it upward.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use crate::engine::{Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::graph::source::EdgeSource;
+use crate::util::SharedVec;
+use crate::VertexId;
+
+/// Execution strategy (what Fig. 6 compares).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BcVariant {
+    /// One engine run per source.
+    UniSource,
+    /// One run, lanes phase-locked (BFS for all, then BP for all).
+    MultiSourceSync,
+    /// One run, per-lane phases interleave freely.
+    MultiSourceAsync,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum LaneState {
+    Bfs,
+    /// BFS finished (depth recorded); waiting for the global BP gate
+    /// (sync mode only).
+    WaitBp { max: i32 },
+    /// Backward propagation: `cur` is the next level to schedule.
+    Bp { cur: i32 },
+    Done,
+}
+
+/// Messages carry lane + phase metadata (§4.4).
+#[derive(Clone)]
+enum BcMsg {
+    /// Forward: shortest-path count contribution from a level-(d-1)
+    /// predecessor.
+    Fwd { lane: u8, sigma: f64 },
+    /// Backward: dependency contribution; receivers at `dist - 1` apply
+    /// `delta += sigma_recv * val` where `val = (1 + delta_v) / sigma_v`.
+    Bwd { lane: u8, dist: i32, val: f64 },
+}
+
+struct Bc {
+    lanes: usize,
+    sources: Vec<VertexId>,
+    sync: bool,
+    /// Directed image? (undirected images keep all neighbors in `out`)
+    directed: bool,
+    /// dist/sigma/delta are (n × lanes) flattened; owner-worker writes.
+    dist: SharedVec<i32>,
+    sigma: SharedVec<f64>,
+    delta: SharedVec<f64>,
+    /// Lanes whose BFS frontier reached the vertex this round.
+    gained: SharedVec<u32>,
+    /// Lanes for which the vertex must emit backward messages this round.
+    bp_lanes: SharedVec<u32>,
+    /// Lanes with BFS progress this round.
+    progress: AtomicU32,
+    state: Mutex<Vec<LaneState>>,
+    /// Accumulated centrality (hook-updated, single-threaded).
+    bc: SharedVec<f64>,
+}
+
+impl Bc {
+    #[inline]
+    fn at(&self, v: VertexId, lane: usize) -> usize {
+        v as usize * self.lanes + lane
+    }
+}
+
+impl VertexProgram for Bc {
+    type Msg = BcMsg;
+
+    fn edge_request(&self, v: VertexId) -> EdgeRequest {
+        // metadata decides which lists this activation needs:
+        // forward frontier -> out-edges, backward wave -> in-edges.
+        let fwd = *self.gained.get(v as usize) != 0;
+        let bwd = *self.bp_lanes.get(v as usize) != 0;
+        if !self.directed {
+            // undirected images hold the full neighbor list in `out`
+            return if fwd || bwd { EdgeRequest::Out } else { EdgeRequest::None };
+        }
+        match (fwd, bwd) {
+            (true, true) => EdgeRequest::Both,
+            (true, false) => EdgeRequest::Out,
+            (false, true) => EdgeRequest::In,
+            (false, false) => EdgeRequest::None,
+        }
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, BcMsg>, v: VertexId, edges: &VertexEdges) {
+        let fwd = std::mem::take(self.gained.get_mut(v as usize));
+        if fwd != 0 {
+            for lane in 0..self.lanes {
+                if fwd & (1 << lane) != 0 {
+                    let sigma = *self.sigma.get(self.at(v, lane));
+                    ctx.multicast(
+                        &edges.out_neighbors,
+                        BcMsg::Fwd { lane: lane as u8, sigma },
+                    );
+                }
+            }
+        }
+        let bwd = std::mem::take(self.bp_lanes.get_mut(v as usize));
+        if bwd != 0 {
+            for lane in 0..self.lanes {
+                if bwd & (1 << lane) != 0 {
+                    let i = self.at(v, lane);
+                    let sigma = *self.sigma.get(i);
+                    if sigma == 0.0 {
+                        continue;
+                    }
+                    let val = (1.0 + *self.delta.get(i)) / sigma;
+                    let preds: &[VertexId] = if self.directed {
+                        &edges.in_neighbors
+                    } else {
+                        &edges.out_neighbors
+                    };
+                    ctx.multicast(
+                        preds,
+                        BcMsg::Bwd { lane: lane as u8, dist: *self.dist.get(i), val },
+                    );
+                }
+            }
+        }
+    }
+
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, BcMsg>, v: VertexId, msg: &BcMsg) {
+        match *msg {
+            BcMsg::Fwd { lane, sigma } => {
+                let i = self.at(v, lane as usize);
+                let d = self.dist.get_mut(i);
+                let round = ctx.round() as i32;
+                if *d < 0 {
+                    // first touch: this is a shortest path of length `round`
+                    *d = round;
+                    *self.sigma.get_mut(i) += sigma;
+                    *self.gained.get_mut(v as usize) |= 1 << lane;
+                    self.progress.fetch_or(1 << lane, Ordering::Relaxed);
+                    ctx.activate(v); // same round: lockstep level = round
+                } else if *d == round {
+                    // another shortest path discovered in the same level
+                    *self.sigma.get_mut(i) += sigma;
+                } // else: longer path, ignore
+            }
+            BcMsg::Bwd { lane, dist, val } => {
+                let i = self.at(v, lane as usize);
+                if *self.dist.get(i) == dist - 1 {
+                    // v is a predecessor on a shortest path
+                    *self.delta.get_mut(i) += *self.sigma.get(i) * val;
+                }
+                // activation comes from the scheduler (iteration-end hook)
+            }
+        }
+    }
+
+    fn run_on_iteration_end(&self, ctx: &mut EndCtx<'_>) {
+        let progress = self.progress.swap(0, Ordering::Relaxed);
+        let round = ctx.round() as i32;
+        let n = ctx.num_vertices();
+        let mut state = self.state.lock().unwrap();
+
+        // 1. BFS completion detection. A lane is done when its frontier
+        //    produced no new vertices this round — or when the whole
+        //    engine is quiescent (a frontier can die without emitting
+        //    messages, e.g. sink vertices; without this the engine would
+        //    stop before the next hook could notice).
+        for lane in 0..self.lanes {
+            if let LaneState::Bfs = state[lane] {
+                if progress & (1 << lane) == 0 && ctx.round() >= 1 {
+                    // deepest level = last round with progress = round - 1
+                    state[lane] = LaneState::WaitBp { max: round - 1 };
+                } else if ctx.quiescent() {
+                    // progressed this round but nothing is in flight:
+                    // level `round` was the last one
+                    state[lane] = LaneState::WaitBp { max: round };
+                }
+            }
+        }
+
+        // 2. BP gate: async releases each lane immediately; sync waits for
+        //    every lane to leave Bfs.
+        let all_bfs_done = state.iter().all(|s| !matches!(s, LaneState::Bfs));
+        for lane in 0..self.lanes {
+            if let LaneState::WaitBp { max } = state[lane] {
+                if !self.sync || all_bfs_done {
+                    state[lane] = LaneState::Bp { cur: max };
+                }
+            }
+        }
+
+        // 3. BP scheduling: activate the next level down for each lane.
+        for lane in 0..self.lanes {
+            if let LaneState::Bp { cur } = state[lane] {
+                if cur >= 1 {
+                    for v in 0..n {
+                        if *self.dist.get(v * self.lanes + lane) == cur {
+                            *self.bp_lanes.get_mut(v) |= 1 << lane;
+                            ctx.activate(v as VertexId);
+                        }
+                    }
+                    state[lane] = LaneState::Bp { cur: cur - 1 };
+                } else {
+                    // all levels scheduled and delivered: accumulate
+                    let s = self.sources[lane];
+                    for v in 0..n {
+                        if v as VertexId != s {
+                            let d = *self.delta.get(v * self.lanes + lane);
+                            if d != 0.0 {
+                                *self.bc.get_mut(v) += d;
+                            }
+                        }
+                    }
+                    state[lane] = LaneState::Done;
+                }
+            }
+        }
+    }
+}
+
+/// Result of a betweenness run.
+pub struct BcResult {
+    /// Centrality per vertex (unnormalized, directed-path convention —
+    /// identical to [`crate::algs::oracle::betweenness`]).
+    pub bc: Vec<f64>,
+    /// Aggregate report.
+    pub report: RunReport,
+}
+
+fn run_batch(
+    source: &dyn EdgeSource,
+    sources: &[VertexId],
+    sync: bool,
+    cfg: &EngineConfig,
+) -> (Vec<f64>, RunReport) {
+    let n = source.index().num_vertices();
+    let lanes = sources.len();
+    assert!((1..=32).contains(&lanes), "1..=32 sources per batch");
+    let prog = Bc {
+        lanes,
+        sources: sources.to_vec(),
+        sync,
+        directed: source.index().directed(),
+        dist: SharedVec::new(n * lanes, -1),
+        sigma: SharedVec::new(n * lanes, 0.0),
+        delta: SharedVec::new(n * lanes, 0.0),
+        gained: SharedVec::new(n, 0u32),
+        bp_lanes: SharedVec::new(n, 0u32),
+        progress: AtomicU32::new(0),
+        state: Mutex::new(vec![LaneState::Bfs; lanes]),
+        bc: SharedVec::new(n, 0.0),
+    };
+    for (lane, &s) in sources.iter().enumerate() {
+        prog.dist.set(s as usize * lanes + lane, 0);
+        prog.sigma.set(s as usize * lanes + lane, 1.0);
+        *prog.gained.get_mut(s as usize) |= 1 << lane;
+    }
+    let report = Engine::run(&prog, source, sources, cfg);
+    (prog.bc.to_vec(), report)
+}
+
+/// Compute betweenness centrality over `sources` with the given variant.
+pub fn betweenness(
+    source: &dyn EdgeSource,
+    sources: &[VertexId],
+    variant: BcVariant,
+    cfg: &EngineConfig,
+) -> BcResult {
+    match variant {
+        BcVariant::UniSource => {
+            let n = source.index().num_vertices();
+            let mut bc = vec![0.0f64; n];
+            let mut reports = Vec::new();
+            for &s in sources {
+                let (b, r) = run_batch(source, &[s], true, cfg);
+                for (acc, x) in bc.iter_mut().zip(b) {
+                    *acc += x;
+                }
+                reports.push(r);
+            }
+            BcResult { bc, report: RunReport::merged(&reports) }
+        }
+        BcVariant::MultiSourceSync | BcVariant::MultiSourceAsync => {
+            let sync = variant == BcVariant::MultiSourceSync;
+            let n = source.index().num_vertices();
+            let mut bc = vec![0.0f64; n];
+            let mut reports = Vec::new();
+            for chunk in sources.chunks(32) {
+                let (b, r) = run_batch(source, chunk, sync, cfg);
+                for (acc, x) in bc.iter_mut().zip(b) {
+                    *acc += x;
+                }
+                reports.push(r);
+            }
+            BcResult { bc, report: RunReport::merged(&reports) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::oracle;
+    use crate::graph::csr::Csr;
+    use crate::graph::gen;
+    use crate::graph::source::MemGraph;
+
+    const VARIANTS: [BcVariant; 3] =
+        [BcVariant::UniSource, BcVariant::MultiSourceSync, BcVariant::MultiSourceAsync];
+
+    fn assert_close(got: &[f64], want: &[f64], tag: &str) {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!((g - w).abs() < 1e-9, "{tag}: bc[{i}] got {g} want {w}");
+        }
+    }
+
+    fn check_all(n: usize, edges: &[(VertexId, VertexId)], directed: bool, sources: &[VertexId]) {
+        let csr = Csr::from_edges(n, edges, directed);
+        let want = oracle::betweenness(&csr, sources);
+        for variant in VARIANTS {
+            let g = MemGraph::from_edges(n, edges, directed);
+            let got =
+                betweenness(&g, sources, variant, &EngineConfig { workers: 4, ..Default::default() });
+            assert_close(&got.bc, &want, &format!("{variant:?}"));
+        }
+    }
+
+    #[test]
+    fn path_graph_exact() {
+        let all: Vec<VertexId> = (0..6).collect();
+        check_all(6, &gen::path(6), false, &all);
+    }
+
+    #[test]
+    fn diamond_multiple_shortest_paths() {
+        // 0 -> 1,2 -> 3: two shortest paths through the middle
+        check_all(4, &[(0, 1), (0, 2), (1, 3), (2, 3)], true, &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn grid_undirected() {
+        let sources: Vec<VertexId> = vec![0, 5, 12, 15];
+        check_all(16, &gen::grid_2d(4, 4), false, &sources);
+    }
+
+    #[test]
+    fn rmat_directed() {
+        let edges = gen::rmat(7, 800, 55);
+        let sources: Vec<VertexId> = vec![0, 1, 2, 3, 17, 31, 64, 100];
+        check_all(128, &edges, true, &sources);
+    }
+
+    #[test]
+    fn disconnected_sources() {
+        // source in a tiny component: must not contaminate the big one
+        check_all(6, &[(0, 1), (1, 2), (4, 5)], true, &[0, 4]);
+    }
+
+    #[test]
+    fn async_uses_fewer_rounds_than_sync_than_uni() {
+        let edges = gen::rmat(9, 4000, 91);
+        let sources: Vec<VertexId> = (0..16).collect();
+        let cfg = EngineConfig { workers: 4, ..Default::default() };
+        let g1 = MemGraph::from_edges(512, &edges, true);
+        let uni = betweenness(&g1, &sources, BcVariant::UniSource, &cfg);
+        let g2 = MemGraph::from_edges(512, &edges, true);
+        let sync = betweenness(&g2, &sources, BcVariant::MultiSourceSync, &cfg);
+        let g3 = MemGraph::from_edges(512, &edges, true);
+        let asyn = betweenness(&g3, &sources, BcVariant::MultiSourceAsync, &cfg);
+        assert_close(&uni.bc, &sync.bc, "uni-vs-sync");
+        assert_close(&uni.bc, &asyn.bc, "uni-vs-async");
+        // multi-source shares rounds/barriers across lanes; async removes
+        // the BP gate and shaves further rounds (the paper's async win is
+        // parallel efficiency, not raw request count)
+        assert!(sync.report.rounds < uni.report.rounds, "sync {} < uni {}", sync.report.rounds, uni.report.rounds);
+        assert!(asyn.report.rounds <= sync.report.rounds, "async {} <= sync {}", asyn.report.rounds, sync.report.rounds);
+        assert!(
+            asyn.report.io.read_requests < uni.report.io.read_requests,
+            "async {} < uni {} read reqs",
+            asyn.report.io.read_requests,
+            uni.report.io.read_requests
+        );
+    }
+}

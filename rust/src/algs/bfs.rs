@@ -1,0 +1,228 @@
+//! Breadth-first search: uni-source (levels) and multi-source (lane
+//! bitmaps) — the building block of §4.3 diameter estimation.
+//!
+//! **Multi-source BFS** runs up to 64 concurrent searches, one bit lane
+//! per source, in lockstep rounds: a vertex holds a `u64` mask of the
+//! searches that have reached it, and frontier expansion ORs masks across
+//! edges. Because many lanes activate the *same* vertices within a round,
+//! each fetched edge list is reused by every lane on it — the page-cache
+//! reuse the paper credits for multi-source speedups (Figs. 4–5).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::engine::{Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::graph::source::EdgeSource;
+use crate::util::SharedVec;
+use crate::VertexId;
+
+// ------------------------------------------------------------ uni-source
+
+struct UniBfs {
+    level: SharedVec<i64>,
+}
+
+impl VertexProgram for UniBfs {
+    type Msg = i64; // proposed level
+
+    fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+        EdgeRequest::Out
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, edges: &VertexEdges) {
+        ctx.multicast(&edges.out_neighbors, *self.level.get(v as usize) + 1);
+    }
+
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, lvl: &i64) {
+        let cur = self.level.get_mut(v as usize);
+        if *cur < 0 {
+            *cur = *lvl;
+            ctx.activate(v);
+        }
+    }
+}
+
+/// BFS levels from `src` (-1 = unreachable), plus the run report.
+pub fn bfs(source: &dyn EdgeSource, src: VertexId, cfg: &EngineConfig) -> (Vec<i64>, RunReport) {
+    let n = source.index().num_vertices();
+    let prog = UniBfs { level: SharedVec::new(n, -1) };
+    prog.level.set(src as usize, 0);
+    let report = Engine::run(&prog, source, &[src], cfg);
+    (prog.level.into_vec(), report)
+}
+
+// ----------------------------------------------------------- multi-source
+
+/// Multi-source BFS program (≤ 64 sources; one bit lane each).
+pub struct MsBfs {
+    num_lanes: usize,
+    /// Mask of lanes that have reached each vertex.
+    visited: SharedVec<u64>,
+    /// Lanes gained since the vertex last ran (the frontier payload).
+    gained: SharedVec<u64>,
+    /// Lanes that reached any new vertex this round.
+    progress: AtomicU64,
+    /// Per-lane eccentricity: last round with progress.
+    ecc: Mutex<Vec<i64>>,
+}
+
+impl MsBfs {
+    /// Build for the given sources (≤ 64).
+    pub fn new(n: usize, sources: &[VertexId]) -> Self {
+        assert!(!sources.is_empty() && sources.len() <= 64, "1..=64 sources");
+        let prog = MsBfs {
+            num_lanes: sources.len(),
+            visited: SharedVec::new(n, 0u64),
+            gained: SharedVec::new(n, 0u64),
+            progress: AtomicU64::new(0),
+            ecc: Mutex::new(vec![0i64; sources.len()]),
+        };
+        for (lane, &s) in sources.iter().enumerate() {
+            *prog.visited.get_mut(s as usize) |= 1 << lane;
+            *prog.gained.get_mut(s as usize) |= 1 << lane;
+        }
+        prog
+    }
+
+    /// Per-lane eccentricities after the run.
+    pub fn eccentricities(&self) -> Vec<i64> {
+        self.ecc.lock().unwrap().clone()
+    }
+
+    /// Visited mask per vertex after the run.
+    pub fn visited_masks(&self) -> Vec<u64> {
+        self.visited.to_vec()
+    }
+}
+
+impl VertexProgram for MsBfs {
+    type Msg = u64; // lane mask
+
+    fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+        EdgeRequest::Out
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, u64>, v: VertexId, edges: &VertexEdges) {
+        let g = std::mem::take(self.gained.get_mut(v as usize));
+        if g != 0 {
+            ctx.multicast(&edges.out_neighbors, g);
+        }
+    }
+
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, u64>, v: VertexId, mask: &u64) {
+        let vis = self.visited.get_mut(v as usize);
+        let new = mask & !*vis;
+        if new != 0 {
+            *vis |= new;
+            *self.gained.get_mut(v as usize) |= new;
+            self.progress.fetch_or(new, Ordering::Relaxed);
+            ctx.activate(v); // same round: lockstep level = round
+        }
+    }
+
+    fn run_on_iteration_end(&self, ctx: &mut EndCtx<'_>) {
+        let prog = self.progress.swap(0, Ordering::Relaxed);
+        if prog != 0 {
+            let mut ecc = self.ecc.lock().unwrap();
+            for (lane, e) in ecc.iter_mut().enumerate().take(self.num_lanes) {
+                if prog & (1 << lane) != 0 {
+                    *e = ctx.round() as i64;
+                }
+            }
+        }
+    }
+}
+
+/// Run multi-source BFS; returns per-lane eccentricities and the report.
+pub fn ms_bfs(
+    source: &dyn EdgeSource,
+    sources: &[VertexId],
+    cfg: &EngineConfig,
+) -> (Vec<i64>, RunReport) {
+    let n = source.index().num_vertices();
+    let prog = MsBfs::new(n, sources);
+    let report = Engine::run(&prog, source, sources, cfg);
+    (prog.eccentricities(), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::oracle;
+    use crate::graph::csr::Csr;
+    use crate::graph::gen;
+    use crate::graph::source::MemGraph;
+
+    #[test]
+    fn uni_bfs_matches_oracle() {
+        let edges = gen::rmat(8, 1500, 2);
+        let g = MemGraph::from_edges(256, &edges, true);
+        let csr = Csr::from_edges(256, &edges, true);
+        let (got, _) = bfs(&g, 0, &EngineConfig::default());
+        assert_eq!(got, oracle::bfs_levels(&csr, 0));
+    }
+
+    #[test]
+    fn ms_bfs_ecc_matches_oracle_each_lane() {
+        let edges = gen::rmat(8, 1200, 4);
+        let n = 256;
+        let g = MemGraph::from_edges(n, &edges, true);
+        let csr = Csr::from_edges(n, &edges, true);
+        let sources: Vec<VertexId> = vec![0, 3, 17, 42, 99];
+        let (ecc, _) = ms_bfs(&g, &sources, &EngineConfig { workers: 4, ..Default::default() });
+        for (lane, &s) in sources.iter().enumerate() {
+            assert_eq!(ecc[lane], oracle::eccentricity(&csr, s), "lane {lane} src {s}");
+        }
+    }
+
+    #[test]
+    fn ms_bfs_visited_matches_reachability() {
+        let edges = vec![(0u32, 1u32), (1, 2), (3, 4)]; // two components
+        let g = MemGraph::from_edges(5, &edges, true);
+        let prog = MsBfs::new(5, &[0, 3]);
+        Engine::run(&prog, &g, &[0, 3], &EngineConfig::default());
+        let masks = prog.visited_masks();
+        assert_eq!(masks[0], 0b01);
+        assert_eq!(masks[1], 0b01);
+        assert_eq!(masks[2], 0b01);
+        assert_eq!(masks[3], 0b10);
+        assert_eq!(masks[4], 0b10);
+    }
+
+    #[test]
+    fn ms_bfs_64_lanes() {
+        let edges = gen::cycle(128);
+        let g = MemGraph::from_edges(128, &edges, true);
+        let sources: Vec<VertexId> = (0..64).map(|i| i * 2).collect();
+        let (ecc, _) = ms_bfs(&g, &sources, &EngineConfig::default());
+        // directed cycle of 128: every vertex has eccentricity 127
+        assert!(ecc.iter().all(|&e| e == 127), "{ecc:?}");
+    }
+
+    #[test]
+    fn ms_bfs_shares_io_across_lanes() {
+        // many sources in one multi-source run must fetch far fewer edge
+        // lists than the same sources run uni-source sequentially
+        let edges = gen::rmat(9, 4000, 6);
+        let n = 512;
+        let sources: Vec<VertexId> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let cfg = EngineConfig { workers: 4, ..Default::default() };
+
+        let g_multi = MemGraph::from_edges(n, &edges, true);
+        let (_, multi) = ms_bfs(&g_multi, &sources, &cfg);
+
+        let g_uni = MemGraph::from_edges(n, &edges, true);
+        let mut uni_reqs = 0;
+        for &s in &sources {
+            let (_, r) = bfs(&g_uni, s, &cfg);
+            uni_reqs += r.io.read_requests;
+        }
+        assert!(
+            multi.io.read_requests < uni_reqs,
+            "multi {} < uni {}",
+            multi.io.read_requests,
+            uni_reqs
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Degree statistics — computed purely from the in-memory index
+//! (zero I/O: the index *is* the O(n) SEM state). Library extra; also the
+//! seed-selection helper for diameter estimation and BC.
+
+use crate::graph::format::GraphIndex;
+use crate::util::Histogram;
+use crate::VertexId;
+
+/// Degree distribution summary.
+pub struct DegreeStats {
+    /// log2-bucketed histogram of total degree.
+    pub hist: Histogram,
+    /// Max total degree and the vertex achieving it.
+    pub max: (VertexId, u32),
+    /// Mean total degree.
+    pub mean: f64,
+}
+
+/// Compute degree stats from the index (no edge I/O).
+pub fn degree_stats(index: &GraphIndex) -> DegreeStats {
+    let hist = Histogram::new();
+    let mut max = (0 as VertexId, 0u32);
+    let mut total = 0u64;
+    for v in 0..index.num_vertices() as VertexId {
+        let d = index.degree(v);
+        hist.record(d as u64);
+        total += d as u64;
+        if d > max.1 {
+            max = (v, d);
+        }
+    }
+    DegreeStats { hist, max, mean: total as f64 / index.num_vertices().max(1) as f64 }
+}
+
+/// The `k` highest-total-degree vertices, descending.
+pub fn top_k_by_degree(index: &GraphIndex, k: usize) -> Vec<VertexId> {
+    let mut vs: Vec<VertexId> = (0..index.num_vertices() as VertexId).collect();
+    vs.sort_by_key(|&v| std::cmp::Reverse(index.degree(v)));
+    vs.truncate(k);
+    vs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen;
+
+    #[test]
+    fn star_center_wins() {
+        let mut b = GraphBuilder::new(10, false);
+        b.add_edges(&gen::star(10));
+        let img = b.build_ram();
+        let s = degree_stats(&img.index);
+        assert_eq!(s.max, (0, 9));
+        assert!((s.mean - (2.0 * 9.0 / 10.0)).abs() < 1e-12);
+        assert_eq!(top_k_by_degree(&img.index, 1), vec![0]);
+    }
+
+    #[test]
+    fn top_k_ordering() {
+        // degrees: v0=3, v1=1, v2=2, v3=2 (directed totals)
+        let mut b = GraphBuilder::new(4, true);
+        b.add_edges(&[(0, 1), (0, 2), (0, 3), (2, 3)]);
+        let img = b.build_ram();
+        let top = top_k_by_degree(&img.index, 2);
+        assert_eq!(top[0], 0);
+        assert!(top[1] == 2 || top[1] == 3);
+    }
+}

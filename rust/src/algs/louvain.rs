@@ -1,0 +1,587 @@
+//! Louvain community detection — §4.6: *avoid graph structure
+//! modification*.
+//!
+//! Louvain alternates **local-move** phases (each vertex greedily joins
+//! the neighboring community with maximal positive modularity gain) with
+//! **aggregation** phases that coarsen communities into super-vertices.
+//! Aggregation is where SEM implementations diverge:
+//!
+//! * [`LouvainMode::Graphyti`] — never rewrites the graph. Aggregation
+//!   produces *metadata only*: a vertex→community index plus an in-memory
+//!   weighted community adjacency (hash-based), and message routing keeps
+//!   working through the index ("lazy deletion + community
+//!   representative"). Cost: one streaming read of the edge data.
+//! * [`LouvainMode::Physical`] — the paper's best-case baseline for a
+//!   physically-modifying implementation: each aggregation **materializes
+//!   a new packed graph image in RAM** (the RAMDisk stand-in: sort,
+//!   dedup-accumulate, pack — everything a rewrite pays except disk write
+//!   throughput; DESIGN.md §5).
+//!
+//! Both modes run the identical level-0 local-move phase vertex-centric
+//! over the SEM image, so the measured difference is purely the
+//! aggregation strategy (Fig. 8).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::engine::{Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::graph::source::EdgeSource;
+use crate::util::atomic_f64::{atomic_f64_vec, AtomicF64};
+use crate::util::SharedVec;
+use crate::VertexId;
+
+/// Aggregation strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LouvainMode {
+    /// Metadata-only aggregation (the paper's contribution).
+    Graphyti,
+    /// Materialize a packed graph image per level (best-case rewrite).
+    Physical,
+}
+
+/// Result of a Louvain run.
+pub struct LouvainResult {
+    /// Final community per level-0 vertex (labels are arbitrary ids).
+    pub community: Vec<VertexId>,
+    /// Final modularity Q.
+    pub modularity: f64,
+    /// Number of levels executed (including level 0).
+    pub levels: usize,
+    /// Time in local-move phases.
+    pub local_move_wall: Duration,
+    /// Time in aggregation phases (the Fig. 8a breakdown).
+    pub aggregate_wall: Duration,
+    /// Level-0 engine report.
+    pub report: RunReport,
+}
+
+// ------------------------------------------------- level-0 local moves --
+
+struct LouvainL0 {
+    /// Current community of each vertex (racy cross-reads are fine for
+    /// the greedy heuristic; own-slot writes are owner-exclusive).
+    community: SharedVec<VertexId>,
+    /// Σ of weighted degrees per community (concurrent moves).
+    comm_tot: Vec<AtomicF64>,
+    /// Weighted degree of each vertex (unit weights at level 0).
+    k: Vec<f64>,
+    /// Total weight × 2 (= stored edge count for undirected unit graphs).
+    m2: f64,
+    /// Local-move pass cap.
+    max_rounds: usize,
+}
+
+impl VertexProgram for LouvainL0 {
+    type Msg = (); // "reconsider your community" ping
+
+    fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+        EdgeRequest::Out
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, edges: &VertexEdges) {
+        let cur = *self.community.get(v as usize);
+        let kv = self.k[v as usize];
+        // weight of v's links into each neighboring community
+        let mut links: HashMap<VertexId, f64> = HashMap::new();
+        for &u in &edges.out_neighbors {
+            *links.entry(*self.community.get(u as usize)).or_default() += 1.0;
+        }
+        // score(c) = k_{v,c} - Σtot(c)·k_v/m2, with v removed from `cur`
+        let score = |c: VertexId, link_w: f64| {
+            let mut tot = self.comm_tot[c as usize].load();
+            if c == cur {
+                tot -= kv;
+            }
+            link_w - tot * kv / self.m2
+        };
+        let mut best = (cur, score(cur, links.get(&cur).copied().unwrap_or(0.0)));
+        for (&c, &w) in &links {
+            if c == cur {
+                continue;
+            }
+            let s = score(c, w);
+            // strict improvement, ties toward smaller id (oscillation damper)
+            if s > best.1 + 1e-12 || (s > best.1 - 1e-12 && c < best.0) {
+                best = (c, s);
+            }
+        }
+        if best.0 != cur && best.1 > score(cur, links.get(&cur).copied().unwrap_or(0.0)) + 1e-12 {
+            self.comm_tot[cur as usize].fetch_add(-kv);
+            self.comm_tot[best.0 as usize].fetch_add(kv);
+            self.community.set(v as usize, best.0);
+            // neighbors' best choices may have changed
+            ctx.multicast(&edges.out_neighbors, ());
+        }
+    }
+
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, _m: &()) {
+        ctx.activate(v);
+    }
+
+    fn run_on_iteration_end(&self, ctx: &mut EndCtx<'_>) {
+        if ctx.round() + 1 >= self.max_rounds {
+            ctx.stop();
+        }
+    }
+}
+
+// ------------------------------------------------ coarse representations --
+
+/// Weighted coarse graph: hash-based (Graphyti metadata aggregation).
+struct MetaCoarse {
+    adj: Vec<HashMap<u32, f64>>,
+    /// Self-loop weight per community (intra-community edge mass).
+    selfw: Vec<f64>,
+    k: Vec<f64>,
+    m2: f64,
+}
+
+/// Weighted coarse graph: packed image (physical materialization).
+/// Layout per vertex: `[(neighbor u32, weight f32) × deg]` — the RAMDisk
+/// byte image a rewriting implementation would produce.
+struct PackedCoarse {
+    offsets: Vec<usize>,
+    bytes: Vec<u8>,
+    selfw: Vec<f64>,
+    k: Vec<f64>,
+    m2: f64,
+}
+
+/// Uniform access for the in-memory refinement levels.
+trait Coarse {
+    fn num(&self) -> usize;
+    fn k(&self, c: u32) -> f64;
+    fn selfw(&self, c: u32) -> f64;
+    fn m2(&self) -> f64;
+    fn for_neighbors(&self, c: u32, f: &mut dyn FnMut(u32, f64));
+}
+
+impl Coarse for MetaCoarse {
+    fn num(&self) -> usize {
+        self.adj.len()
+    }
+    fn k(&self, c: u32) -> f64 {
+        self.k[c as usize]
+    }
+    fn selfw(&self, c: u32) -> f64 {
+        self.selfw[c as usize]
+    }
+    fn m2(&self) -> f64 {
+        self.m2
+    }
+    fn for_neighbors(&self, c: u32, f: &mut dyn FnMut(u32, f64)) {
+        for (&u, &w) in &self.adj[c as usize] {
+            f(u, w);
+        }
+    }
+}
+
+impl Coarse for PackedCoarse {
+    fn num(&self) -> usize {
+        self.offsets.len() - 1
+    }
+    fn k(&self, c: u32) -> f64 {
+        self.k[c as usize]
+    }
+    fn selfw(&self, c: u32) -> f64 {
+        self.selfw[c as usize]
+    }
+    fn m2(&self) -> f64 {
+        self.m2
+    }
+    fn for_neighbors(&self, c: u32, f: &mut dyn FnMut(u32, f64)) {
+        let lo = self.offsets[c as usize];
+        let hi = self.offsets[c as usize + 1];
+        let rec = &self.bytes[lo..hi];
+        for e in rec.chunks_exact(8) {
+            let u = u32::from_le_bytes(e[..4].try_into().unwrap());
+            let w = f32::from_le_bytes(e[4..].try_into().unwrap());
+            f(u, w as f64);
+        }
+    }
+}
+
+/// Renumber communities densely; returns (mapping old→new, count).
+fn renumber(assign: &[u32]) -> (Vec<u32>, usize) {
+    let mut map = HashMap::new();
+    let mut out = Vec::with_capacity(assign.len());
+    for &c in assign {
+        let next = map.len() as u32;
+        out.push(*map.entry(c).or_insert(next));
+    }
+    (out, map.len())
+}
+
+/// Build weighted coarse edges `(cu, cv, w)` from a coarse graph + a dense
+/// community assignment over its vertices.
+fn coarse_edges(g: &dyn Coarse, assign: &[u32], nc: usize) -> (Vec<HashMap<u32, f64>>, Vec<f64>, Vec<f64>) {
+    let mut adj: Vec<HashMap<u32, f64>> = vec![HashMap::new(); nc];
+    let mut selfw = vec![0.0f64; nc];
+    let mut k = vec![0.0f64; nc];
+    for v in 0..g.num() as u32 {
+        let cv = assign[v as usize];
+        k[cv as usize] += g.k(v);
+        // intra mass of the merged vertex carries over
+        selfw[cv as usize] += g.selfw(v);
+        g.for_neighbors(v, &mut |u, w| {
+            let cu = assign[u as usize];
+            if cu == cv {
+                // each undirected edge visited from both endpoints
+                selfw[cv as usize] += w / 2.0;
+            } else {
+                *adj[cv as usize].entry(cu).or_default() += w;
+            }
+        });
+    }
+    (adj, selfw, k)
+}
+
+/// One sequential local-move pass set over a coarse graph. Returns the
+/// assignment (dense ids) and how many moves happened.
+fn refine(g: &dyn Coarse, max_passes: usize) -> (Vec<u32>, usize) {
+    let n = g.num();
+    let mut assign: Vec<u32> = (0..n as u32).collect();
+    let mut tot: Vec<f64> = (0..n as u32).map(|c| g.k(c)).collect();
+    let mut total_moves = 0;
+    for _ in 0..max_passes {
+        let mut moves = 0;
+        for v in 0..n as u32 {
+            let cur = assign[v as usize];
+            let kv = g.k(v);
+            let mut links: HashMap<u32, f64> = HashMap::new();
+            g.for_neighbors(v, &mut |u, w| {
+                *links.entry(assign[u as usize]).or_default() += w;
+            });
+            let m2 = g.m2();
+            let score = |c: u32, w: f64, tot: &[f64]| {
+                let mut t = tot[c as usize];
+                if c == cur {
+                    t -= kv;
+                }
+                w - t * kv / m2
+            };
+            let cur_score = score(cur, links.get(&cur).copied().unwrap_or(0.0), &tot);
+            let mut best = (cur, cur_score);
+            for (&c, &w) in &links {
+                if c == cur {
+                    continue;
+                }
+                let s = score(c, w, &tot);
+                if s > best.1 + 1e-12 || (s > best.1 - 1e-12 && c < best.0) {
+                    best = (c, s);
+                }
+            }
+            if best.0 != cur {
+                tot[cur as usize] -= kv;
+                tot[best.0 as usize] += kv;
+                assign[v as usize] = best.0;
+                moves += 1;
+            }
+        }
+        total_moves += moves;
+        if moves == 0 {
+            break;
+        }
+    }
+    (assign, total_moves)
+}
+
+/// Modularity of the identity partition of a coarse graph (each coarse
+/// vertex = one community).
+fn coarse_modularity(g: &dyn Coarse) -> f64 {
+    let m2 = g.m2();
+    if m2 == 0.0 {
+        return 0.0;
+    }
+    let mut q = 0.0;
+    for c in 0..g.num() as u32 {
+        q += 2.0 * g.selfw(c) / m2 - (g.k(c) / m2) * (g.k(c) / m2);
+    }
+    q
+}
+
+// -------------------------------------------------------------- driver --
+
+/// Run Louvain. `max_levels` bounds coarsening depth (level 0 included).
+pub fn louvain(
+    source: &dyn EdgeSource,
+    mode: LouvainMode,
+    max_levels: usize,
+    cfg: &EngineConfig,
+) -> LouvainResult {
+    let index = source.index();
+    assert!(!index.directed(), "louvain expects an undirected image");
+    let n = index.num_vertices();
+    let m2 = index.num_edges() as f64;
+
+    // ---- level 0: vertex-centric local moves over the SEM image -------
+    let t_local = Instant::now();
+    let prog = LouvainL0 {
+        community: SharedVec::from_vec((0..n as VertexId).collect()),
+        comm_tot: atomic_f64_vec(n, 0.0),
+        k: (0..n as VertexId).map(|v| index.out_deg(v) as f64).collect(),
+        m2: m2.max(1.0),
+        max_rounds: 64,
+    };
+    for v in 0..n as VertexId {
+        prog.comm_tot[v as usize].store(index.out_deg(v) as f64);
+    }
+    let all: Vec<VertexId> = (0..n as VertexId).collect();
+    let report = Engine::run(&prog, source, &all, cfg);
+    let mut local_move_wall = t_local.elapsed();
+
+    let (l0_assign, _) = renumber(&prog.community.to_vec());
+    let nc0 = l0_assign.iter().map(|&c| c as usize + 1).max().unwrap_or(1);
+    let mut mapping: Vec<u32> = l0_assign.clone(); // level-0 vertex -> current community
+
+    // ---- level-0 aggregation: stream the edge data once ----------------
+    // Graphyti: fold edges straight into per-community hash metadata (one
+    // streaming pass, no rewrite). Physical: materialize the *relabeled
+    // edge list* exactly as a rewriting implementation must — collect all
+    // O(m) coarse endpoints, globally sort, dedup-accumulate and pack a
+    // new image (in RAM = the paper's RAMDisk best case).
+    let mut aggregate_wall = Duration::ZERO;
+    let t_agg = Instant::now();
+    let mut coarse: Box<dyn Coarse> = match mode {
+        LouvainMode::Graphyti => {
+            let mut adj: Vec<HashMap<u32, f64>> = vec![HashMap::new(); nc0];
+            let mut selfw = vec![0.0f64; nc0];
+            let mut k = vec![0.0f64; nc0];
+            stream_edges(source, n, |v, u| {
+                let (cv, cu) = (l0_assign[v as usize], l0_assign[u as usize]);
+                k[cv as usize] += 1.0;
+                if cu == cv {
+                    selfw[cv as usize] += 0.5;
+                } else {
+                    *adj[cv as usize].entry(cu).or_default() += 1.0;
+                }
+            });
+            Box::new(MetaCoarse { adj, selfw, k, m2 })
+        }
+        LouvainMode::Physical => {
+            let mut relabeled: Vec<(u32, u32)> = Vec::with_capacity(m2 as usize);
+            let mut selfw = vec![0.0f64; nc0];
+            let mut k = vec![0.0f64; nc0];
+            stream_edges(source, n, |v, u| {
+                let (cv, cu) = (l0_assign[v as usize], l0_assign[u as usize]);
+                k[cv as usize] += 1.0;
+                if cu == cv {
+                    selfw[cv as usize] += 0.5;
+                } else {
+                    relabeled.push((cv, cu));
+                }
+            });
+            Box::new(pack_relabeled(relabeled, selfw, k, nc0, m2))
+        }
+    };
+    aggregate_wall += t_agg.elapsed();
+
+    // ---- higher levels: in-memory refinement + per-mode aggregation ---
+    let mut levels = 1;
+    let mut q = coarse_modularity(coarse.as_ref());
+    while levels < max_levels {
+        let t = Instant::now();
+        let (assign, moves) = refine(coarse.as_ref(), 16);
+        local_move_wall += t.elapsed();
+        if moves == 0 {
+            break;
+        }
+        let (dense, nc) = renumber(&assign);
+        // compose the level mapping down to level-0 vertices
+        for m in mapping.iter_mut() {
+            *m = dense[*m as usize];
+        }
+        let t = Instant::now();
+        let (adj, selfw, k) = coarse_edges(coarse.as_ref(), &dense, nc);
+        coarse = match mode {
+            LouvainMode::Graphyti => Box::new(MetaCoarse { adj, selfw, k, m2 }),
+            LouvainMode::Physical => Box::new(pack_coarse(adj, selfw, k, m2)),
+        };
+        aggregate_wall += t.elapsed();
+        levels += 1;
+        let q_new = coarse_modularity(coarse.as_ref());
+        if q_new <= q + 1e-9 {
+            q = q_new.max(q);
+            break;
+        }
+        q = q_new;
+    }
+
+    LouvainResult {
+        community: mapping.iter().map(|&c| c as VertexId).collect(),
+        modularity: q,
+        levels,
+        local_move_wall,
+        aggregate_wall,
+        report,
+    }
+}
+
+/// One streaming pass over all edge lists (the O(m) aggregation read).
+fn stream_edges(source: &dyn EdgeSource, n: usize, mut f: impl FnMut(VertexId, VertexId)) {
+    let batch = 1024;
+    let mut v0 = 0usize;
+    while v0 < n {
+        let hi = (v0 + batch).min(n);
+        let reqs: Vec<(VertexId, EdgeRequest)> =
+            (v0..hi).map(|v| (v as VertexId, EdgeRequest::Out)).collect();
+        let edges = source.fetch_batch(&reqs).expect("aggregation scan failed");
+        for (i, e) in edges.iter().enumerate() {
+            let v = (v0 + i) as VertexId;
+            for &u in &e.out_neighbors {
+                f(v, u);
+            }
+        }
+        v0 = hi;
+    }
+}
+
+/// The physical rewrite: globally sort the relabeled edge list,
+/// dedup-accumulate weights, pack a new byte image (RAMDisk best case).
+fn pack_relabeled(
+    mut relabeled: Vec<(u32, u32)>,
+    selfw: Vec<f64>,
+    k: Vec<f64>,
+    nc: usize,
+    m2: f64,
+) -> PackedCoarse {
+    relabeled.sort_unstable();
+    let mut offsets = Vec::with_capacity(nc + 1);
+    let mut bytes = Vec::new();
+    offsets.push(0);
+    let mut i = 0usize;
+    for c in 0..nc as u32 {
+        while i < relabeled.len() && relabeled[i].0 == c {
+            // accumulate duplicate (c, u) runs into one weighted edge
+            let u = relabeled[i].1;
+            let mut w = 0f32;
+            while i < relabeled.len() && relabeled[i] == (c, u) {
+                w += 1.0;
+                i += 1;
+            }
+            bytes.extend_from_slice(&u.to_le_bytes());
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        offsets.push(bytes.len());
+    }
+    PackedCoarse { offsets, bytes, selfw, k, m2 }
+}
+
+/// Materialize a packed coarse image: sort + pack — everything a physical
+/// rewrite pays except the disk write itself (RAMDisk best case).
+fn pack_coarse(
+    adj: Vec<HashMap<u32, f64>>,
+    selfw: Vec<f64>,
+    k: Vec<f64>,
+    m2: f64,
+) -> PackedCoarse {
+    let n = adj.len();
+    let mut offsets = Vec::with_capacity(n + 1);
+    let mut bytes = Vec::new();
+    offsets.push(0);
+    for nbrs in &adj {
+        let mut sorted: Vec<(u32, f64)> = nbrs.iter().map(|(&u, &w)| (u, w)).collect();
+        sorted.sort_unstable_by_key(|&(u, _)| u);
+        for (u, w) in sorted {
+            bytes.extend_from_slice(&u.to_le_bytes());
+            bytes.extend_from_slice(&(w as f32).to_le_bytes());
+        }
+        offsets.push(bytes.len());
+    }
+    PackedCoarse { offsets, bytes, selfw, k, m2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::oracle;
+    use crate::graph::csr::Csr;
+    use crate::graph::gen;
+    use crate::graph::source::MemGraph;
+
+    fn communities_of(result: &LouvainResult) -> usize {
+        let mut cs: Vec<VertexId> = result.community.clone();
+        cs.sort_unstable();
+        cs.dedup();
+        cs.len()
+    }
+
+    #[test]
+    fn two_cliques_found_both_modes() {
+        let edges = gen::two_cliques(8);
+        for mode in [LouvainMode::Graphyti, LouvainMode::Physical] {
+            let g = MemGraph::from_edges(16, &edges, false);
+            let r = louvain(&g, mode, 8, &EngineConfig { workers: 2, ..Default::default() });
+            assert_eq!(communities_of(&r), 2, "{mode:?}");
+            // all of clique 1 together, all of clique 2 together
+            for v in 1..8 {
+                assert_eq!(r.community[v], r.community[0], "{mode:?}");
+            }
+            for v in 9..16 {
+                assert_eq!(r.community[v], r.community[8], "{mode:?}");
+            }
+            assert!(r.modularity > 0.4, "{mode:?} Q={}", r.modularity);
+        }
+    }
+
+    #[test]
+    fn modularity_agrees_with_oracle_formula() {
+        let edges = gen::two_cliques(10);
+        let g = MemGraph::from_edges(20, &edges, false);
+        let r = louvain(&g, LouvainMode::Graphyti, 8, &EngineConfig::default());
+        let csr = Csr::from_edges(20, &edges, false);
+        let q_oracle = oracle::modularity(&csr, &r.community);
+        assert!(
+            (r.modularity - q_oracle).abs() < 1e-9,
+            "internal Q {} vs oracle {}",
+            r.modularity,
+            q_oracle
+        );
+    }
+
+    #[test]
+    fn ring_of_cliques() {
+        // 4 cliques of 5, ring-connected: canonical Louvain fixture
+        let mut edges = Vec::new();
+        let k = 5;
+        for c in 0..4u32 {
+            let base = c * k;
+            for i in 0..k {
+                for j in (i + 1)..k {
+                    edges.push((base + i, base + j));
+                }
+            }
+            let next_base = ((c + 1) % 4) * k;
+            edges.push((base, next_base));
+        }
+        for mode in [LouvainMode::Graphyti, LouvainMode::Physical] {
+            let g = MemGraph::from_edges(20, &edges, false);
+            let r = louvain(&g, mode, 8, &EngineConfig::default());
+            assert_eq!(communities_of(&r), 4, "{mode:?}");
+            assert!(r.modularity > 0.5, "{mode:?} Q={}", r.modularity);
+        }
+    }
+
+    #[test]
+    fn modularity_positive_on_rmat() {
+        let edges = gen::rmat(9, 3000, 101);
+        let g = MemGraph::from_edges(512, &edges, false);
+        let r = louvain(&g, LouvainMode::Graphyti, 10, &EngineConfig::default());
+        // power-law graphs still have community structure vs random
+        assert!(r.modularity > 0.1, "Q={}", r.modularity);
+        let csr = Csr::from_edges(512, &edges, false);
+        let q_oracle = oracle::modularity(&csr, &r.community);
+        assert!((r.modularity - q_oracle).abs() < 1e-6);
+    }
+
+    #[test]
+    fn both_modes_reach_similar_quality() {
+        let edges = gen::rmat(8, 1500, 7);
+        let g1 = MemGraph::from_edges(256, &edges, false);
+        let a = louvain(&g1, LouvainMode::Graphyti, 10, &EngineConfig::default());
+        let g2 = MemGraph::from_edges(256, &edges, false);
+        let b = louvain(&g2, LouvainMode::Physical, 10, &EngineConfig::default());
+        assert!((a.modularity - b.modularity).abs() < 0.05, "Q {} vs {}", a.modularity, b.modularity);
+    }
+}

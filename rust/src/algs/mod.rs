@@ -1,0 +1,29 @@
+//! The algorithm library: the paper's six applications (each in its
+//! unoptimized and Graphyti-optimized variants) plus library extras.
+//!
+//! | module | paper § | principle demonstrated |
+//! |--------|---------|------------------------|
+//! | [`pagerank`] | 4.1 | limit superfluous reads (push vs pull) |
+//! | [`coreness`] | 4.2 | minimize messaging; prune computation |
+//! | [`diameter`] | 4.3 | decouple algorithm from framework constructs |
+//! | [`bc`] | 4.4 | asynchronous applications; functional constructs |
+//! | [`triangles`] | 4.5 | optimize in-memory operations |
+//! | [`louvain`] | 4.6 | avoid graph structure modification |
+//!
+//! Extras: [`bfs`] (uni- and multi-source), [`wcc`], [`sssp`],
+//! [`degree`], [`scan_stat`] (Priebe's scan-1 locality statistic).
+//! [`oracle`] holds single-threaded in-memory references used by tests
+//! throughout.
+
+pub mod bc;
+pub mod bfs;
+pub mod coreness;
+pub mod degree;
+pub mod diameter;
+pub mod louvain;
+pub mod oracle;
+pub mod pagerank;
+pub mod scan_stat;
+pub mod sssp;
+pub mod triangles;
+pub mod wcc;

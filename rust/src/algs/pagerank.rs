@@ -1,0 +1,264 @@
+//! PageRank — §4.1, the *limit superfluous reads* principle.
+//!
+//! Two implementations of the same fixpoint
+//! `R = (1-α)/n + α · Mᵀ R` (no dangling redistribution, the convention
+//! shared with [`super::oracle::pagerank`]):
+//!
+//! * **PR-pull** ([`pagerank_pull`]) — the Pregel/Turi baseline:
+//!   synchronous gather/scatter. Every superstep, every non-globally-
+//!   converged vertex gathers the shares its in-neighbors sent last
+//!   superstep, recomputes, and re-scatters. A vertex *cannot* drop out
+//!   while its in-neighbors keep sending — hubs converge slowly, so they
+//!   keep re-activating nearly the whole graph, and each activation
+//!   re-fetches an edge list whose neighborhood has long converged. That
+//!   is the superfluous I/O (and activation, and messaging) the paper
+//!   calls out.
+//!
+//! * **PR-push** ([`pagerank_push`]) — residual push: a vertex drains its
+//!   accumulated residual into its rank and pushes `α·r/outdeg` to its
+//!   out-neighbors *only when the residual exceeds the threshold*. Only
+//!   vertices with meaningful residual are ever activated — the minimal
+//!   activation set, with a matching reduction in edge-list fetches.
+//!
+//! Figure 2 compares runtime, read bytes, read requests and thread waits
+//! between the two (`cargo bench --bench fig2_pagerank`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::engine::{Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::graph::source::EdgeSource;
+use crate::util::atomic_f64::{atomic_f64_vec, AtomicF64};
+use crate::util::SharedVec;
+use crate::VertexId;
+
+/// Result of a PageRank run.
+pub struct PageRankResult {
+    /// Final rank per vertex.
+    pub rank: Vec<f64>,
+    /// Engine + I/O report.
+    pub report: RunReport,
+}
+
+// ---------------------------------------------------------------- push --
+
+struct PrPush {
+    alpha: f64,
+    threshold: f64,
+    // owner-worker access only (run_on_vertex / run_on_message both run
+    // on the owner), so plain SharedVec slots — no atomics on the hot path
+    rank: SharedVec<f64>,
+    residual: SharedVec<f64>,
+}
+
+impl VertexProgram for PrPush {
+    type Msg = f64; // residual share
+
+    fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+        EdgeRequest::Out // the whole point: never touch in-lists
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, f64>, v: VertexId, edges: &VertexEdges) {
+        let r = std::mem::take(self.residual.get_mut(v as usize));
+        if r == 0.0 {
+            return;
+        }
+        *self.rank.get_mut(v as usize) += r;
+        let outs = &edges.out_neighbors;
+        if outs.is_empty() {
+            return; // dangling: mass retained, not redistributed
+        }
+        let share = self.alpha * r / outs.len() as f64;
+        ctx.multicast(outs, share);
+    }
+
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, f64>, v: VertexId, share: &f64) {
+        let slot = self.residual.get_mut(v as usize);
+        *slot += *share;
+        if *slot > self.threshold {
+            // activate into this round's vertex phase: the residual is
+            // drained promptly while its cache pages are likely warm
+            ctx.activate(v);
+        }
+    }
+}
+
+/// Run PR-push. `threshold` bounds the per-vertex residual left
+/// unpropagated (1e-9 gives ~1e-6 rank accuracy on 100k-vertex graphs).
+pub fn pagerank_push(
+    source: &dyn EdgeSource,
+    alpha: f64,
+    threshold: f64,
+    cfg: &EngineConfig,
+) -> PageRankResult {
+    let n = source.index().num_vertices();
+    let prog = PrPush {
+        alpha,
+        threshold,
+        rank: SharedVec::new(n, 0.0),
+        residual: SharedVec::new(n, (1.0 - alpha) / n as f64),
+    };
+    let all: Vec<VertexId> = (0..n as VertexId).collect();
+    let report = Engine::run(&prog, source, &all, cfg);
+    PageRankResult { rank: prog.rank.to_vec(), report }
+}
+
+// ---------------------------------------------------------------- pull --
+
+struct PrPull {
+    alpha: f64,
+    threshold: f64,
+    max_iters: usize,
+    /// Current rank (owner-written in run_on_vertex).
+    rank: Vec<AtomicF64>,
+    /// Gathered contributions for the next compute (message-accumulated
+    /// on the owner worker).
+    acc: SharedVec<f64>,
+    iters: AtomicUsize,
+}
+
+impl VertexProgram for PrPull {
+    type Msg = f64; // rank share from an in-neighbor (previous superstep)
+
+    fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+        EdgeRequest::Out
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, f64>, v: VertexId, edges: &VertexEdges) {
+        let n = ctx.num_vertices() as f64;
+        // gather: everything in-neighbors scattered last superstep
+        let sum = std::mem::take(self.acc.get_mut(v as usize));
+        let old = self.rank[v as usize].load();
+        let new = if ctx.round() == 0 {
+            old // superstep 0: nothing gathered yet, scatter the initial rank
+        } else {
+            (1.0 - self.alpha) / n + self.alpha * sum
+        };
+        self.rank[v as usize].store(new);
+        ctx.reduce_max(0, (new - old).abs());
+        // scatter to out-neighbors and stay active: in the Pregel model a
+        // vertex cannot deactivate while its in-neighbors keep sending —
+        // hubs keep almost the whole graph active until *global*
+        // convergence (the superfluous work PR-push eliminates)
+        if !edges.out_neighbors.is_empty() {
+            ctx.multicast(&edges.out_neighbors, new / edges.out_neighbors.len() as f64);
+        }
+        ctx.activate(v);
+    }
+
+    fn run_on_message(&self, _ctx: &mut WorkerCtx<'_, f64>, v: VertexId, share: &f64) {
+        *self.acc.get_mut(v as usize) += *share;
+    }
+
+    fn run_on_iteration_end(&self, ctx: &mut EndCtx<'_>) {
+        let max_delta = ctx.reduction_max(0);
+        let it = self.iters.fetch_add(1, Ordering::Relaxed) + 1;
+        if (ctx.round() > 0 && max_delta < self.threshold) || it >= self.max_iters {
+            ctx.stop();
+        }
+    }
+}
+
+/// Run PR-pull — the Pregel/Turi-style baseline of Fig. 2: synchronous
+/// gather/scatter with every vertex active until *global* convergence.
+pub fn pagerank_pull(
+    source: &dyn EdgeSource,
+    alpha: f64,
+    threshold: f64,
+    max_iters: usize,
+    cfg: &EngineConfig,
+) -> PageRankResult {
+    let n = source.index().num_vertices();
+    let prog = PrPull {
+        alpha,
+        threshold,
+        max_iters,
+        rank: atomic_f64_vec(n, 1.0 / n as f64),
+        acc: SharedVec::new(n, 0.0),
+        iters: AtomicUsize::new(0),
+    };
+    let all: Vec<VertexId> = (0..n as VertexId).collect();
+    let report = Engine::run(&prog, source, &all, cfg);
+    PageRankResult { rank: prog.rank.iter().map(|a| a.load()).collect(), report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::oracle;
+    use crate::graph::csr::Csr;
+    use crate::graph::gen;
+    use crate::graph::source::MemGraph;
+
+    fn l1_err(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    fn check_both_match_oracle(n: usize, edges: &[(VertexId, VertexId)]) {
+        let g = MemGraph::from_edges(n, edges, true);
+        let csr = Csr::from_edges(n, edges, true);
+        let want = oracle::pagerank(&csr, 0.85, 200);
+        let cfg = EngineConfig { workers: 4, ..Default::default() };
+        let push = pagerank_push(&g, 0.85, 1e-12, &cfg);
+        let pull = pagerank_pull(&g, 0.85, 1e-12, 500, &cfg);
+        assert!(
+            l1_err(&push.rank, &want) < 1e-6,
+            "push L1 err {}",
+            l1_err(&push.rank, &want)
+        );
+        assert!(
+            l1_err(&pull.rank, &want) < 1e-6,
+            "pull L1 err {}",
+            l1_err(&pull.rank, &want)
+        );
+    }
+
+    #[test]
+    fn matches_oracle_on_cycle() {
+        check_both_match_oracle(20, &gen::cycle(20));
+    }
+
+    #[test]
+    fn matches_oracle_on_rmat() {
+        let edges = gen::rmat(8, 2000, 3);
+        check_both_match_oracle(256, &edges);
+    }
+
+    #[test]
+    fn matches_oracle_with_dangling() {
+        // path: last vertex dangling
+        check_both_match_oracle(10, &gen::path(10));
+    }
+
+    #[test]
+    fn push_reads_less_than_pull() {
+        // the principle itself: PR-push must demand fewer edge bytes —
+        // pull fetches BOTH lists per activation and keeps re-gathering
+        // neighborhoods whose ranks have converged
+        let edges = gen::rmat(10, 10_000, 9);
+        let n = 1024;
+        let thr = 1e-3 / n as f64; // a realistic convergence threshold
+        let g = MemGraph::from_edges(n, &edges, true);
+        let cfg = EngineConfig { workers: 4, ..Default::default() };
+        let push = pagerank_push(&g, 0.85, thr, &cfg);
+        let g2 = MemGraph::from_edges(n, &edges, true);
+        let pull = pagerank_pull(&g2, 0.85, thr, 500, &cfg);
+        assert!(
+            push.report.io.logical_bytes < pull.report.io.logical_bytes,
+            "push {} bytes vs pull {} bytes",
+            push.report.io.logical_bytes,
+            pull.report.io.logical_bytes
+        );
+        assert!(l1_err(&push.rank, &pull.rank) < 1e-2);
+    }
+
+    #[test]
+    fn rank_mass_bounded() {
+        let edges = gen::rmat(8, 1500, 5);
+        let g = MemGraph::from_edges(256, &edges, true);
+        let r = pagerank_push(&g, 0.85, 1e-12, &EngineConfig::default());
+        let total: f64 = r.rank.iter().sum();
+        assert!(total > 0.0 && total <= 1.0 + 1e-9, "total {total}");
+        assert!(r.rank.iter().all(|&x| x >= 0.0));
+    }
+}

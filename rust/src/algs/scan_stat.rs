@@ -1,0 +1,144 @@
+//! Scan statistic (scan-1) — a FlashGraph library member (Priebe's
+//! locality statistic, used for chatter-anomaly detection): for each
+//! vertex, the number of edges in its closed 1-neighborhood,
+//! `SS(v) = deg(v) + |{(u,w) ∈ E : u,w ∈ N(v)}|`.
+//!
+//! Same SEM access pattern as triangle counting (§4.5) — each vertex
+//! intersects neighbor lists — and it reuses the same in-memory
+//! optimizations (sorted lists, restarted binary search).
+
+use crate::engine::{Engine, EngineConfig, RunReport, VertexProgram, WorkerCtx};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::graph::source::EdgeSource;
+use crate::util::SharedVec;
+use crate::VertexId;
+
+struct ScanStat {
+    stat: SharedVec<u64>,
+}
+
+impl VertexProgram for ScanStat {
+    type Msg = ();
+
+    fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+        EdgeRequest::Out
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, edges: &VertexEdges) {
+        let nbrs = &edges.out_neighbors;
+        let mut edges_in_hood = 0u64;
+        // count each neighbor-pair edge once: for u in N(v), count
+        // w ∈ N(u) ∩ N(v) with w > u (both lists sorted ascending)
+        for &u in nbrs {
+            let nu = ctx.fetch_edges(u, EdgeRequest::Out);
+            // restarted binary search over the suffix (§4.5 optimization)
+            let start = match nbrs.binary_search(&u) {
+                Ok(p) | Err(p) => p + 1,
+            };
+            let tail = &nbrs[start.min(nbrs.len())..];
+            let mut lo = 0usize;
+            for &w in tail {
+                match nu.out_neighbors[lo..].binary_search(&w) {
+                    Ok(p) => {
+                        edges_in_hood += 1;
+                        lo += p + 1;
+                    }
+                    Err(p) => lo += p,
+                }
+                if lo >= nu.out_neighbors.len() {
+                    break;
+                }
+            }
+        }
+        self.stat.set(v as usize, nbrs.len() as u64 + edges_in_hood);
+    }
+
+    fn run_on_message(&self, _c: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+}
+
+/// Per-vertex scan-1 statistic on an undirected image, plus the maximum
+/// (the anomaly score) and the run report.
+pub fn scan_statistic(
+    source: &dyn EdgeSource,
+    cfg: &EngineConfig,
+) -> (Vec<u64>, (VertexId, u64), RunReport) {
+    let index = source.index();
+    assert!(!index.directed(), "scan statistic expects an undirected image");
+    let n = index.num_vertices();
+    let prog = ScanStat { stat: SharedVec::new(n, 0u64) };
+    let all: Vec<VertexId> = (0..n as VertexId).collect();
+    let report = Engine::run(&prog, source, &all, cfg);
+    let stat = prog.stat.into_vec();
+    let max = stat
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, &s)| s)
+        .map(|(v, &s)| (v as VertexId, s))
+        .unwrap_or((0, 0));
+    (stat, max, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::graph::gen;
+    use crate::graph::source::MemGraph;
+
+    /// Oracle: brute-force edges within the closed neighborhood.
+    fn oracle_scan(g: &Csr) -> Vec<u64> {
+        let n = g.num_vertices();
+        (0..n as VertexId)
+            .map(|v| {
+                let nbrs = g.out(v);
+                let mut c = nbrs.len() as u64;
+                for (i, &u) in nbrs.iter().enumerate() {
+                    for &w in &nbrs[i + 1..] {
+                        if g.out(u).binary_search(&w).is_ok() {
+                            c += 1;
+                        }
+                    }
+                }
+                c
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_oracle_on_known_shapes() {
+        // K4: SS(v) = 3 + C(3,2) = 6 for every vertex
+        let g = MemGraph::from_edges(4, &gen::complete(4), false);
+        let (stat, max, _) = scan_statistic(&g, &EngineConfig::default());
+        assert_eq!(stat, vec![6, 6, 6, 6]);
+        assert_eq!(max.1, 6);
+        // path: interior SS = 2, ends SS = 1
+        let g = MemGraph::from_edges(5, &gen::path(5), false);
+        let (stat, _, _) = scan_statistic(&g, &EngineConfig::default());
+        assert_eq!(stat, vec![1, 2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn matches_oracle_on_rmat() {
+        let edges = gen::rmat(8, 2000, 99);
+        let g = MemGraph::from_edges(256, &edges, false);
+        let csr = Csr::from_edges(256, &edges, false);
+        let (stat, max, _) = scan_statistic(&g, &EngineConfig { workers: 4, ..Default::default() });
+        assert_eq!(stat, oracle_scan(&csr));
+        assert_eq!(max.1, *stat.iter().max().unwrap());
+    }
+
+    #[test]
+    fn detects_planted_clique() {
+        // sparse ring + a planted K8: the clique members dominate SS
+        let mut edges = gen::cycle(200);
+        for u in 0..8u32 {
+            for v in (u + 1)..8 {
+                edges.push((u * 20, v * 20)); // spread through the ring
+            }
+        }
+        let g = MemGraph::from_edges(200, &edges, false);
+        let (_, max, _) = scan_statistic(&g, &EngineConfig::default());
+        assert_eq!(max.0 % 20, 0, "anomaly must be a clique member, got v{}", max.0);
+        assert!(max.1 >= 28, "clique edges must dominate: {}", max.1);
+    }
+}

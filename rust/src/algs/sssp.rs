@@ -1,0 +1,82 @@
+//! Single-source shortest paths (label-correcting relaxation) — library
+//! extra. Weights are the deterministic synthetic function
+//! [`crate::algs::oracle::edge_weight`] so the graph image stores nothing
+//! extra (the image format is unweighted; see DESIGN.md).
+
+use crate::algs::oracle::edge_weight;
+use crate::engine::{Engine, EngineConfig, RunReport, VertexProgram, WorkerCtx};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::graph::source::EdgeSource;
+use crate::util::SharedVec;
+use crate::VertexId;
+
+struct Sssp {
+    dist: SharedVec<u64>,
+}
+
+impl VertexProgram for Sssp {
+    type Msg = u64; // proposed distance
+
+    fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+        EdgeRequest::Out
+    }
+
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, u64>, v: VertexId, edges: &VertexEdges) {
+        let d = *self.dist.get(v as usize);
+        // per-edge weights differ, so relaxations are point-to-point
+        for &u in &edges.out_neighbors {
+            ctx.send(u, d + edge_weight(v, u));
+        }
+    }
+
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, u64>, v: VertexId, nd: &u64) {
+        let cur = self.dist.get_mut(v as usize);
+        if *nd < *cur {
+            *cur = *nd;
+            ctx.activate(v); // label-correcting: re-relax promptly
+        }
+    }
+}
+
+/// Shortest synthetic-weight distances from `src` (u64::MAX unreachable).
+pub fn sssp(source: &dyn EdgeSource, src: VertexId, cfg: &EngineConfig) -> (Vec<u64>, RunReport) {
+    let n = source.index().num_vertices();
+    let prog = Sssp { dist: SharedVec::new(n, u64::MAX) };
+    prog.dist.set(src as usize, 0);
+    let report = Engine::run(&prog, source, &[src], cfg);
+    (prog.dist.into_vec(), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::oracle;
+    use crate::graph::csr::Csr;
+    use crate::graph::gen;
+    use crate::graph::source::MemGraph;
+
+    #[test]
+    fn matches_dijkstra_on_rmat() {
+        let edges = gen::rmat(8, 2000, 21);
+        let g = MemGraph::from_edges(256, &edges, true);
+        let csr = Csr::from_edges(256, &edges, true);
+        let (got, _) = sssp(&g, 0, &EngineConfig { workers: 4, ..Default::default() });
+        assert_eq!(got, oracle::sssp(&csr, 0));
+    }
+
+    #[test]
+    fn matches_dijkstra_on_grid() {
+        let edges = gen::grid_2d(8, 8);
+        let g = MemGraph::from_edges(64, &edges, false);
+        let csr = Csr::from_edges(64, &edges, false);
+        let (got, _) = sssp(&g, 27, &EngineConfig::default());
+        assert_eq!(got, oracle::sssp(&csr, 27));
+    }
+
+    #[test]
+    fn unreachable_is_max() {
+        let g = MemGraph::from_edges(3, &[(0, 1)], true);
+        let (got, _) = sssp(&g, 0, &EngineConfig::default());
+        assert_eq!(got[2], u64::MAX);
+    }
+}

@@ -1,0 +1,128 @@
+//! Shared plumbing for the figure-reproduction benches
+//! (`rust/benches/fig*.rs`): workload construction in the paper's SEM
+//! regime and uniform result rows.
+//!
+//! Every bench prints the same row schema so EXPERIMENTS.md can quote
+//! them directly: variant, wall time, rounds, read requests, logical
+//! bytes, physical bytes, messages, waits.
+
+use std::path::PathBuf;
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::report::Table;
+use crate::engine::RunReport;
+use crate::graph::builder::GraphBuilder;
+use crate::graph::gen;
+use crate::graph::source::SemGraph;
+use crate::util::{fmt_bytes, fmt_dur};
+
+/// Standard SSD-emulation latency for benches (µs per physical read).
+/// Restores the I/O-bound regime the paper measures in (DESIGN.md §5);
+/// override with `GRAPHYTI_BENCH_DELAY_US`.
+pub fn bench_io_delay_us() -> u64 {
+    std::env::var("GRAPHYTI_BENCH_DELAY_US")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100)
+}
+
+/// R-MAT scale for benches (default 15; override `GRAPHYTI_BENCH_SCALE`).
+pub fn bench_scale() -> u32 {
+    std::env::var("GRAPHYTI_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15)
+}
+
+/// Build (once, cached on disk) an R-MAT image for benching and return
+/// `(base path, RunConfig)` with the cache in the paper's 1/7 regime.
+pub fn rmat_workload(scale: u32, edge_factor: usize, directed: bool, tag: &str) -> (PathBuf, RunConfig) {
+    let base = std::env::temp_dir().join(format!(
+        "graphyti-bench-{tag}-s{scale}-f{edge_factor}-{}",
+        if directed { "d" } else { "u" }
+    ));
+    if !base.with_extension("gy-idx").exists() {
+        let n = 1usize << scale;
+        let edges = gen::rmat(scale, n * edge_factor, 42);
+        let mut b = GraphBuilder::new(n, directed);
+        b.add_edges(&edges);
+        b.build_files(&base).expect("build bench image");
+    }
+    let adj_bytes = std::fs::metadata(base.with_extension("gy-adj")).unwrap().len();
+    let cache_bytes = (adj_bytes as usize / 7).max(64 * 4096);
+    let mut cfg = RunConfig::default();
+    cfg.cache_mb = cache_bytes.div_ceil(1024 * 1024).max(1);
+    cfg.io_delay_us = bench_io_delay_us();
+    (base, cfg)
+}
+
+/// Open the workload semi-externally with a cold cache.
+pub fn open_sem(base: &PathBuf, cfg: &RunConfig) -> SemGraph {
+    SemGraph::open(base, cfg.cache_bytes(), cfg.io()).expect("open bench graph")
+}
+
+/// Collector printing the uniform figure-row schema.
+pub struct FigTable {
+    table: Table,
+    baseline_wall: Option<f64>,
+}
+
+impl Default for FigTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FigTable {
+    /// New empty table.
+    pub fn new() -> Self {
+        FigTable {
+            table: Table::new(&[
+                "variant",
+                "wall",
+                "vs-base",
+                "rounds",
+                "read-reqs",
+                "logical",
+                "disk",
+                "p2p",
+                "mcast",
+                "deliver",
+                "waits",
+            ]),
+            baseline_wall: None,
+        }
+    }
+
+    /// Append a run; the first row becomes the speedup baseline.
+    pub fn add(&mut self, variant: &str, r: &RunReport) {
+        let wall = r.wall.as_secs_f64();
+        let base = *self.baseline_wall.get_or_insert(wall);
+        self.table.row(&[
+            variant.to_string(),
+            fmt_dur(r.wall),
+            format!("{:.2}x", base / wall),
+            r.rounds.to_string(),
+            r.io.read_requests.to_string(),
+            fmt_bytes(r.io.logical_bytes),
+            fmt_bytes(r.io.bytes_read),
+            r.engine.p2p_msgs.to_string(),
+            r.engine.multicast_msgs.to_string(),
+            r.engine.deliveries.to_string(),
+            r.io.thread_waits.to_string(),
+        ]);
+    }
+
+    /// Print the table.
+    pub fn print(&self) {
+        self.table.print();
+    }
+}
+
+/// Print a figure banner.
+pub fn banner(fig: &str, caption: &str, workload: &str) {
+    println!("\n================================================================");
+    println!("{fig} — {caption}");
+    println!("workload: {workload}");
+    println!("================================================================");
+}

@@ -1,0 +1,152 @@
+//! Run configuration: `key=value` files + CLI overrides.
+//!
+//! The paper's experiments hinge on a handful of knobs (page-cache size
+//! vs graph size, I/O parallelism, worker threads); this module makes
+//! them uniform across the CLI, the examples and the bench harnesses.
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::engine::EngineConfig;
+use crate::safs::IoConfig;
+
+/// All tunables for a run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Page-cache capacity in MiB (the paper's central SEM knob).
+    pub cache_mb: usize,
+    /// I/O pool threads.
+    pub io_threads: usize,
+    /// Injected latency per physical read, microseconds (emulates SSD
+    /// access cost; see DESIGN.md §5).
+    pub io_delay_us: u64,
+    /// Max pages per merged physical read.
+    pub max_run_pages: usize,
+    /// Engine worker threads (0 = one per core).
+    pub workers: usize,
+    /// Vertices per fetch batch.
+    pub batch: usize,
+    /// PageRank damping factor.
+    pub alpha: f64,
+    /// PageRank convergence threshold (absolute rank delta).
+    pub threshold: f64,
+    /// Deterministic seed for generators / source selection.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            cache_mb: 64,
+            io_threads: 4,
+            io_delay_us: 0,
+            max_run_pages: 256,
+            workers: 0,
+            batch: 1024,
+            alpha: 0.85,
+            threshold: 1e-10,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> crate::Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "cache_mb" => self.cache_mb = v.parse().context("cache_mb")?,
+            "io_threads" => self.io_threads = v.parse().context("io_threads")?,
+            "io_delay_us" => self.io_delay_us = v.parse().context("io_delay_us")?,
+            "max_run_pages" => self.max_run_pages = v.parse().context("max_run_pages")?,
+            "workers" => self.workers = v.parse().context("workers")?,
+            "batch" => self.batch = v.parse().context("batch")?,
+            "alpha" => self.alpha = v.parse().context("alpha")?,
+            "threshold" => self.threshold = v.parse().context("threshold")?,
+            "seed" => self.seed = v.parse().context("seed")?,
+            other => bail!("unknown config key: {other}"),
+        }
+        Ok(())
+    }
+
+    /// Load `key=value` lines (`#` comments, blank lines ok).
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let mut cfg = RunConfig::default();
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("{}:{}: expected key=value", path.display(), lineno + 1);
+            };
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Engine configuration slice.
+    pub fn engine(&self) -> EngineConfig {
+        let mut e = EngineConfig::default();
+        if self.workers > 0 {
+            e.workers = self.workers;
+        }
+        e.batch = self.batch;
+        e
+    }
+
+    /// SAFS I/O configuration slice.
+    pub fn io(&self) -> IoConfig {
+        IoConfig {
+            threads: self.io_threads,
+            io_delay_us: self.io_delay_us,
+            max_run_pages: self.max_run_pages,
+        }
+    }
+
+    /// Page-cache capacity in bytes.
+    pub fn cache_bytes(&self) -> usize {
+        self.cache_mb * 1024 * 1024
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.cache_mb, 64);
+        c.set("cache_mb", "8").unwrap();
+        c.set("alpha", "0.9").unwrap();
+        assert_eq!(c.cache_mb, 8);
+        assert!((c.alpha - 0.9).abs() < 1e-12);
+        assert!(c.set("nonsense", "1").is_err());
+        assert!(c.set("cache_mb", "abc").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir().join(format!("graphyti-cfg-{}", std::process::id()));
+        std::fs::write(&path, "# comment\ncache_mb = 16\n\nio_delay_us=50\nworkers=2\n").unwrap();
+        let c = RunConfig::load(&path).unwrap();
+        assert_eq!(c.cache_mb, 16);
+        assert_eq!(c.io_delay_us, 50);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.engine().workers, 2);
+        assert_eq!(c.io().io_delay_us, 50);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bad_file_line_reports_error() {
+        let path = std::env::temp_dir().join(format!("graphyti-cfg-bad-{}", std::process::id()));
+        std::fs::write(&path, "cache_mb\n").unwrap();
+        assert!(RunConfig::load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,342 @@
+//! Job dispatch: open a graph (SEM or in-memory) and run any library
+//! algorithm by spec, returning a uniform [`JobOutput`].
+
+use std::path::Path;
+
+use anyhow::bail;
+
+use crate::algs::bc::{betweenness, BcVariant};
+use crate::algs::bfs::bfs;
+use crate::algs::coreness::{coreness, CorenessOptions};
+use crate::algs::degree::{degree_stats, top_k_by_degree};
+use crate::algs::diameter::{estimate_diameter, DiameterVariant};
+use crate::algs::louvain::{louvain, LouvainMode};
+use crate::algs::pagerank::{pagerank_pull, pagerank_push};
+use crate::algs::scan_stat::scan_statistic;
+use crate::algs::sssp::sssp;
+use crate::algs::triangles::{triangles, TriangleOptions};
+use crate::algs::wcc::wcc;
+use crate::coordinator::config::RunConfig;
+use crate::engine::RunReport;
+use crate::graph::format::GraphIndex;
+use crate::graph::source::{EdgeSource, MemGraph, SemGraph};
+use crate::VertexId;
+
+/// How to open the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphMode {
+    /// Semi-external: index in RAM, adjacency behind the page cache.
+    Sem,
+    /// Fully in-memory baseline.
+    Mem,
+}
+
+/// Open `<base>.gy-idx/.gy-adj` in the requested mode.
+pub fn open_graph(
+    base: &Path,
+    mode: GraphMode,
+    cfg: &RunConfig,
+) -> crate::Result<Box<dyn EdgeSource>> {
+    match mode {
+        GraphMode::Sem => {
+            Ok(Box::new(SemGraph::open(base, cfg.cache_bytes(), cfg.io())?))
+        }
+        GraphMode::Mem => {
+            // load the packed image straight into RAM
+            let idx_bytes = std::fs::read(base.with_extension("gy-idx"))?;
+            let index = GraphIndex::decode(&idx_bytes)?;
+            let adj = std::fs::read(base.with_extension("gy-adj"))?;
+            Ok(Box::new(MemGraph::from_image(crate::graph::builder::RamImage {
+                index,
+                adj,
+            })))
+        }
+    }
+}
+
+/// An algorithm + variant selection.
+#[derive(Debug, Clone)]
+pub enum AlgSpec {
+    /// PR-push (Graphyti §4.1).
+    PageRankPush,
+    /// PR-pull (Pregel/Turi baseline).
+    PageRankPull,
+    /// k-core decomposition with options (§4.2).
+    Coreness(CorenessOptions),
+    /// Diameter estimation (§4.3).
+    Diameter {
+        /// Pseudo-peripheral sweeps (≤ 64).
+        sweeps: usize,
+        /// Uni- or multi-source.
+        variant: DiameterVariant,
+    },
+    /// Betweenness centrality (§4.4).
+    Bc {
+        /// Number of sources (picked by descending degree).
+        num_sources: usize,
+        /// Execution variant.
+        variant: BcVariant,
+    },
+    /// Triangle counting (§4.5).
+    Triangles(TriangleOptions),
+    /// Louvain communities (§4.6).
+    Louvain(LouvainMode),
+    /// BFS levels from a source.
+    Bfs {
+        /// Source vertex.
+        src: VertexId,
+    },
+    /// Weakly connected components.
+    Wcc,
+    /// Shortest paths (synthetic weights) from a source.
+    Sssp {
+        /// Source vertex.
+        src: VertexId,
+    },
+    /// Degree statistics (no I/O).
+    Degree,
+    /// Scan-1 locality statistic (undirected images).
+    ScanStat,
+}
+
+impl AlgSpec {
+    /// Parse an algorithm name + optional variant string from the CLI.
+    pub fn parse(name: &str, variant: &str, num: usize) -> crate::Result<AlgSpec> {
+        Ok(match (name, variant) {
+            ("pagerank", "" | "push") => AlgSpec::PageRankPush,
+            ("pagerank", "pull") => AlgSpec::PageRankPull,
+            ("coreness", "" | "graphyti") => AlgSpec::Coreness(CorenessOptions::graphyti()),
+            ("coreness", "pruned") => AlgSpec::Coreness(CorenessOptions::pruned()),
+            ("coreness", "unopt") => AlgSpec::Coreness(CorenessOptions::unoptimized()),
+            ("diameter", "" | "multi") => AlgSpec::Diameter {
+                sweeps: num.clamp(1, 64),
+                variant: DiameterVariant::MultiSource,
+            },
+            ("diameter", "uni") => AlgSpec::Diameter {
+                sweeps: num.clamp(1, 64),
+                variant: DiameterVariant::UniSource,
+            },
+            ("bc", "" | "async") => AlgSpec::Bc {
+                num_sources: num.max(1),
+                variant: BcVariant::MultiSourceAsync,
+            },
+            ("bc", "sync") => AlgSpec::Bc {
+                num_sources: num.max(1),
+                variant: BcVariant::MultiSourceSync,
+            },
+            ("bc", "uni") => AlgSpec::Bc {
+                num_sources: num.max(1),
+                variant: BcVariant::UniSource,
+            },
+            ("triangles", "" | "graphyti") => AlgSpec::Triangles(TriangleOptions::graphyti()),
+            ("triangles", "naive") => AlgSpec::Triangles(TriangleOptions::naive()),
+            ("louvain", "" | "graphyti") => AlgSpec::Louvain(LouvainMode::Graphyti),
+            ("louvain", "physical") => AlgSpec::Louvain(LouvainMode::Physical),
+            ("bfs", _) => AlgSpec::Bfs { src: num as VertexId },
+            ("wcc", _) => AlgSpec::Wcc,
+            ("sssp", _) => AlgSpec::Sssp { src: num as VertexId },
+            ("degree", _) => AlgSpec::Degree,
+            ("scan", _) => AlgSpec::ScanStat,
+            (n, v) => bail!("unknown algorithm/variant: {n}/{v}"),
+        })
+    }
+}
+
+/// What a job produced.
+pub struct JobOutput {
+    /// Human-readable result summary.
+    pub summary: String,
+    /// Engine report (None for index-only jobs like `degree`).
+    pub report: Option<RunReport>,
+}
+
+/// Run an algorithm spec against an open graph.
+pub fn run_alg(source: &dyn EdgeSource, spec: &AlgSpec, cfg: &RunConfig) -> JobOutput {
+    let ecfg = cfg.engine();
+    match spec {
+        AlgSpec::PageRankPush => {
+            let r = pagerank_push(source, cfg.alpha, cfg.threshold, &ecfg);
+            let top = top_indices(&r.rank, 5);
+            JobOutput {
+                summary: format!("pagerank(push): top5 {:?}", top),
+                report: Some(r.report),
+            }
+        }
+        AlgSpec::PageRankPull => {
+            let r = pagerank_pull(source, cfg.alpha, cfg.threshold, 500, &ecfg);
+            let top = top_indices(&r.rank, 5);
+            JobOutput {
+                summary: format!("pagerank(pull): top5 {:?}", top),
+                report: Some(r.report),
+            }
+        }
+        AlgSpec::Coreness(opts) => {
+            let r = coreness(source, *opts, &ecfg);
+            let kmax = r.core.iter().copied().max().unwrap_or(0);
+            JobOutput { summary: format!("coreness: k_max={kmax}"), report: Some(r.report) }
+        }
+        AlgSpec::Diameter { sweeps, variant } => {
+            let r = estimate_diameter(source, *sweeps, *variant, &ecfg);
+            JobOutput {
+                summary: format!(
+                    "diameter({variant:?}): estimate={} from {} sweeps",
+                    r.diameter,
+                    r.sources.len()
+                ),
+                report: Some(r.report),
+            }
+        }
+        AlgSpec::Bc { num_sources, variant } => {
+            let sources = top_k_by_degree(source.index(), *num_sources);
+            let r = betweenness(source, &sources, *variant, &ecfg);
+            let top = top_indices(&r.bc, 5);
+            JobOutput {
+                summary: format!("bc({variant:?}, {} sources): top5 {:?}", sources.len(), top),
+                report: Some(r.report),
+            }
+        }
+        AlgSpec::Triangles(opts) => {
+            let r = triangles(source, *opts, &ecfg);
+            JobOutput {
+                summary: format!("triangles: {}", r.triangles),
+                report: Some(r.report),
+            }
+        }
+        AlgSpec::Louvain(mode) => {
+            let r = louvain(source, *mode, 10, &ecfg);
+            let ncomm = {
+                let mut c = r.community.clone();
+                c.sort_unstable();
+                c.dedup();
+                c.len()
+            };
+            JobOutput {
+                summary: format!(
+                    "louvain({mode:?}): {} communities, Q={:.4}, {} levels (local {} / agg {})",
+                    ncomm,
+                    r.modularity,
+                    r.levels,
+                    crate::util::fmt_dur(r.local_move_wall),
+                    crate::util::fmt_dur(r.aggregate_wall),
+                ),
+                report: Some(r.report),
+            }
+        }
+        AlgSpec::Bfs { src } => {
+            let (levels, report) = bfs(source, *src, &ecfg);
+            let reached = levels.iter().filter(|&&l| l >= 0).count();
+            let depth = levels.iter().copied().max().unwrap_or(0);
+            JobOutput {
+                summary: format!("bfs(src={src}): reached {reached}, depth {depth}"),
+                report: Some(report),
+            }
+        }
+        AlgSpec::Wcc => {
+            let (labels, report) = wcc(source, &ecfg);
+            let ncomp = {
+                let mut l = labels.clone();
+                l.sort_unstable();
+                l.dedup();
+                l.len()
+            };
+            JobOutput { summary: format!("wcc: {ncomp} components"), report: Some(report) }
+        }
+        AlgSpec::Sssp { src } => {
+            let (dist, report) = sssp(source, *src, &ecfg);
+            let reached = dist.iter().filter(|&&d| d != u64::MAX).count();
+            JobOutput {
+                summary: format!("sssp(src={src}): reached {reached}"),
+                report: Some(report),
+            }
+        }
+        AlgSpec::ScanStat => {
+            let (_, max, report) = scan_statistic(source, &ecfg);
+            JobOutput {
+                summary: format!("scan-stat: max SS(v{}) = {}", max.0, max.1),
+                report: Some(report),
+            }
+        }
+        AlgSpec::Degree => {
+            let s = degree_stats(source.index());
+            JobOutput {
+                summary: format!(
+                    "degree: mean {:.2}, max {} at v{}, p99 {}",
+                    s.mean,
+                    s.max.1,
+                    s.max.0,
+                    s.hist.quantile(0.99)
+                ),
+                report: None,
+            }
+        }
+    }
+}
+
+fn top_indices(xs: &[f64], k: usize) -> Vec<VertexId> {
+    let mut idx: Vec<VertexId> = (0..xs.len() as VertexId).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b as usize].partial_cmp(&xs[a as usize]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen;
+
+    fn build(tag: &str, directed: bool) -> std::path::PathBuf {
+        let base =
+            std::env::temp_dir().join(format!("graphyti-jobs-{}-{tag}", std::process::id()));
+        let edges = gen::rmat(8, 1500, 7);
+        let mut b = GraphBuilder::new(256, directed);
+        b.add_edges(&edges);
+        b.build_files(&base).unwrap();
+        base
+    }
+
+    #[test]
+    fn sem_and_mem_modes_agree_on_results() {
+        let base = build("modes", true);
+        let cfg = RunConfig { cache_mb: 1, ..Default::default() };
+        let sem = open_graph(&base, GraphMode::Sem, &cfg).unwrap();
+        let mem = open_graph(&base, GraphMode::Mem, &cfg).unwrap();
+        for spec in [AlgSpec::PageRankPush, AlgSpec::Wcc, AlgSpec::Bfs { src: 0 }] {
+            let a = run_alg(sem.as_ref(), &spec, &cfg);
+            let b = run_alg(mem.as_ref(), &spec, &cfg);
+            assert_eq!(a.summary, b.summary, "{spec:?}");
+        }
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert!(matches!(AlgSpec::parse("pagerank", "", 0).unwrap(), AlgSpec::PageRankPush));
+        assert!(matches!(AlgSpec::parse("pagerank", "pull", 0).unwrap(), AlgSpec::PageRankPull));
+        assert!(matches!(
+            AlgSpec::parse("bc", "uni", 4).unwrap(),
+            AlgSpec::Bc { num_sources: 4, variant: BcVariant::UniSource }
+        ));
+        assert!(matches!(
+            AlgSpec::parse("diameter", "multi", 8).unwrap(),
+            AlgSpec::Diameter { sweeps: 8, variant: DiameterVariant::MultiSource }
+        ));
+        assert!(AlgSpec::parse("bogus", "", 0).is_err());
+    }
+
+    #[test]
+    fn degree_job_runs_without_io() {
+        let base = build("deg", true);
+        let cfg = RunConfig::default();
+        let sem = open_graph(&base, GraphMode::Sem, &cfg).unwrap();
+        let out = run_alg(sem.as_ref(), &AlgSpec::Degree, &cfg);
+        assert!(out.summary.starts_with("degree:"));
+        assert!(out.report.is_none());
+        assert_eq!(sem.io_stats().snapshot().bytes_read, 0, "degree must not touch disk");
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+}

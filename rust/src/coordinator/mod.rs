@@ -1,0 +1,19 @@
+//! The coordinator: configuration, job dispatch and reporting — the
+//! layer a user of the library (or the `graphyti` CLI) talks to.
+//!
+//! * [`config`] — the run configuration system: `key=value` config files
+//!   with CLI-style overrides, covering the SEM knobs (cache size, I/O
+//!   threads, injected latency) and engine knobs (workers, batch size).
+//! * [`jobs`] — graph opening (SEM or in-memory) and algorithm dispatch
+//!   by name/variant, returning uniform [`jobs::JobOutput`]s.
+//! * [`report`] — aligned-table formatting for figure harnesses and the
+//!   CLI.
+
+pub mod benchkit;
+pub mod config;
+pub mod jobs;
+pub mod report;
+
+pub use config::RunConfig;
+pub use jobs::{open_graph, run_alg, AlgSpec, GraphMode, JobOutput};
+pub use report::Table;

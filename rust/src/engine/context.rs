@@ -1,0 +1,228 @@
+//! Per-worker execution context ([`WorkerCtx`]) and the barrier-time
+//! context ([`EndCtx`]) passed to `run_on_iteration_end`.
+
+use std::sync::Arc;
+
+use crate::engine::messages::{Inboxes, Outbox};
+use crate::graph::format::{EdgeRequest, GraphIndex, VertexEdges};
+use crate::graph::source::EdgeSource;
+use crate::util::AtomicBitmap;
+use crate::VertexId;
+
+/// Number of functional-reduction slots ("utilize functional constructs",
+/// §4.4): per-worker accumulators merged contention-free at the barrier.
+pub const N_RED_SLOTS: usize = 8;
+
+/// Context handed to `run_on_vertex` / `run_on_message`.
+///
+/// One per worker thread; lives for the whole run. Message sends and
+/// counters are buffered locally and flushed at phase boundaries so the
+/// hot path takes no locks.
+pub struct WorkerCtx<'a, M> {
+    pub(crate) worker: usize,
+    pub(crate) num_workers: usize,
+    pub(crate) num_vertices: usize,
+    pub(crate) round: usize,
+    pub(crate) in_message_phase: bool,
+    pub(crate) source: &'a dyn EdgeSource,
+    pub(crate) index: &'a GraphIndex,
+    pub(crate) bitmaps: &'a [AtomicBitmap; 2],
+    pub(crate) inboxes: &'a Inboxes<M>,
+    pub(crate) outbox: Outbox<M>,
+    // local counters, merged into EngineStats at round end
+    pub(crate) c_p2p: u64,
+    pub(crate) c_multicast: u64,
+    pub(crate) c_deliveries: u64,
+    pub(crate) c_vertex_runs: u64,
+    // local reductions, merged at round end
+    pub(crate) red_add: [f64; N_RED_SLOTS],
+    pub(crate) red_max: [f64; N_RED_SLOTS],
+}
+
+impl<'a, M: Send + Sync + Clone + 'static> WorkerCtx<'a, M> {
+    /// Owner worker of a vertex (range partitioning).
+    #[inline]
+    pub(crate) fn owner(&self, v: VertexId) -> usize {
+        (v as u64 * self.num_workers as u64 / self.num_vertices as u64) as usize
+    }
+
+    #[inline]
+    fn send_parity(&self) -> usize {
+        (self.round + 1) % 2
+    }
+
+    /// This worker's id.
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Current round (BSP superstep) index.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Total vertices in the graph.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Out-degree from the in-memory index (no I/O).
+    #[inline]
+    pub fn out_deg(&self, v: VertexId) -> u32 {
+        self.index.out_deg(v)
+    }
+
+    /// In-degree from the in-memory index (no I/O).
+    #[inline]
+    pub fn in_deg(&self, v: VertexId) -> u32 {
+        self.index.in_deg(v)
+    }
+
+    /// Total degree from the in-memory index (no I/O).
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        self.index.degree(v)
+    }
+
+    /// Activate `v`: during the message phase, into *this* round's vertex
+    /// phase; during the vertex phase, into the next round.
+    #[inline]
+    pub fn activate(&mut self, v: VertexId) {
+        let p = if self.in_message_phase { self.round % 2 } else { (self.round + 1) % 2 };
+        self.bitmaps[p].set(v as usize);
+    }
+
+    /// Point-to-point message to `dst` (delivered next round).
+    #[inline]
+    pub fn send(&mut self, dst: VertexId, msg: M) {
+        self.c_p2p += 1;
+        let w = self.owner(dst);
+        if self.outbox.send(w, dst, msg) {
+            self.outbox.flush_one(self.inboxes, self.send_parity(), w);
+        }
+    }
+
+    /// Multicast `msg` to all of `dsts` (delivered next round). One queue
+    /// entry per destination worker — far cheaper per destination than
+    /// repeated [`WorkerCtx::send`] (§4.2).
+    pub fn multicast(&mut self, dsts: &[VertexId], msg: M) {
+        if dsts.is_empty() {
+            return;
+        }
+        self.c_multicast += 1;
+        let parity = self.send_parity();
+        // group consecutive same-owner runs (dst lists are sorted)
+        let mut i = 0;
+        while i < dsts.len() {
+            let w = self.owner(dsts[i]);
+            let mut j = i + 1;
+            while j < dsts.len() && self.owner(dsts[j]) == w {
+                j += 1;
+            }
+            let slice: Arc<[VertexId]> = Arc::from(&dsts[i..j]);
+            if self.outbox.multicast(w, slice, msg.clone()) {
+                self.outbox.flush_one(self.inboxes, parity, w);
+            }
+            i = j;
+        }
+    }
+
+    /// Fetch another vertex's edge lists on demand (triangle counting's
+    /// neighbor-list requests, §4.5). Goes through the page cache and is
+    /// counted as I/O.
+    pub fn fetch_edges(&self, v: VertexId, req: EdgeRequest) -> VertexEdges {
+        self.source.fetch(v, req).expect("edge fetch failed (graph image unreadable)")
+    }
+
+    /// Prefetch hint for upcoming `fetch_edges` calls.
+    pub fn prefetch_edges(&self, reqs: &[(VertexId, EdgeRequest)]) {
+        self.source.prefetch(reqs);
+    }
+
+    /// Functional reduction: add `val` into slot `slot` (merged across
+    /// workers contention-free at the barrier).
+    #[inline]
+    pub fn reduce_add(&mut self, slot: usize, val: f64) {
+        self.red_add[slot] += val;
+    }
+
+    /// Functional reduction: max of `val` into slot `slot`.
+    #[inline]
+    pub fn reduce_max(&mut self, slot: usize, val: f64) {
+        if val > self.red_max[slot] {
+            self.red_max[slot] = val;
+        }
+    }
+}
+
+/// Barrier-time context: passed to `run_on_iteration_end`, which runs
+/// single-threaded after all workers finished the round.
+pub struct EndCtx<'a> {
+    pub(crate) round: usize,
+    pub(crate) num_vertices: usize,
+    pub(crate) next_active: usize,
+    pub(crate) pending_msgs: usize,
+    pub(crate) next_bitmap: &'a AtomicBitmap,
+    pub(crate) red_add: [f64; N_RED_SLOTS],
+    pub(crate) red_max: [f64; N_RED_SLOTS],
+    pub(crate) stop_requested: bool,
+    pub(crate) continue_requested: bool,
+}
+
+impl EndCtx<'_> {
+    /// The round that just finished.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Vertices in the graph.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Vertices currently activated for the next round.
+    pub fn next_active(&self) -> usize {
+        self.next_active
+    }
+
+    /// Messages queued for delivery next round.
+    pub fn pending_msgs(&self) -> usize {
+        self.pending_msgs
+    }
+
+    /// True if the engine would stop after this round (no activations, no
+    /// messages) unless this hook activates something.
+    pub fn quiescent(&self) -> bool {
+        self.next_active == 0 && self.pending_msgs == 0
+    }
+
+    /// Activate `v` for the next round.
+    pub fn activate(&self, v: VertexId) {
+        self.next_bitmap.set(v as usize);
+    }
+
+    /// Merged add-reduction value for `slot` this round.
+    pub fn reduction_add(&self, slot: usize) -> f64 {
+        self.red_add[slot]
+    }
+
+    /// Merged max-reduction value for `slot` this round
+    /// (`f64::NEG_INFINITY` when nothing was reduced).
+    pub fn reduction_max(&self, slot: usize) -> f64 {
+        self.red_max[slot]
+    }
+
+    /// Request the engine to stop after this round regardless of pending
+    /// work.
+    pub fn stop(&mut self) {
+        self.stop_requested = true;
+    }
+
+    /// Run one more round even if no vertices are active and no messages
+    /// pending — for multi-phase algorithms whose `run_on_iteration_end`
+    /// drives phase transitions (e.g. coreness paying a real barrier for
+    /// each empty k level in the unoptimized variant).
+    pub fn force_continue(&mut self) {
+        self.continue_requested = true;
+    }
+}

@@ -1,0 +1,163 @@
+//! Message transport: per-worker outboxes flushing into double-buffered
+//! per-worker inboxes.
+//!
+//! A **point-to-point** send is one `(dst, msg)` tuple. A **multicast**
+//! send is a *single* queue entry per destination worker carrying a
+//! shared destination slice — one allocation and one queue slot for the
+//! whole fan-out, which is why multicast is cheaper per destination
+//! (paper §4.2). Message counters distinguish the two so benches can
+//! report messaging volume the way Figure 3 does.
+
+use std::sync::{Arc, Mutex};
+
+use crate::VertexId;
+
+/// One inbox entry.
+pub enum Delivery<M> {
+    /// Point-to-point message.
+    P2p(VertexId, M),
+    /// Multicast: one shared payload for many destinations (all owned by
+    /// the receiving worker).
+    Multi(Arc<[VertexId]>, M),
+}
+
+impl<M> Delivery<M> {
+    /// Number of `run_on_message` calls this entry will produce.
+    pub fn fanout(&self) -> usize {
+        match self {
+            Delivery::P2p(..) => 1,
+            Delivery::Multi(dsts, _) => dsts.len(),
+        }
+    }
+}
+
+/// Double-buffered inboxes: `bufs[parity][worker]`. Messages sent during
+/// round `r` land in parity `(r + 1) % 2` and are drained in round `r+1`.
+pub struct Inboxes<M> {
+    bufs: [Vec<Mutex<Vec<Delivery<M>>>>; 2],
+}
+
+impl<M> Inboxes<M> {
+    /// Build for `workers` workers.
+    pub fn new(workers: usize) -> Self {
+        let mk = || (0..workers).map(|_| Mutex::new(Vec::new())).collect();
+        Inboxes { bufs: [mk(), mk()] }
+    }
+
+    /// Append deliveries for `worker` into parity `p`.
+    pub fn push(&self, p: usize, worker: usize, items: &mut Vec<Delivery<M>>) {
+        let mut q = self.bufs[p][worker].lock().unwrap();
+        q.append(items);
+    }
+
+    /// Take the whole inbox of `worker` at parity `p`.
+    pub fn take(&self, p: usize, worker: usize) -> Vec<Delivery<M>> {
+        std::mem::take(&mut *self.bufs[p][worker].lock().unwrap())
+    }
+
+    /// Total queued deliveries (entries, not fanout) at parity `p`.
+    pub fn pending(&self, p: usize) -> usize {
+        self.bufs[p].iter().map(|q| q.lock().unwrap().len()).sum()
+    }
+}
+
+/// A worker's staging buffers, one per destination worker; flushed into
+/// the shared inboxes when large or at phase end.
+pub struct Outbox<M> {
+    staged: Vec<Vec<Delivery<M>>>,
+    /// Flush threshold per destination worker.
+    flush_at: usize,
+}
+
+impl<M> Outbox<M> {
+    /// Build for `workers` destination workers.
+    pub fn new(workers: usize, flush_at: usize) -> Self {
+        Outbox { staged: (0..workers).map(|_| Vec::new()).collect(), flush_at }
+    }
+
+    /// Stage a p2p message; returns destination workers needing a flush.
+    #[inline]
+    pub fn send(&mut self, dst_worker: usize, dst: VertexId, msg: M) -> bool {
+        let q = &mut self.staged[dst_worker];
+        q.push(Delivery::P2p(dst, msg));
+        q.len() >= self.flush_at
+    }
+
+    /// Stage a multicast slice for one destination worker.
+    #[inline]
+    pub fn multicast(&mut self, dst_worker: usize, dsts: Arc<[VertexId]>, msg: M) -> bool {
+        let q = &mut self.staged[dst_worker];
+        q.push(Delivery::Multi(dsts, msg));
+        q.len() >= self.flush_at
+    }
+
+    /// Flush one destination worker's staging buffer.
+    pub fn flush_one(&mut self, inboxes: &Inboxes<M>, parity: usize, dst_worker: usize) {
+        if !self.staged[dst_worker].is_empty() {
+            inboxes.push(parity, dst_worker, &mut self.staged[dst_worker]);
+        }
+    }
+
+    /// Flush everything.
+    pub fn flush_all(&mut self, inboxes: &Inboxes<M>, parity: usize) {
+        for w in 0..self.staged.len() {
+            self.flush_one(inboxes, parity, w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let inboxes: Inboxes<u32> = Inboxes::new(2);
+        let mut out = Outbox::new(2, 1000);
+        out.send(1, 7, 99);
+        out.send(0, 3, 42);
+        out.flush_all(&inboxes, 0);
+        let w1 = inboxes.take(0, 1);
+        assert_eq!(w1.len(), 1);
+        match &w1[0] {
+            Delivery::P2p(v, m) => {
+                assert_eq!((*v, *m), (7, 99));
+            }
+            _ => panic!("expected p2p"),
+        }
+        assert_eq!(inboxes.pending(0), 1); // worker 0 still queued
+        assert_eq!(inboxes.pending(1), 0);
+    }
+
+    #[test]
+    fn multicast_single_entry_fanout() {
+        let inboxes: Inboxes<u8> = Inboxes::new(1);
+        let mut out = Outbox::new(1, 1000);
+        let dsts: Arc<[VertexId]> = Arc::from(vec![1, 2, 3, 4].into_boxed_slice());
+        out.multicast(0, dsts, 5);
+        out.flush_all(&inboxes, 1);
+        let got = inboxes.take(1, 0);
+        assert_eq!(got.len(), 1, "one queue slot for the whole fanout");
+        assert_eq!(got[0].fanout(), 4);
+    }
+
+    #[test]
+    fn flush_threshold_signals() {
+        let mut out: Outbox<u8> = Outbox::new(1, 2);
+        assert!(!out.send(0, 0, 0));
+        assert!(out.send(0, 1, 0), "hit threshold");
+    }
+
+    #[test]
+    fn parity_separation() {
+        let inboxes: Inboxes<u8> = Inboxes::new(1);
+        let mut out = Outbox::new(1, 1000);
+        out.send(0, 0, 1);
+        out.flush_all(&inboxes, 0);
+        out.send(0, 0, 2);
+        out.flush_all(&inboxes, 1);
+        assert_eq!(inboxes.take(0, 0).len(), 1);
+        assert_eq!(inboxes.take(1, 0).len(), 1);
+        assert_eq!(inboxes.take(0, 0).len(), 0, "take drains");
+    }
+}

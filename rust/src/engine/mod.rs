@@ -1,0 +1,52 @@
+//! The vertex-centric BSP engine — the FlashGraph analogue.
+//!
+//! Algorithms implement [`VertexProgram`] (mirroring FlashGraph's C++
+//! interface, paper Fig. 1a): `run_on_vertex` processes an *activated*
+//! vertex once its requested edge lists are in memory; `run_on_message`
+//! handles messages from other vertices; `run_on_iteration_end` runs at
+//! each global barrier.
+//!
+//! ## Execution model
+//!
+//! Processing advances in **rounds** (BSP supersteps). Within round *r*:
+//!
+//! 1. **Message phase** — every message sent during round *r−1* is
+//!    delivered via `run_on_message` on the owner worker of its
+//!    destination. Handlers may [`WorkerCtx::activate`] vertices *into the
+//!    current round* (their `run_on_vertex` runs in phase 2 below) and may
+//!    send messages (delivered in round *r+1*).
+//! 2. **Vertex phase** — workers sweep the activation bitmap over their
+//!    partition in batches: each batch's edge requests are fetched through
+//!    the [`crate::graph::EdgeSource`] *as one batch* (this is where SEM
+//!    I/O overlaps computation), then `run_on_vertex` runs per vertex.
+//!    Activations here land in round *r+1*; messages are delivered in
+//!    round *r+1*.
+//! 3. **Barrier** — per-worker functional reductions are merged,
+//!    `run_on_iteration_end` runs once, and the engine stops when no
+//!    activations and no messages remain.
+//!
+//! The paper's *asynchronous applications* principle (§4.4) falls out of
+//! this model at the algorithm level: because messages for different
+//! phases/sources are delivered in the same round, a program can let its
+//! logical phases interleave freely (async BC) or enforce lockstep with
+//! its own phase flags (sync BC) — the engine imposes no phase structure
+//! beyond rounds.
+//!
+//! ## Messaging discipline
+//!
+//! Point-to-point sends enqueue one `(dst, msg)` tuple each; **multicast**
+//! sends enqueue a single shared destination list per destination worker
+//! (one allocation, one queue slot), which is exactly why multicast is
+//! cheaper per destination and why the paper's hybrid switchover
+//! (§4.2 "minimize messaging") matters.
+
+pub mod context;
+pub mod messages;
+pub mod program;
+pub mod runner;
+pub mod stats;
+
+pub use context::{EndCtx, WorkerCtx};
+pub use program::VertexProgram;
+pub use runner::{Engine, EngineConfig, RunReport};
+pub use stats::EngineStats;

@@ -1,0 +1,42 @@
+//! The [`VertexProgram`] trait — the developer-facing API, mirroring
+//! FlashGraph's programming interface (paper Fig. 1a).
+
+use crate::engine::context::{EndCtx, WorkerCtx};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::VertexId;
+
+/// A vertex-centric program.
+///
+/// Implementations hold their own O(n) state (typically
+/// [`crate::util::SharedVec`] arrays indexed by vertex id) — the engine
+/// guarantees that for a given vertex, `run_on_vertex` and
+/// `run_on_message` never run concurrently with each other or themselves,
+/// so per-own-slot mutation through `SharedVec` is race-free. Reads of
+/// *other* vertices' slots must follow a double-buffering or
+/// stable-in-phase discipline (see `algs::pagerank` pull vs push).
+pub trait VertexProgram: Send + Sync {
+    /// Message type exchanged between vertices.
+    type Msg: Send + Sync + Clone + 'static;
+
+    /// Which edge lists the engine must fetch before `run_on_vertex` —
+    /// the central I/O-minimization lever ("limit superfluous reads"):
+    /// requesting `None` or a single direction instead of `Both` directly
+    /// reduces bytes read from disk.
+    ///
+    /// Contract: the answer may depend only on state that is stable for
+    /// the whole vertex phase of a round (the engine evaluates it one
+    /// prefetch batch ahead of processing).
+    fn edge_request(&self, v: VertexId) -> EdgeRequest;
+
+    /// Process an activated vertex; `edges` holds the requested lists.
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, Self::Msg>, v: VertexId, edges: &VertexEdges);
+
+    /// Handle one message delivered to `v`. May activate `v` (or others)
+    /// into the current round's vertex phase and send further messages
+    /// (delivered next round).
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, Self::Msg>, v: VertexId, msg: &Self::Msg);
+
+    /// Runs once per round at the global barrier (single-threaded).
+    /// Default: no-op.
+    fn run_on_iteration_end(&self, _ctx: &mut EndCtx<'_>) {}
+}

@@ -1,0 +1,571 @@
+//! The engine runner: worker threads, rounds, barriers, termination.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::context::{EndCtx, WorkerCtx, N_RED_SLOTS};
+use crate::engine::messages::{Delivery, Inboxes, Outbox};
+use crate::engine::program::VertexProgram;
+use crate::engine::stats::{EngineStats, EngineStatsSnapshot};
+use crate::graph::format::EdgeRequest;
+use crate::graph::source::EdgeSource;
+use crate::safs::IoStatsSnapshot;
+use crate::util::AtomicBitmap;
+use crate::VertexId;
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads (0 = one per available core).
+    pub workers: usize,
+    /// Active vertices fetched per batch — the unit of I/O overlap.
+    pub batch: usize,
+    /// Outbox flush threshold per destination worker.
+    pub flush_at: usize,
+    /// Hard round cap (safety net; algorithms converge on their own).
+    pub max_rounds: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        EngineConfig { workers, batch: 1024, flush_at: 4096, max_rounds: 1_000_000 }
+    }
+}
+
+/// What a run did: rounds, wall time, messaging and I/O volume.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Rounds executed.
+    pub rounds: u64,
+    /// Wall-clock time.
+    pub wall: Duration,
+    /// Engine counters (messages, vertex runs).
+    pub engine: EngineStatsSnapshot,
+    /// I/O counters delta over the run (from the edge source).
+    pub io: IoStatsSnapshot,
+}
+
+impl RunReport {
+    /// Combine sequential runs into one aggregate report (durations and
+    /// counters add component-wise) — used when a multi-phase algorithm
+    /// drives the engine several times.
+    pub fn merged(reports: &[RunReport]) -> RunReport {
+        let mut out = RunReport {
+            rounds: 0,
+            wall: Duration::ZERO,
+            engine: Default::default(),
+            io: Default::default(),
+        };
+        for r in reports {
+            out.rounds += r.rounds;
+            out.wall += r.wall;
+            out.engine.p2p_msgs += r.engine.p2p_msgs;
+            out.engine.multicast_msgs += r.engine.multicast_msgs;
+            out.engine.deliveries += r.engine.deliveries;
+            out.engine.vertex_runs += r.engine.vertex_runs;
+            out.engine.rounds += r.engine.rounds;
+            out.io.read_requests += r.io.read_requests;
+            out.io.cache_hits += r.io.cache_hits;
+            out.io.cache_misses += r.io.cache_misses;
+            out.io.physical_reads += r.io.physical_reads;
+            out.io.bytes_read += r.io.bytes_read;
+            out.io.merged_requests += r.io.merged_requests;
+            out.io.logical_bytes += r.io.logical_bytes;
+            out.io.thread_waits += r.io.thread_waits;
+            out.io.evictions += r.io.evictions;
+        }
+        out
+    }
+
+    /// One-line summary.
+    pub fn report(&self) -> String {
+        format!(
+            "wall={} {} | {}",
+            crate::util::fmt_dur(self.wall),
+            self.engine.report(),
+            self.io.report()
+        )
+    }
+}
+
+/// Shared state for one run.
+struct Shared<M> {
+    bitmaps: [AtomicBitmap; 2],
+    inboxes: Inboxes<M>,
+    barrier: Barrier,
+    stop: AtomicBool,
+    round: AtomicUsize,
+    stats: EngineStats,
+    // merged per-round reductions: (add, max)
+    reductions: Mutex<([f64; N_RED_SLOTS], [f64; N_RED_SLOTS])>,
+}
+
+/// The BSP engine.
+pub struct Engine;
+
+impl Engine {
+    /// Run `program` over `source`, starting with `init_active` vertices
+    /// activated for round 0.
+    pub fn run<P: VertexProgram>(
+        program: &P,
+        source: &dyn EdgeSource,
+        init_active: &[VertexId],
+        cfg: &EngineConfig,
+    ) -> RunReport {
+        let n = source.index().num_vertices();
+        assert!(n > 0, "empty graph");
+        let workers = cfg.workers.max(1).min(n);
+        let shared = Shared {
+            bitmaps: [AtomicBitmap::new(n), AtomicBitmap::new(n)],
+            inboxes: Inboxes::<P::Msg>::new(workers),
+            barrier: Barrier::new(workers),
+            stop: AtomicBool::new(false),
+            round: AtomicUsize::new(0),
+            stats: EngineStats::new(),
+            reductions: Mutex::new(([0.0; N_RED_SLOTS], [f64::NEG_INFINITY; N_RED_SLOTS])),
+        };
+        for &v in init_active {
+            shared.bitmaps[0].set(v as usize);
+        }
+
+        let io_before = source.io_stats().snapshot();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for wid in 0..workers {
+                let shared = &shared;
+                s.spawn(move || {
+                    Self::worker_loop(program, source, shared, wid, workers, n, cfg);
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        let io = source.io_stats().snapshot().delta(&io_before);
+        RunReport { rounds: shared.stats.rounds.load(Ordering::Relaxed), wall, engine: shared.stats.snapshot(), io }
+    }
+
+    fn worker_loop<P: VertexProgram>(
+        program: &P,
+        source: &dyn EdgeSource,
+        shared: &Shared<P::Msg>,
+        wid: usize,
+        workers: usize,
+        n: usize,
+        cfg: &EngineConfig,
+    ) {
+        // partition bounds: worker w owns [ceil(w*n/W), ceil((w+1)*n/W))
+        let lo = (wid * n).div_ceil(workers);
+        let hi = ((wid + 1) * n).div_ceil(workers);
+
+        let mut ctx = WorkerCtx {
+            worker: wid,
+            num_workers: workers,
+            num_vertices: n,
+            round: 0,
+            in_message_phase: false,
+            source,
+            index: source.index(),
+            bitmaps: &shared.bitmaps,
+            inboxes: &shared.inboxes,
+            outbox: Outbox::new(workers, cfg.flush_at),
+            c_p2p: 0,
+            c_multicast: 0,
+            c_deliveries: 0,
+            c_vertex_runs: 0,
+            red_add: [0.0; N_RED_SLOTS],
+            red_max: [f64::NEG_INFINITY; N_RED_SLOTS],
+        };
+        let mut batch_reqs: Vec<(VertexId, EdgeRequest)> = Vec::with_capacity(cfg.batch);
+
+        loop {
+            let round = shared.round.load(Ordering::Acquire);
+            ctx.round = round;
+            let cur_parity = round % 2;
+            let nxt_parity = (round + 1) % 2;
+
+            // ---- phase A: deliver messages sent last round -------------
+            ctx.in_message_phase = true;
+            let deliveries = shared.inboxes.take(cur_parity, wid);
+            for d in &deliveries {
+                match d {
+                    Delivery::P2p(v, m) => {
+                        ctx.c_deliveries += 1;
+                        program.run_on_message(&mut ctx, *v, m);
+                    }
+                    Delivery::Multi(dsts, m) => {
+                        ctx.c_deliveries += dsts.len() as u64;
+                        for &v in dsts.iter() {
+                            program.run_on_message(&mut ctx, v, m);
+                        }
+                    }
+                }
+            }
+            drop(deliveries);
+            ctx.outbox.flush_all(&shared.inboxes, nxt_parity);
+            shared.barrier.wait();
+
+            // ---- phase B: vertex phase over the activation bitmap ------
+            // Two-batch pipeline: while batch k is being processed, batch
+            // k+1's pages are already streaming into the cache via the
+            // async prefetch — FlashGraph's overlap of computation with
+            // asynchronous I/O (EXPERIMENTS.md §Perf).
+            ctx.in_message_phase = false;
+            let current = &shared.bitmaps[cur_parity];
+            let mut iter = current.iter_set_range(lo, hi);
+            let mut next_reqs: Vec<(VertexId, EdgeRequest)> = Vec::with_capacity(cfg.batch);
+            let collect = |iter: &mut crate::util::bitmap::SetBits<'_>,
+                           reqs: &mut Vec<(VertexId, EdgeRequest)>| {
+                reqs.clear();
+                for v in iter.by_ref() {
+                    let v = v as VertexId;
+                    reqs.push((v, program.edge_request(v)));
+                    if reqs.len() >= cfg.batch {
+                        break;
+                    }
+                }
+            };
+            collect(&mut iter, &mut batch_reqs);
+            loop {
+                if batch_reqs.is_empty() {
+                    break;
+                }
+                // look ahead and warm the next batch before blocking
+                collect(&mut iter, &mut next_reqs);
+                if !next_reqs.is_empty() {
+                    source.prefetch(&next_reqs);
+                }
+                let edges = source
+                    .fetch_batch(&batch_reqs)
+                    .expect("edge fetch failed (graph image unreadable)");
+                ctx.c_vertex_runs += batch_reqs.len() as u64;
+                for (i, &(v, _)) in batch_reqs.iter().enumerate() {
+                    program.run_on_vertex(&mut ctx, v, &edges[i]);
+                }
+                std::mem::swap(&mut batch_reqs, &mut next_reqs);
+            }
+            // clear own range of the current bitmap for reuse in round r+1
+            for v in lo..hi {
+                if current.get(v) {
+                    current.clear(v);
+                }
+            }
+            ctx.outbox.flush_all(&shared.inboxes, nxt_parity);
+
+            // merge local counters + reductions
+            shared.stats.p2p_msgs.fetch_add(ctx.c_p2p, Ordering::Relaxed);
+            shared.stats.multicast_msgs.fetch_add(ctx.c_multicast, Ordering::Relaxed);
+            shared.stats.deliveries.fetch_add(ctx.c_deliveries, Ordering::Relaxed);
+            shared.stats.vertex_runs.fetch_add(ctx.c_vertex_runs, Ordering::Relaxed);
+            ctx.c_p2p = 0;
+            ctx.c_multicast = 0;
+            ctx.c_deliveries = 0;
+            ctx.c_vertex_runs = 0;
+            {
+                let mut red = shared.reductions.lock().unwrap();
+                for i in 0..N_RED_SLOTS {
+                    red.0[i] += ctx.red_add[i];
+                    if ctx.red_max[i] > red.1[i] {
+                        red.1[i] = ctx.red_max[i];
+                    }
+                }
+            }
+            ctx.red_add = [0.0; N_RED_SLOTS];
+            ctx.red_max = [f64::NEG_INFINITY; N_RED_SLOTS];
+            shared.barrier.wait();
+
+            // ---- round bookkeeping (worker 0 only) ---------------------
+            if wid == 0 {
+                shared.stats.rounds.fetch_add(1, Ordering::Relaxed);
+                let (red_add, red_max) = {
+                    let mut red = shared.reductions.lock().unwrap();
+                    let vals = (red.0, red.1);
+                    red.0 = [0.0; N_RED_SLOTS];
+                    red.1 = [f64::NEG_INFINITY; N_RED_SLOTS];
+                    vals
+                };
+                let next = &shared.bitmaps[nxt_parity];
+                let mut end = EndCtx {
+                    round,
+                    num_vertices: n,
+                    next_active: next.count(),
+                    pending_msgs: shared.inboxes.pending(nxt_parity),
+                    next_bitmap: next,
+                    red_add,
+                    red_max,
+                    stop_requested: false,
+                    continue_requested: false,
+                };
+                program.run_on_iteration_end(&mut end);
+                let stop_requested = end.stop_requested;
+                let continue_requested = end.continue_requested;
+                // recount after the hook (it may have activated vertices)
+                let next_active = next.count();
+                let pending = shared.inboxes.pending(nxt_parity);
+                let done = stop_requested
+                    || (next_active == 0 && pending == 0 && !continue_requested)
+                    || round + 1 >= cfg.max_rounds;
+                shared.stop.store(done, Ordering::Release);
+                shared.round.store(round + 1, Ordering::Release);
+            }
+            shared.barrier.wait();
+            if shared.stop.load(Ordering::Acquire) {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::format::VertexEdges;
+    use crate::graph::gen;
+    use crate::graph::source::MemGraph;
+    use crate::util::SharedVec;
+
+    /// BFS levels via messages: the canonical engine smoke test.
+    struct Bfs {
+        level: SharedVec<i64>,
+    }
+
+    impl VertexProgram for Bfs {
+        type Msg = i64; // proposed level
+
+        fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+            EdgeRequest::Out
+        }
+
+        fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, edges: &VertexEdges) {
+            let my = *self.level.get(v as usize);
+            ctx.multicast(&edges.out_neighbors, my + 1);
+        }
+
+        fn run_on_message(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, msg: &i64) {
+            let cur = self.level.get_mut(v as usize);
+            if *cur < 0 || *msg < *cur {
+                *cur = *msg;
+                ctx.activate(v);
+            }
+        }
+    }
+
+    fn bfs_levels(n: usize, edges: &[(VertexId, VertexId)], src: VertexId, workers: usize) -> Vec<i64> {
+        let g = MemGraph::from_edges(n, edges, true);
+        let prog = Bfs { level: SharedVec::new(n, -1) };
+        prog.level.set(src as usize, 0);
+        let cfg = EngineConfig { workers, batch: 8, ..Default::default() };
+        let report = Engine::run(&prog, &g, &[src], &cfg);
+        assert!(report.rounds > 0);
+        prog.level.to_vec()
+    }
+
+    #[test]
+    fn bfs_on_path() {
+        let edges = gen::path(6);
+        let lv = bfs_levels(6, &edges, 0, 3);
+        assert_eq!(lv, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn bfs_on_cycle_various_workers() {
+        let edges = gen::cycle(10);
+        for workers in [1, 2, 4, 7] {
+            let lv = bfs_levels(10, &edges, 3, workers);
+            for i in 0..10 {
+                assert_eq!(lv[i], ((i + 10 - 3) % 10) as i64, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_unreachable_stays_unset() {
+        // two components: 0->1, 2->3
+        let lv = bfs_levels(4, &[(0, 1), (2, 3)], 0, 2);
+        assert_eq!(lv, vec![0, 1, -1, -1]);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let edges = gen::rmat(9, 4000, 11);
+        let a = bfs_levels(512, &edges, 0, 1);
+        let b = bfs_levels(512, &edges, 0, 8);
+        assert_eq!(a, b, "BFS levels must not depend on parallelism");
+    }
+
+    /// Counting program: verifies reductions and message counters.
+    struct CountDegrees;
+
+    impl VertexProgram for CountDegrees {
+        type Msg = ();
+
+        fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+            EdgeRequest::Out
+        }
+
+        fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, edges: &VertexEdges) {
+            ctx.reduce_add(0, edges.out_neighbors.len() as f64);
+            ctx.reduce_max(1, edges.out_neighbors.len() as f64);
+            let _ = v;
+        }
+
+        fn run_on_message(&self, _ctx: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+    }
+
+    #[test]
+    fn reductions_merge_across_workers() {
+        let edges = gen::star(100); // center 0 has 99 out-edges
+        let g = MemGraph::from_edges(100, &edges, true);
+        struct Capture {
+            inner: CountDegrees,
+            total: std::sync::Mutex<f64>,
+            max: std::sync::Mutex<f64>,
+        }
+        impl VertexProgram for Capture {
+            type Msg = ();
+            fn edge_request(&self, v: VertexId) -> EdgeRequest {
+                self.inner.edge_request(v)
+            }
+            fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, e: &VertexEdges) {
+                self.inner.run_on_vertex(ctx, v, e);
+            }
+            fn run_on_message(&self, _c: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+            fn run_on_iteration_end(&self, ctx: &mut EndCtx<'_>) {
+                *self.total.lock().unwrap() = ctx.reduction_add(0);
+                *self.max.lock().unwrap() = ctx.reduction_max(1);
+            }
+        }
+        let prog = Capture {
+            inner: CountDegrees,
+            total: std::sync::Mutex::new(0.0),
+            max: std::sync::Mutex::new(0.0),
+        };
+        let all: Vec<VertexId> = (0..100).collect();
+        let r = Engine::run(&prog, &g, &all, &EngineConfig { workers: 4, ..Default::default() });
+        assert_eq!(r.engine.vertex_runs, 100);
+        assert_eq!(*prog.total.lock().unwrap(), 99.0);
+        assert_eq!(*prog.max.lock().unwrap(), 99.0);
+    }
+
+    /// Message counters: multicast counted once, fanout at delivery.
+    #[test]
+    fn message_accounting() {
+        let edges = gen::star(50);
+        let g = MemGraph::from_edges(50, &edges, true);
+        let prog = Bfs { level: SharedVec::new(50, -1) };
+        prog.level.set(0, 0);
+        let r = Engine::run(&prog, &g, &[0], &EngineConfig { workers: 4, ..Default::default() });
+        // center multicasts to 49 leaves; leaves have no out-edges
+        assert!(r.engine.multicast_msgs >= 1 && r.engine.multicast_msgs <= 4);
+        assert_eq!(r.engine.deliveries, 49);
+        assert_eq!(r.engine.p2p_msgs, 0);
+    }
+
+    #[test]
+    fn max_rounds_cap() {
+        // self-perpetuating program: vertex reactivates itself forever
+        struct Forever;
+        impl VertexProgram for Forever {
+            type Msg = ();
+            fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+                EdgeRequest::None
+            }
+            fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, _e: &VertexEdges) {
+                ctx.activate(v);
+            }
+            fn run_on_message(&self, _c: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+        }
+        let g = MemGraph::from_edges(4, &[(0, 1)], true);
+        let cfg = EngineConfig { workers: 2, max_rounds: 5, ..Default::default() };
+        let r = Engine::run(&Forever, &g, &[0], &cfg);
+        assert_eq!(r.rounds, 5);
+    }
+
+    #[test]
+    fn stop_from_iteration_end() {
+        struct StopAt3;
+        impl VertexProgram for StopAt3 {
+            type Msg = ();
+            fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+                EdgeRequest::None
+            }
+            fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, _e: &VertexEdges) {
+                ctx.activate(v);
+            }
+            fn run_on_message(&self, _c: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+            fn run_on_iteration_end(&self, ctx: &mut EndCtx<'_>) {
+                if ctx.round() == 2 {
+                    ctx.stop();
+                }
+            }
+        }
+        let g = MemGraph::from_edges(4, &[(0, 1)], true);
+        let r = Engine::run(&StopAt3, &g, &[0], &EngineConfig::default());
+        assert_eq!(r.rounds, 3);
+    }
+
+    #[test]
+    fn iteration_end_can_restart_frontier() {
+        // nothing active after round 0; hook re-activates vertex 1 once
+        struct Restart {
+            fired: std::sync::atomic::AtomicBool,
+            ran: SharedVec<bool>,
+        }
+        impl VertexProgram for Restart {
+            type Msg = ();
+            fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+                EdgeRequest::None
+            }
+            fn run_on_vertex(&self, _c: &mut WorkerCtx<'_, ()>, v: VertexId, _e: &VertexEdges) {
+                self.ran.set(v as usize, true);
+            }
+            fn run_on_message(&self, _c: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+            fn run_on_iteration_end(&self, ctx: &mut EndCtx<'_>) {
+                if ctx.quiescent() && !self.fired.swap(true, Ordering::SeqCst) {
+                    ctx.activate(1);
+                }
+            }
+        }
+        let g = MemGraph::from_edges(3, &[(0, 1)], true);
+        let prog = Restart {
+            fired: AtomicBool::new(false),
+            ran: SharedVec::new(3, false),
+        };
+        let r = Engine::run(&prog, &g, &[0], &EngineConfig::default());
+        assert_eq!(r.rounds, 2);
+        assert!(*prog.ran.get(0));
+        assert!(*prog.ran.get(1));
+        assert!(!*prog.ran.get(2));
+    }
+
+    /// Message-phase activation runs the vertex in the same round.
+    #[test]
+    fn message_activation_same_round() {
+        struct TwoHop {
+            seen_round: SharedVec<i64>,
+        }
+        impl VertexProgram for TwoHop {
+            type Msg = u8;
+            fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+                EdgeRequest::Out
+            }
+            fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, u8>, v: VertexId, e: &VertexEdges) {
+                self.seen_round.set(v as usize, ctx.round() as i64);
+                ctx.multicast(&e.out_neighbors, 1);
+            }
+            fn run_on_message(&self, ctx: &mut WorkerCtx<'_, u8>, v: VertexId, _m: &u8) {
+                if *self.seen_round.get(v as usize) < 0 {
+                    ctx.activate(v); // same-round activation
+                }
+            }
+        }
+        let g = MemGraph::from_edges(3, &[(0, 1), (1, 2)], true);
+        let prog = TwoHop { seen_round: SharedVec::new(3, -1) };
+        let r = Engine::run(&prog, &g, &[0], &EngineConfig { workers: 2, ..Default::default() });
+        // round 0: v0 runs, msg to v1. round 1: v1 delivered+activated+runs
+        // in the same round, msg to v2. round 2: v2 likewise, sends
+        // nothing => quiescent at round 2's barrier.
+        assert_eq!(prog.seen_round.to_vec(), vec![0, 1, 2]);
+        assert_eq!(r.rounds, 3, "same-round activation: one round per hop");
+    }
+}

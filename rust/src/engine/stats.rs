@@ -1,0 +1,82 @@
+//! Engine-level counters: messaging volume, rounds, activations.
+//!
+//! Combined with [`crate::safs::IoStats`], these are the quantities the
+//! paper's figures plot (message counts for Fig. 3, barrier/round counts
+//! behind the multi-source arguments of Figs. 5–6).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Concurrently-updated engine counters.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Point-to-point messages sent.
+    pub p2p_msgs: AtomicU64,
+    /// Multicast operations sent (one per destination-worker slice).
+    pub multicast_msgs: AtomicU64,
+    /// Total `run_on_message` deliveries (p2p + multicast fanout).
+    pub deliveries: AtomicU64,
+    /// Total `run_on_vertex` invocations.
+    pub vertex_runs: AtomicU64,
+    /// Rounds executed.
+    pub rounds: AtomicU64,
+}
+
+impl EngineStats {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot.
+    pub fn snapshot(&self) -> EngineStatsSnapshot {
+        EngineStatsSnapshot {
+            p2p_msgs: self.p2p_msgs.load(Ordering::Relaxed),
+            multicast_msgs: self.multicast_msgs.load(Ordering::Relaxed),
+            deliveries: self.deliveries.load(Ordering::Relaxed),
+            vertex_runs: self.vertex_runs.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`EngineStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStatsSnapshot {
+    pub p2p_msgs: u64,
+    pub multicast_msgs: u64,
+    pub deliveries: u64,
+    pub vertex_runs: u64,
+    pub rounds: u64,
+}
+
+impl EngineStatsSnapshot {
+    /// Total send operations (queue pressure — what load balancing works
+    /// against in FlashGraph).
+    pub fn send_ops(&self) -> u64 {
+        self.p2p_msgs + self.multicast_msgs
+    }
+
+    /// Terse single-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "rounds={} vertex_runs={} p2p={} multicast={} deliveries={}",
+            self.rounds, self.vertex_runs, self.p2p_msgs, self.multicast_msgs, self.deliveries
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_send_ops() {
+        let s = EngineStats::new();
+        s.p2p_msgs.fetch_add(3, Ordering::Relaxed);
+        s.multicast_msgs.fetch_add(2, Ordering::Relaxed);
+        s.deliveries.fetch_add(40, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.send_ops(), 5);
+        assert_eq!(snap.deliveries, 40);
+    }
+}

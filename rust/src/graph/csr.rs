@@ -1,0 +1,174 @@
+//! In-memory CSR graph — the paper's "totally in-memory execution"
+//! baseline, and the substrate for oracle algorithm implementations used
+//! in tests.
+
+use crate::VertexId;
+
+/// Compressed sparse row graph (both directions for directed graphs).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    directed: bool,
+    out_offsets: Vec<u64>,
+    out_neigh: Vec<VertexId>,
+    in_offsets: Vec<u64>,
+    in_neigh: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Build from an edge list (self-loops dropped, duplicates removed,
+    /// undirected edges symmetrized) — mirrors
+    /// [`super::builder::GraphBuilder`] normalization so SEM and
+    /// in-memory runs see identical graphs.
+    pub fn from_edges(n: usize, edges: &[(VertexId, VertexId)], directed: bool) -> Self {
+        let mut es: Vec<(VertexId, VertexId)> =
+            Vec::with_capacity(edges.len() * if directed { 1 } else { 2 });
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            es.push((u, v));
+            if !directed {
+                es.push((v, u));
+            }
+        }
+        es.sort_unstable();
+        es.dedup();
+
+        let mut out_offsets = vec![0u64; n + 1];
+        for &(u, _) in &es {
+            out_offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            out_offsets[i + 1] += out_offsets[i];
+        }
+        let out_neigh: Vec<VertexId> = es.iter().map(|&(_, v)| v).collect();
+
+        let (in_offsets, in_neigh) = if directed {
+            let mut rev: Vec<(VertexId, VertexId)> = es.iter().map(|&(u, v)| (v, u)).collect();
+            rev.sort_unstable();
+            let mut io = vec![0u64; n + 1];
+            for &(v, _) in &rev {
+                io[v as usize + 1] += 1;
+            }
+            for i in 0..n {
+                io[i + 1] += io[i];
+            }
+            (io, rev.into_iter().map(|(_, u)| u).collect())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        Csr { directed, out_offsets, out_neigh, in_offsets, in_neigh }
+    }
+
+    /// Vertex count.
+    pub fn num_vertices(&self) -> usize {
+        self.out_offsets.len() - 1
+    }
+
+    /// Stored edge count (undirected edges count twice).
+    pub fn num_edges(&self) -> u64 {
+        self.out_neigh.len() as u64
+    }
+
+    /// Directed?
+    pub fn directed(&self) -> bool {
+        self.directed
+    }
+
+    /// Out-neighbors of `v` (all neighbors for undirected), sorted.
+    #[inline]
+    pub fn out(&self, v: VertexId) -> &[VertexId] {
+        &self.out_neigh[self.out_offsets[v as usize] as usize
+            ..self.out_offsets[v as usize + 1] as usize]
+    }
+
+    /// In-neighbors of `v` (directed only), sorted.
+    #[inline]
+    pub fn inn(&self, v: VertexId) -> &[VertexId] {
+        if !self.directed {
+            return self.out(v);
+        }
+        &self.in_neigh
+            [self.in_offsets[v as usize] as usize..self.in_offsets[v as usize + 1] as usize]
+    }
+
+    /// Out-degree.
+    #[inline]
+    pub fn out_deg(&self, v: VertexId) -> u32 {
+        (self.out_offsets[v as usize + 1] - self.out_offsets[v as usize]) as u32
+    }
+
+    /// In-degree.
+    #[inline]
+    pub fn in_deg(&self, v: VertexId) -> u32 {
+        if !self.directed {
+            return self.out_deg(v);
+        }
+        (self.in_offsets[v as usize + 1] - self.in_offsets[v as usize]) as u32
+    }
+
+    /// Approximate resident bytes (for the memory-ratio headline).
+    pub fn resident_bytes(&self) -> u64 {
+        ((self.out_offsets.len() + self.in_offsets.len()) * 8
+            + (self.out_neigh.len() + self.in_neigh.len()) * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directed_adjacency() {
+        let c = Csr::from_edges(4, &[(0, 1), (0, 2), (1, 2), (2, 0), (0, 1), (3, 3)], true);
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.out(0), &[1, 2]);
+        assert_eq!(c.inn(2), &[0, 1]);
+        assert_eq!(c.out_deg(3), 0);
+        assert_eq!(c.in_deg(0), 1);
+    }
+
+    #[test]
+    fn undirected_symmetric() {
+        let c = Csr::from_edges(3, &[(0, 1), (2, 1)], false);
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.out(1), &[0, 2]);
+        assert_eq!(c.inn(1), &[0, 2], "inn falls back to out for undirected");
+        assert_eq!(c.out_deg(1), 2);
+        assert_eq!(c.in_deg(1), 2);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let c = Csr::from_edges(5, &[(0, 1)], true);
+        for v in 2..5 {
+            assert_eq!(c.out(v), &[] as &[VertexId]);
+            assert_eq!(c.inn(v), &[] as &[VertexId]);
+        }
+    }
+
+    #[test]
+    fn matches_builder_image() {
+        use crate::graph::builder::GraphBuilder;
+        use crate::graph::format::EdgeRequest;
+        let edges = [(0u32, 1u32), (1, 3), (3, 0), (2, 3), (0, 2), (1, 0)];
+        let c = Csr::from_edges(4, &edges, true);
+        let mut b = GraphBuilder::new(4, true);
+        b.add_edges(&edges);
+        let img = b.build_ram();
+        for v in 0..4u32 {
+            assert_eq!(img.index.out_deg(v), c.out_deg(v), "v={v}");
+            assert_eq!(img.index.in_deg(v), c.in_deg(v), "v={v}");
+            let (off, len) = img.index.byte_range(v, EdgeRequest::Both);
+            let ve = crate::graph::format::VertexEdges::decode(
+                &img.adj[off as usize..off as usize + len],
+                img.index.in_deg(v),
+                img.index.out_deg(v),
+                EdgeRequest::Both,
+            );
+            assert_eq!(ve.out_neighbors, c.out(v));
+            assert_eq!(ve.in_neighbors, c.inn(v));
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! On-disk graph image format.
+//!
+//! A graph image is two files:
+//!
+//! * `<name>.gy-idx` — header + per-vertex index. The index is the O(n)
+//!   state SEM keeps in memory: 16 bytes per vertex (adjacency byte
+//!   offset, in-degree, out-degree).
+//! * `<name>.gy-adj` — packed adjacency records, O(m), never held in
+//!   memory in full. Directed record: `[in-neighbors u32 × in_deg]
+//!   [out-neighbors u32 × out_deg]`; undirected record: `[neighbors u32 ×
+//!   deg]` (stored in `out`). Neighbor lists are sorted ascending — the
+//!   triangle-counting optimizations (§4.5) rely on this.
+//!
+//! All integers are little-endian.
+
+use anyhow::{bail, ensure};
+
+use crate::VertexId;
+
+/// Magic bytes at the start of the index file.
+pub const MAGIC: &[u8; 8] = b"GRAPHYTI";
+/// Format version.
+pub const VERSION: u32 = 1;
+/// Header length in bytes.
+pub const HEADER_LEN: usize = 40;
+/// Bytes per index entry.
+pub const IDX_ENTRY_LEN: usize = 16;
+
+/// Image header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphHeader {
+    /// Number of vertices.
+    pub num_vertices: u64,
+    /// Number of (directed) edges stored; an undirected edge counts twice.
+    pub num_edges: u64,
+    /// Directed graph?
+    pub directed: bool,
+}
+
+impl GraphHeader {
+    /// Serialize to the fixed-size on-disk layout.
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        out[..8].copy_from_slice(MAGIC);
+        out[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        let flags: u32 = self.directed as u32;
+        out[12..16].copy_from_slice(&flags.to_le_bytes());
+        out[16..24].copy_from_slice(&self.num_vertices.to_le_bytes());
+        out[24..32].copy_from_slice(&self.num_edges.to_le_bytes());
+        // bytes 32..40 reserved
+        out
+    }
+
+    /// Parse and validate a header.
+    pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
+        ensure!(bytes.len() >= HEADER_LEN, "index file too short for header");
+        ensure!(&bytes[..8] == MAGIC, "bad magic: not a graphyti image");
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported image version {version} (expected {VERSION})");
+        }
+        let flags = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        Ok(GraphHeader {
+            num_vertices: u64::from_le_bytes(bytes[16..24].try_into().unwrap()),
+            num_edges: u64::from_le_bytes(bytes[24..32].try_into().unwrap()),
+            directed: flags & 1 != 0,
+        })
+    }
+}
+
+/// In-memory per-vertex index: the O(n) SEM state.
+///
+/// Kept in struct-of-arrays form; 16 bytes/vertex on disk and in memory.
+#[derive(Debug, Clone)]
+pub struct GraphIndex {
+    header: GraphHeader,
+    /// Byte offset of each vertex's adjacency record in the adj file.
+    offsets: Vec<u64>,
+    in_degs: Vec<u32>,
+    out_degs: Vec<u32>,
+}
+
+impl GraphIndex {
+    /// Assemble an index (used by the builder).
+    pub fn new(
+        header: GraphHeader,
+        offsets: Vec<u64>,
+        in_degs: Vec<u32>,
+        out_degs: Vec<u32>,
+    ) -> Self {
+        assert_eq!(offsets.len() as u64, header.num_vertices);
+        assert_eq!(in_degs.len(), offsets.len());
+        assert_eq!(out_degs.len(), offsets.len());
+        GraphIndex { header, offsets, in_degs, out_degs }
+    }
+
+    /// Image header.
+    pub fn header(&self) -> &GraphHeader {
+        &self.header
+    }
+
+    /// Vertex count.
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Stored edge count (undirected edges count twice).
+    pub fn num_edges(&self) -> u64 {
+        self.header.num_edges
+    }
+
+    /// Directed?
+    pub fn directed(&self) -> bool {
+        self.header.directed
+    }
+
+    /// In-degree (0 for undirected images).
+    #[inline]
+    pub fn in_deg(&self, v: VertexId) -> u32 {
+        self.in_degs[v as usize]
+    }
+
+    /// Out-degree (== degree for undirected images).
+    #[inline]
+    pub fn out_deg(&self, v: VertexId) -> u32 {
+        self.out_degs[v as usize]
+    }
+
+    /// Total degree.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        self.in_degs[v as usize] + self.out_degs[v as usize]
+    }
+
+    /// Byte length of a vertex's full adjacency record.
+    #[inline]
+    pub fn record_len(&self, v: VertexId) -> usize {
+        (self.in_degs[v as usize] as usize + self.out_degs[v as usize] as usize) * 4
+    }
+
+    /// Byte range in the adj file for the given request.
+    #[inline]
+    pub fn byte_range(&self, v: VertexId, req: EdgeRequest) -> (u64, usize) {
+        let off = self.offsets[v as usize];
+        let in_bytes = self.in_degs[v as usize] as usize * 4;
+        let out_bytes = self.out_degs[v as usize] as usize * 4;
+        match req {
+            EdgeRequest::None => (off, 0),
+            EdgeRequest::In => (off, in_bytes),
+            EdgeRequest::Out => (off + in_bytes as u64, out_bytes),
+            EdgeRequest::Both => (off, in_bytes + out_bytes),
+        }
+    }
+
+    /// Serialize header + entries to the `.gy-idx` byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.offsets.len() * IDX_ENTRY_LEN);
+        out.extend_from_slice(&self.header.encode());
+        for i in 0..self.offsets.len() {
+            out.extend_from_slice(&self.offsets[i].to_le_bytes());
+            out.extend_from_slice(&self.in_degs[i].to_le_bytes());
+            out.extend_from_slice(&self.out_degs[i].to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a `.gy-idx` byte image.
+    pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
+        let header = GraphHeader::decode(bytes)?;
+        let n = header.num_vertices as usize;
+        ensure!(
+            bytes.len() >= HEADER_LEN + n * IDX_ENTRY_LEN,
+            "index file truncated: {} vertices need {} bytes, have {}",
+            n,
+            HEADER_LEN + n * IDX_ENTRY_LEN,
+            bytes.len()
+        );
+        let mut offsets = Vec::with_capacity(n);
+        let mut in_degs = Vec::with_capacity(n);
+        let mut out_degs = Vec::with_capacity(n);
+        for i in 0..n {
+            let e = HEADER_LEN + i * IDX_ENTRY_LEN;
+            offsets.push(u64::from_le_bytes(bytes[e..e + 8].try_into().unwrap()));
+            in_degs.push(u32::from_le_bytes(bytes[e + 8..e + 12].try_into().unwrap()));
+            out_degs.push(u32::from_le_bytes(bytes[e + 12..e + 16].try_into().unwrap()));
+        }
+        Ok(GraphIndex { header, offsets, in_degs, out_degs })
+    }
+}
+
+/// Which edge lists an algorithm needs for a vertex — the paper's central
+/// I/O-minimization lever ("limit superfluous reads", §4.1): PR-push
+/// requests only `Out`, PR-pull only `In`, triangle counting `Both`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeRequest {
+    /// No edge data (vertex computes on state/messages alone).
+    None,
+    /// In-edge list only.
+    In,
+    /// Out-edge list only.
+    Out,
+    /// Both lists.
+    Both,
+}
+
+/// Decoded edge data for one vertex, as fetched by the engine.
+#[derive(Debug, Clone, Default)]
+pub struct VertexEdges {
+    /// In-neighbors (empty unless requested; undirected graphs use `out`).
+    pub in_neighbors: Vec<VertexId>,
+    /// Out-neighbors (or all neighbors for undirected graphs).
+    pub out_neighbors: Vec<VertexId>,
+}
+
+impl VertexEdges {
+    /// Decode from a record byte slice per the request that produced it.
+    pub fn decode(bytes: &[u8], in_deg: u32, out_deg: u32, req: EdgeRequest) -> Self {
+        let word = |b: &[u8], i: usize| {
+            VertexId::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap())
+        };
+        match req {
+            EdgeRequest::None => VertexEdges::default(),
+            EdgeRequest::In => {
+                debug_assert_eq!(bytes.len(), in_deg as usize * 4);
+                VertexEdges {
+                    in_neighbors: (0..in_deg as usize).map(|i| word(bytes, i)).collect(),
+                    out_neighbors: Vec::new(),
+                }
+            }
+            EdgeRequest::Out => {
+                debug_assert_eq!(bytes.len(), out_deg as usize * 4);
+                VertexEdges {
+                    in_neighbors: Vec::new(),
+                    out_neighbors: (0..out_deg as usize).map(|i| word(bytes, i)).collect(),
+                }
+            }
+            EdgeRequest::Both => {
+                debug_assert_eq!(bytes.len(), (in_deg + out_deg) as usize * 4);
+                let ind = in_deg as usize;
+                VertexEdges {
+                    in_neighbors: (0..ind).map(|i| word(bytes, i)).collect(),
+                    out_neighbors: (0..out_deg as usize)
+                        .map(|i| word(bytes, ind + i))
+                        .collect(),
+                }
+            }
+        }
+    }
+
+    /// All neighbors for an undirected fetch.
+    pub fn neighbors(&self) -> &[VertexId] {
+        &self.out_neighbors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = GraphHeader { num_vertices: 42, num_edges: 99, directed: true };
+        let enc = h.encode();
+        assert_eq!(GraphHeader::decode(&enc).unwrap(), h);
+        let h2 = GraphHeader { num_vertices: 0, num_edges: 0, directed: false };
+        assert_eq!(GraphHeader::decode(&h2.encode()).unwrap(), h2);
+    }
+
+    #[test]
+    fn header_rejects_garbage() {
+        assert!(GraphHeader::decode(b"short").is_err());
+        let mut bad = GraphHeader { num_vertices: 1, num_edges: 1, directed: true }.encode();
+        bad[0] = b'X';
+        assert!(GraphHeader::decode(&bad).is_err());
+        let mut badver = GraphHeader { num_vertices: 1, num_edges: 1, directed: true }.encode();
+        badver[8] = 99;
+        assert!(GraphHeader::decode(&badver).is_err());
+    }
+
+    #[test]
+    fn index_roundtrip_and_ranges() {
+        let h = GraphHeader { num_vertices: 3, num_edges: 5, directed: true };
+        // v0: in=[..1], out=[..2] at offset 0 => 12 bytes
+        // v1: in=0 out=1 at 12; v2: in=1 out=0 at 16
+        let idx = GraphIndex::new(h, vec![0, 12, 16], vec![1, 0, 1], vec![2, 1, 0]);
+        let enc = idx.encode();
+        let dec = GraphIndex::decode(&enc).unwrap();
+        assert_eq!(dec.num_vertices(), 3);
+        assert_eq!(dec.in_deg(0), 1);
+        assert_eq!(dec.out_deg(0), 2);
+        assert_eq!(dec.degree(2), 1);
+        assert_eq!(dec.byte_range(0, EdgeRequest::In), (0, 4));
+        assert_eq!(dec.byte_range(0, EdgeRequest::Out), (4, 8));
+        assert_eq!(dec.byte_range(0, EdgeRequest::Both), (0, 12));
+        assert_eq!(dec.byte_range(1, EdgeRequest::Out), (12, 4));
+        assert_eq!(dec.byte_range(2, EdgeRequest::In), (16, 4));
+        assert_eq!(dec.byte_range(2, EdgeRequest::None), (16, 0));
+    }
+
+    #[test]
+    fn index_decode_rejects_truncation() {
+        let h = GraphHeader { num_vertices: 10, num_edges: 0, directed: false };
+        let idx = GraphIndex::new(h, vec![0; 10], vec![0; 10], vec![0; 10]);
+        let mut enc = idx.encode();
+        enc.truncate(enc.len() - 1);
+        assert!(GraphIndex::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn vertex_edges_decode_both() {
+        let mut bytes = Vec::new();
+        for v in [7u32, 9] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [1u32, 2, 3] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let ve = VertexEdges::decode(&bytes, 2, 3, EdgeRequest::Both);
+        assert_eq!(ve.in_neighbors, vec![7, 9]);
+        assert_eq!(ve.out_neighbors, vec![1, 2, 3]);
+
+        let out_only = VertexEdges::decode(&bytes[8..], 2, 3, EdgeRequest::Out);
+        assert_eq!(out_only.out_neighbors, vec![1, 2, 3]);
+        assert!(out_only.in_neighbors.is_empty());
+
+        let none = VertexEdges::decode(&[], 2, 3, EdgeRequest::None);
+        assert!(none.in_neighbors.is_empty() && none.out_neighbors.is_empty());
+    }
+}

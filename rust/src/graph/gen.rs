@@ -1,0 +1,251 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates on the Twitter graph (42 M vertices, 1.5 B edges,
+//! heavy-tailed degree distribution). That dataset is not available here,
+//! so benches generate **R-MAT** graphs with the same edge factor (~35)
+//! and Kronecker parameters known to match social-network skew
+//! (a=0.57, b=0.19, c=0.19, d=0.05 — the Graph500 defaults). See
+//! DESIGN.md §5 for why this substitution preserves the paper's effects.
+//!
+//! Also provided: Erdős–Rényi (uniform), Barabási–Albert (preferential
+//! attachment), a 2-D grid (road-like, high diameter — exercises the
+//! diameter estimator), and tiny deterministic shapes for tests.
+
+use crate::util::XorShift;
+use crate::VertexId;
+
+/// R-MAT generator (Graph500 parameters by default).
+///
+/// Produces `num_edges` directed edge samples over `2^scale` vertices.
+/// Duplicates and self-loops are *not* removed here — the builder/CSR
+/// normalize — matching how R-MAT is conventionally specified.
+pub fn rmat(scale: u32, num_edges: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
+    rmat_with(scale, num_edges, 0.57, 0.19, 0.19, seed)
+}
+
+/// R-MAT with explicit quadrant probabilities (d = 1 - a - b - c).
+pub fn rmat_with(
+    scale: u32,
+    num_edges: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+) -> Vec<(VertexId, VertexId)> {
+    assert!(scale <= 31, "scale {scale} exceeds u32 vertex ids");
+    assert!(a + b + c <= 1.0 + 1e-9);
+    let mut rng = XorShift::new(seed);
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        let (mut u, mut v) = (0u32, 0u32);
+        for _ in 0..scale {
+            u <<= 1;
+            v <<= 1;
+            let r = rng.next_f64();
+            if r < a {
+                // top-left: no bits set
+            } else if r < a + b {
+                v |= 1;
+            } else if r < a + b + c {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        edges.push((u, v));
+    }
+    edges
+}
+
+/// Erdős–Rényi G(n, m): `m` uniform edge samples.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
+    assert!(n >= 2);
+    let mut rng = XorShift::new(seed);
+    (0..m)
+        .map(|_| {
+            (
+                rng.next_below(n as u64) as VertexId,
+                rng.next_below(n as u64) as VertexId,
+            )
+        })
+        .collect()
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches to
+/// `k` existing vertices with probability proportional to degree.
+pub fn barabasi_albert(n: usize, k: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
+    assert!(n > k && k >= 1);
+    let mut rng = XorShift::new(seed);
+    let mut edges = Vec::with_capacity(n * k);
+    // repeated-endpoints trick: sampling uniformly from the endpoint list
+    // is sampling proportional to degree
+    let mut endpoints: Vec<VertexId> = Vec::with_capacity(2 * n * k);
+    // seed clique over the first k+1 vertices
+    for u in 0..=(k as VertexId) {
+        for v in 0..u {
+            edges.push((u, v));
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    for u in (k + 1)..n {
+        let mut chosen = Vec::with_capacity(k);
+        while chosen.len() < k {
+            let t = endpoints[rng.next_below(endpoints.len() as u64) as usize];
+            if t != u as VertexId && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &v in &chosen {
+            edges.push((u as VertexId, v));
+            endpoints.push(u as VertexId);
+            endpoints.push(v);
+        }
+    }
+    edges
+}
+
+/// 2-D grid (rows × cols), 4-connected — road-network-like, high diameter.
+pub fn grid_2d(rows: usize, cols: usize) -> Vec<(VertexId, VertexId)> {
+    let mut edges = Vec::with_capacity(2 * rows * cols);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c)));
+            }
+        }
+    }
+    edges
+}
+
+/// Directed cycle 0 -> 1 -> ... -> n-1 -> 0.
+pub fn cycle(n: usize) -> Vec<(VertexId, VertexId)> {
+    (0..n).map(|i| (i as VertexId, ((i + 1) % n) as VertexId)).collect()
+}
+
+/// Path 0 - 1 - ... - n-1.
+pub fn path(n: usize) -> Vec<(VertexId, VertexId)> {
+    (0..n - 1).map(|i| (i as VertexId, (i + 1) as VertexId)).collect()
+}
+
+/// Star: center 0 connected to 1..n-1.
+pub fn star(n: usize) -> Vec<(VertexId, VertexId)> {
+    (1..n).map(|i| (0, i as VertexId)).collect()
+}
+
+/// Complete graph on n vertices.
+pub fn complete(n: usize) -> Vec<(VertexId, VertexId)> {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            edges.push((u as VertexId, v as VertexId));
+        }
+    }
+    edges
+}
+
+/// Two cliques of size `half` joined by a single bridge edge — the classic
+/// community-detection fixture (Louvain tests).
+pub fn two_cliques(half: usize) -> Vec<(VertexId, VertexId)> {
+    let mut edges = Vec::new();
+    for u in 0..half {
+        for v in (u + 1)..half {
+            edges.push((u as VertexId, v as VertexId));
+            edges.push(((u + half) as VertexId, (v + half) as VertexId));
+        }
+    }
+    edges.push((0, half as VertexId));
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+
+    #[test]
+    fn rmat_deterministic_and_in_range() {
+        let e1 = rmat(10, 5000, 42);
+        let e2 = rmat(10, 5000, 42);
+        assert_eq!(e1, e2);
+        assert!(e1.iter().all(|&(u, v)| u < 1024 && v < 1024));
+        assert_ne!(e1, rmat(10, 5000, 43));
+    }
+
+    #[test]
+    fn rmat_is_heavy_tailed() {
+        // hub vertices should dominate: max out-degree far above mean
+        let n = 1 << 12;
+        let edges = rmat(12, n * 8, 7);
+        let c = Csr::from_edges(n, &edges, true);
+        let max_deg = (0..n as VertexId).map(|v| c.out_deg(v)).max().unwrap();
+        let mean = c.num_edges() as f64 / n as f64;
+        assert!(
+            max_deg as f64 > 10.0 * mean,
+            "max {max_deg} should be >> mean {mean:.1} for a power-law graph"
+        );
+    }
+
+    #[test]
+    fn erdos_renyi_is_not_heavy_tailed() {
+        let n = 1 << 12;
+        let edges = erdos_renyi(n, n * 8, 7);
+        let c = Csr::from_edges(n, &edges, true);
+        let max_deg = (0..n as VertexId).map(|v| c.out_deg(v)).max().unwrap();
+        let mean = c.num_edges() as f64 / n as f64;
+        assert!(
+            (max_deg as f64) < 6.0 * mean,
+            "ER max degree {max_deg} should stay near mean {mean:.1}"
+        );
+    }
+
+    #[test]
+    fn barabasi_albert_edge_count_and_connectivity() {
+        let n = 500;
+        let edges = barabasi_albert(n, 3, 1);
+        let c = Csr::from_edges(n, &edges, false);
+        // every non-seed vertex attaches to 3 distinct targets
+        assert!(c.num_edges() >= 2 * 3 * (n as u64 - 4));
+        // connected: BFS reaches everyone
+        let mut seen = vec![false; n];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        let mut cnt = 1;
+        while let Some(v) = stack.pop() {
+            for &w in c.out(v) {
+                if !seen[w as usize] {
+                    seen[w as usize] = true;
+                    cnt += 1;
+                    stack.push(w);
+                }
+            }
+        }
+        assert_eq!(cnt, n);
+    }
+
+    #[test]
+    fn grid_shapes() {
+        let edges = grid_2d(3, 4);
+        // horizontal: 3*3, vertical: 2*4
+        assert_eq!(edges.len(), 9 + 8);
+        let c = Csr::from_edges(12, &edges, false);
+        assert_eq!(c.out_deg(0), 2); // corner
+        assert_eq!(c.out_deg(1), 3); // edge
+        assert_eq!(c.out_deg(5), 4); // interior
+    }
+
+    #[test]
+    fn deterministic_shapes() {
+        assert_eq!(cycle(3), vec![(0, 1), (1, 2), (2, 0)]);
+        assert_eq!(path(3), vec![(0, 1), (1, 2)]);
+        assert_eq!(star(4), vec![(0, 1), (0, 2), (0, 3)]);
+        assert_eq!(complete(4).len(), 6);
+        let tc = two_cliques(3);
+        assert_eq!(tc.len(), 3 + 3 + 1);
+    }
+}

@@ -1,0 +1,26 @@
+//! Graph images, converters, generators and the in-memory baseline.
+//!
+//! * [`format`] — the on-disk graph image (FlashGraph analogue): a small
+//!   in-memory index (O(n)) plus a packed adjacency file (O(m)) that
+//!   stays on disk and is read through [`crate::safs`].
+//! * [`builder`] — edge-list → graph-image conversion (sort, dedup,
+//!   pack), to files or to RAM buffers (the Louvain "RAMDisk" baseline).
+//! * [`csr`] — in-memory CSR graph: the "fully in-memory execution"
+//!   baseline of the paper's headline comparison, and the substrate for
+//!   oracle implementations in tests.
+//! * [`gen`] — synthetic workload generators (R-MAT, Erdős–Rényi,
+//!   Barabási–Albert, 2-D grid) replacing the paper's Twitter dataset
+//!   (DESIGN.md §5).
+//! * [`source`] — the [`source::EdgeSource`] abstraction the engine pulls
+//!   edge data through: SEM (disk + page cache) or in-memory CSR.
+
+pub mod builder;
+pub mod csr;
+pub mod format;
+pub mod gen;
+pub mod source;
+
+pub use builder::GraphBuilder;
+pub use csr::Csr;
+pub use format::{EdgeRequest, GraphHeader, GraphIndex, VertexEdges};
+pub use source::{EdgeSource, MemGraph, SemGraph};

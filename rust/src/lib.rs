@@ -1,0 +1,38 @@
+//! # Graphyti — a semi-external-memory graph library
+//!
+//! Reproduction of *"Graphyti: A Semi-External Memory Graph Library for
+//! FlashGraph"* (Mhembere et al., 2019) as a three-layer Rust + JAX +
+//! Pallas stack. See `DESIGN.md` for the full system inventory and the
+//! experiment index.
+//!
+//! Layering:
+//! * [`safs`] — userspace SEM storage substrate (page cache + async I/O),
+//!   standing in for the paper's SAFS.
+//! * [`graph`] — on-disk graph image format, converters, synthetic
+//!   workload generators, and the in-memory CSR baseline.
+//! * [`engine`] — the vertex-centric BSP engine (FlashGraph analogue):
+//!   activation scheduling, multicast/point-to-point messaging, global
+//!   barriers, asynchronous phase mode, per-iteration statistics.
+//! * [`algs`] — the paper's six algorithms, each in its unoptimized and
+//!   Graphyti-optimized variants, plus library extras.
+//! * [`runtime`] — PJRT bridge executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) from Rust; Python never runs at
+//!   request time.
+//! * [`coordinator`] — config system, job runner, figure harnesses.
+//! * [`util`] — PRNG, bitmaps, shared vectors, mini bench/property-test
+//!   harnesses (criterion/proptest are unavailable offline).
+
+pub mod algs;
+pub mod coordinator;
+pub mod engine;
+pub mod graph;
+pub mod runtime;
+pub mod safs;
+pub mod util;
+
+/// Vertex identifier. Graph images are limited to `u32::MAX` vertices,
+/// matching FlashGraph's compact on-disk layout.
+pub type VertexId = u32;
+
+/// Library-wide result type.
+pub type Result<T> = anyhow::Result<T>;

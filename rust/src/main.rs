@@ -1,0 +1,263 @@
+//! `graphyti` — CLI for the semi-external-memory graph library.
+//!
+//! Subcommands:
+//! * `generate` — synthesize a graph and build its on-disk image.
+//! * `info`     — print image header + degree statistics (no edge I/O).
+//! * `run`      — run a library algorithm in SEM or in-memory mode.
+//! * `verify`   — cross-check SEM PageRank against the AOT XLA/Pallas
+//!   dense-block engine (requires `make artifacts`).
+//!
+//! Arguments are `--key value` pairs (clap is unavailable offline; the
+//! parser below is deliberately minimal).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use graphyti::algs::degree::degree_stats;
+use graphyti::coordinator::{open_graph, run_alg, AlgSpec, GraphMode, RunConfig};
+use graphyti::graph::builder::GraphBuilder;
+use graphyti::graph::csr::Csr;
+use graphyti::graph::format::GraphIndex;
+use graphyti::graph::gen;
+use graphyti::runtime::{PageRankXla, XlaRuntime};
+use graphyti::util::fmt_bytes;
+
+const USAGE: &str = "\
+graphyti — a semi-external memory graph library (Graphyti reproduction)
+
+USAGE:
+  graphyti generate --kind rmat|er|ba|grid --scale N --out PATH
+                    [--edge-factor F] [--seed S] [--undirected]
+  graphyti info     --graph PATH
+  graphyti run ALG  --graph PATH [--mem] [--variant V] [--num N]
+                    [--cache-mb N] [--io-threads N] [--io-delay-us N]
+                    [--workers N] [--config FILE]
+  graphyti verify   --graph PATH [--iters N]
+
+ALG: pagerank (push|pull), coreness (graphyti|pruned|unopt),
+     diameter (multi|uni), bc (async|sync|uni), triangles
+     (graphyti|naive), louvain (graphyti|physical), bfs, wcc, sssp, degree
+";
+
+/// Minimal `--key value` + positional parser.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags take no value when followed by another flag
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> graphyti::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn require(&self, key: &str) -> graphyti::Result<&str> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing required --{key}"))
+    }
+}
+
+fn build_config(args: &Args) -> graphyti::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::load(&PathBuf::from(p))?,
+        None => RunConfig::default(),
+    };
+    for key in ["cache-mb", "io-threads", "io-delay-us", "workers", "batch", "seed"] {
+        if let Some(v) = args.get(key) {
+            cfg.set(&key.replace('-', "_").replace("cache_mb", "cache_mb"), v)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_generate(args: &Args) -> graphyti::Result<()> {
+    let kind = args.require("kind")?.to_string();
+    let out = PathBuf::from(args.require("out")?);
+    let scale = args.get_usize("scale", 14)? as u32;
+    let edge_factor = args.get_usize("edge-factor", 16)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let directed = !args.has("undirected");
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let edges = match kind.as_str() {
+        "rmat" => gen::rmat(scale, m, seed),
+        "er" => gen::erdos_renyi(n, m, seed),
+        "ba" => gen::barabasi_albert(n, edge_factor.max(1), seed),
+        "grid" => {
+            let side = 1usize << (scale / 2);
+            gen::grid_2d(side, side)
+        }
+        other => anyhow::bail!("unknown kind {other} (rmat|er|ba|grid)"),
+    };
+    let nv = match kind.as_str() {
+        "grid" => {
+            let side = 1usize << (scale / 2);
+            side * side
+        }
+        _ => n,
+    };
+    let mut b = GraphBuilder::new(nv, directed);
+    b.add_edges(&edges);
+    let (idx, adj) = b.build_files(&out)?;
+    let index = GraphIndex::decode(&std::fs::read(&idx)?)?;
+    println!(
+        "generated {kind} scale={scale}: {} vertices, {} edges ({} idx, {} adj) -> {}",
+        index.num_vertices(),
+        index.num_edges(),
+        fmt_bytes(std::fs::metadata(&idx)?.len()),
+        fmt_bytes(std::fs::metadata(&adj)?.len()),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> graphyti::Result<()> {
+    let base = PathBuf::from(args.require("graph")?);
+    let index = GraphIndex::decode(&std::fs::read(base.with_extension("gy-idx"))?)?;
+    let s = degree_stats(&index);
+    println!(
+        "graph {}: {} vertices, {} edges, directed={}",
+        base.display(),
+        index.num_vertices(),
+        index.num_edges(),
+        index.directed()
+    );
+    println!(
+        "degree: mean {:.2}, max {} (vertex {}), p50 {}, p99 {}",
+        s.mean,
+        s.max.1,
+        s.max.0,
+        s.hist.quantile(0.5),
+        s.hist.quantile(0.99)
+    );
+    println!(
+        "adjacency bytes on disk: {}",
+        fmt_bytes(std::fs::metadata(base.with_extension("gy-adj"))?.len())
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> graphyti::Result<()> {
+    let alg = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("missing ALG positional (see --help)"))?
+        .clone();
+    let base = PathBuf::from(args.require("graph")?);
+    let cfg = build_config(args)?;
+    let variant = args.get("variant").unwrap_or("");
+    let num = args.get_usize("num", 8)?;
+    let spec = AlgSpec::parse(&alg, variant, num)?;
+    let mode = if args.has("mem") { GraphMode::Mem } else { GraphMode::Sem };
+    let source = open_graph(&base, mode, &cfg)?;
+    let t = std::time::Instant::now();
+    let out = run_alg(source.as_ref(), &spec, &cfg);
+    let wall = t.elapsed();
+    println!("{}", out.summary);
+    println!("mode={mode:?} wall={}", graphyti::util::fmt_dur(wall));
+    if let Some(r) = out.report {
+        println!("{}", r.report());
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> graphyti::Result<()> {
+    let base = PathBuf::from(args.require("graph")?);
+    let iters = args.get_usize("iters", 60)?;
+    let cfg = build_config(args)?;
+    let index = GraphIndex::decode(&std::fs::read(base.with_extension("gy-idx"))?)?;
+    anyhow::ensure!(
+        index.num_vertices() <= 512,
+        "verify needs n <= 512 (dense XLA path); generate with --scale 9 or less"
+    );
+    // SEM run
+    let source = open_graph(&base, GraphMode::Sem, &cfg)?;
+    let sem = graphyti::algs::pagerank::pagerank_push(
+        source.as_ref(),
+        cfg.alpha,
+        1e-12,
+        &cfg.engine(),
+    );
+    // XLA dense-block run (AOT JAX + Pallas artifact via PJRT)
+    let rt = Arc::new(XlaRuntime::new()?);
+    println!("PJRT platform: {}", rt.platform());
+    // rebuild the edge list from the image for the dense operator
+    let mem = open_graph(&base, GraphMode::Mem, &cfg)?;
+    let mut edges = Vec::new();
+    for v in 0..index.num_vertices() as u32 {
+        let e = mem.fetch(v, graphyti::graph::format::EdgeRequest::Out)?;
+        for &u in &e.out_neighbors {
+            edges.push((v, u));
+        }
+    }
+    let csr = Csr::from_edges(index.num_vertices(), &edges, index.directed());
+    let xla_rank = PageRankXla::new(rt).pagerank(&csr, cfg.alpha as f32, iters)?;
+    let l1: f64 =
+        sem.rank.iter().zip(&xla_rank).map(|(a, b)| (a - b).abs()).sum();
+    println!(
+        "SEM pagerank vs XLA dense-block pagerank ({iters} iters): L1 distance {l1:.2e}"
+    );
+    anyhow::ensure!(l1 < 1e-3, "verification FAILED: L1 {l1}");
+    println!("verification OK");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        print!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    let args = Args::parse(&argv);
+    let result = match argv[0].as_str() {
+        "generate" => cmd_generate(&args),
+        "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
+        "verify" => cmd_verify(&args),
+        other => {
+            eprintln!("unknown command: {other}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! PJRT executor: load HLO text artifacts, compile once, execute many.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context};
+
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Locate the artifacts directory: `$GRAPHYTI_ARTIFACTS`, else
+/// `./artifacts`, else `<exe>/../../artifacts` (target/release layout).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("GRAPHYTI_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.is_dir() {
+        return local;
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        for anc in exe.ancestors().skip(1) {
+            let cand = anc.join("artifacts");
+            if cand.is_dir() {
+                return cand;
+            }
+        }
+    }
+    local
+}
+
+/// A PJRT CPU client with a cache of compiled artifact executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client rooted at the default artifacts dir.
+    pub fn new() -> crate::Result<Self> {
+        Self::with_dir(&artifacts_dir())
+    }
+
+    /// Create with an explicit artifacts directory.
+    pub fn with_dir(dir: &Path) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaRuntime { client, dir: dir.to_path_buf(), cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached).
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> crate::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        // HLO *text* interchange: the text parser reassigns instruction
+        // ids, sidestepping the 64-bit-id protos jax >= 0.5 emits that
+        // xla_extension 0.5.1 rejects (see python/compile/aot.py).
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compile artifact {name}"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// Supported padded sizes (one AOT artifact each — HLO has static shapes).
+const PAGERANK_SIZES: [usize; 2] = [256, 512];
+/// Rank-matrix lane count baked into the artifact (see model.LANES).
+const LANES: usize = 8;
+
+/// Dense-block PageRank through the AOT JAX/Pallas artifact.
+pub struct PageRankXla {
+    rt: std::sync::Arc<XlaRuntime>,
+}
+
+impl PageRankXla {
+    /// Wrap a runtime.
+    pub fn new(rt: std::sync::Arc<XlaRuntime>) -> Self {
+        PageRankXla { rt }
+    }
+
+    /// Smallest artifact size that fits `n` vertices.
+    pub fn padded_size(n: usize) -> Option<usize> {
+        PAGERANK_SIZES.iter().copied().find(|&s| s >= n)
+    }
+
+    /// Run `iters` damped power-iteration steps on a dense operator built
+    /// from `g` (n ≤ 512). Returns the rank vector — numerically
+    /// equivalent to [`crate::algs::oracle::pagerank`] at convergence.
+    pub fn pagerank(&self, g: &Csr, alpha: f32, iters: usize) -> crate::Result<Vec<f64>> {
+        let n = g.num_vertices();
+        let Some(size) = Self::padded_size(n) else {
+            bail!("graph too large for dense verification: n={n} > 512");
+        };
+        let exe = self.rt.executable(&format!("pagerank_step_{size}"))?;
+
+        // M[u, v] = 1/outdeg(v) for edge v->u; dangling columns zero.
+        let mut m = vec![0f32; size * size];
+        for v in 0..n as VertexId {
+            let outs = g.out(v);
+            if outs.is_empty() {
+                continue;
+            }
+            let w = 1.0 / outs.len() as f32;
+            for &u in outs {
+                m[u as usize * size + v as usize] = w;
+            }
+        }
+        // The artifact supports dangling-mass redistribution (dang[v]=1
+        // for dangling v), but the library-wide convention — shared by
+        // the SEM implementations and the oracle — lets dangling mass
+        // decay, so the verification path passes an all-zero vector.
+        let dang = vec![0f32; size];
+        let mut uni = vec![0f32; size];
+        uni[..n].fill(1.0 / n as f32);
+        let mut r = vec![0f32; size * LANES];
+        for v in 0..n {
+            r[v * LANES..(v + 1) * LANES].fill(1.0 / n as f32);
+        }
+
+        let m_lit = xla::Literal::vec1(&m).reshape(&[size as i64, size as i64])?;
+        let dang_lit = xla::Literal::vec1(&dang).reshape(&[size as i64, 1])?;
+        let uni_lit = xla::Literal::vec1(&uni).reshape(&[size as i64, 1])?;
+        let alpha_lit = xla::Literal::scalar(alpha);
+        for _ in 0..iters {
+            let r_lit = xla::Literal::vec1(&r).reshape(&[size as i64, LANES as i64])?;
+            let out = exe.execute::<xla::Literal>(&[
+                m_lit.clone(),
+                r_lit,
+                dang_lit.clone(),
+                uni_lit.clone(),
+                alpha_lit.clone(),
+            ])?[0][0]
+                .to_literal_sync()?;
+            r = out.to_tuple1()?.to_vec::<f32>()?;
+        }
+        // all lanes carry the same vector; read lane 0
+        Ok((0..n).map(|v| r[v * LANES] as f64).collect())
+    }
+}
+
+/// Louvain modularity scoring through the AOT artifact (n ≤ 256,
+/// communities ≤ 64 after dense renumbering).
+pub struct ModularityXla {
+    rt: std::sync::Arc<XlaRuntime>,
+}
+
+impl ModularityXla {
+    /// Wrap a runtime.
+    pub fn new(rt: std::sync::Arc<XlaRuntime>) -> Self {
+        ModularityXla { rt }
+    }
+
+    /// Score a community assignment on an undirected graph (n ≤ 256,
+    /// ≤ 64 distinct communities).
+    pub fn score(&self, g: &Csr, community: &[VertexId]) -> crate::Result<f64> {
+        const SIZE: usize = 256;
+        const C: usize = 64;
+        let n = g.num_vertices();
+        if n > SIZE {
+            bail!("graph too large for dense modularity: n={n} > {SIZE}");
+        }
+        // dense renumber communities
+        let mut map = HashMap::new();
+        let mut dense = Vec::with_capacity(n);
+        for &c in community.iter().take(n) {
+            let next = map.len() as u32;
+            dense.push(*map.entry(c).or_insert(next));
+        }
+        if map.len() > C {
+            bail!("too many communities: {} > {C}", map.len());
+        }
+        let mut adj = vec![0f32; SIZE * SIZE];
+        for v in 0..n as VertexId {
+            for &u in g.out(v) {
+                adj[v as usize * SIZE + u as usize] = 1.0;
+            }
+        }
+        let mut onehot = vec![0f32; SIZE * C];
+        for (v, &c) in dense.iter().enumerate() {
+            onehot[v * C + c as usize] = 1.0;
+        }
+        let two_m = g.num_edges() as f32;
+        let exe = self.rt.executable("modularity_256")?;
+        let out = exe.execute::<xla::Literal>(&[
+            xla::Literal::vec1(&adj).reshape(&[SIZE as i64, SIZE as i64])?,
+            xla::Literal::vec1(&onehot).reshape(&[SIZE as i64, C as i64])?,
+            xla::Literal::scalar(two_m),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let q = out.to_tuple1()?.to_vec::<f32>()?;
+        Ok(q[0] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::oracle;
+    use crate::graph::gen;
+    use std::sync::Arc;
+
+    fn runtime_or_skip() -> Option<Arc<XlaRuntime>> {
+        let dir = artifacts_dir();
+        if !dir.join("pagerank_step_256.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Arc::new(XlaRuntime::new().expect("PJRT client")))
+    }
+
+    #[test]
+    fn xla_pagerank_matches_oracle() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let edges = gen::rmat(7, 900, 3);
+        let g = Csr::from_edges(128, &edges, true);
+        let want = oracle::pagerank(&g, 0.85, 60);
+        let got = PageRankXla::new(rt).pagerank(&g, 0.85, 60).unwrap();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5, "rank[{i}] xla {a} oracle {b}");
+        }
+    }
+
+    #[test]
+    fn xla_pagerank_padded_sizes() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let pr = PageRankXla::new(rt);
+        assert_eq!(PageRankXla::padded_size(100), Some(256));
+        assert_eq!(PageRankXla::padded_size(256), Some(256));
+        assert_eq!(PageRankXla::padded_size(300), Some(512));
+        assert_eq!(PageRankXla::padded_size(1000), None);
+        // size-512 artifact works too
+        let edges = gen::cycle(300);
+        let g = Csr::from_edges(300, &edges, true);
+        let got = pr.pagerank(&g, 0.85, 30).unwrap();
+        for r in &got {
+            assert!((r - 1.0 / 300.0).abs() < 1e-6, "cycle PR uniform, got {r}");
+        }
+    }
+
+    #[test]
+    fn xla_modularity_matches_oracle() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let edges = gen::two_cliques(8);
+        let g = Csr::from_edges(16, &edges, false);
+        let split: Vec<VertexId> = (0..16).map(|v| if v < 8 { 0 } else { 777 }).collect();
+        let want = oracle::modularity(&g, &split);
+        let got = ModularityXla::new(rt).score(&g, &split).unwrap();
+        assert!((got - want).abs() < 1e-5, "xla {got} oracle {want}");
+    }
+}

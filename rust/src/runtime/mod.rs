@@ -1,0 +1,19 @@
+//! The XLA/PJRT runtime — executing the AOT-compiled JAX/Pallas
+//! artifacts from Rust.
+//!
+//! Python runs **once**, at build time: `make artifacts` lowers the
+//! Layer-2 JAX model (which calls the Layer-1 Pallas kernel) to HLO text
+//! under `artifacts/`. At run time this module loads the text with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and executes it — no Python anywhere on the request path.
+//!
+//! Two computations are hosted:
+//! * [`PageRankXla`] — a dense-block damped power-iteration step, used as
+//!   the numeric *verification engine* for the SEM PageRank
+//!   implementations (`graphyti verify`, `examples/xla_pagerank.rs`).
+//! * [`ModularityXla`] — the Louvain modularity scorer used to grade
+//!   community assignments.
+
+pub mod executor;
+
+pub use executor::{artifacts_dir, ModularityXla, PageRankXla, XlaRuntime};

@@ -1,0 +1,337 @@
+//! [`SemFile`]: a read-only file whose reads flow through the page cache
+//! and the async I/O pool — the SEM data plane.
+//!
+//! The engine fetches *batches* of byte ranges (one per active vertex in a
+//! processing batch) via [`SemFile::read_ranges`]; misses across the whole
+//! batch are deduplicated, coalesced into runs, and serviced concurrently
+//! by the pool — this is where FlashGraph's overlap of computation with
+//! asynchronous I/O comes from.
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use super::io::{coalesce, IoPool, RunRequest};
+use super::page_cache::{PageCache, PAGE_SIZE};
+use super::stats::IoStats;
+
+/// A byte range in the file.
+pub type ByteRange = (u64, usize); // (offset, len)
+
+/// Read-only SEM file handle.
+pub struct SemFile {
+    file: Arc<File>,
+    len: u64,
+    cache: Arc<PageCache>,
+    pool: Arc<IoPool>,
+    stats: Arc<IoStats>,
+}
+
+impl SemFile {
+    /// Open `path` through the given cache and pool.
+    pub fn open(
+        path: &Path,
+        cache: Arc<PageCache>,
+        pool: Arc<IoPool>,
+    ) -> crate::Result<Self> {
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let len = file.metadata()?.len();
+        let stats = cache.stats().clone();
+        Ok(SemFile { file: Arc::new(file), len, cache, pool, stats })
+    }
+
+    /// File length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True if the file is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read a single byte range.
+    pub fn read(&self, offset: u64, len: usize) -> crate::Result<Vec<u8>> {
+        Ok(self.read_ranges(&[(offset, len)])?.pop().unwrap())
+    }
+
+    /// Read many byte ranges as one batch: cache lookups first, then all
+    /// misses deduped + coalesced + serviced in parallel, then assembly.
+    pub fn read_ranges(&self, ranges: &[ByteRange]) -> crate::Result<Vec<Vec<u8>>> {
+        self.stats.add_read_request(ranges.len() as u64);
+        // 1. collect the distinct pages each range needs
+        let mut needed: Vec<u64> = Vec::new();
+        for &(off, len) in ranges {
+            if off + len as u64 > self.len {
+                bail!(
+                    "read past EOF: offset {off} + len {len} > file len {}",
+                    self.len
+                );
+            }
+            if len == 0 {
+                continue;
+            }
+            let first = off / PAGE_SIZE as u64;
+            let last = (off + len as u64 - 1) / PAGE_SIZE as u64;
+            needed.extend(first..=last);
+        }
+        needed.sort_unstable();
+        needed.dedup();
+
+        // 2. cache pass — split hits from misses
+        let mut have: Vec<(u64, Arc<[u8]>)> = Vec::with_capacity(needed.len());
+        let mut misses: Vec<u64> = Vec::new();
+        for &p in &needed {
+            match self.cache.get(p) {
+                Some(d) => have.push((p, d)),
+                None => misses.push(p),
+            }
+        }
+
+        // 3. dispatch misses as coalesced runs, serviced concurrently
+        if !misses.is_empty() {
+            let runs = coalesce(&misses, self.pool.config().max_run_pages);
+            self.stats.add_merged((misses.len() - runs.len()) as u64);
+            let (tx, rx) = channel();
+            let nruns = runs.len();
+            for (start, n) in runs {
+                self.pool.submit(RunRequest {
+                    file: self.file.clone(),
+                    file_len: self.len,
+                    start_page: start,
+                    npages: n,
+                    reply: tx.clone(),
+                });
+            }
+            drop(tx);
+            // block for completions — counted as a thread wait
+            self.stats.add_thread_wait(1);
+            for _ in 0..nruns {
+                let reply = rx.recv().context("io pool reply channel closed")?;
+                for (i, data) in reply.pages.into_iter().enumerate() {
+                    let p = reply.start_page + i as u64;
+                    self.cache.insert(p, data.clone());
+                    have.push((p, data));
+                }
+            }
+        }
+        have.sort_unstable_by_key(|&(p, _)| p);
+
+        // 4. assemble the requested ranges from the page set
+        let lookup = |p: u64| -> &Arc<[u8]> {
+            let idx = have.binary_search_by_key(&p, |&(q, _)| q).expect("page present");
+            &have[idx].1
+        };
+        let mut out = Vec::with_capacity(ranges.len());
+        for &(off, len) in ranges {
+            let mut buf = Vec::with_capacity(len);
+            let mut pos = off;
+            let end = off + len as u64;
+            while pos < end {
+                let p = pos / PAGE_SIZE as u64;
+                let in_page = (pos % PAGE_SIZE as u64) as usize;
+                let take = ((end - pos) as usize).min(PAGE_SIZE - in_page);
+                buf.extend_from_slice(&lookup(p)[in_page..in_page + take]);
+                pos += take as u64;
+            }
+            out.push(buf);
+        }
+        Ok(out)
+    }
+
+    /// Prefetch hint: asynchronously warm the cache for the byte ranges
+    /// without blocking (used by algorithms that know their next accesses).
+    pub fn prefetch(&self, ranges: &[ByteRange]) {
+        let mut pages: Vec<u64> = Vec::new();
+        for &(off, len) in ranges {
+            if len == 0 || off >= self.len {
+                continue;
+            }
+            let first = off / PAGE_SIZE as u64;
+            let last = (off + len as u64 - 1).min(self.len - 1) / PAGE_SIZE as u64;
+            for p in first..=last {
+                if self.cache.peek(p).is_none() {
+                    pages.push(p);
+                }
+            }
+        }
+        pages.sort_unstable();
+        pages.dedup();
+        if pages.is_empty() {
+            return;
+        }
+        let (tx, rx) = channel();
+        let runs = coalesce(&pages, self.pool.config().max_run_pages);
+        let nruns = runs.len();
+        for (start, n) in runs {
+            self.pool.submit(RunRequest {
+                file: self.file.clone(),
+                file_len: self.len,
+                start_page: start,
+                npages: n,
+                reply: tx.clone(),
+            });
+        }
+        drop(tx);
+        // fire-and-forget insertion on a helper thread so callers don't block
+        let cache = self.cache.clone();
+        std::thread::spawn(move || {
+            for _ in 0..nruns {
+                if let Ok(reply) = rx.recv() {
+                    for (i, data) in reply.pages.into_iter().enumerate() {
+                        cache.insert(reply.start_page + i as u64, data);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Stats handle (shared with cache + pool).
+    pub fn stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::safs::io::IoConfig;
+    use std::io::Write;
+
+    fn setup(data: &[u8], cache_pages: usize) -> (std::path::PathBuf, SemFile) {
+        let path = std::env::temp_dir().join(format!(
+            "graphyti-semfile-{}-{:x}-{}",
+            std::process::id(),
+            data.as_ptr() as usize,
+            data.len()
+        ));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(data).unwrap();
+        f.sync_all().unwrap();
+        let stats = Arc::new(IoStats::new());
+        let cache = Arc::new(PageCache::new(cache_pages * PAGE_SIZE, stats.clone()));
+        let pool = Arc::new(IoPool::new(IoConfig { threads: 3, ..Default::default() }, stats));
+        let sem = SemFile::open(&path, cache, pool).unwrap();
+        (path, sem)
+    }
+
+    fn pattern(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i % 241) as u8).collect()
+    }
+
+    #[test]
+    fn read_roundtrip_unaligned() {
+        let data = pattern(PAGE_SIZE * 5 + 1234);
+        let (path, f) = setup(&data, 128);
+        for &(off, len) in &[
+            (0u64, 10usize),
+            (PAGE_SIZE as u64 - 1, 2),                  // page straddle
+            (PAGE_SIZE as u64 * 2 + 100, PAGE_SIZE * 2), // multi-page
+            (data.len() as u64 - 5, 5),                  // tail
+            (77, 0),                                     // empty
+        ] {
+            let got = f.read(off, len).unwrap();
+            assert_eq!(&got[..], &data[off as usize..off as usize + len], "range ({off},{len})");
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn read_past_eof_errors() {
+        let data = pattern(100);
+        let (path, f) = setup(&data, 64);
+        assert!(f.read(90, 20).is_err());
+        assert!(f.read(0, 100).is_ok());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn second_read_hits_cache() {
+        let data = pattern(PAGE_SIZE * 4);
+        let (path, f) = setup(&data, 128);
+        f.read(0, PAGE_SIZE * 2).unwrap();
+        let before = f.stats().snapshot();
+        f.read(0, PAGE_SIZE * 2).unwrap();
+        let d = f.stats().snapshot().delta(&before);
+        assert_eq!(d.cache_misses, 0, "all pages should hit: {d:?}");
+        assert_eq!(d.physical_reads, 0);
+        assert_eq!(d.cache_hits, 2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn batch_misses_are_merged() {
+        let data = pattern(PAGE_SIZE * 32);
+        let (path, f) = setup(&data, 128);
+        // 8 contiguous page-sized ranges => one merged physical read
+        let ranges: Vec<ByteRange> =
+            (0..8).map(|i| (i as u64 * PAGE_SIZE as u64, PAGE_SIZE)).collect();
+        let before = f.stats().snapshot();
+        let out = f.read_ranges(&ranges).unwrap();
+        for (i, buf) in out.iter().enumerate() {
+            assert_eq!(&buf[..], &data[i * PAGE_SIZE..(i + 1) * PAGE_SIZE]);
+        }
+        let d = f.stats().snapshot().delta(&before);
+        assert_eq!(d.read_requests, 8);
+        assert_eq!(d.physical_reads, 1, "adjacent misses must coalesce: {d:?}");
+        assert_eq!(d.merged_requests, 7);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn overlapping_ranges_share_pages() {
+        let data = pattern(PAGE_SIZE * 2);
+        let (path, f) = setup(&data, 64);
+        let before = f.stats().snapshot();
+        let out = f
+            .read_ranges(&[(0, PAGE_SIZE), (100, 200), (PAGE_SIZE as u64 / 2, 10)])
+            .unwrap();
+        assert_eq!(&out[1][..], &data[100..300]);
+        assert_eq!(&out[2][..], &data[PAGE_SIZE / 2..PAGE_SIZE / 2 + 10]);
+        let d = f.stats().snapshot().delta(&before);
+        // all three ranges live in page 0 => exactly one miss
+        assert_eq!(d.cache_misses, 1, "{d:?}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn eviction_pressure_still_correct() {
+        let data = pattern(PAGE_SIZE * 512);
+        // tiny cache: 64 pages (1 per shard), constant eviction
+        let (path, f) = setup(&data, 64);
+        let mut rng = crate::util::XorShift::new(11);
+        for _ in 0..200 {
+            let off = rng.next_below((data.len() - 100) as u64);
+            let len = 1 + rng.next_below(99) as usize;
+            let got = f.read(off, len).unwrap();
+            assert_eq!(&got[..], &data[off as usize..off as usize + len]);
+        }
+        let s = f.stats().snapshot();
+        assert!(s.evictions > 0, "cache must be under pressure: {s:?}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn prefetch_warms_cache() {
+        let data = pattern(PAGE_SIZE * 16);
+        let (path, f) = setup(&data, 128);
+        f.prefetch(&[(0, PAGE_SIZE * 8)]);
+        // wait for the prefetch helper to land pages
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        loop {
+            let s = f.stats().snapshot();
+            if s.bytes_read >= (8 * PAGE_SIZE) as u64 || std::time::Instant::now() > deadline {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let before = f.stats().snapshot();
+        f.read(0, PAGE_SIZE * 8).unwrap();
+        let d = f.stats().snapshot().delta(&before);
+        assert_eq!(d.cache_misses, 0, "prefetched pages should all hit: {d:?}");
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,306 @@
+//! Asynchronous parallel I/O pool with request merging.
+//!
+//! SAFS's core trick is keeping many outstanding requests against the SSD
+//! array and coalescing adjacent ones before dispatch. Our substitute is a
+//! thread pool draining a shared queue of *page runs* (already coalesced
+//! by the submitter, [`super::SemFile`]); each run becomes one `pread`.
+//! Runs from a single caller batch are serviced concurrently by all pool
+//! threads, which is what overlaps computation with I/O in the engine.
+//!
+//! **Latency injection**: the paper's testbed is an SSD array whose access
+//! latency dominates; on a dev box the OS page cache would hide file
+//! reads entirely and collapse the SEM-vs-in-memory distinction. An
+//! optional per-`pread` delay (`io_delay_us`) restores an SSD-like cost
+//! model (default off; benches enable it — see DESIGN.md §5).
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::page_cache::PAGE_SIZE;
+use super::stats::IoStats;
+
+/// Pool configuration.
+#[derive(Debug, Clone)]
+pub struct IoConfig {
+    /// Number of I/O service threads.
+    pub threads: usize,
+    /// Injected latency per physical read, microseconds (0 = off).
+    pub io_delay_us: u64,
+    /// Maximum pages per merged run (bounds single-pread size).
+    pub max_run_pages: usize,
+}
+
+impl Default for IoConfig {
+    fn default() -> Self {
+        IoConfig { threads: 4, io_delay_us: 0, max_run_pages: 256 }
+    }
+}
+
+/// One coalesced read: pages `[start_page, start_page + npages)`.
+pub(crate) struct RunRequest {
+    pub file: Arc<File>,
+    pub file_len: u64,
+    pub start_page: u64,
+    pub npages: usize,
+    pub reply: Sender<RunReply>,
+}
+
+/// Completed run: the pages in order.
+pub(crate) struct RunReply {
+    pub start_page: u64,
+    pub pages: Vec<Arc<[u8]>>,
+}
+
+struct Queue {
+    q: Mutex<VecDeque<RunRequest>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Asynchronous I/O thread pool.
+pub struct IoPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    cfg: IoConfig,
+    stats: Arc<IoStats>,
+}
+
+impl IoPool {
+    /// Spawn the pool.
+    pub fn new(cfg: IoConfig, stats: Arc<IoStats>) -> Self {
+        let queue = Arc::new(Queue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..cfg.threads.max(1))
+            .map(|i| {
+                let queue = queue.clone();
+                let stats = stats.clone();
+                let delay = cfg.io_delay_us;
+                std::thread::Builder::new()
+                    .name(format!("safs-io-{i}"))
+                    .spawn(move || Self::worker_loop(queue, stats, delay))
+                    .expect("spawn io worker")
+            })
+            .collect();
+        IoPool { queue, workers, cfg, stats }
+    }
+
+    /// Submit one coalesced run. The reply arrives on `req.reply`.
+    pub(crate) fn submit(&self, req: RunRequest) {
+        let mut q = self.queue.q.lock().unwrap();
+        q.push_back(req);
+        drop(q);
+        self.queue.cv.notify_one();
+    }
+
+    /// Pool configuration.
+    pub fn config(&self) -> &IoConfig {
+        &self.cfg
+    }
+
+    /// Stats handle.
+    pub fn stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+
+    fn worker_loop(queue: Arc<Queue>, stats: Arc<IoStats>, delay_us: u64) {
+        loop {
+            let req = {
+                let mut q = queue.q.lock().unwrap();
+                loop {
+                    if let Some(r) = q.pop_front() {
+                        break r;
+                    }
+                    if queue.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    q = queue.cv.wait(q).unwrap();
+                }
+            };
+            let pages = Self::service(&req, &stats, delay_us);
+            // receiver may have gone away (caller panicked); ignore.
+            let _ = req.reply.send(RunReply { start_page: req.start_page, pages });
+        }
+    }
+
+    /// Execute one run: a single pread covering all pages, split up and
+    /// zero-padded at EOF.
+    fn service(req: &RunRequest, stats: &IoStats, delay_us: u64) -> Vec<Arc<[u8]>> {
+        let offset = req.start_page * PAGE_SIZE as u64;
+        let want = req.npages * PAGE_SIZE;
+        let mut buf = vec![0u8; want];
+        // read as much as the file holds; rest stays zero (EOF padding)
+        let avail = (req.file_len.saturating_sub(offset) as usize).min(want);
+        if avail > 0 {
+            let mut done = 0;
+            while done < avail {
+                match req.file.read_at(&mut buf[done..avail], offset + done as u64) {
+                    Ok(0) => break,
+                    Ok(n) => done += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => panic!("safs pread failed: {e}"),
+                }
+            }
+        }
+        if delay_us > 0 {
+            // emulate SSD access latency per physical request
+            std::thread::sleep(std::time::Duration::from_micros(delay_us));
+        }
+        stats.add_physical_read(1);
+        stats.add_bytes_read(want as u64);
+        buf.chunks(PAGE_SIZE)
+            .map(|c| Arc::from(c.to_vec().into_boxed_slice()))
+            .collect()
+    }
+}
+
+impl Drop for IoPool {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::Release);
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Coalesce a sorted, deduped page list into runs of at most
+/// `max_run_pages` consecutive pages. Returns `(start_page, npages)` runs.
+pub fn coalesce(pages: &[u64], max_run_pages: usize) -> Vec<(u64, usize)> {
+    let mut runs = Vec::new();
+    let mut i = 0;
+    while i < pages.len() {
+        let start = pages[i];
+        let mut n = 1usize;
+        while i + n < pages.len() && pages[i + n] == start + n as u64 && n < max_run_pages {
+            n += 1;
+        }
+        runs.push((start, n));
+        i += n;
+    }
+    runs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn coalesce_runs() {
+        assert_eq!(coalesce(&[], 16), vec![]);
+        assert_eq!(coalesce(&[5], 16), vec![(5, 1)]);
+        assert_eq!(coalesce(&[1, 2, 3, 7, 8, 20], 16), vec![(1, 3), (7, 2), (20, 1)]);
+        // run splitting at max_run_pages
+        assert_eq!(coalesce(&[0, 1, 2, 3], 2), vec![(0, 2), (2, 2)]);
+    }
+
+    fn temp_file(bytes: &[u8]) -> (std::path::PathBuf, Arc<File>) {
+        let path = std::env::temp_dir().join(format!(
+            "graphyti-io-test-{}-{:x}",
+            std::process::id(),
+            bytes.as_ptr() as usize
+        ));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        f.sync_all().unwrap();
+        (path.clone(), Arc::new(File::open(&path).unwrap()))
+    }
+
+    #[test]
+    fn pool_reads_pages_and_pads_eof() {
+        // 1.5 pages of data
+        let mut data = vec![0u8; PAGE_SIZE + PAGE_SIZE / 2];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        let (path, file) = temp_file(&data);
+        let stats = Arc::new(IoStats::new());
+        let pool = IoPool::new(IoConfig { threads: 2, ..Default::default() }, stats.clone());
+        let (tx, rx) = channel();
+        pool.submit(RunRequest {
+            file: file.clone(),
+            file_len: data.len() as u64,
+            start_page: 0,
+            npages: 2,
+            reply: tx,
+        });
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.pages.len(), 2);
+        assert_eq!(&reply.pages[0][..], &data[..PAGE_SIZE]);
+        assert_eq!(&reply.pages[1][..PAGE_SIZE / 2], &data[PAGE_SIZE..]);
+        assert!(reply.pages[1][PAGE_SIZE / 2..].iter().all(|&b| b == 0), "EOF padding");
+        let s = stats.snapshot();
+        assert_eq!(s.physical_reads, 1);
+        assert_eq!(s.bytes_read, 2 * PAGE_SIZE as u64);
+        drop(pool);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn pool_services_many_runs_concurrently() {
+        let data = vec![7u8; PAGE_SIZE * 64];
+        let (path, file) = temp_file(&data);
+        let stats = Arc::new(IoStats::new());
+        let pool = IoPool::new(IoConfig { threads: 4, ..Default::default() }, stats.clone());
+        let (tx, rx) = channel();
+        for p in 0..64u64 {
+            pool.submit(RunRequest {
+                file: file.clone(),
+                file_len: data.len() as u64,
+                start_page: p,
+                npages: 1,
+                reply: tx.clone(),
+            });
+        }
+        drop(tx);
+        let mut got = 0;
+        while let Ok(r) = rx.recv() {
+            assert_eq!(r.pages.len(), 1);
+            assert!(r.pages[0].iter().all(|&b| b == 7));
+            got += 1;
+        }
+        assert_eq!(got, 64);
+        assert_eq!(stats.snapshot().physical_reads, 64);
+        drop(pool);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn latency_injection_slows_reads() {
+        let data = vec![1u8; PAGE_SIZE * 8];
+        let (path, file) = temp_file(&data);
+        let stats = Arc::new(IoStats::new());
+        let pool = IoPool::new(
+            IoConfig { threads: 1, io_delay_us: 2000, ..Default::default() },
+            stats,
+        );
+        let (tx, rx) = channel();
+        let t = std::time::Instant::now();
+        for p in 0..4u64 {
+            pool.submit(RunRequest {
+                file: file.clone(),
+                file_len: data.len() as u64,
+                start_page: p,
+                npages: 1,
+                reply: tx.clone(),
+            });
+        }
+        drop(tx);
+        while rx.recv().is_ok() {}
+        assert!(
+            t.elapsed() >= std::time::Duration::from_millis(8),
+            "4 serial reads at 2ms injected latency must take >= 8ms"
+        );
+        drop(pool);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,32 @@
+//! SAFS-substitute: the semi-external-memory storage substrate.
+//!
+//! FlashGraph sits on SAFS (Zheng et al., "Toward Millions of File System
+//! IOPS on Low-Cost, Commodity Hardware"), a userspace filesystem that
+//! drives SSD arrays with asynchronous parallel I/O behind a configurable
+//! page cache. This module is our laptop-scale stand-in with the same
+//! interface obligations:
+//!
+//! * a **sharded clock page cache** of configurable capacity
+//!   ([`page_cache::PageCache`]) — the paper's "2 GB page cache" knob;
+//! * an **asynchronous parallel I/O pool** ([`io::IoPool`]) that services
+//!   page reads on dedicated threads and **merges adjacent requests**,
+//!   as SAFS does before dispatching to SSDs;
+//! * global **I/O statistics** ([`stats::IoStats`]) — read bytes, request
+//!   counts, cache hit/miss, merge counts — the quantities plotted in the
+//!   paper's figures;
+//! * optional **per-request latency injection** to emulate SSD access
+//!   cost on machines whose OS page cache would otherwise absorb
+//!   everything (see DESIGN.md §5).
+//!
+//! [`SemFile`] ties the three together: a file handle whose reads go
+//! through the cache and pool.
+
+pub mod file;
+pub mod io;
+pub mod page_cache;
+pub mod stats;
+
+pub use file::SemFile;
+pub use io::{IoConfig, IoPool};
+pub use page_cache::{PageCache, PAGE_SIZE};
+pub use stats::{IoStats, IoStatsSnapshot};

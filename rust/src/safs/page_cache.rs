@@ -1,0 +1,248 @@
+//! Sharded clock page cache.
+//!
+//! FlashGraph's configurable page cache is the central SEM knob: the paper
+//! runs the 14 GB Twitter graph with a 2 GB cache. We implement a
+//! second-chance (clock) cache sharded by page number to keep lock
+//! contention off the hot lookup path. Pages are immutable once inserted
+//! (graph images are read-only at run time), handed out as `Arc<[u8]>` so
+//! eviction never invalidates readers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::stats::IoStats;
+
+/// Cache / I/O page size in bytes (FlashGraph uses 4 KiB pages).
+pub const PAGE_SIZE: usize = 4096;
+
+/// Number of shards (power of two).
+const SHARDS: usize = 64;
+
+/// One cached page.
+struct Frame {
+    page_no: u64,
+    data: Arc<[u8]>,
+    ref_bit: bool,
+}
+
+/// One shard: a clock over up to `cap` frames.
+struct Shard {
+    map: HashMap<u64, usize>,
+    frames: Vec<Frame>,
+    hand: usize,
+    cap: usize,
+}
+
+impl Shard {
+    fn get(&mut self, page_no: u64) -> Option<Arc<[u8]>> {
+        let &idx = self.map.get(&page_no)?;
+        self.frames[idx].ref_bit = true;
+        Some(self.frames[idx].data.clone())
+    }
+
+    /// Insert a page, evicting with second-chance if at capacity.
+    /// Returns true if an eviction happened.
+    fn insert(&mut self, page_no: u64, data: Arc<[u8]>) -> bool {
+        if let Some(&idx) = self.map.get(&page_no) {
+            // raced: someone else inserted; refresh data (identical bytes)
+            self.frames[idx].ref_bit = true;
+            return false;
+        }
+        if self.frames.len() < self.cap {
+            self.map.insert(page_no, self.frames.len());
+            self.frames.push(Frame { page_no, data, ref_bit: true });
+            return false;
+        }
+        // clock sweep for a victim
+        loop {
+            let f = &mut self.frames[self.hand];
+            if f.ref_bit {
+                f.ref_bit = false;
+                self.hand = (self.hand + 1) % self.frames.len();
+            } else {
+                let victim = self.hand;
+                self.map.remove(&self.frames[victim].page_no);
+                self.map.insert(page_no, victim);
+                self.frames[victim] = Frame { page_no, data, ref_bit: true };
+                self.hand = (self.hand + 1) % self.frames.len();
+                return true;
+            }
+        }
+    }
+}
+
+/// Sharded clock page cache of `capacity_pages` total frames.
+pub struct PageCache {
+    shards: Vec<Mutex<Shard>>,
+    capacity_pages: usize,
+    resident: AtomicU64,
+    stats: Arc<IoStats>,
+}
+
+impl PageCache {
+    /// Build a cache holding at most `capacity_bytes` (rounded down to
+    /// whole pages, min 1 page per shard).
+    pub fn new(capacity_bytes: usize, stats: Arc<IoStats>) -> Self {
+        let capacity_pages = (capacity_bytes / PAGE_SIZE).max(SHARDS);
+        let per_shard = capacity_pages.div_ceil(SHARDS);
+        let shards = (0..SHARDS)
+            .map(|_| {
+                Mutex::new(Shard {
+                    map: HashMap::with_capacity(per_shard * 2),
+                    frames: Vec::with_capacity(per_shard),
+                    hand: 0,
+                    cap: per_shard,
+                })
+            })
+            .collect();
+        PageCache { shards, capacity_pages, resident: AtomicU64::new(0), stats }
+    }
+
+    #[inline]
+    fn shard_of(&self, page_no: u64) -> &Mutex<Shard> {
+        // multiplicative hash so consecutive pages land in different shards
+        let h = (page_no.wrapping_mul(0x9E3779B97F4A7C15) >> 58) as usize;
+        &self.shards[h % SHARDS]
+    }
+
+    /// Look up a page; counts hit/miss in stats.
+    pub fn get(&self, page_no: u64) -> Option<Arc<[u8]>> {
+        let got = self.shard_of(page_no).lock().unwrap().get(page_no);
+        if got.is_some() {
+            self.stats.add_cache_hit(1);
+        } else {
+            self.stats.add_cache_miss(1);
+        }
+        got
+    }
+
+    /// Look up without touching hit/miss counters (used by prefetch).
+    pub fn peek(&self, page_no: u64) -> Option<Arc<[u8]>> {
+        self.shard_of(page_no).lock().unwrap().get(page_no)
+    }
+
+    /// Insert a page read from disk.
+    pub fn insert(&self, page_no: u64, data: Arc<[u8]>) {
+        debug_assert_eq!(data.len(), PAGE_SIZE);
+        let evicted = self.shard_of(page_no).lock().unwrap().insert(page_no, data);
+        if evicted {
+            self.stats.add_eviction(1);
+        } else {
+            self.resident.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Total frame capacity in pages.
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    /// Currently resident pages (approximate under concurrency).
+    pub fn resident_pages(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed).min(self.capacity_pages as u64)
+    }
+
+    /// Resident bytes (approximate).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_pages() * PAGE_SIZE as u64
+    }
+
+    /// Shared stats handle.
+    pub fn stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page(fill: u8) -> Arc<[u8]> {
+        Arc::from(vec![fill; PAGE_SIZE].into_boxed_slice())
+    }
+
+    fn cache(pages: usize) -> PageCache {
+        PageCache::new(pages * PAGE_SIZE, Arc::new(IoStats::new()))
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let c = cache(128);
+        assert!(c.get(7).is_none());
+        c.insert(7, page(7));
+        let p = c.get(7).expect("hit");
+        assert_eq!(p[0], 7);
+        let s = c.stats().snapshot();
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+    }
+
+    #[test]
+    fn eviction_under_pressure() {
+        let c = cache(SHARDS); // 1 frame per shard
+        for i in 0..(SHARDS as u64 * 4) {
+            c.insert(i, page(i as u8));
+        }
+        let s = c.stats().snapshot();
+        assert!(s.evictions > 0, "expected evictions, got {s:?}");
+        // capacity respected
+        assert!(c.resident_pages() <= c.capacity_pages() as u64);
+    }
+
+    #[test]
+    fn second_chance_prefers_referenced() {
+        // single-shard-sized behaviour is hard to isolate through sharding;
+        // exercise the Shard directly.
+        let mut sh = Shard { map: HashMap::new(), frames: vec![], hand: 0, cap: 2 };
+        sh.insert(1, page(1));
+        sh.insert(2, page(2));
+        // touch page 1 so its ref bit survives the sweep
+        assert!(sh.get(1).is_some());
+        // force ref bits: page 2 untouched after insert sweep rounds
+        sh.frames.iter_mut().for_each(|f| {
+            if f.page_no == 2 {
+                f.ref_bit = false;
+            }
+        });
+        sh.insert(3, page(3));
+        assert!(sh.get(1).is_some(), "referenced page must survive");
+        assert!(sh.get(2).is_none(), "unreferenced page evicted");
+        assert!(sh.get(3).is_some());
+    }
+
+    #[test]
+    fn readers_survive_eviction() {
+        let c = cache(SHARDS);
+        c.insert(0, page(42));
+        let held = c.get(0).unwrap();
+        for i in 1..(SHARDS as u64 * 8) {
+            c.insert(i, page(i as u8));
+        }
+        // page 0 may be evicted, but our Arc is still valid
+        assert_eq!(held[100], 42);
+    }
+
+    #[test]
+    fn concurrent_mixed_workload() {
+        let c = Arc::new(cache(256));
+        let mut hs = vec![];
+        for t in 0..8u64 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut rng = crate::util::XorShift::new(t);
+                for _ in 0..5_000 {
+                    let p = rng.next_below(512);
+                    if c.get(p).is_none() {
+                        c.insert(p, page(p as u8));
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        // no panic + capacity bound
+        assert!(c.resident_pages() <= c.capacity_pages() as u64);
+    }
+}

@@ -1,0 +1,201 @@
+//! I/O statistics — the measured quantities behind the paper's figures.
+//!
+//! Figure 2 plots *runtime, read I/O (bytes), I/O requests and thread
+//! context switches*; Figures 5/6 plot *data read from disk* and *cache
+//! hits per accessed page*. All of those counters live here and are
+//! sampled per algorithm run via [`IoStats::snapshot`] deltas.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global, concurrently-updated I/O counters.
+#[derive(Debug, Default)]
+pub struct IoStats {
+    /// Logical read requests issued by callers (one per edge-list fetch).
+    pub read_requests: AtomicU64,
+    /// Pages served from the page cache.
+    pub cache_hits: AtomicU64,
+    /// Pages that missed and went to disk.
+    pub cache_misses: AtomicU64,
+    /// Physical `pread` calls after merging.
+    pub physical_reads: AtomicU64,
+    /// Bytes physically read from the underlying file.
+    pub bytes_read: AtomicU64,
+    /// Requests eliminated by merging (adjacent pages coalesced).
+    pub merged_requests: AtomicU64,
+    /// Logical bytes requested by callers (what the algorithm demanded,
+    /// independent of cache hits) — the Fig. 2 "read I/O" axis.
+    pub logical_bytes: AtomicU64,
+    /// Times a caller thread blocked waiting (I/O completion, messages,
+    /// barriers) — our proxy for the paper's context-switch counts.
+    pub thread_waits: AtomicU64,
+    /// Pages evicted from the cache.
+    pub evictions: AtomicU64,
+}
+
+impl IoStats {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add_read_request(&self, n: u64) {
+        self.read_requests.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_cache_hit(&self, n: u64) {
+        self.cache_hits.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_cache_miss(&self, n: u64) {
+        self.cache_misses.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_physical_read(&self, n: u64) {
+        self.physical_reads.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_bytes_read(&self, n: u64) {
+        self.bytes_read.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_merged(&self, n: u64) {
+        self.merged_requests.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_logical_bytes(&self, n: u64) {
+        self.logical_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_thread_wait(&self, n: u64) {
+        self.thread_waits.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_eviction(&self, n: u64) {
+        self.evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of all counters.
+    pub fn snapshot(&self) -> IoStatsSnapshot {
+        IoStatsSnapshot {
+            read_requests: self.read_requests.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            physical_reads: self.physical_reads.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            merged_requests: self.merged_requests.load(Ordering::Relaxed),
+            logical_bytes: self.logical_bytes.load(Ordering::Relaxed),
+            thread_waits: self.thread_waits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset all counters to zero.
+    pub fn reset(&self) {
+        self.read_requests.store(0, Ordering::Relaxed);
+        self.cache_hits.store(0, Ordering::Relaxed);
+        self.cache_misses.store(0, Ordering::Relaxed);
+        self.physical_reads.store(0, Ordering::Relaxed);
+        self.bytes_read.store(0, Ordering::Relaxed);
+        self.merged_requests.store(0, Ordering::Relaxed);
+        self.logical_bytes.store(0, Ordering::Relaxed);
+        self.thread_waits.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Immutable copy of [`IoStats`] at a point in time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoStatsSnapshot {
+    pub read_requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub physical_reads: u64,
+    pub bytes_read: u64,
+    pub merged_requests: u64,
+    pub logical_bytes: u64,
+    pub thread_waits: u64,
+    pub evictions: u64,
+}
+
+impl IoStatsSnapshot {
+    /// Component-wise `self - earlier` (counters are monotonic).
+    pub fn delta(&self, earlier: &IoStatsSnapshot) -> IoStatsSnapshot {
+        IoStatsSnapshot {
+            read_requests: self.read_requests - earlier.read_requests,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+            physical_reads: self.physical_reads - earlier.physical_reads,
+            bytes_read: self.bytes_read - earlier.bytes_read,
+            merged_requests: self.merged_requests - earlier.merged_requests,
+            logical_bytes: self.logical_bytes - earlier.logical_bytes,
+            thread_waits: self.thread_waits - earlier.thread_waits,
+            evictions: self.evictions - earlier.evictions,
+        }
+    }
+
+    /// Cache hit ratio over accessed pages (0 when nothing accessed).
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Terse single-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "reqs={} hits={} misses={} hit%={:.1} preads={} bytes={} merged={} waits={}",
+            self.read_requests,
+            self.cache_hits,
+            self.cache_misses,
+            100.0 * self.hit_ratio(),
+            self.physical_reads,
+            crate::util::fmt_bytes(self.bytes_read),
+            self.merged_requests,
+            self.thread_waits,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_delta() {
+        let s = IoStats::new();
+        s.add_read_request(5);
+        s.add_bytes_read(100);
+        let a = s.snapshot();
+        s.add_read_request(3);
+        s.add_bytes_read(50);
+        s.add_cache_hit(7);
+        let b = s.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.read_requests, 3);
+        assert_eq!(d.bytes_read, 50);
+        assert_eq!(d.cache_hits, 7);
+    }
+
+    #[test]
+    fn hit_ratio_edges() {
+        let z = IoStatsSnapshot::default();
+        assert_eq!(z.hit_ratio(), 0.0);
+        let s = IoStats::new();
+        s.add_cache_hit(3);
+        s.add_cache_miss(1);
+        assert!((s.snapshot().hit_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let s = IoStats::new();
+        s.add_eviction(2);
+        s.add_thread_wait(9);
+        s.reset();
+        assert_eq!(s.snapshot(), IoStatsSnapshot::default());
+    }
+}

@@ -1,0 +1,84 @@
+//! Atomic f64 (bit-cast over `AtomicU64`) — tear-free shared rank /
+//! residual arrays for the PageRank family.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An f64 with atomic load/store/add.
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    /// New with initial value.
+    pub fn new(v: f64) -> Self {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+
+    /// Atomic read.
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Atomic write.
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed)
+    }
+
+    /// Atomic `+= v`; returns the new value.
+    #[inline]
+    pub fn fetch_add(&self, v: f64) -> f64 {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return f64::from_bits(new),
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Atomic swap; returns the previous value.
+    #[inline]
+    pub fn swap(&self, v: f64) -> f64 {
+        f64::from_bits(self.0.swap(v.to_bits(), Ordering::Relaxed))
+    }
+}
+
+/// Build a vector of atomics initialized to `init`.
+pub fn atomic_f64_vec(n: usize, init: f64) -> Vec<AtomicF64> {
+    (0..n).map(|_| AtomicF64::new(init)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn load_store_swap() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.load(), 1.5);
+        a.store(2.5);
+        assert_eq!(a.swap(0.0), 2.5);
+        assert_eq!(a.load(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_adds_sum() {
+        let a = Arc::new(AtomicF64::new(0.0));
+        let mut hs = vec![];
+        for _ in 0..8 {
+            let a = a.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    a.fetch_add(0.5);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(), 4000.0);
+    }
+}

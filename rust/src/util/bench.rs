@@ -1,0 +1,108 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Runs a closure with warmup, takes `k` timed samples, reports
+//! min/median/mean/max. Benches under `rust/benches/` use this through
+//! `harness = false` main functions and print paper-figure-style rows.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Label for reporting.
+    pub name: String,
+    /// All timed samples, sorted ascending.
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    /// Fastest sample.
+    pub fn min(&self) -> Duration {
+        self.samples[0]
+    }
+
+    /// Slowest sample.
+    pub fn max(&self) -> Duration {
+        *self.samples.last().unwrap()
+    }
+
+    /// Median sample.
+    pub fn median(&self) -> Duration {
+        self.samples[self.samples.len() / 2]
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    /// `other.median() / self.median()` — how many times faster self is.
+    pub fn speedup_over(&self, other: &BenchResult) -> f64 {
+        other.median().as_secs_f64() / self.median().as_secs_f64()
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  min {:>12}  max {:>12}  (n={})",
+            self.name,
+            super::fmt_dur(self.median()),
+            super::fmt_dur(self.mean()),
+            super::fmt_dur(self.min()),
+            super::fmt_dur(self.max()),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `samples` times timed.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed());
+    }
+    out.sort_unstable();
+    BenchResult { name: name.to_string(), samples: out }
+}
+
+/// Print a section header for a figure harness.
+pub fn figure_header(fig: &str, caption: &str) {
+    println!("\n=== {fig} — {caption} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let mut n = 0u64;
+        let r = bench("t", 1, 9, || {
+            n += 1;
+            std::hint::black_box(n);
+        });
+        assert_eq!(r.samples.len(), 9);
+        assert!(r.min() <= r.median() && r.median() <= r.max());
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let fast = BenchResult {
+            name: "fast".into(),
+            samples: vec![Duration::from_millis(10); 3],
+        };
+        let slow = BenchResult {
+            name: "slow".into(),
+            samples: vec![Duration::from_millis(30); 3],
+        };
+        let s = fast.speedup_over(&slow);
+        assert!((s - 3.0).abs() < 1e-9);
+    }
+}

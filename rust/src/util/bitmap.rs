@@ -1,0 +1,190 @@
+//! Atomic bitmap used for vertex activation scheduling.
+//!
+//! Workers set activation bits concurrently (release ordering is not
+//! required — bits are only read after a barrier), and the engine scans
+//! set bits word-at-a-time when building the next frontier.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed-size concurrent bitmap over `len` bits.
+pub struct AtomicBitmap {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl AtomicBitmap {
+    /// All-zero bitmap covering `len` bits.
+    pub fn new(len: usize) -> Self {
+        let nwords = len.div_ceil(64);
+        let words = (0..nwords).map(|_| AtomicU64::new(0)).collect();
+        AtomicBitmap { words, len }
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no bits can be stored.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`; returns true if it was previously clear.
+    #[inline]
+    pub fn set(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let prev = self.words[i / 64].fetch_or(1 << (i % 64), Ordering::Relaxed);
+        prev & (1 << (i % 64)) == 0
+    }
+
+    /// Clear bit `i`; returns true if it was previously set.
+    #[inline]
+    pub fn clear(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let prev = self.words[i / 64].fetch_and(!(1 << (i % 64)), Ordering::Relaxed);
+        prev & (1 << (i % 64)) != 0
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64].load(Ordering::Relaxed) & (1 << (i % 64)) != 0
+    }
+
+    /// Clear every bit.
+    pub fn clear_all(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Population count.
+    pub fn count(&self) -> usize {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed).count_ones() as usize)
+            .sum()
+    }
+
+    /// True if any bit is set.
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|w| w.load(Ordering::Relaxed) != 0)
+    }
+
+    /// Iterate set bits within `[start, end)` (single-threaded scan).
+    pub fn iter_set_range(&self, start: usize, end: usize) -> SetBits<'_> {
+        let end = end.min(self.len);
+        SetBits { bm: self, pos: start, end }
+    }
+
+    /// Iterate all set bits.
+    pub fn iter_set(&self) -> SetBits<'_> {
+        self.iter_set_range(0, self.len)
+    }
+}
+
+/// Iterator over set bit positions.
+pub struct SetBits<'a> {
+    bm: &'a AtomicBitmap,
+    pos: usize,
+    end: usize,
+}
+
+impl Iterator for SetBits<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.pos < self.end {
+            let word_idx = self.pos / 64;
+            let word = self.bm.words[word_idx].load(Ordering::Relaxed);
+            // mask off bits below pos within this word
+            let masked = word & (!0u64 << (self.pos % 64));
+            if masked != 0 {
+                let bit = masked.trailing_zeros() as usize;
+                let idx = word_idx * 64 + bit;
+                if idx >= self.end {
+                    return None;
+                }
+                self.pos = idx + 1;
+                return Some(idx);
+            }
+            self.pos = (word_idx + 1) * 64;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn set_get_clear() {
+        let bm = AtomicBitmap::new(130);
+        assert!(bm.set(0));
+        assert!(!bm.set(0), "second set reports already-set");
+        assert!(bm.set(64));
+        assert!(bm.set(129));
+        assert!(bm.get(0) && bm.get(64) && bm.get(129));
+        assert!(!bm.get(1));
+        assert_eq!(bm.count(), 3);
+        assert!(bm.clear(64));
+        assert!(!bm.clear(64));
+        assert_eq!(bm.count(), 2);
+    }
+
+    #[test]
+    fn iter_set_matches_manual() {
+        let bm = AtomicBitmap::new(300);
+        let want = [0usize, 1, 63, 64, 65, 127, 128, 200, 299];
+        for &i in &want {
+            bm.set(i);
+        }
+        let got: Vec<usize> = bm.iter_set().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn iter_range_boundaries() {
+        let bm = AtomicBitmap::new(256);
+        for i in 0..256 {
+            bm.set(i);
+        }
+        let got: Vec<usize> = bm.iter_set_range(60, 70).collect();
+        assert_eq!(got, (60..70).collect::<Vec<_>>());
+        assert_eq!(bm.iter_set_range(10, 10).count(), 0);
+    }
+
+    #[test]
+    fn concurrent_sets_all_land() {
+        let bm = Arc::new(AtomicBitmap::new(100_000));
+        let mut handles = vec![];
+        for t in 0..8 {
+            let bm = bm.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in (t..100_000).step_by(8) {
+                    bm.set(i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(bm.count(), 100_000);
+    }
+
+    #[test]
+    fn clear_all_resets() {
+        let bm = AtomicBitmap::new(1000);
+        for i in (0..1000).step_by(7) {
+            bm.set(i);
+        }
+        assert!(bm.any());
+        bm.clear_all();
+        assert!(!bm.any());
+        assert_eq!(bm.count(), 0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Small self-contained utilities shared across the library.
+//!
+//! Several well-known crates (rand, criterion, proptest) are not available
+//! in this offline build, so this module carries minimal, well-tested
+//! replacements: a xorshift PRNG, an atomic bitmap, a partition-disjoint
+//! shared vector, a median-of-k bench harness and a tiny property-test
+//! driver.
+
+pub mod atomic_f64;
+pub mod bench;
+pub mod bitmap;
+pub mod hist;
+pub mod prng;
+pub mod prop;
+pub mod shared_vec;
+
+pub use atomic_f64::{atomic_f64_vec, AtomicF64};
+pub use bench::{bench, BenchResult};
+pub use bitmap::AtomicBitmap;
+pub use hist::Histogram;
+pub use prng::XorShift;
+pub use shared_vec::SharedVec;
+
+/// Format a byte count human-readably (KiB/MiB/GiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.2} GiB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.2} MiB", b / (K * K))
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_dur(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        use std::time::Duration;
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_dur(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_dur(Duration::from_micros(7)), "7.0 us");
+    }
+}

@@ -1,0 +1,79 @@
+//! Tiny property-test driver (proptest is unavailable offline).
+//!
+//! [`for_random_cases`] runs a property over `n` seeded cases and, on
+//! failure, retries the failing seed with progressively smaller "size"
+//! parameters to report the smallest reproduction it can find. Graph
+//! invariant tests throughout the library are built on this.
+
+use super::prng::XorShift;
+
+/// Size hint handed to generators; shrunk on failure.
+#[derive(Debug, Clone, Copy)]
+pub struct Size(pub usize);
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop(rng, size)` over `cases` seeds at `size0`.
+///
+/// On failure, halves the size down to 1 looking for a smaller failing
+/// case, then panics with the seed + size of the smallest failure so the
+/// case can be replayed deterministically.
+pub fn for_random_cases<F>(cases: usize, size0: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut XorShift, Size) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = XorShift::new(seed);
+        if let Err(msg) = prop(&mut rng, Size(size0)) {
+            // shrink: retry same seed with smaller sizes
+            let mut smallest = (size0, msg.clone());
+            let mut size = size0 / 2;
+            while size >= 1 {
+                let mut rng = XorShift::new(seed);
+                if let Err(m) = prop(&mut rng, Size(size)) {
+                    smallest = (size, m);
+                }
+                size /= 2;
+            }
+            panic!(
+                "property failed (seed={seed:#x}, smallest failing size={}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        for_random_cases(20, 64, 1, |rng, size| {
+            let v = rng.next_below(size.0 as u64);
+            prop_assert!(v < size.0 as u64, "out of range: {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        for_random_cases(5, 128, 2, |_rng, size| {
+            prop_assert!(size.0 < 4, "size {} too big", size.0);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Partition-disjoint shared vector.
+//!
+//! Vertex programs own O(n) state arrays that workers mutate concurrently
+//! — but only ever *their own vertex's* slot during `run_on_vertex` /
+//! `run_on_message` (the engine guarantees each vertex is processed by
+//! exactly one worker at a time). `SharedVec` encodes that contract: reads
+//! from any thread, writes through [`SharedVec::set`]/[`SharedVec::get_mut`]
+//! which the caller promises are per-slot exclusive.
+//!
+//! This mirrors FlashGraph's design, where vertex state lives in flat
+//! arrays indexed by vertex id and the engine's partitioning provides
+//! exclusion.
+
+use std::cell::UnsafeCell;
+
+/// A `Vec<T>` with interior mutability under a partition-disjoint contract.
+pub struct SharedVec<T> {
+    data: Vec<UnsafeCell<T>>,
+}
+
+// Safety: access discipline is delegated to the engine's partitioning
+// contract (documented above).
+unsafe impl<T: Send> Send for SharedVec<T> {}
+unsafe impl<T: Send> Sync for SharedVec<T> {}
+
+impl<T: Clone> SharedVec<T> {
+    /// Build with `n` copies of `init`.
+    pub fn new(n: usize, init: T) -> Self {
+        SharedVec {
+            data: (0..n).map(|_| UnsafeCell::new(init.clone())).collect(),
+        }
+    }
+}
+
+impl<T> SharedVec<T> {
+    /// Build from an existing vector.
+    pub fn from_vec(v: Vec<T>) -> Self {
+        SharedVec {
+            data: v.into_iter().map(UnsafeCell::new).collect(),
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Read slot `i`.
+    ///
+    /// Races with a concurrent `set(i, ..)` are the caller's
+    /// responsibility; algorithms in this library only read slots that are
+    /// stable in the current superstep (double-buffering or own-slot).
+    #[inline]
+    pub fn get(&self, i: usize) -> &T {
+        unsafe { &*self.data[i].get() }
+    }
+
+    /// Write slot `i`.
+    ///
+    /// # Safety contract (checked by the engine's partitioning)
+    /// No concurrent access to slot `i` may happen during this call.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn get_mut(&self, i: usize) -> &mut T {
+        unsafe { &mut *self.data[i].get() }
+    }
+
+    /// Convenience: overwrite slot `i` (same contract as `get_mut`).
+    #[inline]
+    pub fn set(&self, i: usize, v: T) {
+        *self.get_mut(i) = v;
+    }
+
+    /// Iterate immutable snapshots (single-threaded phases only).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.data.iter().map(|c| unsafe { &*c.get() })
+    }
+
+    /// Consume into a plain vector (single-threaded).
+    pub fn into_vec(self) -> Vec<T> {
+        self.data.into_iter().map(|c| c.into_inner()).collect()
+    }
+}
+
+impl<T: Clone> SharedVec<T> {
+    /// Clone contents out (single-threaded phases only).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_ops() {
+        let v = SharedVec::new(4, 0i64);
+        v.set(2, 42);
+        *v.get_mut(3) += 7;
+        assert_eq!(*v.get(2), 42);
+        assert_eq!(*v.get(3), 7);
+        assert_eq!(v.to_vec(), vec![0, 0, 42, 7]);
+        assert_eq!(v.len(), 4);
+    }
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let v = Arc::new(SharedVec::new(80_000, 0u64));
+        let mut hs = vec![];
+        for t in 0..8u64 {
+            let v = v.clone();
+            hs.push(std::thread::spawn(move || {
+                // slot-disjoint striping
+                for i in (t as usize..80_000).step_by(8) {
+                    v.set(i, t + 1);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        for i in 0..80_000 {
+            assert_eq!(*v.get(i), (i % 8) as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn from_into_vec_roundtrip() {
+        let v = SharedVec::from_vec(vec![1, 2, 3]);
+        assert_eq!(v.into_vec(), vec![1, 2, 3]);
+    }
+}

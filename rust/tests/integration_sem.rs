@@ -1,0 +1,258 @@
+//! Integration tests: the full stack (on-disk image → SAFS page cache →
+//! BSP engine → algorithms) against in-memory oracles, under cache
+//! pressure, latency injection and failure conditions.
+
+use std::path::PathBuf;
+
+use graphyti::algs::bc::{betweenness, BcVariant};
+use graphyti::algs::bfs::bfs;
+use graphyti::algs::coreness::{coreness, CorenessOptions};
+use graphyti::algs::diameter::{estimate_diameter, DiameterVariant};
+use graphyti::algs::louvain::{louvain, LouvainMode};
+use graphyti::algs::oracle;
+use graphyti::algs::pagerank::{pagerank_pull, pagerank_push};
+use graphyti::algs::sssp::sssp;
+use graphyti::algs::triangles::{triangles, TriangleOptions};
+use graphyti::algs::wcc::wcc;
+use graphyti::coordinator::{open_graph, GraphMode, RunConfig};
+use graphyti::engine::EngineConfig;
+use graphyti::graph::builder::GraphBuilder;
+use graphyti::graph::csr::Csr;
+use graphyti::graph::gen;
+use graphyti::graph::source::{EdgeSource, SemGraph};
+use graphyti::VertexId;
+
+fn build_image(
+    n: usize,
+    edges: &[(VertexId, VertexId)],
+    directed: bool,
+    tag: &str,
+) -> PathBuf {
+    let base = std::env::temp_dir().join(format!(
+        "graphyti-itest-{}-{tag}",
+        std::process::id()
+    ));
+    let mut b = GraphBuilder::new(n, directed);
+    b.add_edges(edges);
+    b.build_files(&base).unwrap();
+    base
+}
+
+fn tiny_cache_cfg() -> RunConfig {
+    // 64 pages = 256 KiB: guarantees eviction pressure on every workload
+    RunConfig { cache_mb: 1, io_threads: 3, ..Default::default() }
+}
+
+fn cleanup(base: &PathBuf) {
+    let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+    let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+}
+
+#[test]
+fn full_stack_pagerank_under_cache_pressure() {
+    let n = 2048;
+    let edges = gen::rmat(11, 30_000, 5);
+    let base = build_image(n, &edges, true, "pr");
+    let csr = Csr::from_edges(n, &edges, true);
+    let cfg = tiny_cache_cfg();
+    // open with a cache far smaller than the adjacency data
+    let g = SemGraph::open(&base, 64 * 4096, cfg.io()).unwrap();
+    let r = pagerank_push(&g, 0.85, 1e-12, &cfg.engine());
+    let want = oracle::pagerank(&csr, 0.85, 200);
+    let l1: f64 = r.rank.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 1e-6, "L1 {l1}");
+    let s = g.io_stats().snapshot();
+    assert!(s.evictions > 0, "test must run under cache pressure: {s:?}");
+    assert!(s.bytes_read > 0);
+    cleanup(&base);
+}
+
+#[test]
+fn full_stack_all_algorithms_match_oracles() {
+    let n = 1024;
+    let edges = gen::rmat(10, 12_000, 77);
+    let base_d = build_image(n, &edges, true, "all-d");
+    let base_u = build_image(n, &edges, false, "all-u");
+    let csr_d = Csr::from_edges(n, &edges, true);
+    let csr_u = Csr::from_edges(n, &edges, false);
+    let cfg = tiny_cache_cfg();
+    let ecfg = cfg.engine();
+
+    let gd = SemGraph::open(&base_d, 64 * 4096, cfg.io()).unwrap();
+    let gu = SemGraph::open(&base_u, 64 * 4096, cfg.io()).unwrap();
+
+    // BFS
+    let (lv, _) = bfs(&gd, 0, &ecfg);
+    assert_eq!(lv, oracle::bfs_levels(&csr_d, 0));
+
+    // SSSP
+    let (dist, _) = sssp(&gd, 0, &ecfg);
+    assert_eq!(dist, oracle::sssp(&csr_d, 0));
+
+    // WCC
+    let (labels, _) = wcc(&gd, &ecfg);
+    assert_eq!(labels, oracle::wcc(&csr_d));
+
+    // Coreness (all variants)
+    let want_core = oracle::coreness(&csr_u);
+    for opts in [
+        CorenessOptions::unoptimized(),
+        CorenessOptions::pruned(),
+        CorenessOptions::graphyti(),
+    ] {
+        assert_eq!(coreness(&gu, opts, &ecfg).core, want_core);
+    }
+
+    // Triangles (naive + optimized)
+    let want_tri = oracle::triangle_count(&csr_u);
+    assert_eq!(triangles(&gu, TriangleOptions::naive(), &ecfg).triangles, want_tri);
+    assert_eq!(triangles(&gu, TriangleOptions::graphyti(), &ecfg).triangles, want_tri);
+
+    // BC (all variants, few sources)
+    let sources: Vec<VertexId> = vec![0, 1, 2, 5, 17];
+    let want_bc = oracle::betweenness(&csr_d, &sources);
+    for variant in [BcVariant::UniSource, BcVariant::MultiSourceSync, BcVariant::MultiSourceAsync]
+    {
+        let got = betweenness(&gd, &sources, variant, &ecfg);
+        for (i, (a, b)) in got.bc.iter().zip(&want_bc).enumerate() {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{variant:?} bc[{i}]: {a} vs {b}");
+        }
+    }
+
+    // Diameter agreement between variants
+    let du = estimate_diameter(&gd, 8, DiameterVariant::UniSource, &ecfg);
+    let dm = estimate_diameter(&gd, 8, DiameterVariant::MultiSource, &ecfg);
+    assert_eq!(du.diameter, dm.diameter);
+
+    // Louvain: internal Q must match the oracle formula
+    let r = louvain(&gu, LouvainMode::Graphyti, 8, &ecfg);
+    let q = oracle::modularity(&csr_u, &r.community);
+    assert!((r.modularity - q).abs() < 1e-6, "{} vs {q}", r.modularity);
+
+    cleanup(&base_d);
+    cleanup(&base_u);
+}
+
+#[test]
+fn latency_injection_slows_sem_but_not_results() {
+    let n = 1024;
+    let edges = gen::rmat(10, 12_000, 9);
+    let base = build_image(n, &edges, true, "delay");
+    let mut cfg = tiny_cache_cfg();
+    // single-page runs on one I/O thread so every miss pays the delay
+    cfg.max_run_pages = 1;
+    cfg.io_threads = 1;
+    let g_fast = SemGraph::open(&base, 64 * 4096, cfg.io()).unwrap();
+    let fast = pagerank_push(&g_fast, 0.85, 1e-10, &cfg.engine());
+    cfg.io_delay_us = 2000;
+    let g_slow = SemGraph::open(&base, 64 * 4096, cfg.io()).unwrap();
+    let slow = pagerank_push(&g_slow, 0.85, 1e-10, &cfg.engine());
+    let l1: f64 = fast.rank.iter().zip(&slow.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 1e-9, "latency must not change results");
+    // with one I/O thread the injected sleeps serialize, so wall time is
+    // bounded below by preads x delay — deterministic, unlike comparing
+    // against the fast run on a noisy shared machine
+    let floor = std::time::Duration::from_micros(slow.report.io.physical_reads * 2000);
+    assert!(slow.report.io.physical_reads > 0, "slow run must hit disk");
+    assert!(
+        slow.report.wall >= floor,
+        "injected latency must show up in wall time: {:?} < floor {:?}",
+        slow.report.wall,
+        floor
+    );
+    cleanup(&base);
+}
+
+#[test]
+fn corrupted_index_is_rejected() {
+    let n = 64;
+    let edges = gen::cycle(n);
+    let base = build_image(n, &edges, true, "corrupt");
+    // truncate the index
+    let idx = base.with_extension("gy-idx");
+    let bytes = std::fs::read(&idx).unwrap();
+    std::fs::write(&idx, &bytes[..bytes.len() / 2]).unwrap();
+    let cfg = tiny_cache_cfg();
+    assert!(SemGraph::open(&base, 64 * 4096, cfg.io()).is_err());
+    // garbage magic
+    let mut bad = bytes.clone();
+    bad[0] = b'Z';
+    std::fs::write(&idx, &bad).unwrap();
+    assert!(SemGraph::open(&base, 64 * 4096, cfg.io()).is_err());
+    cleanup(&base);
+}
+
+#[test]
+fn truncated_adjacency_fails_loudly_not_wrongly() {
+    let n = 256;
+    let edges = gen::rmat(8, 3000, 3);
+    let base = build_image(n, &edges, true, "truncadj");
+    // cut the adjacency file in half: fetches past EOF must error (the
+    // index promises more data than the file holds)
+    let adj = base.with_extension("gy-adj");
+    let bytes = std::fs::read(&adj).unwrap();
+    std::fs::write(&adj, &bytes[..bytes.len() / 2]).unwrap();
+    let cfg = tiny_cache_cfg();
+    let g = SemGraph::open(&base, 64 * 4096, cfg.io()).unwrap();
+    // some vertex's record now lies past EOF
+    let mut saw_error = false;
+    for v in (0..n as VertexId).rev() {
+        if g.fetch(v, graphyti::graph::format::EdgeRequest::Both).is_err() {
+            saw_error = true;
+            break;
+        }
+    }
+    assert!(saw_error, "reads past the truncated file must error");
+    cleanup(&base);
+}
+
+#[test]
+fn coordinator_modes_agree_under_pressure() {
+    let n = 2048;
+    let edges = gen::rmat(11, 24_000, 13);
+    let base = build_image(n, &edges, false, "modes");
+    let cfg = tiny_cache_cfg();
+    let sem = open_graph(&base, GraphMode::Sem, &cfg).unwrap();
+    let mem = open_graph(&base, GraphMode::Mem, &cfg).unwrap();
+    let ecfg = EngineConfig { workers: 4, ..Default::default() };
+    let a = coreness(sem.as_ref(), CorenessOptions::graphyti(), &ecfg);
+    let b = coreness(mem.as_ref(), CorenessOptions::graphyti(), &ecfg);
+    assert_eq!(a.core, b.core);
+    // SEM must have read from disk, Mem must not
+    assert!(sem.io_stats().snapshot().bytes_read > 0);
+    assert_eq!(mem.io_stats().snapshot().bytes_read, 0);
+    cleanup(&base);
+}
+
+#[test]
+fn determinism_across_worker_counts_sem() {
+    let n = 512;
+    let edges = gen::rmat(9, 6000, 21);
+    let base = build_image(n, &edges, true, "det");
+    let csr = Csr::from_edges(n, &edges, true);
+    let want = oracle::betweenness(&csr, &[0, 7, 99]);
+    for workers in [1, 2, 8] {
+        let cfg = tiny_cache_cfg();
+        let g = SemGraph::open(&base, 64 * 4096, cfg.io()).unwrap();
+        let ecfg = EngineConfig { workers, ..Default::default() };
+        let got = betweenness(&g, &[0, 7, 99], BcVariant::MultiSourceAsync, &ecfg);
+        for (i, (a, b)) in got.bc.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "workers={workers} bc[{i}]");
+        }
+    }
+    cleanup(&base);
+}
+
+#[test]
+fn pagerank_push_pull_converge_to_same_fixpoint_sem() {
+    let n = 1024;
+    let edges = gen::rmat(10, 15_000, 31);
+    let base = build_image(n, &edges, true, "fixpoint");
+    let cfg = tiny_cache_cfg();
+    let g = SemGraph::open(&base, 128 * 4096, cfg.io()).unwrap();
+    let push = pagerank_push(&g, 0.85, 1e-13, &cfg.engine());
+    let pull = pagerank_pull(&g, 0.85, 1e-13, 1000, &cfg.engine());
+    let l1: f64 = push.rank.iter().zip(&pull.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 1e-7, "push/pull fixpoint divergence: {l1}");
+    cleanup(&base);
+}

@@ -1,0 +1,255 @@
+//! Property-based tests over random graphs (hand-rolled driver —
+//! proptest is unavailable offline; see `graphyti::util::prop`).
+//!
+//! Each property runs over many seeded random graphs and shrinks the
+//! failing size on violation. These pin down the *invariants* of the
+//! engine and the algorithms rather than specific outputs.
+
+use graphyti::algs::bc::{betweenness, BcVariant};
+use graphyti::algs::bfs::{bfs, ms_bfs};
+use graphyti::algs::coreness::{coreness, CorenessOptions};
+use graphyti::algs::oracle;
+use graphyti::algs::pagerank::pagerank_push;
+use graphyti::algs::sssp::sssp;
+use graphyti::algs::triangles::{triangles, IntersectStrategy, OrderMode, TriangleOptions};
+use graphyti::algs::wcc::wcc;
+use graphyti::engine::EngineConfig;
+use graphyti::graph::csr::Csr;
+use graphyti::graph::source::MemGraph;
+use graphyti::prop_assert;
+use graphyti::util::prop::{for_random_cases, Size};
+use graphyti::util::XorShift;
+use graphyti::VertexId;
+
+/// Random edge list over `size` vertices with ~4x edges.
+fn random_edges(rng: &mut XorShift, n: usize) -> Vec<(VertexId, VertexId)> {
+    let m = n * 4;
+    (0..m)
+        .map(|_| (rng.next_below(n as u64) as VertexId, rng.next_below(n as u64) as VertexId))
+        .collect()
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig { workers: 4, batch: 64, ..Default::default() }
+}
+
+#[test]
+fn prop_pagerank_mass_conserved_and_positive() {
+    for_random_cases(12, 256, 0xA1, |rng, Size(n)| {
+        let n = n.max(4);
+        let edges = random_edges(rng, n);
+        let g = MemGraph::from_edges(n, &edges, true);
+        let r = pagerank_push(&g, 0.85, 1e-12, &cfg());
+        let total: f64 = r.rank.iter().sum();
+        prop_assert!(r.rank.iter().all(|&x| x >= 0.0), "negative rank");
+        prop_assert!(total <= 1.0 + 1e-9, "mass {total} exceeds 1");
+        prop_assert!(total > 0.1, "mass {total} vanished");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bfs_levels_respect_edges() {
+    // triangle inequality on levels: an edge (u, v) implies
+    // level(v) <= level(u) + 1 when u is reachable
+    for_random_cases(12, 256, 0xB2, |rng, Size(n)| {
+        let n = n.max(4);
+        let edges = random_edges(rng, n);
+        let g = MemGraph::from_edges(n, &edges, true);
+        let (lv, _) = bfs(&g, 0, &cfg());
+        let csr = Csr::from_edges(n, &edges, true);
+        for u in 0..n as VertexId {
+            if lv[u as usize] < 0 {
+                continue;
+            }
+            for &v in csr.out(u) {
+                prop_assert!(
+                    lv[v as usize] >= 0 && lv[v as usize] <= lv[u as usize] + 1,
+                    "edge ({u},{v}) violates BFS levels {} -> {}",
+                    lv[u as usize],
+                    lv[v as usize]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ms_bfs_equals_repeated_uni_bfs() {
+    for_random_cases(10, 200, 0xC3, |rng, Size(n)| {
+        let n = n.max(8);
+        let edges = random_edges(rng, n);
+        let g = MemGraph::from_edges(n, &edges, true);
+        let k = 1 + rng.next_below(16) as usize;
+        let sources: Vec<VertexId> =
+            (0..k).map(|_| rng.next_below(n as u64) as VertexId).collect();
+        let mut distinct = sources.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let (ecc, _) = ms_bfs(&g, &distinct, &cfg());
+        let csr = Csr::from_edges(n, &edges, true);
+        for (lane, &s) in distinct.iter().enumerate() {
+            let want = oracle::eccentricity(&csr, s);
+            prop_assert!(ecc[lane] == want, "lane {lane} src {s}: {} != {want}", ecc[lane]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coreness_invariants() {
+    // every vertex's coreness <= its degree; the k-max core is non-empty;
+    // all three variants agree
+    for_random_cases(10, 200, 0xD4, |rng, Size(n)| {
+        let n = n.max(4);
+        let edges = random_edges(rng, n);
+        let g = MemGraph::from_edges(n, &edges, false);
+        let a = coreness(&g, CorenessOptions::unoptimized(), &cfg());
+        let b = coreness(&g, CorenessOptions::graphyti(), &cfg());
+        prop_assert!(a.core == b.core, "variants disagree");
+        let csr = Csr::from_edges(n, &edges, false);
+        for v in 0..n as VertexId {
+            prop_assert!(
+                a.core[v as usize] <= csr.out_deg(v),
+                "core[{v}]={} > deg={}",
+                a.core[v as usize],
+                csr.out_deg(v)
+            );
+        }
+        // maximality: in the subgraph of vertices with core >= kmax, every
+        // vertex has degree >= kmax
+        let kmax = *a.core.iter().max().unwrap();
+        for v in 0..n as VertexId {
+            if a.core[v as usize] == kmax {
+                let d = csr
+                    .out(v)
+                    .iter()
+                    .filter(|&&u| a.core[u as usize] >= kmax)
+                    .count() as u32;
+                prop_assert!(d >= kmax, "v{v} in kmax-core has only {d} core-neighbors");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_triangle_strategies_agree() {
+    for_random_cases(8, 128, 0xE5, |rng, Size(n)| {
+        let n = n.max(4);
+        let edges = random_edges(rng, n);
+        let csr = Csr::from_edges(n, &edges, false);
+        let want = oracle::triangle_count(&csr);
+        for strategy in [
+            IntersectStrategy::Scan,
+            IntersectStrategy::RestartBinary,
+            IntersectStrategy::Hash { threshold: 8 },
+        ] {
+            for order in [OrderMode::LowId, OrderMode::HighDegree] {
+                let g = MemGraph::from_edges(n, &edges, false);
+                let got = triangles(
+                    &g,
+                    TriangleOptions { strategy, order, prefetch: false, prefilter: true },
+                    &cfg(),
+                );
+                prop_assert!(
+                    got.triangles == want,
+                    "{strategy:?}/{order:?}: {} != {want}",
+                    got.triangles
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wcc_is_equivalence_over_edges() {
+    for_random_cases(12, 256, 0xF6, |rng, Size(n)| {
+        let n = n.max(4);
+        let edges = random_edges(rng, n);
+        let g = MemGraph::from_edges(n, &edges, true);
+        let (labels, _) = wcc(&g, &cfg());
+        // every edge endpoint pair shares a label; labels are canonical
+        // (the minimum vertex id of the component)
+        for &(u, v) in &edges {
+            if u != v {
+                prop_assert!(
+                    labels[u as usize] == labels[v as usize],
+                    "edge ({u},{v}) crosses components"
+                );
+            }
+        }
+        for v in 0..n as VertexId {
+            prop_assert!(labels[v as usize] <= v, "label above own id at {v}");
+            let l = labels[v as usize];
+            prop_assert!(labels[l as usize] == l, "label {l} not canonical");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sssp_triangle_inequality() {
+    for_random_cases(10, 200, 0x17, |rng, Size(n)| {
+        let n = n.max(4);
+        let edges = random_edges(rng, n);
+        let g = MemGraph::from_edges(n, &edges, true);
+        let (dist, _) = sssp(&g, 0, &cfg());
+        let csr = Csr::from_edges(n, &edges, true);
+        prop_assert!(dist[0] == 0, "source distance nonzero");
+        for u in 0..n as VertexId {
+            if dist[u as usize] == u64::MAX {
+                continue;
+            }
+            for &v in csr.out(u) {
+                let w = oracle::edge_weight(u, v);
+                prop_assert!(
+                    dist[v as usize] <= dist[u as usize] + w,
+                    "edge ({u},{v}) relaxable: {} > {} + {w}",
+                    dist[v as usize],
+                    dist[u as usize]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bc_variants_agree_and_nonnegative() {
+    for_random_cases(6, 128, 0x28, |rng, Size(n)| {
+        let n = n.max(8);
+        let edges = random_edges(rng, n);
+        let sources: Vec<VertexId> = vec![
+            rng.next_below(n as u64) as VertexId,
+            rng.next_below(n as u64) as VertexId,
+            rng.next_below(n as u64) as VertexId,
+        ];
+        let mut distinct = sources;
+        distinct.sort_unstable();
+        distinct.dedup();
+        let g = MemGraph::from_edges(n, &edges, true);
+        let a = betweenness(&g, &distinct, BcVariant::MultiSourceAsync, &cfg());
+        let b = betweenness(&g, &distinct, BcVariant::UniSource, &cfg());
+        for (i, (x, y)) in a.bc.iter().zip(&b.bc).enumerate() {
+            prop_assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "bc[{i}]: {x} vs {y}");
+            prop_assert!(*x >= -1e-12, "negative centrality at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_deterministic_across_workers() {
+    for_random_cases(8, 200, 0x39, |rng, Size(n)| {
+        let n = n.max(4);
+        let edges = random_edges(rng, n);
+        let g = MemGraph::from_edges(n, &edges, true);
+        let (lv1, _) = bfs(&g, 0, &EngineConfig { workers: 1, ..Default::default() });
+        let (lv8, _) = bfs(&g, 0, &EngineConfig { workers: 8, batch: 16, ..Default::default() });
+        prop_assert!(lv1 == lv8, "BFS differs across worker counts");
+        Ok(())
+    });
+}
