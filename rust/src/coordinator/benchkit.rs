@@ -13,7 +13,8 @@ use crate::coordinator::report::Table;
 use crate::engine::RunReport;
 use crate::graph::builder::GraphBuilder;
 use crate::graph::gen;
-use crate::graph::source::SemGraph;
+use crate::graph::source::{EdgeSource, SemGraph};
+use crate::safs::IoStatsSnapshot;
 use crate::util::{fmt_bytes, fmt_dur};
 
 /// Standard SSD-emulation latency for benches (µs per physical read).
@@ -61,6 +62,24 @@ pub fn open_sem(base: &PathBuf, cfg: &RunConfig) -> SemGraph {
     SemGraph::open(base, cfg.cache_bytes(), cfg.io()).expect("open bench graph")
 }
 
+/// Run `f` against `source` and return its output together with the
+/// snapshot *delta* of the source's own I/O counters over the run.
+///
+/// This is the only correct way to attribute I/O to a measured section:
+/// the counters are process-shared monotonic totals, so reading them
+/// raw conflates everything that ran before (warmup, other variants on
+/// the same handle) — and, in service mode, everything other jobs are
+/// doing concurrently. Pair with [`crate::service::JobGraph`] to get a
+/// per-job source whose counters only ever move for that job.
+pub fn measure_io<T>(
+    source: &dyn EdgeSource,
+    f: impl FnOnce() -> T,
+) -> (T, IoStatsSnapshot) {
+    let before = source.io_stats().snapshot();
+    let out = f();
+    (out, source.io_stats().snapshot().delta(&before))
+}
+
 /// Collector printing the uniform figure-row schema.
 pub struct FigTable {
     table: Table,
@@ -85,6 +104,7 @@ impl FigTable {
                 "read-reqs",
                 "logical",
                 "disk",
+                "hit%",
                 "p2p",
                 "mcast",
                 "deliver",
@@ -94,7 +114,11 @@ impl FigTable {
         }
     }
 
-    /// Append a run; the first row becomes the speedup baseline.
+    /// Append a run; the first row becomes the speedup baseline. All
+    /// I/O columns come from the run's own snapshot delta
+    /// (`RunReport.io`), never from the live global counters — so rows
+    /// stay correct when several runs (or service jobs) share one
+    /// substrate.
     pub fn add(&mut self, variant: &str, r: &RunReport) {
         let wall = r.wall.as_secs_f64();
         let base = *self.baseline_wall.get_or_insert(wall);
@@ -106,6 +130,7 @@ impl FigTable {
             r.io.read_requests.to_string(),
             fmt_bytes(r.io.logical_bytes),
             fmt_bytes(r.io.bytes_read),
+            format!("{:.1}", 100.0 * r.io.hit_ratio()),
             r.engine.p2p_msgs.to_string(),
             r.engine.multicast_msgs.to_string(),
             r.engine.deliveries.to_string(),
@@ -125,4 +150,23 @@ pub fn banner(fig: &str, caption: &str, workload: &str) {
     println!("{fig} — {caption}");
     println!("workload: {workload}");
     println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::format::EdgeRequest;
+    use crate::graph::source::MemGraph;
+
+    #[test]
+    fn measure_io_reports_only_the_measured_section() {
+        let g = MemGraph::from_edges(16, &gen::cycle(16), true);
+        // warmup traffic that must NOT appear in the measurement
+        g.fetch_batch(&[(0, EdgeRequest::Out)]).unwrap();
+        let (out, io) = measure_io(&g, || {
+            g.fetch_batch(&[(1, EdgeRequest::Out), (2, EdgeRequest::Out)]).unwrap()
+        });
+        assert_eq!(out.len(), 2);
+        assert_eq!(io.read_requests, 2, "delta must exclude warmup: {io:?}");
+    }
 }

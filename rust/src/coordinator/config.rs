@@ -5,6 +5,8 @@
 //! them uniform across the CLI, the examples and the bench harnesses.
 
 use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
@@ -33,6 +35,10 @@ pub struct RunConfig {
     pub threshold: f64,
     /// Deterministic seed for generators / source selection.
     pub seed: u64,
+    /// Cooperative cancellation token forwarded to the engine (checked
+    /// at round boundaries). Set by the service executor per job; not a
+    /// `key=value` knob.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl Default for RunConfig {
@@ -47,6 +53,7 @@ impl Default for RunConfig {
             alpha: 0.85,
             threshold: 1e-10,
             seed: 42,
+            cancel: None,
         }
     }
 }
@@ -95,6 +102,7 @@ impl RunConfig {
             e.workers = self.workers;
         }
         e.batch = self.batch;
+        e.cancel = self.cancel.clone();
         e
     }
 

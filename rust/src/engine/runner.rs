@@ -1,7 +1,7 @@
 //! The engine runner: worker threads, rounds, barriers, termination.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::engine::context::{EndCtx, WorkerCtx, N_RED_SLOTS};
@@ -25,12 +25,18 @@ pub struct EngineConfig {
     pub flush_at: usize,
     /// Hard round cap (safety net; algorithms converge on their own).
     pub max_rounds: usize,
+    /// Cooperative cancellation token, checked once per round at the
+    /// global barrier (worker 0's bookkeeping phase). When it flips to
+    /// `true` the run winds down at the next round boundary — in-flight
+    /// vertex work finishes, so state stays consistent. Service-mode
+    /// jobs each get their own token; `None` disables the check.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        EngineConfig { workers, batch: 1024, flush_at: 4096, max_rounds: 1_000_000 }
+        EngineConfig { workers, batch: 1024, flush_at: 4096, max_rounds: 1_000_000, cancel: None }
     }
 }
 
@@ -302,7 +308,10 @@ impl Engine {
                 // recount after the hook (it may have activated vertices)
                 let next_active = next.count();
                 let pending = shared.inboxes.pending(nxt_parity);
+                let cancelled =
+                    cfg.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed));
                 let done = stop_requested
+                    || cancelled
                     || (next_active == 0 && pending == 0 && !continue_requested)
                     || round + 1 >= cfg.max_rounds;
                 shared.stop.store(done, Ordering::Release);
@@ -479,6 +488,28 @@ mod tests {
         let cfg = EngineConfig { workers: 2, max_rounds: 5, ..Default::default() };
         let r = Engine::run(&Forever, &g, &[0], &cfg);
         assert_eq!(r.rounds, 5);
+    }
+
+    #[test]
+    fn cancellation_stops_at_round_boundary() {
+        // a self-perpetuating program never quiesces; a pre-set cancel
+        // token must stop it at the first round boundary
+        struct Spin;
+        impl VertexProgram for Spin {
+            type Msg = ();
+            fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+                EdgeRequest::None
+            }
+            fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, _e: &VertexEdges) {
+                ctx.activate(v);
+            }
+            fn run_on_message(&self, _c: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+        }
+        let g = MemGraph::from_edges(4, &[(0, 1)], true);
+        let token = Arc::new(AtomicBool::new(true));
+        let cfg = EngineConfig { workers: 2, cancel: Some(token), ..Default::default() };
+        let r = Engine::run(&Spin, &g, &[0], &cfg);
+        assert_eq!(r.rounds, 1, "pre-cancelled run must stop at the first boundary");
     }
 
     #[test]

@@ -57,17 +57,61 @@ impl SemGraph {
     /// `cache_bytes` and the given I/O pool configuration.
     pub fn open(base: &Path, cache_bytes: usize, io: IoConfig) -> crate::Result<Self> {
         let stats = Arc::new(IoStats::new());
+        let cache = Arc::new(PageCache::new(cache_bytes, stats.clone()));
+        let pool = Arc::new(IoPool::new(io, stats));
+        Self::open_shared(base, cache, pool, 0)
+    }
+
+    /// Open on an existing substrate (page cache + I/O pool) shared with
+    /// other graphs — service mode. `key_base` namespaces this file's
+    /// pages inside the shared cache; the
+    /// [`crate::service::GraphRegistry`] hands out disjoint bases. The
+    /// graph's stats handle is the substrate-wide one
+    /// (`cache.stats()`); per-job attribution comes from
+    /// [`Self::fetch_batch_tracked`].
+    pub fn open_shared(
+        base: &Path,
+        cache: Arc<PageCache>,
+        pool: Arc<IoPool>,
+        key_base: u64,
+    ) -> crate::Result<Self> {
+        let stats = cache.stats().clone();
         let idx_bytes = std::fs::read(base.with_extension("gy-idx"))?;
         let index = GraphIndex::decode(&idx_bytes)?;
-        let cache = Arc::new(PageCache::new(cache_bytes, stats.clone()));
-        let pool = Arc::new(IoPool::new(io, stats.clone()));
-        let adj = SemFile::open(&base.with_extension("gy-adj"), cache, pool)?;
+        let adj = SemFile::open_keyed(&base.with_extension("gy-adj"), cache, pool, key_base)?;
         Ok(SemGraph { index, adj, stats })
     }
 
     /// The underlying SEM file (exposed for substrate benchmarks).
     pub fn adj_file(&self) -> &SemFile {
         &self.adj
+    }
+
+    /// [`EdgeSource::fetch_batch`] with per-job attribution: all I/O
+    /// counters this batch moves are recorded into `job` as well as the
+    /// graph's own (substrate-wide) stats. Service-mode jobs wrap the
+    /// shared graph in a [`crate::service::JobGraph`] that routes every
+    /// fetch through here with its private [`IoStats`].
+    pub fn fetch_batch_tracked(
+        &self,
+        reqs: &[(VertexId, EdgeRequest)],
+        job: Option<&IoStats>,
+    ) -> crate::Result<Vec<VertexEdges>> {
+        let ranges: Vec<(u64, usize)> =
+            reqs.iter().map(|&(v, r)| self.index.byte_range(v, r)).collect();
+        let logical: u64 = ranges.iter().map(|&(_, len)| len as u64).sum();
+        self.stats.add_logical_bytes(logical);
+        if let Some(j) = job {
+            j.add_logical_bytes(logical);
+        }
+        let bufs = self.adj.read_ranges_tracked(&ranges, job)?;
+        Ok(reqs
+            .iter()
+            .zip(bufs)
+            .map(|(&(v, r), buf)| {
+                VertexEdges::decode(&buf, self.index.in_deg(v), self.index.out_deg(v), r)
+            })
+            .collect())
     }
 }
 
@@ -77,18 +121,7 @@ impl EdgeSource for SemGraph {
     }
 
     fn fetch_batch(&self, reqs: &[(VertexId, EdgeRequest)]) -> crate::Result<Vec<VertexEdges>> {
-        let ranges: Vec<(u64, usize)> =
-            reqs.iter().map(|&(v, r)| self.index.byte_range(v, r)).collect();
-        self.stats
-            .add_logical_bytes(ranges.iter().map(|&(_, len)| len as u64).sum());
-        let bufs = self.adj.read_ranges(&ranges)?;
-        Ok(reqs
-            .iter()
-            .zip(bufs)
-            .map(|(&(v, r), buf)| {
-                VertexEdges::decode(&buf, self.index.in_deg(v), self.index.out_deg(v), r)
-            })
-            .collect())
+        self.fetch_batch_tracked(reqs, None)
     }
 
     fn prefetch(&self, reqs: &[(VertexId, EdgeRequest)]) {

@@ -19,8 +19,24 @@
 //!   artifacts (`artifacts/*.hlo.txt`) from Rust; Python never runs at
 //!   request time.
 //! * [`coordinator`] — config system, job runner, figure harnesses.
+//! * [`service`] — the multi-tenant daemon: shared-substrate graph
+//!   registry, admission control, concurrent job executor, JSON-lines
+//!   TCP protocol.
 //! * [`util`] — PRNG, bitmaps, shared vectors, mini bench/property-test
 //!   harnesses (criterion/proptest are unavailable offline).
+//!
+//! ## Service mode
+//!
+//! Beyond one-shot CLI runs, the library hosts a **multi-tenant job
+//! service** (`graphyti serve`): every on-disk graph image is opened
+//! once and all jobs share a single page cache and I/O pool — the
+//! scarce SEM resources — while an admission controller bounds the sum
+//! of per-job O(n) vertex-state footprints by a memory budget. Jobs
+//! carry priorities, can be cancelled cooperatively at engine round
+//! boundaries, and report their own disjointly-attributed I/O counters.
+//! Clients speak a JSON-lines TCP protocol (`graphyti submit` /
+//! `status`, or any socket client). See [`service`] for the design and
+//! a quickstart.
 
 pub mod algs;
 pub mod coordinator;
@@ -28,6 +44,7 @@ pub mod engine;
 pub mod graph;
 pub mod runtime;
 pub mod safs;
+pub mod service;
 pub mod util;
 
 /// Vertex identifier. Graph images are limited to `u32::MAX` vertices,

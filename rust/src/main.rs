@@ -6,6 +6,9 @@
 //! * `run`      — run a library algorithm in SEM or in-memory mode.
 //! * `verify`   — cross-check SEM PageRank against the AOT XLA/Pallas
 //!   dense-block engine (requires `make artifacts`).
+//! * `serve`    — run the multi-tenant job service (JSON-lines TCP).
+//! * `submit`   — submit a job to a running service.
+//! * `status`   — query a running service (one job or the whole table).
 //!
 //! Arguments are `--key value` pairs (clap is unavailable offline; the
 //! parser below is deliberately minimal).
@@ -14,14 +17,17 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::Arc;
+use std::time::Duration;
 
 use graphyti::algs::degree::degree_stats;
-use graphyti::coordinator::{open_graph, run_alg, AlgSpec, GraphMode, RunConfig};
+use graphyti::coordinator::{open_graph, run_alg, AlgSpec, GraphMode, RunConfig, Table};
 use graphyti::graph::builder::GraphBuilder;
 use graphyti::graph::csr::Csr;
 use graphyti::graph::format::GraphIndex;
 use graphyti::graph::gen;
 use graphyti::runtime::{PageRankXla, XlaRuntime};
+use graphyti::service::protocol::Json;
+use graphyti::service::{call, GraphService, ServiceConfig, ServiceServer};
 use graphyti::util::fmt_bytes;
 
 const USAGE: &str = "\
@@ -35,10 +41,20 @@ USAGE:
                     [--cache-mb N] [--io-threads N] [--io-delay-us N]
                     [--workers N] [--config FILE]
   graphyti verify   --graph PATH [--iters N]
+  graphyti serve    [--port P] [--cache-mb N] [--budget-mb N]
+                    [--exec-threads N] [--io-threads N] [--io-delay-us N]
+                    [--workers N]
+  graphyti submit ALG --graph PATH [--addr HOST:PORT] [--variant V]
+                    [--num N] [--priority 0-9] [--wait] [--timeout-ms N]
+  graphyti status   [--addr HOST:PORT] [--job ID]
 
 ALG: pagerank (push|pull), coreness (graphyti|pruned|unopt),
      diameter (multi|uni), bc (async|sync|uni), triangles
      (graphyti|naive), louvain (graphyti|physical), bfs, wcc, sssp, degree
+
+Service mode: `serve` multiplexes concurrent jobs over one shared page
+cache + I/O pool, with an admission budget on summed per-job O(n) state.
+`submit`/`status` speak its JSON-lines TCP protocol.
 ";
 
 /// Minimal `--key value` + positional parser.
@@ -236,6 +252,177 @@ fn cmd_verify(args: &Args) -> graphyti::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> graphyti::Result<()> {
+    let port = args.get_usize("port", 7171)?;
+    let d = ServiceConfig::default();
+    let cfg = ServiceConfig {
+        cache_mb: args.get_usize("cache-mb", d.cache_mb)?,
+        io_threads: args.get_usize("io-threads", d.io_threads)?,
+        io_delay_us: args.get_usize("io-delay-us", d.io_delay_us as usize)? as u64,
+        max_run_pages: d.max_run_pages,
+        exec_threads: args.get_usize("exec-threads", d.exec_threads)?,
+        budget_bytes: args.get_usize("budget-mb", (d.budget_bytes / (1024 * 1024)) as usize)?
+            as u64
+            * 1024
+            * 1024,
+        default_workers: args.get_usize("workers", d.default_workers)?,
+    };
+    let svc = GraphService::start(cfg.clone());
+    let server = ServiceServer::start(svc, &format!("127.0.0.1:{port}"))?;
+    println!(
+        "graphyti service listening on {} (cache {} MiB, budget {}, {} executors)",
+        server.addr(),
+        cfg.cache_mb,
+        fmt_bytes(cfg.budget_bytes),
+        cfg.exec_threads.max(1),
+    );
+    println!("protocol: one JSON object per line; ops: submit status wait list cancel stats shutdown");
+    server.wait();
+    println!("service stopped");
+    Ok(())
+}
+
+fn default_addr(args: &Args) -> String {
+    args.get("addr").unwrap_or("127.0.0.1:7171").to_string()
+}
+
+fn cmd_submit(args: &Args) -> graphyti::Result<()> {
+    let alg = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("missing ALG positional (see --help)"))?
+        .clone();
+    let graph = args.require("graph")?.to_string();
+    let addr = default_addr(args);
+    let timeout_ms = args.get_usize("timeout-ms", 600_000)? as u64;
+    let mut fields = vec![
+        ("op", Json::s("submit")),
+        ("graph", Json::s(graph)),
+        ("alg", Json::s(alg)),
+    ];
+    if let Some(v) = args.get("variant") {
+        fields.push(("variant", Json::s(v)));
+    }
+    if args.has("num") {
+        fields.push(("num", Json::u(args.get_usize("num", 8)? as u64)));
+    }
+    if args.has("priority") {
+        fields.push(("priority", Json::u(args.get_usize("priority", 4)? as u64)));
+    }
+    let resp = call(&addr, &Json::obj(fields), Duration::from_millis(timeout_ms + 5000))?;
+    check_ok(&resp)?;
+    let id = resp
+        .get("job")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("malformed response: {}", resp.encode()))?;
+    let state = resp.get("state").and_then(Json::as_str).unwrap_or("?");
+    println!("job {id} {state}");
+    if args.has("wait") {
+        let req = Json::obj(vec![
+            ("op", Json::s("wait")),
+            ("job", Json::u(id)),
+            ("timeout_ms", Json::u(timeout_ms)),
+        ]);
+        let resp = call(&addr, &req, Duration::from_millis(timeout_ms + 5000))?;
+        check_ok(&resp)?;
+        let job = resp
+            .get("job")
+            .ok_or_else(|| anyhow::anyhow!("malformed response: {}", resp.encode()))?;
+        print_job_line(job);
+        // scripting contract: --wait exits non-zero unless the job
+        // actually completed
+        let state = job.get("state").and_then(Json::as_str).unwrap_or("?");
+        anyhow::ensure!(state == "done", "job finished in state '{state}'");
+    }
+    Ok(())
+}
+
+fn check_ok(resp: &Json) -> graphyti::Result<()> {
+    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = resp.get("error").and_then(Json::as_str).unwrap_or("malformed response");
+        anyhow::bail!("service error: {msg}");
+    }
+    Ok(())
+}
+
+fn job_field_u64(job: &Json, key: &str) -> u64 {
+    job.get(key).and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn print_job_line(job: &Json) {
+    let state = job.get("state").and_then(Json::as_str).unwrap_or("?");
+    let summary = job.get("summary").and_then(Json::as_str).unwrap_or("-");
+    let error = job.get("error").and_then(Json::as_str).unwrap_or("");
+    let io = job.get("io");
+    let reads = io.map_or(0, |io| job_field_u64(io, "read_requests"));
+    let disk = io.map_or(0, |io| job_field_u64(io, "bytes_read"));
+    println!(
+        "job {} {state}: {summary}{} (wall {:.1} ms, rounds {}, io: {reads} reqs, {} disk)",
+        job_field_u64(job, "job"),
+        if error.is_empty() { String::new() } else { format!(" [{error}]") },
+        job.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
+        job_field_u64(job, "rounds"),
+        fmt_bytes(disk),
+    );
+}
+
+fn cmd_status(args: &Args) -> graphyti::Result<()> {
+    let addr = default_addr(args);
+    if args.has("job") {
+        let id = args.get_usize("job", 0)? as u64;
+        let req = Json::obj(vec![("op", Json::s("status")), ("job", Json::u(id))]);
+        let resp = call(&addr, &req, Duration::from_secs(30))?;
+        check_ok(&resp)?;
+        let job = resp
+            .get("job")
+            .ok_or_else(|| anyhow::anyhow!("malformed response: {}", resp.encode()))?;
+        print_job_line(job);
+        return Ok(());
+    }
+    let resp = call(&addr, &Json::obj(vec![("op", Json::s("list"))]), Duration::from_secs(30))?;
+    check_ok(&resp)?;
+    let jobs = resp.get("jobs").and_then(Json::as_array).unwrap_or(&[]);
+    let mut t = Table::new(&["job", "state", "prio", "alg", "wall", "reads", "disk", "summary"]);
+    for job in jobs {
+        t.row(&[
+            job_field_u64(job, "job").to_string(),
+            job.get("state").and_then(Json::as_str).unwrap_or("?").to_string(),
+            job_field_u64(job, "priority").to_string(),
+            format!(
+                "{}{}",
+                job.get("alg").and_then(Json::as_str).unwrap_or("?"),
+                match job.get("variant").and_then(Json::as_str) {
+                    Some("") | None => String::new(),
+                    Some(v) => format!("/{v}"),
+                }
+            ),
+            format!("{:.1} ms", job.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0)),
+            job.get("io").map_or(0, |io| job_field_u64(io, "read_requests")).to_string(),
+            fmt_bytes(job.get("io").map_or(0, |io| job_field_u64(io, "bytes_read"))),
+            job.get("summary")
+                .and_then(Json::as_str)
+                .or_else(|| job.get("error").and_then(Json::as_str))
+                .unwrap_or("-")
+                .to_string(),
+        ]);
+    }
+    t.print();
+    let resp = call(&addr, &Json::obj(vec![("op", Json::s("stats"))]), Duration::from_secs(30))?;
+    check_ok(&resp)?;
+    if let (Some(io), Some(adm)) = (resp.get("io"), resp.get("admission")) {
+        println!(
+            "substrate: {} reqs, {} from disk, {} graphs | admission: {} / {} in use (peak {})",
+            job_field_u64(io, "read_requests"),
+            fmt_bytes(job_field_u64(io, "bytes_read")),
+            job_field_u64(&resp, "graphs"),
+            fmt_bytes(job_field_u64(adm, "in_use_bytes")),
+            fmt_bytes(job_field_u64(adm, "budget_bytes")),
+            fmt_bytes(job_field_u64(adm, "peak_bytes")),
+        );
+    }
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
@@ -248,6 +435,9 @@ fn main() -> ExitCode {
         "info" => cmd_info(&args),
         "run" => cmd_run(&args),
         "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "status" => cmd_status(&args),
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");
             return ExitCode::FAILURE;

@@ -13,7 +13,23 @@
 //!   implementations (`graphyti verify`, `examples/xla_pagerank.rs`).
 //! * [`ModularityXla`] — the Louvain modularity scorer used to grade
 //!   community assignments.
+//!
+//! ## Feature gating
+//!
+//! The real executor needs the `xla` bindings crate and
+//! `libxla_extension`, which cannot be vendored in the offline build
+//! image. It is therefore gated behind the off-by-default `xla` cargo
+//! feature; without it, [`stub`] supplies the same API surface and every
+//! constructor reports the runtime as unavailable, so the CLI `verify`
+//! subcommand and `examples/xla_pagerank.rs` compile everywhere and fail
+//! gracefully at run time.
 
+#[cfg(feature = "xla")]
 pub mod executor;
-
+#[cfg(feature = "xla")]
 pub use executor::{artifacts_dir, ModularityXla, PageRankXla, XlaRuntime};
+
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{artifacts_dir, ModularityXla, PageRankXla, XlaRuntime};

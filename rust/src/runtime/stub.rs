@@ -1,0 +1,120 @@
+//! API-compatible stand-in for [`super::executor`] when the `xla`
+//! feature is disabled (the offline default).
+//!
+//! Every constructor returns an error explaining how to enable the real
+//! runtime; the remaining methods exist only so downstream code
+//! type-checks and are unreachable without a constructed runtime.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+const UNAVAILABLE: &str = "the XLA/PJRT runtime is unavailable: graphyti was built without the \
+     `xla` cargo feature (it requires the xla bindings crate and libxla_extension, \
+     which are not vendored in the offline image)";
+
+/// Locate the artifacts directory: `$GRAPHYTI_ARTIFACTS`, else
+/// `./artifacts`, else `<exe>/../../artifacts` (target/release layout).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("GRAPHYTI_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.is_dir() {
+        return local;
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        for anc in exe.ancestors().skip(1) {
+            let cand = anc.join("artifacts");
+            if cand.is_dir() {
+                return cand;
+            }
+        }
+    }
+    local
+}
+
+/// Stub PJRT client; construction always fails.
+pub struct XlaRuntime {
+    _priv: (),
+}
+
+impl XlaRuntime {
+    /// Always errors: the `xla` feature is disabled.
+    pub fn new() -> crate::Result<Self> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    /// Always errors: the `xla` feature is disabled.
+    pub fn with_dir(_dir: &Path) -> crate::Result<Self> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    /// Platform name placeholder.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+}
+
+/// Stub dense-block PageRank engine.
+pub struct PageRankXla {
+    _rt: Arc<XlaRuntime>,
+}
+
+impl PageRankXla {
+    /// Wrap a runtime (unreachable without the `xla` feature).
+    pub fn new(rt: Arc<XlaRuntime>) -> Self {
+        PageRankXla { _rt: rt }
+    }
+
+    /// Smallest artifact size that fits `n` vertices (mirrors the real
+    /// executor so size logic stays testable without the runtime).
+    pub fn padded_size(n: usize) -> Option<usize> {
+        [256usize, 512].into_iter().find(|&s| s >= n)
+    }
+
+    /// Always errors: the `xla` feature is disabled.
+    pub fn pagerank(&self, _g: &Csr, _alpha: f32, _iters: usize) -> crate::Result<Vec<f64>> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+/// Stub Louvain modularity scorer.
+pub struct ModularityXla {
+    _rt: Arc<XlaRuntime>,
+}
+
+impl ModularityXla {
+    /// Wrap a runtime (unreachable without the `xla` feature).
+    pub fn new(rt: Arc<XlaRuntime>) -> Self {
+        ModularityXla { _rt: rt }
+    }
+
+    /// Always errors: the `xla` feature is disabled.
+    pub fn score(&self, _g: &Csr, _community: &[VertexId]) -> crate::Result<f64> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_report_unavailable() {
+        let e = XlaRuntime::new().err().expect("stub must fail");
+        assert!(format!("{e}").contains("xla"), "{e}");
+    }
+
+    #[test]
+    fn padded_sizes_match_real_executor() {
+        assert_eq!(PageRankXla::padded_size(100), Some(256));
+        assert_eq!(PageRankXla::padded_size(256), Some(256));
+        assert_eq!(PageRankXla::padded_size(300), Some(512));
+        assert_eq!(PageRankXla::padded_size(1000), None);
+    }
+}

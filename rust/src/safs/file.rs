@@ -28,6 +28,10 @@ pub struct SemFile {
     cache: Arc<PageCache>,
     pool: Arc<IoPool>,
     stats: Arc<IoStats>,
+    /// Offset added to this file's page numbers when keying the cache.
+    /// Several `SemFile`s sharing one [`PageCache`] (service mode) get
+    /// disjoint key namespaces so their pages never alias.
+    key_base: u64,
 }
 
 impl SemFile {
@@ -37,10 +41,23 @@ impl SemFile {
         cache: Arc<PageCache>,
         pool: Arc<IoPool>,
     ) -> crate::Result<Self> {
+        Self::open_keyed(path, cache, pool, 0)
+    }
+
+    /// Open with an explicit cache-key namespace. `key_base` must leave
+    /// the file's page range `[key_base, key_base + len/PAGE_SIZE]`
+    /// disjoint from every other file sharing `cache` (the service
+    /// registry hands out bases spaced far wider than any file).
+    pub fn open_keyed(
+        path: &Path,
+        cache: Arc<PageCache>,
+        pool: Arc<IoPool>,
+        key_base: u64,
+    ) -> crate::Result<Self> {
         let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
         let len = file.metadata()?.len();
         let stats = cache.stats().clone();
-        Ok(SemFile { file: Arc::new(file), len, cache, pool, stats })
+        Ok(SemFile { file: Arc::new(file), len, cache, pool, stats, key_base })
     }
 
     /// File length in bytes.
@@ -61,7 +78,25 @@ impl SemFile {
     /// Read many byte ranges as one batch: cache lookups first, then all
     /// misses deduped + coalesced + serviced in parallel, then assembly.
     pub fn read_ranges(&self, ranges: &[ByteRange]) -> crate::Result<Vec<Vec<u8>>> {
+        self.read_ranges_tracked(ranges, None)
+    }
+
+    /// [`Self::read_ranges`] with per-job attribution: every counter this
+    /// batch moves (requests, hits/misses, merges, waits, physical reads,
+    /// bytes) is also recorded into `job` when given. The substrate's own
+    /// stats keep aggregating everything, so under concurrent jobs each
+    /// event is attributed to exactly one job and the per-job snapshots
+    /// sum to the global ones (eviction counts stay global: they belong
+    /// to the shared cache, not to whichever job triggered them).
+    pub fn read_ranges_tracked(
+        &self,
+        ranges: &[ByteRange],
+        job: Option<&IoStats>,
+    ) -> crate::Result<Vec<Vec<u8>>> {
         self.stats.add_read_request(ranges.len() as u64);
+        if let Some(j) = job {
+            j.add_read_request(ranges.len() as u64);
+        }
         // 1. collect the distinct pages each range needs
         let mut needed: Vec<u64> = Vec::new();
         for &(off, len) in ranges {
@@ -81,11 +116,12 @@ impl SemFile {
         needed.sort_unstable();
         needed.dedup();
 
-        // 2. cache pass — split hits from misses
+        // 2. cache pass — split hits from misses (`have`/`misses` carry
+        //    file-local page numbers; only cache calls add the key base)
         let mut have: Vec<(u64, Arc<[u8]>)> = Vec::with_capacity(needed.len());
         let mut misses: Vec<u64> = Vec::new();
         for &p in &needed {
-            match self.cache.get(p) {
+            match self.cache.get_tracked(self.key_base + p, job) {
                 Some(d) => have.push((p, d)),
                 None => misses.push(p),
             }
@@ -95,6 +131,9 @@ impl SemFile {
         if !misses.is_empty() {
             let runs = coalesce(&misses, self.pool.config().max_run_pages);
             self.stats.add_merged((misses.len() - runs.len()) as u64);
+            if let Some(j) = job {
+                j.add_merged((misses.len() - runs.len()) as u64);
+            }
             let (tx, rx) = channel();
             let nruns = runs.len();
             for (start, n) in runs {
@@ -109,11 +148,20 @@ impl SemFile {
             drop(tx);
             // block for completions — counted as a thread wait
             self.stats.add_thread_wait(1);
+            if let Some(j) = job {
+                j.add_thread_wait(1);
+            }
             for _ in 0..nruns {
                 let reply = rx.recv().context("io pool reply channel closed")?;
+                if let Some(j) = job {
+                    // the pool already counted this run into the global
+                    // stats; mirror it into the requesting job's
+                    j.add_physical_read(1);
+                    j.add_bytes_read((reply.pages.len() * PAGE_SIZE) as u64);
+                }
                 for (i, data) in reply.pages.into_iter().enumerate() {
                     let p = reply.start_page + i as u64;
-                    self.cache.insert(p, data.clone());
+                    self.cache.insert(self.key_base + p, data.clone());
                     have.push((p, data));
                 }
             }
@@ -153,7 +201,7 @@ impl SemFile {
             let first = off / PAGE_SIZE as u64;
             let last = (off + len as u64 - 1).min(self.len - 1) / PAGE_SIZE as u64;
             for p in first..=last {
-                if self.cache.peek(p).is_none() {
+                if self.cache.peek(self.key_base + p).is_none() {
                     pages.push(p);
                 }
             }
@@ -178,11 +226,12 @@ impl SemFile {
         drop(tx);
         // fire-and-forget insertion on a helper thread so callers don't block
         let cache = self.cache.clone();
+        let key_base = self.key_base;
         std::thread::spawn(move || {
             for _ in 0..nruns {
                 if let Ok(reply) = rx.recv() {
                     for (i, data) in reply.pages.into_iter().enumerate() {
-                        cache.insert(reply.start_page + i as u64, data);
+                        cache.insert(key_base + reply.start_page + i as u64, data);
                     }
                 }
             }
@@ -311,6 +360,58 @@ mod tests {
         }
         let s = f.stats().snapshot();
         assert!(s.evictions > 0, "cache must be under pressure: {s:?}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn keyed_files_share_one_cache_without_aliasing() {
+        let a = pattern(PAGE_SIZE * 2);
+        let b: Vec<u8> = a.iter().map(|x| x ^ 0xFF).collect();
+        let pa = std::env::temp_dir()
+            .join(format!("graphyti-keyed-a-{}", std::process::id()));
+        let pb = std::env::temp_dir()
+            .join(format!("graphyti-keyed-b-{}", std::process::id()));
+        std::fs::write(&pa, &a).unwrap();
+        std::fs::write(&pb, &b).unwrap();
+        let stats = Arc::new(IoStats::new());
+        let cache = Arc::new(PageCache::new(128 * PAGE_SIZE, stats.clone()));
+        let pool =
+            Arc::new(IoPool::new(IoConfig { threads: 2, ..Default::default() }, stats));
+        let fa = SemFile::open_keyed(&pa, cache.clone(), pool.clone(), 0).unwrap();
+        let fb = SemFile::open_keyed(&pb, cache, pool, 1 << 44).unwrap();
+        // both files' page 0 live in the same cache under disjoint keys
+        for _ in 0..2 {
+            assert_eq!(fa.read(0, PAGE_SIZE).unwrap(), a[..PAGE_SIZE]);
+            assert_eq!(fb.read(0, PAGE_SIZE).unwrap(), b[..PAGE_SIZE]);
+        }
+        let s = fa.stats().snapshot();
+        assert_eq!(s.cache_misses, 2, "one cold miss per file: {s:?}");
+        assert_eq!(s.cache_hits, 2, "second round must hit both: {s:?}");
+        let _ = std::fs::remove_file(pa);
+        let _ = std::fs::remove_file(pb);
+    }
+
+    #[test]
+    fn tracked_reads_attribute_to_job_stats() {
+        let data = pattern(PAGE_SIZE * 8);
+        let (path, f) = setup(&data, 128);
+        let job = IoStats::new();
+        let out = f.read_ranges_tracked(&[(0, PAGE_SIZE * 2)], Some(&job)).unwrap();
+        assert_eq!(&out[0][..], &data[..PAGE_SIZE * 2]);
+        let j = job.snapshot();
+        assert_eq!(j.read_requests, 1);
+        assert_eq!(j.cache_misses, 2);
+        assert_eq!(j.physical_reads, 1, "one coalesced run: {j:?}");
+        assert_eq!(j.bytes_read, 2 * PAGE_SIZE as u64);
+        // warm re-read: attributed as hits, no new physical I/O
+        f.read_ranges_tracked(&[(0, PAGE_SIZE * 2)], Some(&job)).unwrap();
+        let j = job.snapshot();
+        assert_eq!(j.cache_hits, 2);
+        assert_eq!(j.physical_reads, 1);
+        // the global stats aggregate at least everything the job saw
+        let g = f.stats().snapshot();
+        assert_eq!(g.read_requests, j.read_requests);
+        assert_eq!(g.bytes_read, j.bytes_read);
         let _ = std::fs::remove_file(path);
     }
 

@@ -108,11 +108,26 @@ impl PageCache {
 
     /// Look up a page; counts hit/miss in stats.
     pub fn get(&self, page_no: u64) -> Option<Arc<[u8]>> {
+        self.get_tracked(page_no, None)
+    }
+
+    /// Look up a page, counting the hit/miss into the cache's own stats
+    /// *and* into `extra` when given. `extra` is the per-job attribution
+    /// channel for service mode: concurrent jobs sharing one cache each
+    /// pass their own [`IoStats`], so every access lands in exactly one
+    /// job's counters while the global ones still aggregate everything.
+    pub fn get_tracked(&self, page_no: u64, extra: Option<&IoStats>) -> Option<Arc<[u8]>> {
         let got = self.shard_of(page_no).lock().unwrap().get(page_no);
         if got.is_some() {
             self.stats.add_cache_hit(1);
+            if let Some(s) = extra {
+                s.add_cache_hit(1);
+            }
         } else {
             self.stats.add_cache_miss(1);
+            if let Some(s) = extra {
+                s.add_cache_miss(1);
+            }
         }
         got
     }
@@ -221,6 +236,93 @@ mod tests {
         }
         // page 0 may be evicted, but our Arc is still valid
         assert_eq!(held[100], 42);
+    }
+
+    #[test]
+    fn concurrent_hammering_single_shard() {
+        // every thread hits the SAME page number, so all traffic funnels
+        // through one shard's lock and one frame: the get/insert race is
+        // maximally contended and must stay coherent
+        let c = Arc::new(cache(SHARDS));
+        let mut hs = vec![];
+        for _ in 0..8 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..20_000 {
+                    match c.get(7) {
+                        Some(d) => assert_eq!(d[0], 42, "corrupt frame"),
+                        None => c.insert(7, page(42)),
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(7).expect("page resident")[0], 42);
+    }
+
+    #[test]
+    fn concurrent_eviction_pressure_readback() {
+        // 1 frame per shard + 8 writers over 512 distinct pages: constant
+        // eviction; whatever get() returns must carry the right bytes
+        let c = Arc::new(cache(SHARDS));
+        let mut hs = vec![];
+        for t in 0..8u64 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut rng = crate::util::XorShift::new(0x5EED + t);
+                for _ in 0..10_000 {
+                    let p = rng.next_below(512);
+                    match c.get(p) {
+                        Some(d) => assert_eq!(d[0], p as u8, "page {p} corrupt"),
+                        None => c.insert(p, page(p as u8)),
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = c.stats().snapshot();
+        assert!(s.evictions > 0, "512 pages through 64 frames must evict: {s:?}");
+        assert!(c.resident_pages() <= c.capacity_pages() as u64);
+    }
+
+    #[test]
+    fn repeated_scan_hits_after_warmup() {
+        // 128 pages into a 256-page cache: the multiplicative shard hash
+        // spreads them at most 3 deep per 4-deep shard (verified offline),
+        // so nothing is evicted and rescans must hit 100%
+        let c = cache(256);
+        for p in 0..128u64 {
+            assert!(c.get(p).is_none(), "cold cache");
+            c.insert(p, page(p as u8));
+        }
+        let before = c.stats().snapshot();
+        for _ in 0..4 {
+            for p in 0..128u64 {
+                assert_eq!(c.get(p).expect("warm page")[0], p as u8);
+            }
+        }
+        let d = c.stats().snapshot().delta(&before);
+        assert_eq!(d.cache_misses, 0, "warm rescan must not miss: {d:?}");
+        assert_eq!(d.cache_hits, 4 * 128);
+        assert!(d.hit_ratio() > 0.999);
+    }
+
+    #[test]
+    fn tracked_get_attributes_to_extra_stats() {
+        let c = cache(128);
+        let job = IoStats::new();
+        assert!(c.get_tracked(3, Some(&job)).is_none());
+        c.insert(3, page(3));
+        assert!(c.get_tracked(3, Some(&job)).is_some());
+        assert!(c.get(3).is_some()); // untracked: global only
+        let j = job.snapshot();
+        assert_eq!((j.cache_hits, j.cache_misses), (1, 1));
+        let g = c.stats().snapshot();
+        assert_eq!((g.cache_hits, g.cache_misses), (2, 1), "global aggregates all");
     }
 
     #[test]

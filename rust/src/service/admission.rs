@@ -1,0 +1,193 @@
+//! Admission control — bound concurrent jobs' O(n) memory.
+//!
+//! SEM's contract is O(n) memory per algorithm and O(m) on disk; a
+//! multi-tenant node therefore has a hard resource to protect: the sum
+//! of admitted jobs' vertex-state footprints. The controller accounts an
+//! estimated footprint per job against a configurable budget:
+//!
+//! * a job whose footprint alone exceeds the budget is **rejected** at
+//!   submit time (it could never run);
+//! * a job that fits the budget but not the *remaining* headroom is
+//!   **deferred** — it stays queued until running jobs release enough;
+//! * otherwise it is **admitted** and its footprint reserved until the
+//!   job reaches a terminal state.
+//!
+//! The shared page cache is budgeted separately (it is sized once at
+//! service start); this controller covers only per-job state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::AlgSpec;
+
+/// Outcome of an admission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Reserved: the job may run now. Pair with [`AdmissionController::release`].
+    Admitted,
+    /// Over the remaining headroom: keep the job queued.
+    Deferred,
+    /// Over the whole budget: the job can never run at this budget.
+    Rejected,
+}
+
+/// Budgeted reservation ledger for job vertex-state bytes.
+#[derive(Debug)]
+pub struct AdmissionController {
+    budget: u64,
+    in_use: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl AdmissionController {
+    /// New controller with a budget in bytes.
+    pub fn new(budget_bytes: u64) -> Self {
+        AdmissionController {
+            budget: budget_bytes,
+            in_use: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+        }
+    }
+
+    /// Total budget in bytes.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Currently reserved bytes.
+    pub fn in_use(&self) -> u64 {
+        self.in_use.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of reserved bytes over the controller's lifetime.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Try to reserve `cost` bytes.
+    pub fn try_admit(&self, cost: u64) -> AdmissionDecision {
+        if cost > self.budget {
+            return AdmissionDecision::Rejected;
+        }
+        let mut cur = self.in_use.load(Ordering::Relaxed);
+        loop {
+            if cur + cost > self.budget {
+                return AdmissionDecision::Deferred;
+            }
+            match self.in_use.compare_exchange_weak(
+                cur,
+                cur + cost,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + cost, Ordering::Relaxed);
+                    return AdmissionDecision::Admitted;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Release a prior reservation.
+    pub fn release(&self, cost: u64) {
+        let prev = self.in_use.fetch_sub(cost, Ordering::AcqRel);
+        debug_assert!(prev >= cost, "released more than reserved");
+    }
+}
+
+/// Estimated in-memory vertex-state footprint of a job, in bytes.
+///
+/// Per-vertex constants approximate what each algorithm's program holds
+/// (rank/residual floats, level/label words, per-source BC state, …)
+/// plus the engine's two activation bitmaps and message headroom. These
+/// are deliberately round over-estimates: admission control needs a
+/// stable upper bound, not an exact census.
+pub fn estimate_state_bytes(spec: &AlgSpec, n: u64) -> u64 {
+    let per_vertex: u64 = match spec {
+        // rank + residual f64s, message slack
+        AlgSpec::PageRankPush | AlgSpec::PageRankPull => 32,
+        // core value + degree counter + scheduling state
+        AlgSpec::Coreness(_) => 24,
+        // level per sweep batch + visited marks
+        AlgSpec::Diameter { .. } => 24,
+        // per-source distance/sigma/delta state dominates
+        AlgSpec::Bc { num_sources, .. } => 24 + 16 * (*num_sources as u64).min(64),
+        // neighbor-ordinal state + per-vertex counts
+        AlgSpec::Triangles(_) => 24,
+        // community label + degree sums + modularity accumulators
+        AlgSpec::Louvain(_) => 48,
+        AlgSpec::Bfs { .. } => 16,
+        AlgSpec::Wcc => 16,
+        AlgSpec::Sssp { .. } => 24,
+        // index-resident only
+        AlgSpec::Degree => 16,
+        AlgSpec::ScanStat => 24,
+    };
+    n * per_vertex + n / 4 + 4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_defer_reject() {
+        let c = AdmissionController::new(100);
+        assert_eq!(c.try_admit(101), AdmissionDecision::Rejected);
+        assert_eq!(c.try_admit(60), AdmissionDecision::Admitted);
+        assert_eq!(c.in_use(), 60);
+        assert_eq!(c.try_admit(50), AdmissionDecision::Deferred);
+        assert_eq!(c.try_admit(40), AdmissionDecision::Admitted);
+        assert_eq!(c.in_use(), 100);
+        c.release(60);
+        assert_eq!(c.try_admit(50), AdmissionDecision::Admitted);
+        c.release(40);
+        c.release(50);
+        assert_eq!(c.in_use(), 0);
+        assert_eq!(c.peak(), 100);
+    }
+
+    #[test]
+    fn concurrent_reservations_respect_budget() {
+        let c = std::sync::Arc::new(AdmissionController::new(10_000));
+        let mut hs = vec![];
+        for _ in 0..8 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..2_000 {
+                    if c.try_admit(1_000) == AdmissionDecision::Admitted {
+                        assert!(c.in_use() <= 10_000);
+                        c.release(1_000);
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.in_use(), 0);
+        assert!(c.peak() <= 10_000);
+    }
+
+    #[test]
+    fn estimates_scale_with_n_and_sources() {
+        let n = 1 << 20;
+        let pr = estimate_state_bytes(&AlgSpec::PageRankPush, n);
+        assert!(pr >= 32 * n && pr < 64 * n);
+        let bc1 = estimate_state_bytes(
+            &AlgSpec::Bc {
+                num_sources: 1,
+                variant: crate::algs::bc::BcVariant::MultiSourceAsync,
+            },
+            n,
+        );
+        let bc32 = estimate_state_bytes(
+            &AlgSpec::Bc {
+                num_sources: 32,
+                variant: crate::algs::bc::BcVariant::MultiSourceAsync,
+            },
+            n,
+        );
+        assert!(bc32 > bc1, "more sources must cost more");
+    }
+}

@@ -1,0 +1,661 @@
+//! The job executor: a pool of runner threads draining a priority queue
+//! of submitted jobs, gated by the [`AdmissionController`], with
+//! cooperative cancellation and per-job I/O attribution.
+//!
+//! Scheduling policy: highest priority first, FIFO within a priority,
+//! with **backfill** — if the head job does not fit the remaining
+//! admission headroom, a smaller lower-priority job may run ahead of it
+//! rather than idling the node. Jobs whose footprint exceeds the whole
+//! budget are rejected at submit time.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{run_alg, AlgSpec, RunConfig};
+use crate::graph::source::EdgeSource;
+use crate::safs::{IoConfig, IoStatsSnapshot};
+use crate::service::admission::{estimate_state_bytes, AdmissionController, AdmissionDecision};
+use crate::service::registry::{GraphRegistry, JobGraph};
+
+/// Service-wide configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Shared page-cache capacity in MiB (one cache for all graphs).
+    pub cache_mb: usize,
+    /// Shared I/O pool threads.
+    pub io_threads: usize,
+    /// Injected latency per physical read, microseconds.
+    pub io_delay_us: u64,
+    /// Max pages per merged physical read.
+    pub max_run_pages: usize,
+    /// Concurrent job-runner threads.
+    pub exec_threads: usize,
+    /// Admission budget for summed per-job vertex-state bytes.
+    pub budget_bytes: u64,
+    /// Engine worker threads per job (0 = one per core; keep small so
+    /// concurrent jobs share cores rather than oversubscribing).
+    pub default_workers: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            cache_mb: 64,
+            io_threads: 4,
+            io_delay_us: 0,
+            max_run_pages: 256,
+            exec_threads: 2,
+            budget_bytes: 1 << 30,
+            default_workers: 2,
+        }
+    }
+}
+
+/// A job submission.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// Image base path (`<base>.gy-idx` / `<base>.gy-adj`).
+    pub graph: PathBuf,
+    /// Algorithm name (as accepted by [`AlgSpec::parse`]).
+    pub alg: String,
+    /// Algorithm variant ("" = default).
+    pub variant: String,
+    /// Numeric parameter (source vertex, #sources, #sweeps — per alg).
+    pub num: usize,
+    /// Priority 0 (lowest) ..= 9 (highest); default 4.
+    pub priority: u8,
+    /// `RunConfig` `key=value` overrides applied to this job only.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl JobRequest {
+    /// A default-shaped request for `alg` on `graph`.
+    pub fn new(graph: impl Into<PathBuf>, alg: impl Into<String>) -> Self {
+        JobRequest {
+            graph: graph.into(),
+            alg: alg.into(),
+            variant: String::new(),
+            num: 8,
+            priority: 4,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+/// Lifecycle of a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for an executor slot + admission headroom.
+    Queued,
+    /// Executing on a runner thread.
+    Running,
+    /// Finished successfully; `summary` holds the result.
+    Done,
+    /// Errored or panicked; `error` holds the reason.
+    Failed,
+    /// Cancelled (before start, or cooperatively at a round boundary).
+    Cancelled,
+    /// Footprint exceeds the admission budget; never ran.
+    Rejected,
+}
+
+impl JobState {
+    /// True once the job can no longer change state.
+    pub fn is_terminal(self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+
+    /// Wire/spelled-out name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+            JobState::Rejected => "rejected",
+        }
+    }
+}
+
+/// Point-in-time public view of a job.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    /// Job id (1-based, unique per service instance).
+    pub id: u64,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Graph image base path.
+    pub graph: String,
+    /// Algorithm name.
+    pub alg: String,
+    /// Algorithm variant.
+    pub variant: String,
+    /// Priority 0..=9.
+    pub priority: u8,
+    /// Admission-accounted vertex-state footprint estimate (bytes).
+    pub state_bytes: u64,
+    /// Result summary (set on `Done`; may hold a partial result on
+    /// `Cancelled`).
+    pub summary: Option<String>,
+    /// Failure/cancellation/rejection reason.
+    pub error: Option<String>,
+    /// Engine rounds executed.
+    pub rounds: u64,
+    /// Wall time of the run (zero unless it ran).
+    pub wall: Duration,
+    /// This job's own I/O, disjointly attributed via its private
+    /// [`crate::safs::IoStats`] (snapshot delta over the run).
+    pub io: IoStatsSnapshot,
+    /// Monotonic completion order (1-based; 0 = not finished). Lets
+    /// callers audit scheduling order without wall-clock comparisons.
+    pub finish_seq: u64,
+}
+
+struct Job {
+    status: JobStatus,
+    req: JobRequest,
+    spec: AlgSpec,
+    cost: u64,
+    seq: u64,
+    cancel: Arc<AtomicBool>,
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: HashMap<u64, Job>,
+    /// Ids of jobs in `Queued` state, unordered (scheduling sorts).
+    queue: Vec<u64>,
+    shutdown: bool,
+}
+
+/// Per-state job counts, for the `stats` protocol op and the CLI.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobCounts {
+    pub queued: usize,
+    pub running: usize,
+    pub done: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+    pub rejected: usize,
+}
+
+/// The multi-tenant graph service: registry + admission + executor.
+pub struct GraphService {
+    cfg: ServiceConfig,
+    registry: Arc<GraphRegistry>,
+    admission: AdmissionController,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    next_id: AtomicU64,
+    next_seq: AtomicU64,
+    next_finish: AtomicU64,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl GraphService {
+    /// Start the service: build the shared substrate and spawn the
+    /// executor threads.
+    pub fn start(cfg: ServiceConfig) -> Arc<Self> {
+        let io = IoConfig {
+            threads: cfg.io_threads,
+            io_delay_us: cfg.io_delay_us,
+            max_run_pages: cfg.max_run_pages,
+        };
+        let registry = Arc::new(GraphRegistry::new(cfg.cache_mb * 1024 * 1024, io));
+        let admission = AdmissionController::new(cfg.budget_bytes);
+        let svc = Arc::new(GraphService {
+            registry,
+            admission,
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+            next_id: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+            next_finish: AtomicU64::new(0),
+            workers: Mutex::new(Vec::new()),
+            cfg,
+        });
+        let nthreads = svc.cfg.exec_threads.max(1);
+        let mut handles = Vec::with_capacity(nthreads);
+        for i in 0..nthreads {
+            let s = svc.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gy-exec-{i}"))
+                    .spawn(move || s.worker_loop())
+                    .expect("spawn executor thread"),
+            );
+        }
+        *svc.workers.lock().unwrap() = handles;
+        svc
+    }
+
+    /// Submit a job. Validates the algorithm spec, the config overrides
+    /// and the graph image immediately, so bad requests fail here
+    /// rather than asynchronously. Returns the job id; jobs whose
+    /// footprint exceeds the whole admission budget come back
+    /// `Rejected`.
+    pub fn submit(&self, req: JobRequest) -> crate::Result<u64> {
+        let priority = req.priority.min(9);
+        let spec = AlgSpec::parse(&req.alg, &req.variant, req.num)?;
+        // substrate knobs are sized once at serve time and shared by all
+        // jobs; accepting them per job would silently do nothing, so
+        // reject them loudly. Everything else is validated now rather
+        // than when the job eventually runs.
+        const SUBSTRATE_KEYS: [&str; 4] =
+            ["cache_mb", "io_threads", "io_delay_us", "max_run_pages"];
+        for (k, v) in &req.overrides {
+            let key = k.trim();
+            anyhow::ensure!(
+                !SUBSTRATE_KEYS.contains(&key),
+                "config '{key}' sizes the shared substrate and is fixed at service \
+                 start; set it via the `serve` flags instead"
+            );
+            RunConfig::default().set(key, v)?;
+        }
+        let g = self.registry.open(&req.graph)?;
+        let n = g.index().num_vertices() as u64;
+        let cost = estimate_state_bytes(&spec, n);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let rejected = cost > self.admission.budget();
+        let mut status = JobStatus {
+            id,
+            state: if rejected { JobState::Rejected } else { JobState::Queued },
+            graph: req.graph.display().to_string(),
+            alg: req.alg.clone(),
+            variant: req.variant.clone(),
+            priority,
+            state_bytes: cost,
+            summary: None,
+            error: None,
+            rounds: 0,
+            wall: Duration::ZERO,
+            io: IoStatsSnapshot::default(),
+            finish_seq: 0,
+        };
+        if rejected {
+            status.error = Some(format!(
+                "admission: estimated state footprint {cost} B exceeds budget {} B",
+                self.admission.budget()
+            ));
+        }
+        let queued = status.state == JobState::Queued;
+        let job = Job { status, req, spec, cost, seq, cancel: Arc::new(AtomicBool::new(false)) };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            anyhow::ensure!(!inner.shutdown, "service is shutting down");
+            inner.jobs.insert(id, job);
+            if queued {
+                inner.queue.push(id);
+            }
+        }
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Current status of a job.
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.inner.lock().unwrap().jobs.get(&id).map(|j| j.status.clone())
+    }
+
+    /// All jobs, ordered by id.
+    pub fn list(&self) -> Vec<JobStatus> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<JobStatus> = inner.jobs.values().map(|j| j.status.clone()).collect();
+        out.sort_by_key(|s| s.id);
+        out
+    }
+
+    /// Per-state job counts.
+    pub fn job_counts(&self) -> JobCounts {
+        let inner = self.inner.lock().unwrap();
+        let mut c = JobCounts::default();
+        for j in inner.jobs.values() {
+            match j.status.state {
+                JobState::Queued => c.queued += 1,
+                JobState::Running => c.running += 1,
+                JobState::Done => c.done += 1,
+                JobState::Failed => c.failed += 1,
+                JobState::Cancelled => c.cancelled += 1,
+                JobState::Rejected => c.rejected += 1,
+            }
+        }
+        c
+    }
+
+    /// Cancel a job. Queued jobs flip to `Cancelled` immediately;
+    /// running jobs get their token set and wind down cooperatively at
+    /// the next engine round boundary. Returns false for unknown or
+    /// already-terminal jobs.
+    pub fn cancel(&self, id: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let state = match inner.jobs.get(&id) {
+            Some(j) => j.status.state,
+            None => return false,
+        };
+        match state {
+            JobState::Queued => {
+                inner.queue.retain(|&q| q != id);
+                let j = inner.jobs.get_mut(&id).unwrap();
+                j.status.state = JobState::Cancelled;
+                j.status.error = Some("cancelled before start".to_string());
+                j.status.finish_seq = self.next_finish.fetch_add(1, Ordering::Relaxed) + 1;
+                drop(inner);
+                self.cv.notify_all();
+                true
+            }
+            JobState::Running => {
+                inner.jobs[&id].cancel.store(true, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Block until the job reaches a terminal state or `timeout`
+    /// elapses. Returns `None` for unknown jobs; on timeout the (still
+    /// non-terminal) current status is returned — check
+    /// [`JobState::is_terminal`].
+    pub fn wait(&self, id: u64, timeout: Duration) -> Option<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            match inner.jobs.get(&id) {
+                None => return None,
+                Some(j) if j.status.state.is_terminal() => return Some(j.status.clone()),
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return inner.jobs.get(&id).map(|j| j.status.clone());
+            }
+            let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Substrate-wide I/O counters (all jobs, all graphs).
+    pub fn substrate_stats(&self) -> IoStatsSnapshot {
+        self.registry.stats().snapshot()
+    }
+
+    /// The admission controller (budget/in-use/peak introspection).
+    pub fn admission(&self) -> &AdmissionController {
+        &self.admission
+    }
+
+    /// The graph registry.
+    pub fn registry(&self) -> &Arc<GraphRegistry> {
+        &self.registry
+    }
+
+    /// Service configuration.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Stop accepting work, cancel running jobs cooperatively, and join
+    /// the executor threads. Queued jobs are left `Queued` (reported by
+    /// status, never run).
+    pub fn shutdown(&self) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.shutdown = true;
+            for j in inner.jobs.values() {
+                if j.status.state == JobState::Running {
+                    j.cancel.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+        self.cv.notify_all();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    // ---------------------------------------------------- internals --
+
+    fn worker_loop(&self) {
+        loop {
+            let id = {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if inner.shutdown {
+                        return;
+                    }
+                    if let Some(id) = self.pick_and_admit(&mut inner) {
+                        break id;
+                    }
+                    inner = self.cv.wait(inner).unwrap();
+                }
+            };
+            self.run_one(id);
+        }
+    }
+
+    /// Pick the best runnable job: priority desc, then submission order,
+    /// skipping (backfilling past) jobs that exceed the current
+    /// admission headroom. Reserves the winner's footprint and flips it
+    /// to `Running`.
+    fn pick_and_admit(&self, inner: &mut Inner) -> Option<u64> {
+        let mut order: Vec<u64> = inner.queue.clone();
+        order.sort_by_key(|id| {
+            let j = &inner.jobs[id];
+            (std::cmp::Reverse(j.status.priority), j.seq)
+        });
+        for id in order {
+            let cost = inner.jobs[&id].cost;
+            match self.admission.try_admit(cost) {
+                AdmissionDecision::Admitted => {
+                    inner.queue.retain(|&q| q != id);
+                    let j = inner.jobs.get_mut(&id).unwrap();
+                    j.status.state = JobState::Running;
+                    return Some(id);
+                }
+                AdmissionDecision::Deferred => continue,
+                AdmissionDecision::Rejected => {
+                    // unreachable with a static budget (submit pre-rejects),
+                    // but terminal-ize defensively rather than spin
+                    inner.queue.retain(|&q| q != id);
+                    let j = inner.jobs.get_mut(&id).unwrap();
+                    j.status.state = JobState::Rejected;
+                    j.status.error = Some(format!(
+                        "admission: footprint {cost} B exceeds budget {} B",
+                        self.admission.budget()
+                    ));
+                }
+            }
+        }
+        None
+    }
+
+    fn run_one(&self, id: u64) {
+        let (req, spec, cancel, cost) = {
+            let inner = self.inner.lock().unwrap();
+            let j = match inner.jobs.get(&id) {
+                Some(j) => j,
+                None => return,
+            };
+            (j.req.clone(), j.spec.clone(), j.cancel.clone(), j.cost)
+        };
+        let t0 = Instant::now();
+        // a panicking job must not take the executor thread down with it
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.execute(&req, &spec, cancel.clone())
+        }));
+        let wall = t0.elapsed();
+        self.admission.release(cost);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(j) = inner.jobs.get_mut(&id) {
+                j.status.wall = wall;
+                j.status.finish_seq = self.next_finish.fetch_add(1, Ordering::Relaxed) + 1;
+                match result {
+                    Ok(Ok((summary, rounds, io))) => {
+                        j.status.rounds = rounds;
+                        j.status.io = io;
+                        j.status.summary = Some(summary);
+                        if cancel.load(Ordering::Relaxed) {
+                            j.status.state = JobState::Cancelled;
+                            j.status.error =
+                                Some("cancelled at a round boundary".to_string());
+                        } else {
+                            j.status.state = JobState::Done;
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        j.status.state = JobState::Failed;
+                        j.status.error = Some(format!("{e:#}"));
+                    }
+                    Err(_) => {
+                        j.status.state = JobState::Failed;
+                        j.status.error = Some("job panicked".to_string());
+                    }
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn execute(
+        &self,
+        req: &JobRequest,
+        spec: &AlgSpec,
+        cancel: Arc<AtomicBool>,
+    ) -> crate::Result<(String, u64, IoStatsSnapshot)> {
+        let shared = self.registry.open(&req.graph)?;
+        let jg = JobGraph::new(shared);
+        let mut rc = RunConfig {
+            cache_mb: self.cfg.cache_mb,
+            io_threads: self.cfg.io_threads,
+            io_delay_us: self.cfg.io_delay_us,
+            max_run_pages: self.cfg.max_run_pages,
+            workers: self.cfg.default_workers,
+            ..Default::default()
+        };
+        for (k, v) in &req.overrides {
+            rc.set(k, v)?;
+        }
+        rc.cancel = Some(cancel);
+        let out = run_alg(&jg, spec, &rc);
+        let rounds = out.report.as_ref().map_or(0, |r| r.rounds);
+        Ok((out.summary, rounds, jg.job_stats().snapshot()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen;
+
+    fn build(tag: &str) -> PathBuf {
+        let base = std::env::temp_dir()
+            .join(format!("graphyti-exec-{}-{tag}", std::process::id()));
+        let edges = gen::rmat(8, 1500, 17);
+        let mut b = GraphBuilder::new(256, true);
+        b.add_edges(&edges);
+        b.build_files(&base).unwrap();
+        base
+    }
+
+    fn cleanup(base: &PathBuf) {
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+
+    #[test]
+    fn submit_run_and_report() {
+        let base = build("basic");
+        let svc = GraphService::start(ServiceConfig {
+            cache_mb: 1,
+            exec_threads: 2,
+            ..Default::default()
+        });
+        let id = svc.submit(JobRequest::new(base.clone(), "wcc")).unwrap();
+        let st = svc.wait(id, Duration::from_secs(60)).expect("known job");
+        assert_eq!(st.state, JobState::Done, "{st:?}");
+        assert!(st.summary.as_deref().unwrap_or("").starts_with("wcc:"), "{st:?}");
+        assert!(st.io.read_requests > 0, "SEM job must do I/O: {st:?}");
+        assert!(st.rounds > 0);
+        assert_eq!(svc.admission().in_use(), 0, "footprint released");
+        svc.shutdown();
+        cleanup(&base);
+    }
+
+    #[test]
+    fn bad_submissions_fail_fast() {
+        let base = build("badsub");
+        let svc = GraphService::start(ServiceConfig::default());
+        assert!(svc.submit(JobRequest::new(base.clone(), "no-such-alg")).is_err());
+        assert!(svc
+            .submit(JobRequest::new("/nonexistent/image", "pagerank"))
+            .is_err());
+        // unknown and substrate-level config overrides are rejected at
+        // submit time, not when the job eventually runs
+        let mut bad_cfg = JobRequest::new(base.clone(), "pagerank");
+        bad_cfg.overrides.push(("bogus_key".into(), "1".into()));
+        let e = svc.submit(bad_cfg).unwrap_err();
+        assert!(format!("{e:#}").contains("bogus_key"), "{e:#}");
+        let mut substrate = JobRequest::new(base.clone(), "pagerank");
+        substrate.overrides.push(("cache_mb".into(), "512".into()));
+        let e = svc.submit(substrate).unwrap_err();
+        assert!(format!("{e:#}").contains("fixed at service start"), "{e:#}");
+        // valid per-job overrides still work
+        let mut ok = JobRequest::new(base.clone(), "pagerank");
+        ok.overrides.push(("workers".into(), "1".into()));
+        let id = svc.submit(ok).unwrap();
+        let st = svc.wait(id, Duration::from_secs(60)).unwrap();
+        assert_eq!(st.state, JobState::Done, "{st:?}");
+        svc.shutdown();
+        cleanup(&base);
+    }
+
+    #[test]
+    fn priority_order_with_single_executor() {
+        let base = build("prio");
+        let svc = GraphService::start(ServiceConfig {
+            cache_mb: 1,
+            exec_threads: 1,
+            ..Default::default()
+        });
+        // blocker: negative threshold => residual push never converges,
+        // so it runs until cancelled — deterministic occupancy
+        let mut blocker = JobRequest::new(base.clone(), "pagerank");
+        blocker.overrides.push(("threshold".into(), "-1".into()));
+        let blocker_id = svc.submit(blocker).unwrap();
+        // queue three more while the single executor is busy
+        let mut lo = JobRequest::new(base.clone(), "wcc");
+        lo.priority = 1;
+        let mut hi = JobRequest::new(base.clone(), "bfs");
+        hi.priority = 9;
+        let mut mid = JobRequest::new(base.clone(), "degree");
+        mid.priority = 5;
+        let lo_id = svc.submit(lo).unwrap();
+        let hi_id = svc.submit(hi).unwrap();
+        let mid_id = svc.submit(mid).unwrap();
+        assert!(svc.cancel(blocker_id));
+        let b = svc.wait(blocker_id, Duration::from_secs(120)).unwrap();
+        assert_eq!(b.state, JobState::Cancelled, "{b:?}");
+        let lo = svc.wait(lo_id, Duration::from_secs(120)).unwrap();
+        let hi = svc.wait(hi_id, Duration::from_secs(120)).unwrap();
+        let mid = svc.wait(mid_id, Duration::from_secs(120)).unwrap();
+        assert_eq!(lo.state, JobState::Done);
+        assert_eq!(hi.state, JobState::Done);
+        assert_eq!(mid.state, JobState::Done);
+        assert!(
+            hi.finish_seq < mid.finish_seq && mid.finish_seq < lo.finish_seq,
+            "priority order violated: hi={} mid={} lo={}",
+            hi.finish_seq,
+            mid.finish_seq,
+            lo.finish_seq
+        );
+        svc.shutdown();
+        cleanup(&base);
+    }
+}

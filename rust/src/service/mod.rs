@@ -1,0 +1,74 @@
+//! Service mode — the multi-tenant SEM graph daemon.
+//!
+//! The library's batch path (`coordinator::jobs`) runs one algorithm at
+//! a time against a privately-owned substrate. This module turns the
+//! node into a **concurrent multi-tenant service**: one shared page
+//! cache and I/O pool, many graphs, many jobs in flight, with the O(n)
+//! memory contract enforced across tenants. The pieces:
+//!
+//! * [`registry::GraphRegistry`] — opens each on-disk image **once**
+//!   and shares a single `PageCache`/`IoPool` across all jobs; pages of
+//!   different files get disjoint cache-key namespaces.
+//! * [`admission::AdmissionController`] — accounts each job's estimated
+//!   O(n) vertex-state footprint against a configurable budget; jobs
+//!   that do not fit the remaining headroom queue, jobs that could
+//!   never fit are rejected.
+//! * [`exec::GraphService`] — executor threads draining a priority
+//!   queue (highest priority first, FIFO within, backfill past jobs
+//!   that do not fit), cooperative cancellation plumbed to engine round
+//!   boundaries, and per-job I/O attribution: every job gets a private
+//!   [`crate::safs::IoStats`] via [`registry::JobGraph`], so concurrent
+//!   jobs' counters are disjoint and sum to the substrate totals.
+//! * [`protocol`] / [`server`] — a JSON-lines TCP protocol (no serde
+//!   needed) with `submit`, `status`, `wait`, `list`, `cancel`,
+//!   `stats` and `shutdown` ops.
+//!
+//! # Quickstart
+//!
+//! Generate an image, start the daemon, submit jobs from another shell:
+//!
+//! ```text
+//! $ graphyti generate --kind rmat --scale 16 --out /tmp/rmat16
+//! $ graphyti serve --port 7171 --cache-mb 256 --budget-mb 512 --exec-threads 4
+//! graphyti service listening on 127.0.0.1:7171
+//!
+//! # elsewhere:
+//! $ graphyti submit pagerank --graph /tmp/rmat16 --priority 7 --wait
+//! job 1 done: pagerank(push): top5 [...]  (io: reqs=..., disk=...)
+//! $ graphyti submit wcc --graph /tmp/rmat16 &
+//! $ graphyti submit triangles --graph /tmp/rmat16 --num 1 &
+//! $ graphyti status
+//! job  state  prio  alg        wall      reads     summary
+//! ...
+//! ```
+//!
+//! Or over the wire, one JSON object per line:
+//!
+//! ```text
+//! {"op":"submit","graph":"/tmp/rmat16","alg":"pagerank","priority":7}
+//! {"ok":true,"job":1,"state":"queued","state_bytes":2101248}
+//! {"op":"wait","job":1,"timeout_ms":60000}
+//! {"ok":true,"job":{"job":1,"state":"done","summary":"pagerank(push): ...","io":{...}}}
+//! ```
+//!
+//! In-process embedding (what the integration tests drive):
+//!
+//! ```no_run
+//! use graphyti::service::{GraphService, JobRequest, ServiceConfig};
+//! let svc = GraphService::start(ServiceConfig::default());
+//! let id = svc.submit(JobRequest::new("/tmp/rmat16", "pagerank")).unwrap();
+//! let done = svc.wait(id, std::time::Duration::from_secs(60)).unwrap();
+//! println!("{:?}: {:?}", done.state, done.summary);
+//! svc.shutdown();
+//! ```
+
+pub mod admission;
+pub mod exec;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use admission::{estimate_state_bytes, AdmissionController, AdmissionDecision};
+pub use exec::{GraphService, JobCounts, JobRequest, JobState, JobStatus, ServiceConfig};
+pub use registry::{GraphRegistry, JobGraph};
+pub use server::{call, dispatch, ServiceServer};

@@ -1,0 +1,215 @@
+//! Graph registry — the shared SEM substrate.
+//!
+//! The registry owns exactly one [`PageCache`] and one [`IoPool`] for
+//! the whole process and opens each on-disk graph image **once**; every
+//! job running against the same image shares its `Arc<SemGraph>` and
+//! therefore the same cached pages and I/O threads. This is the
+//! shared-substrate design the multi-tenant service is built on: the
+//! page cache and I/O pool are the scarce resources, and multiplexing
+//! many queries over one cached graph image is where SEM beats
+//! process-per-query (GraphMP, Sun et al. 2017).
+//!
+//! Page-key namespacing: the cache keys pages by number only, so each
+//! file gets a disjoint key range (`file_seq << 44`) — images up to
+//! 64 PiB cannot alias.
+//!
+//! Per-job attribution: [`JobGraph`] wraps the shared graph with a
+//! private [`IoStats`]; every fetch is recorded into both the job's
+//! stats and the substrate-wide ones, so concurrent jobs' snapshots are
+//! disjoint and sum to the global counters.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::format::{EdgeRequest, GraphIndex, VertexEdges};
+use crate::graph::source::{EdgeSource, SemGraph};
+use crate::safs::{IoConfig, IoPool, IoStats, PageCache};
+use crate::VertexId;
+
+/// Disjoint page-key namespaces: file *i* keys pages from `i << 44`.
+const KEY_SHIFT: u32 = 44;
+
+/// One shared substrate + the set of open graph images.
+pub struct GraphRegistry {
+    cache: Arc<PageCache>,
+    pool: Arc<IoPool>,
+    stats: Arc<IoStats>,
+    graphs: Mutex<HashMap<PathBuf, Arc<SemGraph>>>,
+    /// Monotonic file sequence for cache-key namespaces. Allocated
+    /// outside the map lock; abandoned ids (lost open races) just skip
+    /// a namespace, which is harmless.
+    next_file: AtomicU64,
+}
+
+impl GraphRegistry {
+    /// Build the substrate: one page cache of `cache_bytes` and one I/O
+    /// pool, shared by every graph opened through this registry.
+    pub fn new(cache_bytes: usize, io: IoConfig) -> Self {
+        let stats = Arc::new(IoStats::new());
+        let cache = Arc::new(PageCache::new(cache_bytes, stats.clone()));
+        let pool = Arc::new(IoPool::new(io, stats.clone()));
+        GraphRegistry {
+            cache,
+            pool,
+            stats,
+            graphs: Mutex::new(HashMap::new()),
+            next_file: AtomicU64::new(0),
+        }
+    }
+
+    /// Open (or reuse) the image at `<base>.gy-idx` / `<base>.gy-adj`.
+    /// Identical paths — after canonicalization — share one `SemGraph`.
+    pub fn open(&self, base: &Path) -> crate::Result<Arc<SemGraph>> {
+        // canonicalize through the index file (the base itself usually
+        // does not exist as a file); fall back to the raw path so open
+        // errors surface from SemGraph::open_shared with context
+        let key = std::fs::canonicalize(base.with_extension("gy-idx"))
+            .unwrap_or_else(|_| base.to_path_buf());
+        if let Some(g) = self.graphs.lock().unwrap().get(&key) {
+            return Ok(g.clone());
+        }
+        // do the expensive part — file reads + O(n) index decode —
+        // OUTSIDE the map lock, so a cold open of a huge image never
+        // stalls submits or job starts against already-open graphs.
+        // Concurrent openers of the same image race benignly: the first
+        // insert wins, later ones drop their copy.
+        let key_base = (self.next_file.fetch_add(1, Ordering::Relaxed) + 1) << KEY_SHIFT;
+        let g = Arc::new(SemGraph::open_shared(
+            base,
+            self.cache.clone(),
+            self.pool.clone(),
+            key_base,
+        )?);
+        let mut graphs = self.graphs.lock().unwrap();
+        Ok(graphs.entry(key).or_insert(g).clone())
+    }
+
+    /// Substrate-wide I/O stats (aggregates every job on every graph).
+    pub fn stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+
+    /// The shared page cache.
+    pub fn cache(&self) -> &Arc<PageCache> {
+        &self.cache
+    }
+
+    /// Number of distinct open graph images.
+    pub fn num_graphs(&self) -> usize {
+        self.graphs.lock().unwrap().len()
+    }
+
+    /// Total O(n) index bytes held in memory across open images — the
+    /// resident footprint the registry itself contributes.
+    pub fn resident_index_bytes(&self) -> u64 {
+        self.graphs.lock().unwrap().values().map(|g| g.resident_bytes()).sum()
+    }
+}
+
+/// A job's view of a shared [`SemGraph`]: same data plane, private
+/// [`IoStats`]. The engine reads `io_stats()` for its per-run report, so
+/// a job's [`crate::engine::RunReport`] only ever contains its own I/O
+/// even when many jobs hammer the same cache concurrently.
+pub struct JobGraph {
+    inner: Arc<SemGraph>,
+    stats: Arc<IoStats>,
+}
+
+impl JobGraph {
+    /// Wrap a shared graph with fresh per-job counters.
+    pub fn new(inner: Arc<SemGraph>) -> Self {
+        JobGraph { inner, stats: Arc::new(IoStats::new()) }
+    }
+
+    /// The job's private stats handle.
+    pub fn job_stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+
+    /// The underlying shared graph.
+    pub fn shared(&self) -> &Arc<SemGraph> {
+        &self.inner
+    }
+}
+
+impl EdgeSource for JobGraph {
+    fn index(&self) -> &GraphIndex {
+        self.inner.index()
+    }
+
+    fn fetch_batch(&self, reqs: &[(VertexId, EdgeRequest)]) -> crate::Result<Vec<VertexEdges>> {
+        self.inner.fetch_batch_tracked(reqs, Some(&self.stats))
+    }
+
+    fn prefetch(&self, reqs: &[(VertexId, EdgeRequest)]) {
+        // prefetch I/O is deliberately unattributed: it is speculative
+        // and may be consumed by any job sharing the cache
+        self.inner.prefetch(reqs);
+    }
+
+    fn io_stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.inner.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen;
+
+    fn build(tag: &str) -> PathBuf {
+        let base = std::env::temp_dir()
+            .join(format!("graphyti-registry-{}-{tag}", std::process::id()));
+        let edges = gen::rmat(8, 1500, 3);
+        let mut b = GraphBuilder::new(256, true);
+        b.add_edges(&edges);
+        b.build_files(&base).unwrap();
+        base
+    }
+
+    fn cleanup(base: &PathBuf) {
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+
+    #[test]
+    fn same_path_opens_once() {
+        let base = build("dedup");
+        let reg = GraphRegistry::new(64 * 4096, IoConfig::default());
+        let a = reg.open(&base).unwrap();
+        let b = reg.open(&base).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same image must share one SemGraph");
+        assert_eq!(reg.num_graphs(), 1);
+        assert!(reg.open(Path::new("/nonexistent/graph")).is_err());
+        cleanup(&base);
+    }
+
+    #[test]
+    fn job_graphs_attribute_disjointly() {
+        let base = build("attrib");
+        let reg = GraphRegistry::new(256 * 4096, IoConfig::default());
+        let shared = reg.open(&base).unwrap();
+        let j1 = JobGraph::new(shared.clone());
+        let j2 = JobGraph::new(shared);
+        let reqs1: Vec<_> = (0..100u32).map(|v| (v, EdgeRequest::Out)).collect();
+        let reqs2: Vec<_> = (100..256u32).map(|v| (v, EdgeRequest::Out)).collect();
+        j1.fetch_batch(&reqs1).unwrap();
+        j2.fetch_batch(&reqs2).unwrap();
+        let s1 = j1.job_stats().snapshot();
+        let s2 = j2.job_stats().snapshot();
+        let g = reg.stats().snapshot();
+        assert_eq!(s1.read_requests, 100);
+        assert_eq!(s2.read_requests, 156);
+        assert_eq!(s1.read_requests + s2.read_requests, g.read_requests);
+        assert_eq!(s1.logical_bytes + s2.logical_bytes, g.logical_bytes);
+        assert!(s1.logical_bytes > 0 && s2.logical_bytes > 0);
+        cleanup(&base);
+    }
+}

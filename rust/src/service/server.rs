@@ -1,0 +1,234 @@
+//! TCP front end: a JSON-lines server over [`GraphService`] plus the
+//! one-shot client used by the CLI (`graphyti submit` / `status`).
+//!
+//! One thread per connection; each request line is dispatched against
+//! the shared service and answered with one response line. The
+//! `shutdown` op drains the service (cancelling running jobs
+//! cooperatively) and stops the accept loop.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::service::exec::GraphService;
+use crate::service::protocol::{
+    err_obj, job_request_from_json, ok_obj, snapshot_to_json, status_to_json, Json,
+};
+
+/// A running JSON-lines server bound to a local address.
+pub struct ServiceServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceServer {
+    /// Bind `bind_addr` (e.g. `"127.0.0.1:7171"`, port 0 for ephemeral)
+    /// and start accepting connections against `svc`.
+    pub fn start(svc: Arc<GraphService>, bind_addr: &str) -> crate::Result<ServiceServer> {
+        let listener = TcpListener::bind(bind_addr)
+            .with_context(|| format!("bind service address {bind_addr}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("gy-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let svc = svc.clone();
+                    let stop = stop2.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("gy-conn".to_string())
+                        .spawn(move || {
+                            let _ = handle_conn(&svc, stream, &stop, addr);
+                        });
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(ServiceServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the server stops (via the `shutdown` op or
+    /// [`Self::stop`]).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the accept loop (idempotent). Does not shut the service
+    /// down — callers own that.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        // poke the blocking accept so the loop observes the flag
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for ServiceServer {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    svc: &Arc<GraphService>,
+    stream: TcpStream,
+    stop: &AtomicBool,
+    addr: SocketAddr,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = dispatch(svc, line.trim());
+        writeln!(writer, "{}", resp.encode())?;
+        writer.flush()?;
+        if shutdown {
+            stop.store(true, Ordering::Release);
+            svc.shutdown();
+            // poke the accept loop awake so it exits
+            let _ = TcpStream::connect(addr);
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch one request line. Returns the response and whether the
+/// server should shut down.
+pub fn dispatch(svc: &Arc<GraphService>, line: &str) -> (Json, bool) {
+    match dispatch_inner(svc, line) {
+        Ok(out) => out,
+        Err(e) => (err_obj(&format!("{e:#}")), false),
+    }
+}
+
+fn job_id(req: &Json) -> crate::Result<u64> {
+    req.get("job")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("missing integer field 'job'"))
+}
+
+fn dispatch_inner(svc: &Arc<GraphService>, line: &str) -> crate::Result<(Json, bool)> {
+    let req = Json::parse(line)?;
+    let op = req
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing string field 'op'"))?;
+    Ok(match op {
+        "submit" => {
+            let jr = job_request_from_json(&req)?;
+            let id = svc.submit(jr)?;
+            let st = svc.status(id).expect("submitted job must have a status");
+            (
+                ok_obj(vec![
+                    ("job", Json::u(id)),
+                    ("state", Json::s(st.state.as_str())),
+                    ("state_bytes", Json::u(st.state_bytes)),
+                ]),
+                false,
+            )
+        }
+        "status" => {
+            let id = job_id(&req)?;
+            match svc.status(id) {
+                Some(st) => (ok_obj(vec![("job", status_to_json(&st))]), false),
+                None => (err_obj(&format!("unknown job {id}")), false),
+            }
+        }
+        "wait" => {
+            let id = job_id(&req)?;
+            let timeout_ms =
+                req.get("timeout_ms").and_then(Json::as_u64).unwrap_or(600_000);
+            match svc.wait(id, Duration::from_millis(timeout_ms)) {
+                Some(st) => (ok_obj(vec![("job", status_to_json(&st))]), false),
+                None => (err_obj(&format!("unknown job {id}")), false),
+            }
+        }
+        "list" => {
+            let jobs: Vec<Json> = svc.list().iter().map(status_to_json).collect();
+            (ok_obj(vec![("jobs", Json::Arr(jobs))]), false)
+        }
+        "cancel" => {
+            let id = job_id(&req)?;
+            (ok_obj(vec![("cancelled", Json::b(svc.cancel(id)))]), false)
+        }
+        "stats" => {
+            let counts = svc.job_counts();
+            let cache = svc.registry().cache();
+            (
+                ok_obj(vec![
+                    ("io", snapshot_to_json(&svc.substrate_stats())),
+                    (
+                        "cache",
+                        Json::obj(vec![
+                            ("resident_pages", Json::u(cache.resident_pages())),
+                            ("capacity_pages", Json::u(cache.capacity_pages() as u64)),
+                        ]),
+                    ),
+                    (
+                        "admission",
+                        Json::obj(vec![
+                            ("budget_bytes", Json::u(svc.admission().budget())),
+                            ("in_use_bytes", Json::u(svc.admission().in_use())),
+                            ("peak_bytes", Json::u(svc.admission().peak())),
+                        ]),
+                    ),
+                    ("graphs", Json::u(svc.registry().num_graphs() as u64)),
+                    (
+                        "jobs",
+                        Json::obj(vec![
+                            ("queued", Json::u(counts.queued as u64)),
+                            ("running", Json::u(counts.running as u64)),
+                            ("done", Json::u(counts.done as u64)),
+                            ("failed", Json::u(counts.failed as u64)),
+                            ("cancelled", Json::u(counts.cancelled as u64)),
+                            ("rejected", Json::u(counts.rejected as u64)),
+                        ]),
+                    ),
+                ]),
+                false,
+            )
+        }
+        "shutdown" => (ok_obj(vec![]), true),
+        other => (err_obj(&format!("unknown op '{other}'")), false),
+    })
+}
+
+/// One-shot client: connect, send one request line, read one response
+/// line. `timeout` bounds the read (server-side `wait` ops should pass
+/// a shorter `timeout_ms`).
+pub fn call(addr: &str, request: &Json, timeout: Duration) -> crate::Result<Json> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect to graphyti service at {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut writer = stream.try_clone()?;
+    writeln!(writer, "{}", request.encode())?;
+    writer.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream)
+        .read_line(&mut line)
+        .with_context(|| format!("read response from {addr}"))?;
+    anyhow::ensure!(!line.trim().is_empty(), "empty response from service at {addr}");
+    Json::parse(line.trim())
+}

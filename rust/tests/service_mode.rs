@@ -1,0 +1,253 @@
+//! Service-mode integration tests: the multi-tenant daemon end to end.
+//!
+//! Covers the acceptance contract of the service subsystem:
+//! * ≥ 3 concurrent jobs with mixed algorithms against ONE shared graph
+//!   image, results matching the in-memory oracle path;
+//! * per-job IoStats deltas disjointly attributed (they sum exactly to
+//!   the shared substrate's counters);
+//! * a job exceeding the admission budget is rejected, over-headroom
+//!   jobs queue and serialize under the budget;
+//! * cooperative cancellation at engine round boundaries;
+//! * the JSON-lines TCP protocol round trip.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use graphyti::coordinator::{open_graph, run_alg, AlgSpec, GraphMode, RunConfig};
+use graphyti::graph::builder::GraphBuilder;
+use graphyti::graph::gen;
+use graphyti::service::protocol::Json;
+use graphyti::service::{
+    call, GraphService, JobRequest, JobState, ServiceConfig, ServiceServer,
+};
+
+fn build_image(tag: &str, directed: bool, scale: u32, m: usize) -> PathBuf {
+    let n = 1usize << scale;
+    let base = std::env::temp_dir().join(format!(
+        "graphyti-svcmode-{}-{tag}",
+        std::process::id()
+    ));
+    let edges = gen::rmat(scale, m, 99);
+    let mut b = GraphBuilder::new(n, directed);
+    b.add_edges(&edges);
+    b.build_files(&base).unwrap();
+    base
+}
+
+fn cleanup(base: &PathBuf) {
+    let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+    let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+}
+
+/// Oracle: the same algorithm through the fully in-memory path.
+fn mem_summary(base: &PathBuf, alg: &str, variant: &str, num: usize) -> String {
+    let cfg = RunConfig::default();
+    let spec = AlgSpec::parse(alg, variant, num).unwrap();
+    let mem = open_graph(base, GraphMode::Mem, &cfg).unwrap();
+    run_alg(mem.as_ref(), &spec, &cfg).summary
+}
+
+#[test]
+fn concurrent_mixed_jobs_share_one_image_with_disjoint_io() {
+    // undirected so coreness/triangles are well-defined alongside
+    // pagerank/wcc/bfs — five algorithms, one shared image
+    let base = build_image("mixed", false, 10, 12_000);
+    let svc = GraphService::start(ServiceConfig {
+        cache_mb: 1, // one small shared cache for all five jobs
+        exec_threads: 3,
+        budget_bytes: 64 << 20,
+        default_workers: 2,
+        ..Default::default()
+    });
+    let before = svc.substrate_stats();
+    let specs = [
+        ("pagerank", ""),
+        ("wcc", ""),
+        ("bfs", ""),
+        ("coreness", ""),
+        ("triangles", ""),
+    ];
+    let mut ids = Vec::new();
+    for (alg, variant) in specs {
+        let mut req = JobRequest::new(base.clone(), alg);
+        req.variant = variant.to_string();
+        req.num = 0; // bfs source 0; ignored by the others
+        ids.push(svc.submit(req).unwrap());
+    }
+    let mut statuses = Vec::new();
+    for &id in &ids {
+        let st = svc.wait(id, Duration::from_secs(300)).expect("job exists");
+        assert_eq!(st.state, JobState::Done, "{st:?}");
+        statuses.push(st);
+    }
+    // one shared graph image, opened once
+    assert_eq!(svc.registry().num_graphs(), 1);
+
+    // results match the in-memory oracle path exactly
+    for (st, (alg, variant)) in statuses.iter().zip(specs) {
+        let want = mem_summary(&base, alg, variant, 0);
+        assert_eq!(st.summary.as_deref(), Some(want.as_str()), "{alg} diverged");
+    }
+
+    // per-job I/O is disjointly attributed: each job saw traffic, and
+    // the per-job deltas sum exactly to the shared substrate's counters
+    let global = svc.substrate_stats().delta(&before);
+    let sum_reqs: u64 = statuses.iter().map(|s| s.io.read_requests).sum();
+    let sum_logical: u64 = statuses.iter().map(|s| s.io.logical_bytes).sum();
+    for st in &statuses {
+        assert!(st.io.read_requests > 0, "job did no I/O: {st:?}");
+        assert!(st.io.logical_bytes > 0, "job read no bytes: {st:?}");
+    }
+    assert_eq!(sum_reqs, global.read_requests, "read requests not disjoint");
+    assert_eq!(sum_logical, global.logical_bytes, "logical bytes not disjoint");
+
+    svc.shutdown();
+    cleanup(&base);
+}
+
+#[test]
+fn admission_budget_rejects_and_serializes() {
+    let base = build_image("adm", true, 11, 20_000); // n = 2048
+    // pagerank footprint: 2048 * 32 + 2048/4 + 4096 = 70,144 bytes.
+    // budget fits exactly one such job at a time.
+    let svc = GraphService::start(ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 2,
+        budget_bytes: 100_000,
+        default_workers: 2,
+        ..Default::default()
+    });
+
+    // a job that could never fit is rejected at submit time
+    let mut big = JobRequest::new(base.clone(), "bc");
+    big.num = 64; // per-source state blows the budget
+    let big_id = svc.submit(big).unwrap();
+    let st = svc.status(big_id).unwrap();
+    assert_eq!(st.state, JobState::Rejected, "{st:?}");
+    assert!(st.error.as_deref().unwrap_or("").contains("budget"), "{st:?}");
+
+    // three jobs that fit one-at-a-time: all must finish, and the
+    // admission high-water mark must never exceed the budget
+    let ids: Vec<u64> = (0..3)
+        .map(|_| svc.submit(JobRequest::new(base.clone(), "pagerank")).unwrap())
+        .collect();
+    for id in ids {
+        let st = svc.wait(id, Duration::from_secs(300)).unwrap();
+        assert_eq!(st.state, JobState::Done, "{st:?}");
+    }
+    assert!(svc.admission().peak() <= 100_000, "peak {}", svc.admission().peak());
+    assert!(svc.admission().peak() > 0);
+    assert_eq!(svc.admission().in_use(), 0, "all footprints released");
+
+    svc.shutdown();
+    cleanup(&base);
+}
+
+#[test]
+fn running_job_cancels_at_round_boundary() {
+    let base = build_image("cancel", true, 10, 10_000);
+    let svc = GraphService::start(ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 1,
+        ..Default::default()
+    });
+    // negative threshold: residual push never converges, so the job
+    // runs until cancelled — deterministic, no timing races
+    let mut req = JobRequest::new(base.clone(), "pagerank");
+    req.overrides.push(("threshold".to_string(), "-1".to_string()));
+    let id = svc.submit(req).unwrap();
+    // give it a moment to be picked up, then cancel
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let st = svc.status(id).unwrap();
+        if st.state == JobState::Running || std::time::Instant::now() > deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(svc.cancel(id), "cancel must be accepted");
+    let st = svc.wait(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(st.state, JobState::Cancelled, "{st:?}");
+    assert!(st.rounds > 0, "ran at least one round: {st:?}");
+    assert_eq!(svc.admission().in_use(), 0, "cancelled job released its footprint");
+
+    // a queued job cancels immediately without running
+    let mut blocker = JobRequest::new(base.clone(), "pagerank");
+    blocker.overrides.push(("threshold".to_string(), "-1".to_string()));
+    let blocker_id = svc.submit(blocker).unwrap();
+    let queued_id = svc.submit(JobRequest::new(base.clone(), "wcc")).unwrap();
+    assert!(svc.cancel(queued_id));
+    let st = svc.wait(queued_id, Duration::from_secs(60)).unwrap();
+    assert_eq!(st.state, JobState::Cancelled, "{st:?}");
+    assert_eq!(st.rounds, 0, "queued-cancelled job never ran");
+    assert!(svc.cancel(blocker_id));
+    let st = svc.wait(blocker_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(st.state, JobState::Cancelled);
+
+    svc.shutdown();
+    cleanup(&base);
+}
+
+#[test]
+fn tcp_protocol_round_trip() {
+    let base = build_image("tcp", false, 9, 5_000);
+    let svc = GraphService::start(ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 2,
+        ..Default::default()
+    });
+    let server = ServiceServer::start(svc, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let t = Duration::from_secs(120);
+
+    // submit over the wire
+    let submit = Json::obj(vec![
+        ("op", Json::s("submit")),
+        ("graph", Json::s(base.display().to_string())),
+        ("alg", Json::s("wcc")),
+        ("priority", Json::u(7)),
+    ]);
+    let resp = call(&addr, &submit, t).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{}", resp.encode());
+    let id = resp.get("job").and_then(Json::as_u64).unwrap();
+
+    // wait for completion and check the result against the oracle
+    let wait = Json::obj(vec![
+        ("op", Json::s("wait")),
+        ("job", Json::u(id)),
+        ("timeout_ms", Json::u(60_000)),
+    ]);
+    let resp = call(&addr, &wait, t).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{}", resp.encode());
+    let job = resp.get("job").unwrap();
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("done"), "{}", resp.encode());
+    let want = mem_summary(&base, "wcc", "", 0);
+    assert_eq!(job.get("summary").and_then(Json::as_str), Some(want.as_str()));
+    assert!(
+        job.get("io").and_then(|io| io.get("read_requests")).and_then(Json::as_u64)
+            > Some(0),
+        "{}",
+        resp.encode()
+    );
+
+    // malformed + unknown requests answer with errors, not hangups
+    let resp = call(&addr, &Json::obj(vec![("op", Json::s("status"))]), t).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    let resp = call(&addr, &Json::obj(vec![("op", Json::s("nope"))]), t).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+
+    // stats op reflects the shared substrate
+    let resp = call(&addr, &Json::obj(vec![("op", Json::s("stats"))]), t).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("graphs").and_then(Json::as_u64), Some(1));
+    assert!(
+        resp.get("io").and_then(|io| io.get("read_requests")).and_then(Json::as_u64)
+            > Some(0)
+    );
+
+    // shutdown op stops the service and the accept loop
+    let resp = call(&addr, &Json::obj(vec![("op", Json::s("shutdown"))]), t).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    server.wait();
+    cleanup(&base);
+}

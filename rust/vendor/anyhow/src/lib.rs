@@ -1,0 +1,252 @@
+//! Minimal, source-compatible subset of the `anyhow` crate for offline
+//! builds.
+//!
+//! The real crate is not vendorable in this image (no registry access),
+//! and graphyti only relies on a small surface: [`Error`], [`Result`],
+//! the [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the
+//! [`Context`] extension trait. This shim implements exactly that
+//! surface with the same semantics:
+//!
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], preserving it as the source chain;
+//! * `Display` shows the outermost message, `{:#}` joins the whole
+//!   context/cause chain with `": "`, and `Debug` renders the chain in
+//!   the familiar `Caused by:` layout;
+//! * `.context(..)` / `.with_context(..)` wrap an error with an outer
+//!   message.
+//!
+//! Swap this path dependency for the crates.io release when a networked
+//! toolchain is available; no call sites need to change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` alias, defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    /// Ad-hoc message (from `anyhow!` / `Error::msg`).
+    Msg(String),
+    /// Wrapped standard error, kept alive for its source chain.
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+/// A dynamic error with optional context frames and a cause chain.
+pub struct Error {
+    repr: Repr,
+    /// Context frames, innermost first (most recently added last is the
+    /// *outermost* message, matching anyhow).
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { repr: Repr::Msg(message.to_string()), context: Vec::new() }
+    }
+
+    /// Build from a standard error, preserving its source chain.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { repr: Repr::Boxed(Box::new(error)), context: Vec::new() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The full message chain, outermost first.
+    fn chain_strings(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.context.iter().rev().cloned().collect();
+        match &self.repr {
+            Repr::Msg(m) => out.push(m.clone()),
+            Repr::Boxed(e) => {
+                out.push(e.to_string());
+                let mut src = e.source();
+                while let Some(s) = src {
+                    out.push(s.to_string());
+                    src = s.source();
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        if f.alternate() {
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        write!(f, "{}", chain[0])?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result`s whose error is a standard error.
+pub trait Context<T, E> {
+    /// Wrap the error with an outer message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily-built outer message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tokens:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tokens)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($tokens:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($tokens)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Error::new(io_err()).context("read config").context("startup");
+        assert_eq!(format!("{e}"), "startup");
+        assert_eq!(format!("{e:#}"), "startup: read config: missing thing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("missing thing"), "{dbg}");
+    }
+
+    #[test]
+    fn result_context_trait() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening image").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening image: missing thing");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "empty slot").unwrap_err();
+        assert_eq!(format!("{e}"), "empty slot");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 1, "x too small: {x}");
+            if x > 10 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x too small: 0");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let e = anyhow!("plain {} message", 7);
+        assert_eq!(format!("{e}"), "plain 7 message");
+        let s = String::from("from expr");
+        assert_eq!(format!("{}", anyhow!(s)), "from expr");
+    }
+}
