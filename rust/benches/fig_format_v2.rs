@@ -1,0 +1,36 @@
+//! Format bench — v1 fixed-width vs v2 delta+varint images.
+//!
+//! The SEM thesis is that runtime tracks O(m) edge bytes moved from
+//! disk; the v2 format shrinks those bytes ~3x on R-MAT graphs, so a
+//! full PageRank or BFS should read proportionally less and (in the
+//! I/O-bound regime the injected latency restores) finish faster.
+//! Both rows of each table share one cache size (1/7 of the *v1*
+//! adjacency) and I/O config — only the on-disk encoding differs.
+
+use graphyti::algs::bfs::bfs;
+use graphyti::algs::pagerank::pagerank_push;
+use graphyti::coordinator::benchkit::{banner, bench_scale, compare_formats};
+use graphyti::engine::EngineConfig;
+
+fn main() {
+    let scale = bench_scale();
+    let n = 1usize << scale;
+    let ecfg = EngineConfig::default();
+
+    banner(
+        "Format v2",
+        "delta+varint adjacency vs fixed u32 — PageRank (push)",
+        &format!("R-MAT scale {scale}, directed, cache=1/7 of v1 adj"),
+    );
+    let thr = 1e-3 / n as f64;
+    compare_formats(scale, 16, true, "fmtpr", |g| {
+        pagerank_push(g, 0.85, thr, &ecfg).report
+    });
+
+    banner(
+        "Format v2",
+        "delta+varint adjacency vs fixed u32 — BFS from vertex 0",
+        &format!("R-MAT scale {scale}, directed, cache=1/7 of v1 adj"),
+    );
+    compare_formats(scale, 16, true, "fmtbfs", |g| bfs(g, 0, &ecfg).1);
+}

@@ -38,16 +38,40 @@ pub fn bench_scale() -> u32 {
 /// Build (once, cached on disk) an R-MAT image for benching and return
 /// `(base path, RunConfig)` with the cache in the paper's 1/7 regime.
 pub fn rmat_workload(scale: u32, edge_factor: usize, directed: bool, tag: &str) -> (PathBuf, RunConfig) {
+    rmat_workload_fmt(scale, edge_factor, directed, tag, crate::graph::format::VERSION_V1)
+}
+
+/// [`rmat_workload`] with an explicit on-disk format version. The cache
+/// is sized to 1/7 of *this* image's adjacency bytes; for cross-format
+/// comparisons use [`compare_formats`], which holds the cache size fixed
+/// across both images instead.
+pub fn rmat_workload_fmt(
+    scale: u32,
+    edge_factor: usize,
+    directed: bool,
+    tag: &str,
+    version: u32,
+) -> (PathBuf, RunConfig) {
     let base = std::env::temp_dir().join(format!(
-        "graphyti-bench-{tag}-s{scale}-f{edge_factor}-{}",
+        "graphyti-bench-{tag}-s{scale}-f{edge_factor}-{}-v{version}",
         if directed { "d" } else { "u" }
     ));
-    if !base.with_extension("gy-idx").exists() {
+    if !(base.with_extension("gy-idx").exists() && base.with_extension("gy-adj").exists()) {
         let n = 1usize << scale;
         let edges = gen::rmat(scale, n * edge_factor, 42);
         let mut b = GraphBuilder::new(n, directed);
-        b.add_edges(&edges);
-        b.build_files(&base).expect("build bench image");
+        b.add_edges(&edges).format_version(version);
+        // build under a pid-suffixed name, then rename into place, so a
+        // killed or concurrent run can never leave a half-written image
+        // behind the existence check (adj first: idx-present ⇒ adj done)
+        let tmp = base.with_file_name(format!(
+            "{}-tmp{}",
+            base.file_name().unwrap().to_string_lossy(),
+            std::process::id()
+        ));
+        let (tidx, tadj) = b.build_files(&tmp).expect("build bench image");
+        std::fs::rename(&tadj, base.with_extension("gy-adj")).expect("publish bench adj");
+        std::fs::rename(&tidx, base.with_extension("gy-idx")).expect("publish bench idx");
     }
     let adj_bytes = std::fs::metadata(base.with_extension("gy-adj")).unwrap().len();
     let cache_bytes = (adj_bytes as usize / 7).max(64 * 4096);
@@ -55,6 +79,63 @@ pub fn rmat_workload(scale: u32, edge_factor: usize, directed: bool, tag: &str) 
     cfg.cache_mb = cache_bytes.div_ceil(1024 * 1024).max(1);
     cfg.io_delay_us = bench_io_delay_us();
     (base, cfg)
+}
+
+/// Outcome of a v1-vs-v2 format comparison ([`compare_formats`]).
+pub struct FormatComparison {
+    /// Run on the v1 (fixed-width) image.
+    pub v1: RunReport,
+    /// Run on the v2 (delta+varint) image.
+    pub v2: RunReport,
+    /// `.gy-adj` size of the v1 image.
+    pub v1_adj_bytes: u64,
+    /// `.gy-adj` size of the v2 image.
+    pub v2_adj_bytes: u64,
+}
+
+/// Build the same R-MAT graph as a v1 and a v2 image, run `run` against
+/// each on a cold cache, and print a table comparing edge bytes on disk,
+/// read volume and cache hit rate. Both runs use the identical cache
+/// size (1/7 of the *v1* adjacency) and I/O configuration, so every
+/// difference in the I/O columns is the format's doing.
+pub fn compare_formats(
+    scale: u32,
+    edge_factor: usize,
+    directed: bool,
+    tag: &str,
+    mut run: impl FnMut(&SemGraph) -> RunReport,
+) -> FormatComparison {
+    use crate::graph::format::{VERSION_V1, VERSION_V2};
+    let (base1, cfg) = rmat_workload_fmt(scale, edge_factor, directed, tag, VERSION_V1);
+    let (base2, _) = rmat_workload_fmt(scale, edge_factor, directed, tag, VERSION_V2);
+    let v1_adj_bytes = std::fs::metadata(base1.with_extension("gy-adj")).unwrap().len();
+    let v2_adj_bytes = std::fs::metadata(base2.with_extension("gy-adj")).unwrap().len();
+    let v1 = run(&open_sem(&base1, &cfg));
+    let v2 = run(&open_sem(&base2, &cfg));
+
+    let mut t =
+        Table::new(&["format", "adj-bytes", "wall", "read-reqs", "logical", "disk", "hit%"]);
+    for (name, adj, r) in [
+        ("v1 fixed-u32", v1_adj_bytes, &v1),
+        ("v2 delta+varint", v2_adj_bytes, &v2),
+    ] {
+        t.row(&[
+            name.to_string(),
+            fmt_bytes(adj),
+            fmt_dur(r.wall),
+            r.io.read_requests.to_string(),
+            fmt_bytes(r.io.logical_bytes),
+            fmt_bytes(r.io.bytes_read),
+            format!("{:.1}", 100.0 * r.io.hit_ratio()),
+        ]);
+    }
+    t.print();
+    println!(
+        "v2/v1: adj {:.2}x smaller, disk reads {:.2}x smaller",
+        v1_adj_bytes as f64 / v2_adj_bytes.max(1) as f64,
+        v1.io.bytes_read as f64 / v2.io.bytes_read.max(1) as f64,
+    );
+    FormatComparison { v1, v2, v1_adj_bytes, v2_adj_bytes }
 }
 
 /// Open the workload semi-externally with a cold cache.
@@ -157,6 +238,32 @@ mod tests {
     use super::*;
     use crate::graph::format::EdgeRequest;
     use crate::graph::source::MemGraph;
+
+    #[test]
+    fn compare_formats_v2_is_smaller_and_reads_less() {
+        let ecfg = crate::engine::EngineConfig { workers: 2, ..Default::default() };
+        let cmp = compare_formats(9, 8, true, "fmt-unit", |g| {
+            crate::algs::pagerank::pagerank_push(g, 0.85, 1e-8, &ecfg).report
+        });
+        assert!(
+            cmp.v2_adj_bytes * 2 < cmp.v1_adj_bytes,
+            "v2 adj {} should be well under half of v1 {}",
+            cmp.v2_adj_bytes,
+            cmp.v1_adj_bytes
+        );
+        assert!(
+            cmp.v2.io.logical_bytes < cmp.v1.io.logical_bytes,
+            "compressed records must shrink logical read volume"
+        );
+        assert!(
+            cmp.v2.io.bytes_read <= cmp.v1.io.bytes_read,
+            "fewer pages should leave disk: v2 {} vs v1 {}",
+            cmp.v2.io.bytes_read,
+            cmp.v1.io.bytes_read
+        );
+        // identical results aside: both ran the same algorithm to completion
+        assert!(cmp.v1.rounds > 0 && cmp.v2.rounds > 0);
+    }
 
     #[test]
     fn measure_io_reports_only_the_measured_section() {

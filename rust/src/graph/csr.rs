@@ -166,6 +166,7 @@ mod tests {
                 img.index.in_deg(v),
                 img.index.out_deg(v),
                 EdgeRequest::Both,
+                img.index.encoding(),
             );
             assert_eq!(ve.out_neighbors, c.out(v));
             assert_eq!(ve.in_neighbors, c.inn(v));

@@ -1,32 +1,92 @@
-//! On-disk graph image format.
+//! On-disk graph image format (versions 1 and 2).
 //!
-//! A graph image is two files:
+//! A graph image is two files (full byte-level spec: `docs/FORMAT.md`):
 //!
 //! * `<name>.gy-idx` — header + per-vertex index. The index is the O(n)
-//!   state SEM keeps in memory: 16 bytes per vertex (adjacency byte
-//!   offset, in-degree, out-degree).
+//!   state SEM keeps in memory: byte offset of the vertex's adjacency
+//!   record, its in-degree and out-degree, and (v2 only) the compressed
+//!   byte lengths of its two edge sections.
 //! * `<name>.gy-adj` — packed adjacency records, O(m), never held in
-//!   memory in full. Directed record: `[in-neighbors u32 × in_deg]
-//!   [out-neighbors u32 × out_deg]`; undirected record: `[neighbors u32 ×
-//!   deg]` (stored in `out`). Neighbor lists are sorted ascending — the
-//!   triangle-counting optimizations (§4.5) rely on this.
+//!   memory in full. Directed record: `[in-section][out-section]`;
+//!   undirected record: one section holding all neighbors (stored as
+//!   `out`). Neighbor lists are sorted ascending — the triangle-counting
+//!   optimizations (§4.5) rely on this.
 //!
-//! All integers are little-endian.
+//! Per-version section encoding ([`EdgeEncoding`]):
+//!
+//! * **v1** ([`EdgeEncoding::FixedU32`]): each neighbor is a raw
+//!   little-endian `u32`; a section is exactly `4 × degree` bytes.
+//! * **v2** ([`EdgeEncoding::DeltaVarint`]): each section is the sorted
+//!   list delta-coded and LEB128-varint-packed ([`super::varint`]) —
+//!   first neighbor verbatim, then successive gaps. Section byte lengths
+//!   become data-dependent, so the v2 index carries them per vertex
+//!   (24-byte entries vs v1's 16).
+//!
+//! All fixed-width integers are little-endian. v1 images keep working
+//! unchanged: the header's version field selects the decode path
+//! everywhere ([`GraphIndex::byte_range`], [`VertexEdges::decode`]).
 
-use anyhow::{bail, ensure};
+use std::fmt;
 
+use anyhow::ensure;
+
+use crate::graph::varint;
 use crate::VertexId;
 
 /// Magic bytes at the start of the index file.
 pub const MAGIC: &[u8; 8] = b"GRAPHYTI";
-/// Format version.
-pub const VERSION: u32 = 1;
-/// Header length in bytes.
+/// Format version 1: fixed-width `u32` neighbors.
+pub const VERSION_V1: u32 = 1;
+/// Format version 2: delta + LEB128-varint neighbor sections.
+pub const VERSION_V2: u32 = 2;
+/// Header length in bytes (identical for all versions).
 pub const HEADER_LEN: usize = 40;
-/// Bytes per index entry.
-pub const IDX_ENTRY_LEN: usize = 16;
+/// Bytes per v1 index entry (offset u64, in_deg u32, out_deg u32).
+pub const IDX_ENTRY_LEN_V1: usize = 16;
+/// Bytes per v2 index entry (v1 fields + in_bytes u32, out_bytes u32).
+pub const IDX_ENTRY_LEN_V2: usize = 24;
 
-/// Image header.
+/// Typed image-format error. Returned (wrapped in [`anyhow::Error`], so
+/// `downcast_ref::<FormatError>()` recovers it) by the header/index
+/// decoders; callers that care which way an image is invalid — notably
+/// version negotiation — match on this instead of parsing messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FormatError {
+    /// The first 8 bytes are not [`MAGIC`] — not a graphyti image.
+    BadMagic,
+    /// The header names a version this build cannot read.
+    UnsupportedVersion {
+        /// Version field found in the image.
+        found: u32,
+    },
+}
+
+impl fmt::Display for FormatError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FormatError::BadMagic => write!(f, "bad magic: not a graphyti image"),
+            FormatError::UnsupportedVersion { found } => write!(
+                f,
+                "unsupported image version {found} (this build reads \
+                 {VERSION_V1} and {VERSION_V2})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FormatError {}
+
+/// How a vertex's edge sections are encoded on disk; decided by the
+/// image version and threaded through every decode call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeEncoding {
+    /// v1: raw little-endian `u32` per neighbor.
+    FixedU32,
+    /// v2: sorted deltas, LEB128 varints ([`super::varint`]).
+    DeltaVarint,
+}
+
+/// Image header: the first [`HEADER_LEN`] bytes of the `.gy-idx` file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GraphHeader {
     /// Number of vertices.
@@ -35,14 +95,36 @@ pub struct GraphHeader {
     pub num_edges: u64,
     /// Directed graph?
     pub directed: bool,
+    /// Format version ([`VERSION_V1`] or [`VERSION_V2`]).
+    pub version: u32,
 }
 
 impl GraphHeader {
+    /// Edge-section encoding implied by the version.
+    #[inline]
+    pub fn encoding(&self) -> EdgeEncoding {
+        if self.version >= VERSION_V2 {
+            EdgeEncoding::DeltaVarint
+        } else {
+            EdgeEncoding::FixedU32
+        }
+    }
+
+    /// Index entry size implied by the version.
+    #[inline]
+    pub fn entry_len(&self) -> usize {
+        if self.version >= VERSION_V2 {
+            IDX_ENTRY_LEN_V2
+        } else {
+            IDX_ENTRY_LEN_V1
+        }
+    }
+
     /// Serialize to the fixed-size on-disk layout.
     pub fn encode(&self) -> [u8; HEADER_LEN] {
         let mut out = [0u8; HEADER_LEN];
         out[..8].copy_from_slice(MAGIC);
-        out[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        out[8..12].copy_from_slice(&self.version.to_le_bytes());
         let flags: u32 = self.directed as u32;
         out[12..16].copy_from_slice(&flags.to_le_bytes());
         out[16..24].copy_from_slice(&self.num_vertices.to_le_bytes());
@@ -51,26 +133,37 @@ impl GraphHeader {
         out
     }
 
-    /// Parse and validate a header.
+    /// Parse and validate a header. Images whose version field is
+    /// neither [`VERSION_V1`] nor [`VERSION_V2`] are rejected with
+    /// [`FormatError::UnsupportedVersion`] naming the found version.
     pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
         ensure!(bytes.len() >= HEADER_LEN, "index file too short for header");
-        ensure!(&bytes[..8] == MAGIC, "bad magic: not a graphyti image");
+        if &bytes[..8] != MAGIC {
+            return Err(anyhow::Error::new(FormatError::BadMagic));
+        }
         let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        if version != VERSION {
-            bail!("unsupported image version {version} (expected {VERSION})");
+        if version != VERSION_V1 && version != VERSION_V2 {
+            return Err(anyhow::Error::new(FormatError::UnsupportedVersion {
+                found: version,
+            }));
         }
         let flags = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
         Ok(GraphHeader {
             num_vertices: u64::from_le_bytes(bytes[16..24].try_into().unwrap()),
             num_edges: u64::from_le_bytes(bytes[24..32].try_into().unwrap()),
             directed: flags & 1 != 0,
+            version,
         })
     }
 }
 
 /// In-memory per-vertex index: the O(n) SEM state.
 ///
-/// Kept in struct-of-arrays form; 16 bytes/vertex on disk and in memory.
+/// Kept in struct-of-arrays form. v1: 16 bytes/vertex on disk and in
+/// memory. v2: 24 bytes/vertex — the two extra `u32`s are the
+/// compressed byte lengths of the vertex's in- and out-sections, which
+/// [`Self::byte_range`] needs because varint sections are not
+/// degree-computable.
 #[derive(Debug, Clone)]
 pub struct GraphIndex {
     header: GraphHeader,
@@ -78,25 +171,71 @@ pub struct GraphIndex {
     offsets: Vec<u64>,
     in_degs: Vec<u32>,
     out_degs: Vec<u32>,
+    /// v2 only: compressed byte length of each in-section (empty for v1).
+    in_bytes: Vec<u32>,
+    /// v2 only: compressed byte length of each out-section (empty for v1).
+    out_bytes: Vec<u32>,
 }
 
 impl GraphIndex {
-    /// Assemble an index (used by the builder).
+    /// Assemble a v1 index (used by the builder and tests).
+    ///
+    /// Panics if `header.version` is not [`VERSION_V1`] or the column
+    /// lengths disagree with `header.num_vertices`.
     pub fn new(
         header: GraphHeader,
         offsets: Vec<u64>,
         in_degs: Vec<u32>,
         out_degs: Vec<u32>,
     ) -> Self {
+        assert_eq!(header.version, VERSION_V1, "use new_v2 for v2 indexes");
         assert_eq!(offsets.len() as u64, header.num_vertices);
         assert_eq!(in_degs.len(), offsets.len());
         assert_eq!(out_degs.len(), offsets.len());
-        GraphIndex { header, offsets, in_degs, out_degs }
+        GraphIndex {
+            header,
+            offsets,
+            in_degs,
+            out_degs,
+            in_bytes: Vec::new(),
+            out_bytes: Vec::new(),
+        }
+    }
+
+    /// Assemble a v2 index: degree columns plus the per-vertex
+    /// compressed section lengths the builder measured while packing.
+    pub fn new_v2(
+        header: GraphHeader,
+        offsets: Vec<u64>,
+        in_degs: Vec<u32>,
+        out_degs: Vec<u32>,
+        in_bytes: Vec<u32>,
+        out_bytes: Vec<u32>,
+    ) -> Self {
+        assert_eq!(header.version, VERSION_V2, "use new for v1 indexes");
+        assert_eq!(offsets.len() as u64, header.num_vertices);
+        assert_eq!(in_degs.len(), offsets.len());
+        assert_eq!(out_degs.len(), offsets.len());
+        assert_eq!(in_bytes.len(), offsets.len());
+        assert_eq!(out_bytes.len(), offsets.len());
+        GraphIndex { header, offsets, in_degs, out_degs, in_bytes, out_bytes }
     }
 
     /// Image header.
     pub fn header(&self) -> &GraphHeader {
         &self.header
+    }
+
+    /// Edge-section encoding of this image.
+    #[inline]
+    pub fn encoding(&self) -> EdgeEncoding {
+        self.header.encoding()
+    }
+
+    /// Bytes per index entry for this image's version (16 or 24).
+    #[inline]
+    pub fn entry_len(&self) -> usize {
+        self.header.entry_len()
     }
 
     /// Vertex count.
@@ -132,59 +271,99 @@ impl GraphIndex {
         self.in_degs[v as usize] + self.out_degs[v as usize]
     }
 
-    /// Byte length of a vertex's full adjacency record.
+    /// On-disk byte length of a vertex's in-section.
     #[inline]
-    pub fn record_len(&self, v: VertexId) -> usize {
-        (self.in_degs[v as usize] as usize + self.out_degs[v as usize] as usize) * 4
+    fn in_section_len(&self, v: VertexId) -> usize {
+        match self.header.encoding() {
+            EdgeEncoding::FixedU32 => self.in_degs[v as usize] as usize * 4,
+            EdgeEncoding::DeltaVarint => self.in_bytes[v as usize] as usize,
+        }
     }
 
-    /// Byte range in the adj file for the given request.
+    /// On-disk byte length of a vertex's out-section.
+    #[inline]
+    fn out_section_len(&self, v: VertexId) -> usize {
+        match self.header.encoding() {
+            EdgeEncoding::FixedU32 => self.out_degs[v as usize] as usize * 4,
+            EdgeEncoding::DeltaVarint => self.out_bytes[v as usize] as usize,
+        }
+    }
+
+    /// Byte length of a vertex's full adjacency record on disk.
+    #[inline]
+    pub fn record_len(&self, v: VertexId) -> usize {
+        self.in_section_len(v) + self.out_section_len(v)
+    }
+
+    /// Byte range in the adj file for the given request — the SEM read
+    /// path's translation from "which lists" to "which bytes". For v2
+    /// the lengths come from the stored compressed section sizes, so
+    /// every request reads exactly the compressed bytes it needs.
     #[inline]
     pub fn byte_range(&self, v: VertexId, req: EdgeRequest) -> (u64, usize) {
         let off = self.offsets[v as usize];
-        let in_bytes = self.in_degs[v as usize] as usize * 4;
-        let out_bytes = self.out_degs[v as usize] as usize * 4;
         match req {
             EdgeRequest::None => (off, 0),
-            EdgeRequest::In => (off, in_bytes),
-            EdgeRequest::Out => (off + in_bytes as u64, out_bytes),
-            EdgeRequest::Both => (off, in_bytes + out_bytes),
+            EdgeRequest::In => (off, self.in_section_len(v)),
+            EdgeRequest::Out => {
+                (off + self.in_section_len(v) as u64, self.out_section_len(v))
+            }
+            EdgeRequest::Both => (off, self.in_section_len(v) + self.out_section_len(v)),
         }
     }
 
     /// Serialize header + entries to the `.gy-idx` byte layout.
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(HEADER_LEN + self.offsets.len() * IDX_ENTRY_LEN);
+        let entry = self.entry_len();
+        let mut out = Vec::with_capacity(HEADER_LEN + self.offsets.len() * entry);
         out.extend_from_slice(&self.header.encode());
         for i in 0..self.offsets.len() {
             out.extend_from_slice(&self.offsets[i].to_le_bytes());
             out.extend_from_slice(&self.in_degs[i].to_le_bytes());
             out.extend_from_slice(&self.out_degs[i].to_le_bytes());
+            if self.header.version >= VERSION_V2 {
+                out.extend_from_slice(&self.in_bytes[i].to_le_bytes());
+                out.extend_from_slice(&self.out_bytes[i].to_le_bytes());
+            }
         }
         out
     }
 
-    /// Parse a `.gy-idx` byte image.
+    /// Parse a `.gy-idx` byte image (either version; the header's
+    /// version field selects the entry layout).
     pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
         let header = GraphHeader::decode(bytes)?;
         let n = header.num_vertices as usize;
+        let entry = header.entry_len();
+        // checked arithmetic: a corrupt vertex count must yield this
+        // clean error, not a wrapped bound that passes and then aborts
+        // on a huge allocation
+        let need = n
+            .checked_mul(entry)
+            .and_then(|b| b.checked_add(HEADER_LEN))
+            .ok_or_else(|| anyhow::anyhow!("implausible vertex count {n} in header"))?;
         ensure!(
-            bytes.len() >= HEADER_LEN + n * IDX_ENTRY_LEN,
-            "index file truncated: {} vertices need {} bytes, have {}",
-            n,
-            HEADER_LEN + n * IDX_ENTRY_LEN,
+            bytes.len() >= need,
+            "index file truncated: {n} vertices need {need} bytes, have {}",
             bytes.len()
         );
+        let v2 = header.version >= VERSION_V2;
         let mut offsets = Vec::with_capacity(n);
         let mut in_degs = Vec::with_capacity(n);
         let mut out_degs = Vec::with_capacity(n);
+        let mut in_bytes = Vec::with_capacity(if v2 { n } else { 0 });
+        let mut out_bytes = Vec::with_capacity(if v2 { n } else { 0 });
         for i in 0..n {
-            let e = HEADER_LEN + i * IDX_ENTRY_LEN;
+            let e = HEADER_LEN + i * entry;
             offsets.push(u64::from_le_bytes(bytes[e..e + 8].try_into().unwrap()));
             in_degs.push(u32::from_le_bytes(bytes[e + 8..e + 12].try_into().unwrap()));
             out_degs.push(u32::from_le_bytes(bytes[e + 12..e + 16].try_into().unwrap()));
+            if v2 {
+                in_bytes.push(u32::from_le_bytes(bytes[e + 16..e + 20].try_into().unwrap()));
+                out_bytes.push(u32::from_le_bytes(bytes[e + 20..e + 24].try_into().unwrap()));
+            }
         }
-        Ok(GraphIndex { header, offsets, in_degs, out_degs })
+        Ok(GraphIndex { header, offsets, in_degs, out_degs, in_bytes, out_bytes })
     }
 }
 
@@ -204,6 +383,15 @@ pub enum EdgeRequest {
 }
 
 /// Decoded edge data for one vertex, as fetched by the engine.
+///
+/// The neighbor vectors double as scratch buffers: [`Self::decode_into`]
+/// clears and refills them in place, so a caller looping over many
+/// records and not keeping them (the streaming image converter,
+/// [`crate::graph::builder::convert_image`]) reuses one allocation
+/// instead of constructing fresh vectors per vertex. The fetch paths
+/// return owned values and use [`Self::decode`], which performs exactly
+/// one exact-capacity allocation per requested list — same as v1 — with
+/// no varint-decode temporaries.
 #[derive(Debug, Clone, Default)]
 pub struct VertexEdges {
     /// In-neighbors (empty unless requested; undirected graphs use `out`).
@@ -213,36 +401,86 @@ pub struct VertexEdges {
 }
 
 impl VertexEdges {
-    /// Decode from a record byte slice per the request that produced it.
-    pub fn decode(bytes: &[u8], in_deg: u32, out_deg: u32, req: EdgeRequest) -> Self {
+    /// Decode a record byte slice (per the request that produced it)
+    /// into a fresh value. `enc` must match the image the bytes came
+    /// from — [`GraphIndex::encoding`] supplies it.
+    pub fn decode(
+        bytes: &[u8],
+        in_deg: u32,
+        out_deg: u32,
+        req: EdgeRequest,
+        enc: EdgeEncoding,
+    ) -> Self {
+        let mut out = VertexEdges::default();
+        out.decode_into(bytes, in_deg, out_deg, req, enc);
+        out
+    }
+
+    /// Decode in place, reusing this value's vectors as scratch: both
+    /// lists are cleared, then the requested ones refilled. Use this
+    /// when looping over many records without keeping them (the
+    /// streaming converter does) to amortize the two allocations away.
+    pub fn decode_into(
+        &mut self,
+        bytes: &[u8],
+        in_deg: u32,
+        out_deg: u32,
+        req: EdgeRequest,
+        enc: EdgeEncoding,
+    ) {
+        self.in_neighbors.clear();
+        self.out_neighbors.clear();
+        match enc {
+            EdgeEncoding::FixedU32 => self.decode_fixed(bytes, in_deg, out_deg, req),
+            EdgeEncoding::DeltaVarint => self.decode_varint(bytes, in_deg, out_deg, req),
+        }
+    }
+
+    /// v1 section decode: `4 × degree` raw little-endian words.
+    fn decode_fixed(&mut self, bytes: &[u8], in_deg: u32, out_deg: u32, req: EdgeRequest) {
         let word = |b: &[u8], i: usize| {
             VertexId::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap())
         };
         match req {
-            EdgeRequest::None => VertexEdges::default(),
+            EdgeRequest::None => {}
             EdgeRequest::In => {
                 debug_assert_eq!(bytes.len(), in_deg as usize * 4);
-                VertexEdges {
-                    in_neighbors: (0..in_deg as usize).map(|i| word(bytes, i)).collect(),
-                    out_neighbors: Vec::new(),
-                }
+                self.in_neighbors.extend((0..in_deg as usize).map(|i| word(bytes, i)));
             }
             EdgeRequest::Out => {
                 debug_assert_eq!(bytes.len(), out_deg as usize * 4);
-                VertexEdges {
-                    in_neighbors: Vec::new(),
-                    out_neighbors: (0..out_deg as usize).map(|i| word(bytes, i)).collect(),
-                }
+                self.out_neighbors.extend((0..out_deg as usize).map(|i| word(bytes, i)));
             }
             EdgeRequest::Both => {
                 debug_assert_eq!(bytes.len(), (in_deg + out_deg) as usize * 4);
                 let ind = in_deg as usize;
-                VertexEdges {
-                    in_neighbors: (0..ind).map(|i| word(bytes, i)).collect(),
-                    out_neighbors: (0..out_deg as usize)
-                        .map(|i| word(bytes, ind + i))
-                        .collect(),
-                }
+                self.in_neighbors.extend((0..ind).map(|i| word(bytes, i)));
+                self.out_neighbors
+                    .extend((0..out_deg as usize).map(|i| word(bytes, ind + i)));
+            }
+        }
+    }
+
+    /// v2 section decode: delta+varint streams, `[in][out]` when both
+    /// are present. The in-stream's end is found by decoding it (varint
+    /// sections are self-delimiting given the count), so `Both` needs no
+    /// stored split point.
+    fn decode_varint(&mut self, bytes: &[u8], in_deg: u32, out_deg: u32, req: EdgeRequest) {
+        let mut pos = 0usize;
+        match req {
+            EdgeRequest::None => {}
+            EdgeRequest::In => {
+                varint::decode_deltas(bytes, in_deg as usize, &mut pos, &mut self.in_neighbors);
+                debug_assert_eq!(pos, bytes.len());
+            }
+            EdgeRequest::Out => {
+                varint::decode_deltas(bytes, out_deg as usize, &mut pos, &mut self.out_neighbors);
+                debug_assert_eq!(pos, bytes.len());
+            }
+            EdgeRequest::Both => {
+                varint::decode_deltas(bytes, in_deg as usize, &mut pos, &mut self.in_neighbors);
+                varint::decode_deltas(bytes, out_deg as usize, &mut pos, &mut self.out_neighbors);
+                debug_assert_eq!(pos, bytes.len());
             }
         }
     }
@@ -257,35 +495,62 @@ impl VertexEdges {
 mod tests {
     use super::*;
 
+    fn header_v1(n: u64, m: u64, directed: bool) -> GraphHeader {
+        GraphHeader { num_vertices: n, num_edges: m, directed, version: VERSION_V1 }
+    }
+
     #[test]
-    fn header_roundtrip() {
-        let h = GraphHeader { num_vertices: 42, num_edges: 99, directed: true };
-        let enc = h.encode();
-        assert_eq!(GraphHeader::decode(&enc).unwrap(), h);
-        let h2 = GraphHeader { num_vertices: 0, num_edges: 0, directed: false };
+    fn header_roundtrip_both_versions() {
+        for version in [VERSION_V1, VERSION_V2] {
+            let h = GraphHeader { num_vertices: 42, num_edges: 99, directed: true, version };
+            let enc = h.encode();
+            assert_eq!(GraphHeader::decode(&enc).unwrap(), h);
+        }
+        let h2 = header_v1(0, 0, false);
         assert_eq!(GraphHeader::decode(&h2.encode()).unwrap(), h2);
     }
 
     #[test]
     fn header_rejects_garbage() {
         assert!(GraphHeader::decode(b"short").is_err());
-        let mut bad = GraphHeader { num_vertices: 1, num_edges: 1, directed: true }.encode();
+        let mut bad = header_v1(1, 1, true).encode();
         bad[0] = b'X';
-        assert!(GraphHeader::decode(&bad).is_err());
-        let mut badver = GraphHeader { num_vertices: 1, num_edges: 1, directed: true }.encode();
+        let err = GraphHeader::decode(&bad).unwrap_err();
+        assert_eq!(err.downcast_ref::<FormatError>(), Some(&FormatError::BadMagic));
+    }
+
+    #[test]
+    fn header_rejects_unknown_version_with_typed_error() {
+        let mut badver = header_v1(1, 1, true).encode();
         badver[8] = 99;
-        assert!(GraphHeader::decode(&badver).is_err());
+        let err = GraphHeader::decode(&badver).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<FormatError>(),
+            Some(&FormatError::UnsupportedVersion { found: 99 }),
+            "error must name the found version: {err:#}"
+        );
+        assert!(format!("{err}").contains("99"), "message must name the version: {err}");
+        // version 0 (pre-versioned garbage) is equally rejected
+        let mut zero = header_v1(1, 1, true).encode();
+        zero[8..12].copy_from_slice(&0u32.to_le_bytes());
+        let err = GraphHeader::decode(&zero).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<FormatError>(),
+            Some(&FormatError::UnsupportedVersion { found: 0 })
+        );
     }
 
     #[test]
     fn index_roundtrip_and_ranges() {
-        let h = GraphHeader { num_vertices: 3, num_edges: 5, directed: true };
+        let h = header_v1(3, 5, true);
         // v0: in=[..1], out=[..2] at offset 0 => 12 bytes
         // v1: in=0 out=1 at 12; v2: in=1 out=0 at 16
         let idx = GraphIndex::new(h, vec![0, 12, 16], vec![1, 0, 1], vec![2, 1, 0]);
         let enc = idx.encode();
         let dec = GraphIndex::decode(&enc).unwrap();
         assert_eq!(dec.num_vertices(), 3);
+        assert_eq!(dec.entry_len(), IDX_ENTRY_LEN_V1);
+        assert_eq!(dec.encoding(), EdgeEncoding::FixedU32);
         assert_eq!(dec.in_deg(0), 1);
         assert_eq!(dec.out_deg(0), 2);
         assert_eq!(dec.degree(2), 1);
@@ -298,8 +563,43 @@ mod tests {
     }
 
     #[test]
+    fn v2_index_roundtrip_uses_stored_section_bytes() {
+        let h = GraphHeader { num_vertices: 2, num_edges: 4, directed: true, version: VERSION_V2 };
+        // v0: in-section 3 bytes, out-section 5 bytes at offset 0
+        // v1: in-section 0 bytes, out-section 2 bytes at offset 8
+        let idx = GraphIndex::new_v2(
+            h,
+            vec![0, 8],
+            vec![2, 0],
+            vec![1, 1],
+            vec![3, 0],
+            vec![5, 2],
+        );
+        let enc = idx.encode();
+        assert_eq!(enc.len(), HEADER_LEN + 2 * IDX_ENTRY_LEN_V2);
+        let dec = GraphIndex::decode(&enc).unwrap();
+        assert_eq!(dec.encoding(), EdgeEncoding::DeltaVarint);
+        assert_eq!(dec.entry_len(), IDX_ENTRY_LEN_V2);
+        assert_eq!(dec.byte_range(0, EdgeRequest::In), (0, 3));
+        assert_eq!(dec.byte_range(0, EdgeRequest::Out), (3, 5));
+        assert_eq!(dec.byte_range(0, EdgeRequest::Both), (0, 8));
+        assert_eq!(dec.byte_range(1, EdgeRequest::Out), (8, 2));
+        assert_eq!(dec.record_len(0), 8);
+        assert_eq!(dec.record_len(1), 2);
+    }
+
+    #[test]
+    fn index_decode_rejects_implausible_vertex_count() {
+        // num_vertices large enough that n * entry_len overflows usize:
+        // must come back as a clean error, not a wrap/abort
+        let mut bytes = header_v1(0, 0, false).encode().to_vec();
+        bytes[16..24].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        assert!(GraphIndex::decode(&bytes).is_err());
+    }
+
+    #[test]
     fn index_decode_rejects_truncation() {
-        let h = GraphHeader { num_vertices: 10, num_edges: 0, directed: false };
+        let h = header_v1(10, 0, false);
         let idx = GraphIndex::new(h, vec![0; 10], vec![0; 10], vec![0; 10]);
         let mut enc = idx.encode();
         enc.truncate(enc.len() - 1);
@@ -307,7 +607,7 @@ mod tests {
     }
 
     #[test]
-    fn vertex_edges_decode_both() {
+    fn vertex_edges_decode_both_fixed() {
         let mut bytes = Vec::new();
         for v in [7u32, 9] {
             bytes.extend_from_slice(&v.to_le_bytes());
@@ -315,15 +615,55 @@ mod tests {
         for v in [1u32, 2, 3] {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
-        let ve = VertexEdges::decode(&bytes, 2, 3, EdgeRequest::Both);
+        let enc = EdgeEncoding::FixedU32;
+        let ve = VertexEdges::decode(&bytes, 2, 3, EdgeRequest::Both, enc);
         assert_eq!(ve.in_neighbors, vec![7, 9]);
         assert_eq!(ve.out_neighbors, vec![1, 2, 3]);
 
-        let out_only = VertexEdges::decode(&bytes[8..], 2, 3, EdgeRequest::Out);
+        let out_only = VertexEdges::decode(&bytes[8..], 2, 3, EdgeRequest::Out, enc);
         assert_eq!(out_only.out_neighbors, vec![1, 2, 3]);
         assert!(out_only.in_neighbors.is_empty());
 
-        let none = VertexEdges::decode(&[], 2, 3, EdgeRequest::None);
+        let none = VertexEdges::decode(&[], 2, 3, EdgeRequest::None, enc);
         assert!(none.in_neighbors.is_empty() && none.out_neighbors.is_empty());
+    }
+
+    #[test]
+    fn vertex_edges_decode_both_varint() {
+        let ins = vec![7u32, 9];
+        let outs = vec![1u32, 2, 300_000];
+        let mut bytes = Vec::new();
+        varint::encode_deltas(&ins, &mut bytes);
+        let in_len = bytes.len();
+        varint::encode_deltas(&outs, &mut bytes);
+        let enc = EdgeEncoding::DeltaVarint;
+        let ve = VertexEdges::decode(&bytes, 2, 3, EdgeRequest::Both, enc);
+        assert_eq!(ve.in_neighbors, ins);
+        assert_eq!(ve.out_neighbors, outs);
+
+        let in_only = VertexEdges::decode(&bytes[..in_len], 2, 3, EdgeRequest::In, enc);
+        assert_eq!(in_only.in_neighbors, ins);
+        assert!(in_only.out_neighbors.is_empty());
+
+        let out_only = VertexEdges::decode(&bytes[in_len..], 2, 3, EdgeRequest::Out, enc);
+        assert_eq!(out_only.out_neighbors, outs);
+        assert!(out_only.in_neighbors.is_empty());
+    }
+
+    #[test]
+    fn decode_into_reuses_buffers() {
+        let mut bytes = Vec::new();
+        varint::encode_deltas(&[4u32, 8, 15], &mut bytes);
+        let mut ve = VertexEdges::default();
+        ve.decode_into(&bytes, 0, 3, EdgeRequest::Out, EdgeEncoding::DeltaVarint);
+        assert_eq!(ve.out_neighbors, vec![4, 8, 15]);
+        let cap = ve.out_neighbors.capacity();
+        // second decode of a smaller record must not reallocate
+        let mut bytes2 = Vec::new();
+        varint::encode_deltas(&[16u32, 23], &mut bytes2);
+        ve.decode_into(&bytes2, 0, 2, EdgeRequest::Out, EdgeEncoding::DeltaVarint);
+        assert_eq!(ve.out_neighbors, vec![16, 23]);
+        assert_eq!(ve.out_neighbors.capacity(), cap, "scratch buffer must be reused");
+        assert!(ve.in_neighbors.is_empty());
     }
 }

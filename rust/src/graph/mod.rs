@@ -2,9 +2,13 @@
 //!
 //! * [`format`] — the on-disk graph image (FlashGraph analogue): a small
 //!   in-memory index (O(n)) plus a packed adjacency file (O(m)) that
-//!   stays on disk and is read through [`crate::safs`].
+//!   stays on disk and is read through [`crate::safs`]. Two versions:
+//!   v1 (fixed-width `u32` neighbors) and v2 (delta+varint compressed
+//!   sections, ~3x smaller on real graphs); see `docs/FORMAT.md`.
+//! * [`varint`] — the LEB128 + delta-coding primitives behind v2.
 //! * [`builder`] — edge-list → graph-image conversion (sort, dedup,
-//!   pack), to files or to RAM buffers (the Louvain "RAMDisk" baseline).
+//!   pack, either format version), to files or to RAM buffers (the
+//!   Louvain "RAMDisk" baseline), plus v1 ↔ v2 image conversion.
 //! * [`csr`] — in-memory CSR graph: the "fully in-memory execution"
 //!   baseline of the paper's headline comparison, and the substrate for
 //!   oracle implementations in tests.
@@ -19,8 +23,11 @@ pub mod csr;
 pub mod format;
 pub mod gen;
 pub mod source;
+pub mod varint;
 
 pub use builder::GraphBuilder;
 pub use csr::Csr;
-pub use format::{EdgeRequest, GraphHeader, GraphIndex, VertexEdges};
+pub use format::{
+    EdgeEncoding, EdgeRequest, FormatError, GraphHeader, GraphIndex, VertexEdges,
+};
 pub use source::{EdgeSource, MemGraph, SemGraph};

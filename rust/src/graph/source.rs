@@ -10,6 +10,13 @@
 //!   disk).
 //! * [`MemGraph`] — the in-memory baseline: the same packed image held in
 //!   RAM; fetches decode straight from the buffer.
+//!
+//! Both sources are format-version agnostic: the image header selects
+//! the record encoding (v1 fixed-width or v2 delta+varint, see
+//! [`crate::graph::format`]) and every fetch decodes with
+//! [`GraphIndex::encoding`]. A v2 image reads proportionally fewer
+//! bytes per fetch — the compression shows up directly in
+//! `logical_bytes`/`bytes_read` of [`crate::safs::IoStats`].
 
 use std::path::Path;
 use std::sync::Arc;
@@ -105,11 +112,12 @@ impl SemGraph {
             j.add_logical_bytes(logical);
         }
         let bufs = self.adj.read_ranges_tracked(&ranges, job)?;
+        let enc = self.index.encoding();
         Ok(reqs
             .iter()
             .zip(bufs)
             .map(|(&(v, r), buf)| {
-                VertexEdges::decode(&buf, self.index.in_deg(v), self.index.out_deg(v), r)
+                VertexEdges::decode(&buf, self.index.in_deg(v), self.index.out_deg(v), r, enc)
             })
             .collect())
     }
@@ -138,7 +146,7 @@ impl EdgeSource for SemGraph {
         // Index entries only: the page cache's resident bytes are
         // accounted by the coordinator, which owns the cache capacity
         // knob (resident <= capacity by construction).
-        self.index.num_vertices() as u64 * super::format::IDX_ENTRY_LEN as u64
+        self.index.num_vertices() as u64 * self.index.entry_len() as u64
     }
 }
 
@@ -173,6 +181,7 @@ impl EdgeSource for MemGraph {
         self.stats.add_logical_bytes(
             reqs.iter().map(|&(v, r)| self.index.byte_range(v, r).1 as u64).sum(),
         );
+        let enc = self.index.encoding();
         Ok(reqs
             .iter()
             .map(|&(v, r)| {
@@ -182,6 +191,7 @@ impl EdgeSource for MemGraph {
                     self.index.in_deg(v),
                     self.index.out_deg(v),
                     r,
+                    enc,
                 )
             })
             .collect())
@@ -192,7 +202,7 @@ impl EdgeSource for MemGraph {
     }
 
     fn resident_bytes(&self) -> u64 {
-        (self.index.num_vertices() * super::format::IDX_ENTRY_LEN + self.adj.len()) as u64
+        (self.index.num_vertices() * self.index.entry_len() + self.adj.len()) as u64
     }
 }
 
@@ -253,6 +263,40 @@ mod tests {
         assert_eq!(sem.io_stats().snapshot().read_requests, 50);
         let _ = std::fs::remove_file(base.with_extension("gy-idx"));
         let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+
+    #[test]
+    fn sem_v2_image_agrees_and_reads_fewer_bytes() {
+        let n = 300;
+        let edges = gen::rmat(9, 3000, 5);
+        let edges: Vec<_> = edges
+            .into_iter()
+            .filter(|&(u, v)| (u as usize) < n && (v as usize) < n)
+            .collect();
+        let base2 = std::env::temp_dir()
+            .join(format!("graphyti-source-{}-v2", std::process::id()));
+        let mut b = GraphBuilder::new(n, true);
+        b.add_edges(&edges).format_version(crate::graph::format::VERSION_V2);
+        b.build_files(&base2).unwrap();
+        let sem2 = SemGraph::open(&base2, 64 * 4096, IoConfig::default()).unwrap();
+        let mem = MemGraph::from_edges(n, &edges, true);
+        for v in 0..n as VertexId {
+            for req in [EdgeRequest::In, EdgeRequest::Out, EdgeRequest::Both] {
+                let a = sem2.fetch(v, req).unwrap();
+                let b = mem.fetch(v, req).unwrap();
+                assert_eq!(a.in_neighbors, b.in_neighbors, "v={v} {req:?}");
+                assert_eq!(a.out_neighbors, b.out_neighbors, "v={v} {req:?}");
+            }
+        }
+        // compressed sections => strictly fewer logical bytes than the
+        // same fetches against fixed-width v1 records would request
+        let v1_logical: u64 = (0..n as VertexId)
+            .map(|v| 2 * 4 * (mem.index().degree(v) as u64))
+            .sum();
+        let got = sem2.io_stats().snapshot().logical_bytes;
+        assert!(got < v1_logical, "v2 logical {got} !< v1 equivalent {v1_logical}");
+        let _ = std::fs::remove_file(base2.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base2.with_extension("gy-adj"));
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! LEB128 varint codec + delta coding for sorted neighbor lists — the
+//! byte-level primitives of the v2 graph image format.
+//!
+//! Encoding rules (see `docs/FORMAT.md` for the full spec):
+//!
+//! * **Varint (LEB128):** a `u32` is emitted as 1–5 bytes, little-endian
+//!   base-128 groups, low 7 bits first; the high bit of each byte is a
+//!   continuation flag. Values `< 128` take one byte.
+//! * **Delta coding:** a sorted-ascending neighbor list `[v0, v1, ...]`
+//!   is stored as `varint(v0), varint(v1 - v0), varint(v2 - v1), ...`.
+//!   Real graphs have many small gaps between consecutive sorted
+//!   neighbors, so most deltas fit in one byte — this is where the
+//!   ~3x on-disk reduction over fixed-width `u32` comes from.
+//!
+//! Decoding is allocation-free: values are appended into a
+//! caller-provided buffer and the cursor advances through the byte
+//! stream without intermediate copies.
+
+use crate::VertexId;
+
+/// Number of bytes [`encode_u32`] emits for `v` (1–5).
+#[inline]
+pub fn encoded_len(v: u32) -> usize {
+    match v {
+        0..=0x7F => 1,
+        0x80..=0x3FFF => 2,
+        0x4000..=0x1F_FFFF => 3,
+        0x20_0000..=0xFFF_FFFF => 4,
+        _ => 5,
+    }
+}
+
+/// Append the LEB128 encoding of `v` to `out`.
+#[inline]
+pub fn encode_u32(mut v: u32, out: &mut Vec<u8>) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Decode one LEB128 `u32` starting at `*pos`, advancing `*pos` past it.
+///
+/// Panics (via slice indexing) if the stream is truncated — the SEM read
+/// path only hands this verified in-bounds record slices, matching the
+/// fixed-width decoder's behavior on corrupt data.
+#[inline]
+pub fn decode_u32(bytes: &[u8], pos: &mut usize) -> u32 {
+    let mut v = 0u32;
+    for shift in [0u32, 7, 14, 21, 28] {
+        let b = bytes[*pos];
+        *pos += 1;
+        v |= ((b & 0x7F) as u32) << shift;
+        if b & 0x80 == 0 {
+            return v;
+        }
+    }
+    debug_assert!(false, "varint longer than 5 bytes");
+    v
+}
+
+/// Append the delta+varint encoding of a sorted-ascending list to `out`.
+///
+/// The first element is stored verbatim; each subsequent element as the
+/// difference from its predecessor.
+pub fn encode_deltas(sorted: &[VertexId], out: &mut Vec<u8>) {
+    let mut prev: u32 = 0;
+    for (i, &v) in sorted.iter().enumerate() {
+        debug_assert!(i == 0 || v >= prev, "neighbor list must be sorted ascending");
+        let delta = if i == 0 { v } else { v.wrapping_sub(prev) };
+        encode_u32(delta, out);
+        prev = v;
+    }
+}
+
+/// Byte length [`encode_deltas`] would produce for `sorted`.
+pub fn deltas_len(sorted: &[VertexId]) -> usize {
+    let mut prev: u32 = 0;
+    let mut len = 0;
+    for (i, &v) in sorted.iter().enumerate() {
+        len += encoded_len(if i == 0 { v } else { v.wrapping_sub(prev) });
+        prev = v;
+    }
+    len
+}
+
+/// Decode `count` delta+varint values starting at `*pos`, appending the
+/// reconstructed (absolute) values to `out` and advancing `*pos`.
+pub fn decode_deltas(bytes: &[u8], count: usize, pos: &mut usize, out: &mut Vec<VertexId>) {
+    out.reserve(count);
+    let mut prev: u32 = 0;
+    for i in 0..count {
+        let d = decode_u32(bytes, pos);
+        prev = if i == 0 { d } else { prev.wrapping_add(d) };
+        out.push(prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: u32) {
+        let mut buf = Vec::new();
+        encode_u32(v, &mut buf);
+        assert_eq!(buf.len(), encoded_len(v), "len mismatch for {v}");
+        let mut pos = 0;
+        assert_eq!(decode_u32(&buf, &mut pos), v);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn u32_roundtrip_edge_cases() {
+        // zero, max, and every single-byte/boundary value
+        for v in [
+            0u32,
+            1,
+            0x7F,               // largest 1-byte
+            0x80,               // smallest 2-byte
+            0x3FFF,             // largest 2-byte
+            0x4000,             // smallest 3-byte
+            0x1F_FFFF,          // largest 3-byte
+            0x20_0000,          // smallest 4-byte
+            0xFFF_FFFF,         // largest 4-byte
+            0x1000_0000,        // smallest 5-byte
+            u32::MAX - 1,
+            u32::MAX,
+        ] {
+            roundtrip(v);
+        }
+    }
+
+    #[test]
+    fn u32_roundtrip_sweep() {
+        let mut rng = crate::util::XorShift::new(99);
+        for _ in 0..5000 {
+            roundtrip(rng.next_u64() as u32);
+        }
+    }
+
+    #[test]
+    fn encoded_len_boundaries() {
+        assert_eq!(encoded_len(0), 1);
+        assert_eq!(encoded_len(127), 1);
+        assert_eq!(encoded_len(128), 2);
+        assert_eq!(encoded_len(16_383), 2);
+        assert_eq!(encoded_len(16_384), 3);
+        assert_eq!(encoded_len(u32::MAX), 5);
+    }
+
+    #[test]
+    fn deltas_roundtrip_and_len() {
+        let cases: Vec<Vec<u32>> = vec![
+            vec![],
+            vec![0],
+            vec![u32::MAX],
+            vec![0, 1, 2, 3],
+            vec![5, 5_000, 5_001, 4_000_000_000],
+            (0..1000).map(|i| i * 7 + 3).collect(),
+        ];
+        for list in cases {
+            let mut buf = Vec::new();
+            encode_deltas(&list, &mut buf);
+            assert_eq!(buf.len(), deltas_len(&list), "{list:?}");
+            let mut pos = 0;
+            let mut out = Vec::new();
+            decode_deltas(&buf, list.len(), &mut pos, &mut out);
+            assert_eq!(out, list);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn dense_lists_compress_to_one_byte_per_edge() {
+        // consecutive neighbors => every delta is 1 => 1 byte each
+        let list: Vec<u32> = (1000..2000).collect();
+        let mut buf = Vec::new();
+        encode_deltas(&list, &mut buf);
+        assert_eq!(buf.len(), encoded_len(1000) + (list.len() - 1));
+    }
+
+    #[test]
+    fn concatenated_streams_decode_sequentially() {
+        // the v2 record layout is [in-stream][out-stream] back to back;
+        // the decoder must leave the cursor exactly at the boundary
+        let ins = vec![3u32, 9, 12];
+        let outs = vec![0u32, 500_000];
+        let mut buf = Vec::new();
+        encode_deltas(&ins, &mut buf);
+        let boundary = buf.len();
+        encode_deltas(&outs, &mut buf);
+        let mut pos = 0;
+        let mut got_in = Vec::new();
+        decode_deltas(&buf, ins.len(), &mut pos, &mut got_in);
+        assert_eq!(pos, boundary);
+        let mut got_out = Vec::new();
+        decode_deltas(&buf, outs.len(), &mut pos, &mut got_out);
+        assert_eq!((got_in, got_out), (ins, outs));
+        assert_eq!(pos, buf.len());
+    }
+}

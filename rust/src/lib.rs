@@ -8,8 +8,9 @@
 //! Layering:
 //! * [`safs`] — userspace SEM storage substrate (page cache + async I/O),
 //!   standing in for the paper's SAFS.
-//! * [`graph`] — on-disk graph image format, converters, synthetic
-//!   workload generators, and the in-memory CSR baseline.
+//! * [`graph`] — on-disk graph image format (v1 fixed-width / v2
+//!   delta+varint compressed, see `docs/FORMAT.md`), converters,
+//!   synthetic workload generators, and the in-memory CSR baseline.
 //! * [`engine`] — the vertex-centric BSP engine (FlashGraph analogue):
 //!   activation scheduling, multicast/point-to-point messaging, global
 //!   barriers, asynchronous phase mode, per-iteration statistics.

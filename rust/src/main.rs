@@ -1,7 +1,9 @@
 //! `graphyti` — CLI for the semi-external-memory graph library.
 //!
 //! Subcommands:
-//! * `generate` — synthesize a graph and build its on-disk image.
+//! * `generate` — synthesize a graph and build its on-disk image
+//!   (`--format v1|v2` selects fixed-width or delta+varint edges).
+//! * `convert`  — rewrite an existing image in the other format version.
 //! * `info`     — print image header + degree statistics (no edge I/O).
 //! * `run`      — run a library algorithm in SEM or in-memory mode.
 //! * `verify`   — cross-check SEM PageRank against the AOT XLA/Pallas
@@ -36,6 +38,8 @@ graphyti — a semi-external memory graph library (Graphyti reproduction)
 USAGE:
   graphyti generate --kind rmat|er|ba|grid --scale N --out PATH
                     [--edge-factor F] [--seed S] [--undirected]
+                    [--format v1|v2]
+  graphyti convert  --graph SRC --out DST [--format v1|v2]
   graphyti info     --graph PATH
   graphyti run ALG  --graph PATH [--mem] [--variant V] [--num N]
                     [--cache-mb N] [--io-threads N] [--io-delay-us N]
@@ -52,10 +56,24 @@ ALG: pagerank (push|pull), coreness (graphyti|pruned|unopt),
      diameter (multi|uni), bc (async|sync|uni), triangles
      (graphyti|naive), louvain (graphyti|physical), bfs, wcc, sssp, degree
 
+Formats: v1 stores each neighbor as a raw u32; v2 delta+varint-compresses
+sorted neighbor lists (~3x smaller on real graphs, proportionally less
+read I/O). Every command reads either version transparently; `convert`
+rewrites v1 images as v2 (the default target) and back.
+
 Service mode: `serve` multiplexes concurrent jobs over one shared page
 cache + I/O pool, with an admission budget on summed per-job O(n) state.
 `submit`/`status` speak its JSON-lines TCP protocol.
 ";
+
+/// Parse a `--format` value ("v1"/"1"/"v2"/"2") into a version number.
+fn parse_format(s: &str) -> graphyti::Result<u32> {
+    match s {
+        "v1" | "1" => Ok(graphyti::graph::format::VERSION_V1),
+        "v2" | "2" => Ok(graphyti::graph::format::VERSION_V2),
+        other => anyhow::bail!("unknown format {other} (v1|v2)"),
+    }
+}
 
 /// Minimal `--key value` + positional parser.
 struct Args {
@@ -146,12 +164,14 @@ fn cmd_generate(args: &Args) -> graphyti::Result<()> {
         }
         _ => n,
     };
+    let version = parse_format(args.get("format").unwrap_or("v1"))?;
     let mut b = GraphBuilder::new(nv, directed);
-    b.add_edges(&edges);
+    b.add_edges(&edges).format_version(version);
     let (idx, adj) = b.build_files(&out)?;
     let index = GraphIndex::decode(&std::fs::read(&idx)?)?;
     println!(
-        "generated {kind} scale={scale}: {} vertices, {} edges ({} idx, {} adj) -> {}",
+        "generated {kind} scale={scale} (format v{version}): {} vertices, {} edges \
+         ({} idx, {} adj) -> {}",
         index.num_vertices(),
         index.num_edges(),
         fmt_bytes(std::fs::metadata(&idx)?.len()),
@@ -161,16 +181,41 @@ fn cmd_generate(args: &Args) -> graphyti::Result<()> {
     Ok(())
 }
 
+fn cmd_convert(args: &Args) -> graphyti::Result<()> {
+    let src = PathBuf::from(args.require("graph")?);
+    let dst = PathBuf::from(args.require("out")?);
+    let version = parse_format(args.get("format").unwrap_or("v2"))?;
+    let src_adj = std::fs::metadata(src.with_extension("gy-adj"))?.len();
+    let (idx, adj) = graphyti::graph::builder::convert_image(&src, &dst, version)?;
+    let dst_adj = std::fs::metadata(&adj)?.len();
+    let index = GraphIndex::decode(&std::fs::read(&idx)?)?;
+    println!(
+        "converted {} -> {} (format v{version}): {} vertices, {} edges",
+        src.display(),
+        dst.display(),
+        index.num_vertices(),
+        index.num_edges(),
+    );
+    println!(
+        "adjacency bytes: {} -> {} ({:.2}x)",
+        fmt_bytes(src_adj),
+        fmt_bytes(dst_adj),
+        src_adj as f64 / dst_adj.max(1) as f64
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> graphyti::Result<()> {
     let base = PathBuf::from(args.require("graph")?);
     let index = GraphIndex::decode(&std::fs::read(base.with_extension("gy-idx"))?)?;
     let s = degree_stats(&index);
     println!(
-        "graph {}: {} vertices, {} edges, directed={}",
+        "graph {}: {} vertices, {} edges, directed={}, format v{}",
         base.display(),
         index.num_vertices(),
         index.num_edges(),
-        index.directed()
+        index.directed(),
+        index.header().version
     );
     println!(
         "degree: mean {:.2}, max {} (vertex {}), p50 {}, p99 {}",
@@ -432,6 +477,7 @@ fn main() -> ExitCode {
     let args = Args::parse(&argv);
     let result = match argv[0].as_str() {
         "generate" => cmd_generate(&args),
+        "convert" => cmd_convert(&args),
         "info" => cmd_info(&args),
         "run" => cmd_run(&args),
         "verify" => cmd_verify(&args),

@@ -61,6 +61,8 @@ impl GraphRegistry {
 
     /// Open (or reuse) the image at `<base>.gy-idx` / `<base>.gy-adj`.
     /// Identical paths — after canonicalization — share one `SemGraph`.
+    /// Either format version (v1 fixed-width or v2 delta+varint) opens
+    /// transparently; the image header selects the decode path.
     pub fn open(&self, base: &Path) -> crate::Result<Arc<SemGraph>> {
         // canonicalize through the index file (the base itself usually
         // does not exist as a file); fall back to the raw path so open

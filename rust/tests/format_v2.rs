@@ -1,0 +1,226 @@
+//! Cross-format integration tests: the v2 (delta+varint) image must be
+//! byte-smaller than v1, read less, convert losslessly in both
+//! directions, open transparently through every layer (CLI path,
+//! service registry), and — the load-bearing property — every algorithm
+//! must produce identical results on v1 and v2 images of the same
+//! graph, both matching the in-memory oracle.
+
+use std::path::PathBuf;
+
+use graphyti::algs::bc::{betweenness, BcVariant};
+use graphyti::algs::bfs::bfs;
+use graphyti::algs::coreness::{coreness, CorenessOptions};
+use graphyti::algs::louvain::{louvain, LouvainMode};
+use graphyti::algs::oracle;
+use graphyti::algs::pagerank::pagerank_push;
+use graphyti::algs::sssp::sssp;
+use graphyti::algs::triangles::{triangles, TriangleOptions};
+use graphyti::algs::wcc::wcc;
+use graphyti::coordinator::RunConfig;
+use graphyti::graph::builder::{convert_image, GraphBuilder};
+use graphyti::graph::csr::Csr;
+use graphyti::graph::format::{EdgeRequest, GraphIndex, VERSION_V1, VERSION_V2};
+use graphyti::graph::gen;
+use graphyti::graph::source::{EdgeSource, SemGraph};
+use graphyti::safs::IoConfig;
+use graphyti::service::GraphRegistry;
+use graphyti::VertexId;
+
+fn build_image(
+    n: usize,
+    edges: &[(VertexId, VertexId)],
+    directed: bool,
+    version: u32,
+    tag: &str,
+) -> PathBuf {
+    let base = std::env::temp_dir().join(format!(
+        "graphyti-fmt2-{}-{tag}-v{version}",
+        std::process::id()
+    ));
+    let mut b = GraphBuilder::new(n, directed);
+    b.add_edges(edges).format_version(version);
+    b.build_files(&base).unwrap();
+    base
+}
+
+fn cleanup(base: &PathBuf) {
+    let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+    let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+}
+
+fn adj_len(base: &PathBuf) -> u64 {
+    std::fs::metadata(base.with_extension("gy-adj")).unwrap().len()
+}
+
+#[test]
+fn all_algorithms_identical_on_v1_and_v2() {
+    let n = 1024;
+    let edges = gen::rmat(10, 12_000, 77);
+    let csr_d = Csr::from_edges(n, &edges, true);
+    let csr_u = Csr::from_edges(n, &edges, false);
+    let cfg = RunConfig { cache_mb: 1, io_threads: 3, ..Default::default() };
+    let ecfg = cfg.engine();
+
+    let mut bases = Vec::new();
+    for version in [VERSION_V1, VERSION_V2] {
+        let base_d = build_image(n, &edges, true, version, "algs-d");
+        let base_u = build_image(n, &edges, false, version, "algs-u");
+        let gd = SemGraph::open(&base_d, 64 * 4096, cfg.io()).unwrap();
+        let gu = SemGraph::open(&base_u, 64 * 4096, cfg.io()).unwrap();
+
+        let (lv, _) = bfs(&gd, 0, &ecfg);
+        assert_eq!(lv, oracle::bfs_levels(&csr_d, 0), "bfs v{version}");
+
+        let (dist, _) = sssp(&gd, 0, &ecfg);
+        assert_eq!(dist, oracle::sssp(&csr_d, 0), "sssp v{version}");
+
+        let (labels, _) = wcc(&gd, &ecfg);
+        assert_eq!(labels, oracle::wcc(&csr_d), "wcc v{version}");
+
+        let r = pagerank_push(&gd, 0.85, 1e-12, &ecfg);
+        let want = oracle::pagerank(&csr_d, 0.85, 200);
+        let l1: f64 = r.rank.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 1e-6, "pagerank v{version}: L1 {l1}");
+
+        assert_eq!(
+            coreness(&gu, CorenessOptions::graphyti(), &ecfg).core,
+            oracle::coreness(&csr_u),
+            "coreness v{version}"
+        );
+
+        assert_eq!(
+            triangles(&gu, TriangleOptions::graphyti(), &ecfg).triangles,
+            oracle::triangle_count(&csr_u),
+            "triangles v{version}"
+        );
+
+        let sources: Vec<VertexId> = vec![0, 1, 2, 5, 17];
+        let want_bc = oracle::betweenness(&csr_d, &sources);
+        let got = betweenness(&gd, &sources, BcVariant::MultiSourceAsync, &ecfg);
+        for (i, (a, b)) in got.bc.iter().zip(&want_bc).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-9 * (1.0 + b.abs()),
+                "bc v{version} [{i}]: {a} vs {b}"
+            );
+        }
+
+        let r = louvain(&gu, LouvainMode::Graphyti, 8, &ecfg);
+        let q = oracle::modularity(&csr_u, &r.community);
+        assert!((r.modularity - q).abs() < 1e-6, "louvain v{version}: {} vs {q}", r.modularity);
+
+        bases.push(base_d);
+        bases.push(base_u);
+    }
+    // v2 must actually be smaller on disk (directed and undirected)
+    assert!(adj_len(&bases[2]) * 2 < adj_len(&bases[0]), "directed v2 not small enough");
+    assert!(adj_len(&bases[3]) * 2 < adj_len(&bases[1]), "undirected v2 not small enough");
+    for b in &bases {
+        cleanup(b);
+    }
+}
+
+#[test]
+fn v2_reads_fewer_bytes_under_cache_pressure() {
+    let n = 2048;
+    let edges = gen::rmat(11, 30_000, 5);
+    let base1 = build_image(n, &edges, true, VERSION_V1, "press");
+    let base2 = build_image(n, &edges, true, VERSION_V2, "press");
+    let cfg = RunConfig { cache_mb: 1, io_threads: 3, ..Default::default() };
+    // identical tiny cache (16 pages) for both formats: constant eviction
+    let cache = 16 * 4096;
+    let g1 = SemGraph::open(&base1, cache, cfg.io()).unwrap();
+    let g2 = SemGraph::open(&base2, cache, cfg.io()).unwrap();
+    let r1 = pagerank_push(&g1, 0.85, 1e-10, &cfg.engine());
+    let r2 = pagerank_push(&g2, 0.85, 1e-10, &cfg.engine());
+    // same fixpoint
+    let l1: f64 = r1.rank.iter().zip(&r2.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 1e-9, "formats must not change results: L1 {l1}");
+    // compressed image => strictly less data crosses every boundary
+    assert!(
+        r2.report.io.logical_bytes < r1.report.io.logical_bytes,
+        "logical: v2 {} !< v1 {}",
+        r2.report.io.logical_bytes,
+        r1.report.io.logical_bytes
+    );
+    assert!(
+        r2.report.io.bytes_read < r1.report.io.bytes_read,
+        "disk: v2 {} !< v1 {}",
+        r2.report.io.bytes_read,
+        r1.report.io.bytes_read
+    );
+    cleanup(&base1);
+    cleanup(&base2);
+}
+
+#[test]
+fn convert_files_roundtrip_preserves_graph_exactly() {
+    let n = 512;
+    let edges = gen::rmat(9, 6000, 21);
+    let v1 = build_image(n, &edges, true, VERSION_V1, "conv");
+    let v2 = std::env::temp_dir()
+        .join(format!("graphyti-fmt2-{}-conv-out-v2", std::process::id()));
+    let back = std::env::temp_dir()
+        .join(format!("graphyti-fmt2-{}-conv-back-v1", std::process::id()));
+    convert_image(&v1, &v2, VERSION_V2).unwrap();
+    convert_image(&v2, &back, VERSION_V1).unwrap();
+    // the double conversion restores both files byte-for-byte
+    assert_eq!(
+        std::fs::read(v1.with_extension("gy-idx")).unwrap(),
+        std::fs::read(back.with_extension("gy-idx")).unwrap()
+    );
+    assert_eq!(
+        std::fs::read(v1.with_extension("gy-adj")).unwrap(),
+        std::fs::read(back.with_extension("gy-adj")).unwrap()
+    );
+    // and the v2 image decodes to the same per-vertex lists via SEM
+    let cfg = RunConfig::default();
+    let g1 = SemGraph::open(&v1, 64 * 4096, cfg.io()).unwrap();
+    let g2 = SemGraph::open(&v2, 64 * 4096, cfg.io()).unwrap();
+    assert_eq!(g1.index().num_edges(), g2.index().num_edges());
+    for v in 0..n as VertexId {
+        let a = g1.fetch(v, EdgeRequest::Both).unwrap();
+        let b = g2.fetch(v, EdgeRequest::Both).unwrap();
+        assert_eq!(a.in_neighbors, b.in_neighbors, "v={v}");
+        assert_eq!(a.out_neighbors, b.out_neighbors, "v={v}");
+    }
+    for b in [&v1, &v2, &back] {
+        cleanup(b);
+    }
+}
+
+#[test]
+fn registry_opens_v2_images_transparently() {
+    let n = 256;
+    let edges = gen::rmat(8, 1500, 3);
+    let base = build_image(n, &edges, true, VERSION_V2, "reg");
+    let reg = GraphRegistry::new(64 * 4096, IoConfig::default());
+    let g = reg.open(&base).unwrap();
+    assert_eq!(g.index().header().version, VERSION_V2);
+    let csr = Csr::from_edges(n, &edges, true);
+    for v in (0..n as VertexId).step_by(17) {
+        let e = g.fetch(v, EdgeRequest::Both).unwrap();
+        assert_eq!(e.out_neighbors, csr.out(v), "v={v}");
+        assert_eq!(e.in_neighbors, csr.inn(v), "v={v}");
+    }
+    cleanup(&base);
+}
+
+#[test]
+fn v2_index_decodes_from_disk_with_section_lengths() {
+    let n = 128;
+    let edges = gen::rmat(7, 900, 13);
+    let base = build_image(n, &edges, true, VERSION_V2, "idx");
+    let idx = GraphIndex::decode(&std::fs::read(base.with_extension("gy-idx")).unwrap()).unwrap();
+    assert_eq!(idx.header().version, VERSION_V2);
+    let adj = std::fs::read(base.with_extension("gy-adj")).unwrap();
+    // the last vertex's record must end exactly at EOF: stored section
+    // lengths and offsets tile the adjacency file with no gaps
+    let mut expected_off = 0u64;
+    for v in 0..n as VertexId {
+        let (off, len) = idx.byte_range(v, EdgeRequest::Both);
+        assert_eq!(off, expected_off, "records must be contiguous at v={v}");
+        expected_off = off + len as u64;
+    }
+    assert_eq!(expected_off, adj.len() as u64);
+    cleanup(&base);
+}

@@ -56,6 +56,25 @@ impl Error {
         self
     }
 
+    /// Borrow a typed error from the wrapped error's cause chain, like
+    /// anyhow's `downcast_ref`. Ad-hoc message errors hold no typed
+    /// payload and always return `None`.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        match &self.repr {
+            Repr::Msg(_) => None,
+            Repr::Boxed(boxed) => {
+                let mut cur: Option<&(dyn StdError + 'static)> = Some(&**boxed);
+                while let Some(e) = cur {
+                    if let Some(typed) = e.downcast_ref::<E>() {
+                        return Some(typed);
+                    }
+                    cur = e.source();
+                }
+                None
+            }
+        }
+    }
+
     /// The full message chain, outermost first.
     fn chain_strings(&self) -> Vec<String> {
         let mut out: Vec<String> = self.context.iter().rev().cloned().collect();
@@ -230,6 +249,16 @@ mod tests {
         let o: Option<u32> = None;
         let e = o.with_context(|| "empty slot").unwrap_err();
         assert_eq!(format!("{e}"), "empty slot");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_errors() {
+        let e = Error::new(io_err()).context("opening image");
+        let io = e.downcast_ref::<std::io::Error>().expect("typed error in chain");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        let msg = anyhow!("plain message");
+        assert!(msg.downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
