@@ -70,7 +70,8 @@ struct Bc {
     sync: bool,
     /// Directed image? (undirected images keep all neighbors in `out`)
     directed: bool,
-    /// dist/sigma/delta are (n × lanes) flattened; owner-worker writes.
+    /// dist/sigma/delta are (n × lanes) flattened; single-writer-per-
+    /// phase slots (owner in message phase, claimant in vertex phase).
     dist: SharedVec<i32>,
     sigma: SharedVec<f64>,
     delta: SharedVec<f64>,

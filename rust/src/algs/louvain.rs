@@ -60,7 +60,7 @@ pub struct LouvainResult {
 
 struct LouvainL0 {
     /// Current community of each vertex (racy cross-reads are fine for
-    /// the greedy heuristic; own-slot writes are owner-exclusive).
+    /// the greedy heuristic; own-slot writes are claimant-exclusive).
     community: SharedVec<VertexId>,
     /// Σ of weighted degrees per community (concurrent moves).
     comm_tot: Vec<AtomicF64>,

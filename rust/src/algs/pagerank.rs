@@ -45,8 +45,9 @@ pub struct PageRankResult {
 struct PrPush {
     alpha: f64,
     threshold: f64,
-    // owner-worker access only (run_on_vertex / run_on_message both run
-    // on the owner), so plain SharedVec slots — no atomics on the hot path
+    // single-writer-per-phase access only (run_on_message runs on the
+    // owner, run_on_vertex on the chunk claimant, barrier-separated),
+    // so plain SharedVec slots — no atomics on the hot path
     rank: SharedVec<f64>,
     residual: SharedVec<f64>,
 }
@@ -109,7 +110,7 @@ struct PrPull {
     alpha: f64,
     threshold: f64,
     max_iters: usize,
-    /// Current rank (owner-written in run_on_vertex).
+    /// Current rank (claimant-written in run_on_vertex).
     rank: Vec<AtomicF64>,
     /// Gathered contributions for the next compute (message-accumulated
     /// on the owner worker).

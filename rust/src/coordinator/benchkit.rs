@@ -143,6 +143,61 @@ pub fn open_sem(base: &PathBuf, cfg: &RunConfig) -> SemGraph {
     SemGraph::open(base, cfg.cache_bytes(), cfg.io()).expect("open bench graph")
 }
 
+/// Format a busy ratio compactly (`inf` for an unbounded imbalance —
+/// which is exactly what a static partition shows on a skewed frontier).
+fn fmt_ratio(r: f64) -> String {
+    if r.is_finite() {
+        format!("{r:.2}")
+    } else {
+        "inf".to_string()
+    }
+}
+
+/// Worker-scaling harness: run `run` against a **cold** SEM open of the
+/// same image at each worker count and print wall time, steal count and
+/// the max/min per-worker busy ratio — the table that makes the
+/// work-stealing scheduler's balance visible (`fig_scaling` bench).
+/// Returns the per-count reports in order.
+pub fn worker_scaling(
+    base: &PathBuf,
+    cfg: &RunConfig,
+    counts: &[usize],
+    mut run: impl FnMut(&SemGraph, usize) -> RunReport,
+) -> Vec<RunReport> {
+    let mut t = Table::new(&[
+        "workers",
+        "wall",
+        "speedup",
+        "rounds",
+        "steals",
+        "busy-ratio",
+        "busy(sum)",
+        "idle(sum)",
+        "disk",
+    ]);
+    let mut reports = Vec::with_capacity(counts.len());
+    let mut base_wall = None;
+    for &w in counts {
+        let g = open_sem(base, cfg);
+        let r = run(&g, w);
+        let bw = *base_wall.get_or_insert(r.wall.as_secs_f64());
+        t.row(&[
+            w.to_string(),
+            fmt_dur(r.wall),
+            format!("{:.2}x", bw / r.wall.as_secs_f64()),
+            r.rounds.to_string(),
+            r.engine.steals.to_string(),
+            fmt_ratio(r.engine.busy_ratio()),
+            fmt_dur(r.engine.total_busy()),
+            fmt_dur(r.engine.total_idle()),
+            fmt_bytes(r.io.bytes_read),
+        ]);
+        reports.push(r);
+    }
+    t.print();
+    reports
+}
+
 /// Run `f` against `source` and return its output together with the
 /// snapshot *delta* of the source's own I/O counters over the run.
 ///
@@ -190,6 +245,8 @@ impl FigTable {
                 "mcast",
                 "deliver",
                 "waits",
+                "steals",
+                "busy-ratio",
             ]),
             baseline_wall: None,
         }
@@ -216,6 +273,8 @@ impl FigTable {
             r.engine.multicast_msgs.to_string(),
             r.engine.deliveries.to_string(),
             r.io.thread_waits.to_string(),
+            r.engine.steals.to_string(),
+            fmt_ratio(r.engine.busy_ratio()),
         ]);
     }
 
@@ -263,6 +322,20 @@ mod tests {
         );
         // identical results aside: both ran the same algorithm to completion
         assert!(cmp.v1.rounds > 0 && cmp.v2.rounds > 0);
+    }
+
+    #[test]
+    fn worker_scaling_reports_each_count() {
+        let (base, mut cfg) = rmat_workload(9, 8, true, "scale-unit");
+        cfg.io_delay_us = 0;
+        let reports = worker_scaling(&base, &cfg, &[1, 2], |g, w| {
+            let ecfg = crate::engine::EngineConfig { workers: w, ..Default::default() };
+            crate::algs::bfs::bfs(g, 0, &ecfg).1
+        });
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].engine.worker_busy_ns.len(), 1, "1-worker run tracks 1 slot");
+        assert_eq!(reports[1].engine.worker_busy_ns.len(), 2, "2-worker run tracks 2 slots");
+        assert!(reports[0].rounds > 0 && reports[1].rounds > 0);
     }
 
     #[test]

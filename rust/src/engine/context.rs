@@ -34,6 +34,8 @@ pub struct WorkerCtx<'a, M> {
     pub(crate) c_multicast: u64,
     pub(crate) c_deliveries: u64,
     pub(crate) c_vertex_runs: u64,
+    /// Frontier chunks this worker claimed from another worker's span.
+    pub(crate) c_steals: u64,
     // local reductions, merged at round end
     pub(crate) red_add: [f64; N_RED_SLOTS],
     pub(crate) red_max: [f64; N_RED_SLOTS],

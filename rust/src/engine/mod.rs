@@ -15,12 +15,15 @@
 //!    destination. Handlers may [`WorkerCtx::activate`] vertices *into the
 //!    current round* (their `run_on_vertex` runs in phase 2 below) and may
 //!    send messages (delivered in round *r+1*).
-//! 2. **Vertex phase** — workers sweep the activation bitmap over their
-//!    partition in batches: each batch's edge requests are fetched through
-//!    the [`crate::graph::EdgeSource`] *as one batch* (this is where SEM
-//!    I/O overlaps computation), then `run_on_vertex` runs per vertex.
-//!    Activations here land in round *r+1*; messages are delivered in
-//!    round *r+1*.
+//! 2. **Vertex phase** — workers drain the activation bitmap in
+//!    fixed-size chunks claimed through per-worker atomic cursors,
+//!    **stealing** remaining chunks from other workers once their own
+//!    span is empty (see [`runner`] for the scheduler). Each batch's
+//!    edge requests are fetched through the [`crate::graph::EdgeSource`]
+//!    *as one batch* into a per-worker [`crate::graph::source::FetchArena`]
+//!    (this is where SEM I/O overlaps computation, with zero steady-state
+//!    allocations), then `run_on_vertex` runs per vertex. Activations
+//!    here land in round *r+1*; messages are delivered in round *r+1*.
 //! 3. **Barrier** — per-worker functional reductions are merged,
 //!    `run_on_iteration_end` runs once, and the engine stops when no
 //!    activations and no messages remain.

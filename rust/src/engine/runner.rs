@@ -1,4 +1,25 @@
-//! The engine runner: worker threads, rounds, barriers, termination.
+//! The engine runner: worker threads, rounds, barriers, termination —
+//! and the work-stealing frontier scheduler.
+//!
+//! ## Scheduling
+//!
+//! The activation bitmap is divided into fixed-size **chunks**
+//! ([`CHUNK_BITS`] bits, word-aligned). Each worker owns a contiguous
+//! span of chunks (the same range partition as before, for locality and
+//! single-worker determinism) and claims chunks from its span through an
+//! atomic cursor. When a worker's span drains it **steals**: it walks
+//! the other workers' cursors and claims their remaining chunks. On a
+//! balanced frontier this degenerates to the static partition (one
+//! `fetch_add` per chunk of overhead); on a skewed frontier — power-law
+//! graphs concentrate activations badly — every worker ends up pulling
+//! from the hot span, bounding the per-worker busy-time ratio that the
+//! static partition left unbounded (see [`EngineStats`] busy/idle and
+//! steal counters, reported in every [`RunReport`]).
+//!
+//! A chunk is scanned once by its claimant, then cleared **word-level**
+//! (`store(0)` per 64 bits) for reuse in the next round — replacing the
+//! old per-bit test-and-clear sweep. This is safe because nothing sets
+//! bits in the *current* round's bitmap during the vertex phase.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -9,10 +30,23 @@ use crate::engine::messages::{Delivery, Inboxes, Outbox};
 use crate::engine::program::VertexProgram;
 use crate::engine::stats::{EngineStats, EngineStatsSnapshot};
 use crate::graph::format::EdgeRequest;
-use crate::graph::source::EdgeSource;
+use crate::graph::source::{EdgeSource, FetchArena};
 use crate::safs::IoStatsSnapshot;
 use crate::util::AtomicBitmap;
 use crate::VertexId;
+
+/// Bits per frontier chunk (a multiple of 64 so chunk edges are word
+/// edges). Small enough that a skewed frontier splits into many
+/// stealable units, large enough that the claim `fetch_add` amortizes
+/// over hundreds of vertices.
+pub const CHUNK_BITS: usize = 256;
+
+/// Chunk span `[lo, hi)` owned by worker `wid` (same proportional split
+/// as the old vertex partition, but in chunk units).
+#[inline]
+fn chunk_span(wid: usize, workers: usize, nchunks: usize) -> (usize, usize) {
+    ((wid * nchunks).div_ceil(workers), ((wid + 1) * nchunks).div_ceil(workers))
+}
 
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
@@ -64,6 +98,14 @@ impl RunReport {
             engine: Default::default(),
             io: Default::default(),
         };
+        fn add_per_worker(acc: &mut Vec<u64>, v: &[u64]) {
+            if acc.len() < v.len() {
+                acc.resize(v.len(), 0);
+            }
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
         for r in reports {
             out.rounds += r.rounds;
             out.wall += r.wall;
@@ -72,6 +114,9 @@ impl RunReport {
             out.engine.deliveries += r.engine.deliveries;
             out.engine.vertex_runs += r.engine.vertex_runs;
             out.engine.rounds += r.engine.rounds;
+            out.engine.steals += r.engine.steals;
+            add_per_worker(&mut out.engine.worker_busy_ns, &r.engine.worker_busy_ns);
+            add_per_worker(&mut out.engine.worker_idle_ns, &r.engine.worker_idle_ns);
             out.io.read_requests += r.io.read_requests;
             out.io.cache_hits += r.io.cache_hits;
             out.io.cache_misses += r.io.cache_misses;
@@ -106,6 +151,101 @@ struct Shared<M> {
     stats: EngineStats,
     // merged per-round reductions: (add, max)
     reductions: Mutex<([f64; N_RED_SLOTS], [f64; N_RED_SLOTS])>,
+    /// Per-worker chunk cursors over the activation bitmap; worker 0
+    /// resets them to each span's start during round bookkeeping.
+    cursors: Vec<AtomicUsize>,
+    /// Total chunks in the bitmap.
+    nchunks: usize,
+}
+
+/// Claims frontier chunks: first from this worker's own span, then —
+/// work stealing — from the other workers' remaining spans.
+struct ChunkClaimer<'a> {
+    cursors: &'a [AtomicUsize],
+    nchunks: usize,
+    workers: usize,
+    wid: usize,
+    /// Span currently being drained (own span first).
+    victim: usize,
+    /// Spans visited so far this round (terminates the steal walk).
+    visited: usize,
+    /// Foreign chunks that yielded work (counted by [`FrontierStream`]).
+    steals: u64,
+}
+
+impl<'a> ChunkClaimer<'a> {
+    fn new(shared_cursors: &'a [AtomicUsize], nchunks: usize, workers: usize, wid: usize) -> Self {
+        ChunkClaimer {
+            cursors: shared_cursors,
+            nchunks,
+            workers,
+            wid,
+            victim: wid,
+            visited: 0,
+            steals: 0,
+        }
+    }
+
+    /// Claim the next chunk, or `None` when every span is drained.
+    /// Returns `(chunk, foreign)`; `foreign` chunks only count as steals
+    /// once they yield a vertex (an empty claimed chunk rebalanced no
+    /// work, so it must not inflate the steal metric).
+    fn next_chunk(&mut self) -> Option<(usize, bool)> {
+        loop {
+            let v = self.victim;
+            let (_, hi) = chunk_span(v, self.workers, self.nchunks);
+            // cheap pre-check bounds cursor overshoot to one fetch_add
+            // per contender per span
+            if self.cursors[v].load(Ordering::Relaxed) < hi {
+                let c = self.cursors[v].fetch_add(1, Ordering::Relaxed);
+                if c < hi {
+                    return Some((c, v != self.wid));
+                }
+            }
+            self.visited += 1;
+            if self.visited >= self.workers {
+                return None;
+            }
+            self.victim = (v + 1) % self.workers;
+        }
+    }
+}
+
+/// Streams set bits of the current frontier to one worker, claiming
+/// chunks through the [`ChunkClaimer`] and clearing each chunk
+/// word-level once it has been fully scanned.
+struct FrontierStream<'a> {
+    bm: &'a AtomicBitmap,
+    claimer: ChunkClaimer<'a>,
+    /// Partially scanned chunk: (bit iterator, chunk start, chunk end,
+    /// foreign-and-not-yet-counted-as-steal).
+    cur: Option<(crate::util::bitmap::SetBits<'a>, usize, usize, bool)>,
+    n: usize,
+}
+
+impl FrontierStream<'_> {
+    fn next_vertex(&mut self) -> Option<usize> {
+        loop {
+            if let Some((it, start, end, uncounted)) = self.cur.as_mut() {
+                if let Some(v) = it.next() {
+                    // a foreign chunk becomes a steal the moment it
+                    // yields real work
+                    if std::mem::take(uncounted) {
+                        self.claimer.steals += 1;
+                    }
+                    return Some(v);
+                }
+                // fully scanned: word-level clear readies the chunk for
+                // round r+1 (replaces the per-bit lo..hi sweep)
+                self.bm.clear_span(*start, *end);
+                self.cur = None;
+            }
+            let (c, foreign) = self.claimer.next_chunk()?;
+            let start = c * CHUNK_BITS;
+            let end = ((c + 1) * CHUNK_BITS).min(self.n);
+            self.cur = Some((self.bm.iter_set_range(start, end), start, end, foreign));
+        }
+    }
 }
 
 /// The BSP engine.
@@ -123,14 +263,19 @@ impl Engine {
         let n = source.index().num_vertices();
         assert!(n > 0, "empty graph");
         let workers = cfg.workers.max(1).min(n);
+        let nchunks = n.div_ceil(CHUNK_BITS);
         let shared = Shared {
             bitmaps: [AtomicBitmap::new(n), AtomicBitmap::new(n)],
             inboxes: Inboxes::<P::Msg>::new(workers),
             barrier: Barrier::new(workers),
             stop: AtomicBool::new(false),
             round: AtomicUsize::new(0),
-            stats: EngineStats::new(),
+            stats: EngineStats::with_workers(workers),
             reductions: Mutex::new(([0.0; N_RED_SLOTS], [f64::NEG_INFINITY; N_RED_SLOTS])),
+            cursors: (0..workers)
+                .map(|w| AtomicUsize::new(chunk_span(w, workers, nchunks).0))
+                .collect(),
+            nchunks,
         };
         for &v in init_active {
             shared.bitmaps[0].set(v as usize);
@@ -160,10 +305,6 @@ impl Engine {
         n: usize,
         cfg: &EngineConfig,
     ) {
-        // partition bounds: worker w owns [ceil(w*n/W), ceil((w+1)*n/W))
-        let lo = (wid * n).div_ceil(workers);
-        let hi = ((wid + 1) * n).div_ceil(workers);
-
         let mut ctx = WorkerCtx {
             worker: wid,
             num_workers: workers,
@@ -179,16 +320,22 @@ impl Engine {
             c_multicast: 0,
             c_deliveries: 0,
             c_vertex_runs: 0,
+            c_steals: 0,
             red_add: [0.0; N_RED_SLOTS],
             red_max: [f64::NEG_INFINITY; N_RED_SLOTS],
         };
         let mut batch_reqs: Vec<(VertexId, EdgeRequest)> = Vec::with_capacity(cfg.batch);
+        let mut next_reqs: Vec<(VertexId, EdgeRequest)> = Vec::with_capacity(cfg.batch);
+        // per-worker fetch arena: decoded edges + range scratch reused
+        // across every batch of the run (allocation-free once warm)
+        let mut arena = FetchArena::new();
 
         loop {
             let round = shared.round.load(Ordering::Acquire);
             ctx.round = round;
             let cur_parity = round % 2;
             let nxt_parity = (round + 1) % 2;
+            let t0 = Instant::now();
 
             // ---- phase A: deliver messages sent last round -------------
             ctx.in_message_phase = true;
@@ -209,21 +356,28 @@ impl Engine {
             }
             drop(deliveries);
             ctx.outbox.flush_all(&shared.inboxes, nxt_parity);
+            let t1 = Instant::now();
             shared.barrier.wait();
+            let t2 = Instant::now();
 
             // ---- phase B: vertex phase over the activation bitmap ------
-            // Two-batch pipeline: while batch k is being processed, batch
+            // Chunked claim + steal (see module docs), feeding the
+            // two-batch pipeline: while batch k is being processed, batch
             // k+1's pages are already streaming into the cache via the
             // async prefetch — FlashGraph's overlap of computation with
             // asynchronous I/O (EXPERIMENTS.md §Perf).
             ctx.in_message_phase = false;
             let current = &shared.bitmaps[cur_parity];
-            let mut iter = current.iter_set_range(lo, hi);
-            let mut next_reqs: Vec<(VertexId, EdgeRequest)> = Vec::with_capacity(cfg.batch);
-            let collect = |iter: &mut crate::util::bitmap::SetBits<'_>,
+            let mut stream = FrontierStream {
+                bm: current,
+                claimer: ChunkClaimer::new(&shared.cursors, shared.nchunks, workers, wid),
+                cur: None,
+                n,
+            };
+            let collect = |stream: &mut FrontierStream<'_>,
                            reqs: &mut Vec<(VertexId, EdgeRequest)>| {
                 reqs.clear();
-                for v in iter.by_ref() {
+                while let Some(v) = stream.next_vertex() {
                     let v = v as VertexId;
                     reqs.push((v, program.edge_request(v)));
                     if reqs.len() >= cfg.batch {
@@ -231,31 +385,26 @@ impl Engine {
                     }
                 }
             };
-            collect(&mut iter, &mut batch_reqs);
+            collect(&mut stream, &mut batch_reqs);
             loop {
                 if batch_reqs.is_empty() {
                     break;
                 }
                 // look ahead and warm the next batch before blocking
-                collect(&mut iter, &mut next_reqs);
+                collect(&mut stream, &mut next_reqs);
                 if !next_reqs.is_empty() {
                     source.prefetch(&next_reqs);
                 }
-                let edges = source
-                    .fetch_batch(&batch_reqs)
+                source
+                    .fetch_batch_into(&batch_reqs, &mut arena)
                     .expect("edge fetch failed (graph image unreadable)");
                 ctx.c_vertex_runs += batch_reqs.len() as u64;
                 for (i, &(v, _)) in batch_reqs.iter().enumerate() {
-                    program.run_on_vertex(&mut ctx, v, &edges[i]);
+                    program.run_on_vertex(&mut ctx, v, &arena.edges()[i]);
                 }
                 std::mem::swap(&mut batch_reqs, &mut next_reqs);
             }
-            // clear own range of the current bitmap for reuse in round r+1
-            for v in lo..hi {
-                if current.get(v) {
-                    current.clear(v);
-                }
-            }
+            ctx.c_steals += stream.claimer.steals;
             ctx.outbox.flush_all(&shared.inboxes, nxt_parity);
 
             // merge local counters + reductions
@@ -263,10 +412,12 @@ impl Engine {
             shared.stats.multicast_msgs.fetch_add(ctx.c_multicast, Ordering::Relaxed);
             shared.stats.deliveries.fetch_add(ctx.c_deliveries, Ordering::Relaxed);
             shared.stats.vertex_runs.fetch_add(ctx.c_vertex_runs, Ordering::Relaxed);
+            shared.stats.steals.fetch_add(ctx.c_steals, Ordering::Relaxed);
             ctx.c_p2p = 0;
             ctx.c_multicast = 0;
             ctx.c_deliveries = 0;
             ctx.c_vertex_runs = 0;
+            ctx.c_steals = 0;
             {
                 let mut red = shared.reductions.lock().unwrap();
                 for i in 0..N_RED_SLOTS {
@@ -278,7 +429,9 @@ impl Engine {
             }
             ctx.red_add = [0.0; N_RED_SLOTS];
             ctx.red_max = [f64::NEG_INFINITY; N_RED_SLOTS];
+            let t3 = Instant::now();
             shared.barrier.wait();
+            let t4 = Instant::now();
 
             // ---- round bookkeeping (worker 0 only) ---------------------
             if wid == 0 {
@@ -314,10 +467,24 @@ impl Engine {
                     || cancelled
                     || (next_active == 0 && pending == 0 && !continue_requested)
                     || round + 1 >= cfg.max_rounds;
+                // rewind every chunk cursor for the next round (published
+                // to the other workers by the barrier below)
+                for w in 0..workers {
+                    shared.cursors[w]
+                        .store(chunk_span(w, workers, shared.nchunks).0, Ordering::Relaxed);
+                }
                 shared.stop.store(done, Ordering::Release);
                 shared.round.store(round + 1, Ordering::Release);
             }
+            let t5 = Instant::now();
             shared.barrier.wait();
+            let t6 = Instant::now();
+            // busy = both work phases (+ bookkeeping on worker 0);
+            // idle = the three barrier waits
+            let busy = (t1 - t0) + (t3 - t2) + (t5 - t4);
+            let idle = (t2 - t1) + (t4 - t3) + (t6 - t5);
+            shared.stats.add_worker_busy(wid, busy.as_nanos() as u64);
+            shared.stats.add_worker_idle(wid, idle.as_nanos() as u64);
             if shared.stop.load(Ordering::Acquire) {
                 break;
             }
@@ -396,10 +563,81 @@ mod tests {
 
     #[test]
     fn deterministic_across_worker_counts() {
-        let edges = gen::rmat(9, 4000, 11);
-        let a = bfs_levels(512, &edges, 0, 1);
-        let b = bfs_levels(512, &edges, 0, 8);
-        assert_eq!(a, b, "BFS levels must not depend on parallelism");
+        // adversarial skew: an RMAT power-law graph AND a star whose
+        // whole frontier funnels through one hub — under work stealing
+        // any worker may process any vertex, and the result must still
+        // be bit-identical across 1/2/8 workers
+        let rmat = gen::rmat(9, 4000, 11);
+        let star = gen::star(512);
+        for (name, n, edges, src) in
+            [("rmat", 512usize, &rmat, 0u32), ("star", 512, &star, 0)]
+        {
+            let baseline = bfs_levels(n, edges, src, 1);
+            for workers in [2, 8] {
+                let got = bfs_levels(n, edges, src, workers);
+                assert_eq!(
+                    got, baseline,
+                    "{name}: BFS levels must not depend on parallelism (workers={workers})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_frontier_triggers_steals() {
+        // all activations land in the lowest chunks (worker 0's span):
+        // with >1 workers, the others must steal to get any work, and
+        // every activated vertex must still run exactly once
+        struct Touch {
+            ran: SharedVec<u32>,
+        }
+        impl VertexProgram for Touch {
+            type Msg = ();
+            fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+                EdgeRequest::None
+            }
+            fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, _e: &VertexEdges) {
+                *self.ran.get_mut(v as usize) += 1;
+                // re-activate for several rounds so every worker is up
+                // and barrier-synced while the skewed frontier repeats —
+                // steals become structural, not a thread-startup race
+                if ctx.round() < 4 {
+                    ctx.activate(v);
+                }
+            }
+            fn run_on_message(&self, _c: &mut WorkerCtx<'_, ()>, _v: VertexId, _m: &()) {}
+        }
+        let n = CHUNK_BITS * 32; // 32 chunks
+        let g = MemGraph::from_edges(n, &gen::path(n), true);
+        let prog = Touch { ran: SharedVec::new(n, 0) };
+        // frontier: the first 8 chunks only — worker 0's static span
+        let active: Vec<VertexId> = (0..(CHUNK_BITS * 8) as VertexId).collect();
+        let cfg = EngineConfig { workers: 4, batch: 64, ..Default::default() };
+        let r = Engine::run(&prog, &g, &active, &cfg);
+        assert_eq!(r.rounds, 5);
+        for v in 0..n {
+            let want = if v < CHUNK_BITS * 8 { 5 } else { 0 };
+            assert_eq!(*prog.ran.get(v), want, "vertex {v} run count");
+        }
+        assert!(r.engine.steals > 0, "skewed frontier must induce steals: {:?}", r.engine);
+        assert_eq!(r.engine.vertex_runs, 5 * (CHUNK_BITS * 8) as u64);
+        assert_eq!(r.engine.worker_busy_ns.len(), 4, "per-worker busy slots tracked");
+    }
+
+    #[test]
+    fn frontier_bitmap_fully_cleared_after_each_round() {
+        // chunk-level word clearing must leave the current bitmap empty
+        // after the vertex phase, no matter which worker claimed what —
+        // a second engine run on the same Shared would otherwise see
+        // ghost activations. Observable effect: a 2-round program's
+        // round-0 activations never leak into round 2 (levels stay
+        // minimal in BFS re-runs).
+        let edges = gen::rmat(9, 3000, 5);
+        for workers in [1, 3, 8] {
+            let a = bfs_levels(512, &edges, 7, workers);
+            let b = bfs_levels(512, &edges, 7, workers);
+            assert_eq!(a, b, "repeat runs must agree (workers={workers})");
+        }
     }
 
     /// Counting program: verifies reductions and message counters.

@@ -1,8 +1,13 @@
-//! Engine-level counters: messaging volume, rounds, activations.
+//! Engine-level counters: messaging volume, rounds, activations, and —
+//! since the work-stealing scheduler — per-worker busy/idle time and
+//! steal counts.
 //!
 //! Combined with [`crate::safs::IoStats`], these are the quantities the
 //! paper's figures plot (message counts for Fig. 3, barrier/round counts
-//! behind the multi-source arguments of Figs. 5–6).
+//! behind the multi-source arguments of Figs. 5–6). The busy/idle split
+//! makes load imbalance *visible*: a skewed frontier under a static
+//! partition shows up as an unbounded max/min busy ratio, while the
+//! chunk-stealing scheduler keeps it near 1.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -19,12 +24,46 @@ pub struct EngineStats {
     pub vertex_runs: AtomicU64,
     /// Rounds executed.
     pub rounds: AtomicU64,
+    /// Frontier chunks claimed from another worker's span that yielded
+    /// at least one active vertex (empty claimed chunks don't count —
+    /// they rebalanced no work).
+    pub steals: AtomicU64,
+    /// Per-worker time spent working (phases A/B + bookkeeping), ns.
+    worker_busy_ns: Vec<AtomicU64>,
+    /// Per-worker time spent waiting at barriers, ns.
+    worker_idle_ns: Vec<AtomicU64>,
 }
 
 impl EngineStats {
-    /// Fresh zeroed counters.
+    /// Fresh zeroed counters with no per-worker slots (use
+    /// [`Self::with_workers`] when busy/idle tracking is wanted).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Fresh zeroed counters tracking `workers` busy/idle slots.
+    pub fn with_workers(workers: usize) -> Self {
+        EngineStats {
+            worker_busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_idle_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    /// Record busy time for a worker (no-op without per-worker slots).
+    #[inline]
+    pub fn add_worker_busy(&self, wid: usize, ns: u64) {
+        if let Some(slot) = self.worker_busy_ns.get(wid) {
+            slot.fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+
+    /// Record idle (barrier-wait) time for a worker.
+    #[inline]
+    pub fn add_worker_idle(&self, wid: usize, ns: u64) {
+        if let Some(slot) = self.worker_idle_ns.get(wid) {
+            slot.fetch_add(ns, Ordering::Relaxed);
+        }
     }
 
     /// Snapshot.
@@ -35,18 +74,36 @@ impl EngineStats {
             deliveries: self.deliveries.load(Ordering::Relaxed),
             vertex_runs: self.vertex_runs.load(Ordering::Relaxed),
             rounds: self.rounds.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            worker_busy_ns: self
+                .worker_busy_ns
+                .iter()
+                .map(|w| w.load(Ordering::Relaxed))
+                .collect(),
+            worker_idle_ns: self
+                .worker_idle_ns
+                .iter()
+                .map(|w| w.load(Ordering::Relaxed))
+                .collect(),
         }
     }
 }
 
 /// Point-in-time copy of [`EngineStats`].
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct EngineStatsSnapshot {
     pub p2p_msgs: u64,
     pub multicast_msgs: u64,
     pub deliveries: u64,
     pub vertex_runs: u64,
     pub rounds: u64,
+    /// Non-empty frontier chunks executed by a worker other than their
+    /// span owner.
+    pub steals: u64,
+    /// Per-worker busy time in nanoseconds (empty when untracked).
+    pub worker_busy_ns: Vec<u64>,
+    /// Per-worker barrier-wait time in nanoseconds.
+    pub worker_idle_ns: Vec<u64>,
 }
 
 impl EngineStatsSnapshot {
@@ -56,12 +113,57 @@ impl EngineStatsSnapshot {
         self.p2p_msgs + self.multicast_msgs
     }
 
+    /// Load-imbalance metric: max/min per-worker busy time. `1.0` for
+    /// runs with fewer than two tracked workers; `f64::INFINITY` when a
+    /// worker recorded no busy time at all (the unbounded imbalance a
+    /// static partition produces on a skewed frontier).
+    pub fn busy_ratio(&self) -> f64 {
+        if self.worker_busy_ns.len() < 2 {
+            return 1.0;
+        }
+        let max = *self.worker_busy_ns.iter().max().unwrap();
+        let min = *self.worker_busy_ns.iter().min().unwrap();
+        if min == 0 {
+            if max == 0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            max as f64 / min as f64
+        }
+    }
+
+    /// Summed busy time across workers.
+    pub fn total_busy(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.worker_busy_ns.iter().sum())
+    }
+
+    /// Summed barrier-wait time across workers.
+    pub fn total_idle(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.worker_idle_ns.iter().sum())
+    }
+
     /// Terse single-line report.
     pub fn report(&self) -> String {
-        format!(
-            "rounds={} vertex_runs={} p2p={} multicast={} deliveries={}",
-            self.rounds, self.vertex_runs, self.p2p_msgs, self.multicast_msgs, self.deliveries
-        )
+        let mut s = format!(
+            "rounds={} vertex_runs={} p2p={} multicast={} deliveries={} steals={}",
+            self.rounds,
+            self.vertex_runs,
+            self.p2p_msgs,
+            self.multicast_msgs,
+            self.deliveries,
+            self.steals,
+        );
+        if self.worker_busy_ns.len() >= 2 {
+            s.push_str(&format!(
+                " busy_ratio={:.2} busy={} idle={}",
+                self.busy_ratio(),
+                crate::util::fmt_dur(self.total_busy()),
+                crate::util::fmt_dur(self.total_idle()),
+            ));
+        }
+        s
     }
 }
 
@@ -78,5 +180,30 @@ mod tests {
         let snap = s.snapshot();
         assert_eq!(snap.send_ops(), 5);
         assert_eq!(snap.deliveries, 40);
+    }
+
+    #[test]
+    fn busy_ratio_edges() {
+        // untracked: neutral ratio
+        assert_eq!(EngineStatsSnapshot::default().busy_ratio(), 1.0);
+        let s = EngineStats::with_workers(3);
+        // a worker with zero busy time = unbounded imbalance
+        s.add_worker_busy(0, 100);
+        s.add_worker_busy(1, 100);
+        assert!(s.snapshot().busy_ratio().is_infinite());
+        s.add_worker_busy(2, 50);
+        let snap = s.snapshot();
+        assert!((snap.busy_ratio() - 2.0).abs() < 1e-12, "{}", snap.busy_ratio());
+        assert_eq!(snap.total_busy(), std::time::Duration::from_nanos(250));
+    }
+
+    #[test]
+    fn untracked_worker_slots_are_noops() {
+        let s = EngineStats::new();
+        s.add_worker_busy(0, 10);
+        s.add_worker_idle(5, 10);
+        let snap = s.snapshot();
+        assert!(snap.worker_busy_ns.is_empty());
+        assert_eq!(snap.busy_ratio(), 1.0);
     }
 }

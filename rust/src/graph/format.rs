@@ -386,12 +386,16 @@ pub enum EdgeRequest {
 ///
 /// The neighbor vectors double as scratch buffers: [`Self::decode_into`]
 /// clears and refills them in place, so a caller looping over many
-/// records and not keeping them (the streaming image converter,
-/// [`crate::graph::builder::convert_image`]) reuses one allocation
-/// instead of constructing fresh vectors per vertex. The fetch paths
-/// return owned values and use [`Self::decode`], which performs exactly
-/// one exact-capacity allocation per requested list — same as v1 — with
-/// no varint-decode temporaries.
+/// records reuses one allocation instead of constructing fresh vectors
+/// per vertex. This is the engine's hot path: every batch decodes via
+/// `decode_into` over the slots of a per-worker
+/// [`crate::graph::source::FetchArena`], whose vector capacities
+/// converge to the largest record seen — steady-state decoding
+/// allocates nothing. The streaming image converter
+/// ([`crate::graph::builder::convert_image`]) uses the same mechanism
+/// with a single scratch value. One-off lookups use [`Self::decode`],
+/// which performs exactly one exact-capacity allocation per requested
+/// list with no varint-decode temporaries.
 #[derive(Debug, Clone, Default)]
 pub struct VertexEdges {
     /// In-neighbors (empty unless requested; undirected graphs use `out`).

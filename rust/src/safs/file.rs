@@ -15,11 +15,98 @@ use std::sync::Arc;
 use anyhow::{bail, Context};
 
 use super::io::{coalesce, IoPool, RunRequest};
-use super::page_cache::{PageCache, PAGE_SIZE};
+use super::page_cache::{PageCache, PageRef, PAGE_SIZE};
 use super::stats::IoStats;
 
 /// A byte range in the file.
 pub type ByteRange = (u64, usize); // (offset, len)
+
+/// One fetched byte range, as produced by [`SemFile::read_ranges_into`].
+///
+/// The common case — a range contained in a single page, which is what
+/// per-vertex adjacency records overwhelmingly are — is a **zero-copy
+/// slice** into the cached page. Only ranges spanning a page boundary
+/// are assembled, into a buffer drawn from the caller's
+/// [`RangeScratch`] so steady-state batches allocate nothing.
+pub enum RangeBuf {
+    /// The range lies within one cached page: a borrowed view.
+    Page {
+        /// The cached page (shared run buffer + offset).
+        page: PageRef,
+        /// Start of the range within the page.
+        start: usize,
+        /// Range length in bytes.
+        len: usize,
+    },
+    /// Page-spanning range assembled into a scratch buffer.
+    Owned(Vec<u8>),
+}
+
+impl RangeBuf {
+    /// The range bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            RangeBuf::Page { page, start, len } => &page.as_slice()[*start..*start + *len],
+            RangeBuf::Owned(v) => v,
+        }
+    }
+}
+
+impl std::ops::Deref for RangeBuf {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+/// Reusable per-caller scratch for [`SemFile::read_ranges_into`]: the
+/// batch's page-set bookkeeping plus a free list of assembly buffers
+/// for page-spanning ranges. Keep one per worker thread and pass it to
+/// every batch — after warm-up no call allocates (tracked by
+/// [`Self::allocs`], which the engine surfaces through
+/// [`crate::graph::source::FetchArena`]).
+#[derive(Default)]
+pub struct RangeScratch {
+    /// Distinct pages the current batch needs (sorted, deduped).
+    needed: Vec<u64>,
+    /// Pages found in (or inserted into) the cache this batch.
+    have: Vec<(u64, PageRef)>,
+    /// Pages that missed, awaiting coalesced dispatch.
+    misses: Vec<u64>,
+    /// Recycled assembly buffers for page-spanning ranges.
+    free: Vec<Vec<u8>>,
+    /// Cumulative heap allocations this scratch performed.
+    allocs: u64,
+}
+
+impl RangeScratch {
+    /// Fresh scratch with no retained buffers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cumulative count of heap allocations performed through this
+    /// scratch (buffer creation and growth). Flat across batches once
+    /// warm — the steady-state-zero-allocation acceptance metric.
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Drain `bufs`, returning `Owned` assembly buffers to the free
+    /// list (and dropping page views). Called automatically at the top
+    /// of [`SemFile::read_ranges_into`], so callers that reuse one
+    /// output vector never need to call it themselves.
+    pub fn recycle(&mut self, bufs: &mut Vec<RangeBuf>) {
+        for b in bufs.drain(..) {
+            if let RangeBuf::Owned(v) = b {
+                self.free.push(v);
+            }
+        }
+    }
+}
 
 /// Read-only SEM file handle.
 pub struct SemFile {
@@ -77,28 +164,68 @@ impl SemFile {
 
     /// Read many byte ranges as one batch: cache lookups first, then all
     /// misses deduped + coalesced + serviced in parallel, then assembly.
+    ///
+    /// Convenience wrapper over [`Self::read_ranges_into`] returning
+    /// owned buffers; the engine's hot path uses the `_into` form with a
+    /// per-worker [`RangeScratch`] instead.
     pub fn read_ranges(&self, ranges: &[ByteRange]) -> crate::Result<Vec<Vec<u8>>> {
         self.read_ranges_tracked(ranges, None)
     }
 
-    /// [`Self::read_ranges`] with per-job attribution: every counter this
-    /// batch moves (requests, hits/misses, merges, waits, physical reads,
-    /// bytes) is also recorded into `job` when given. The substrate's own
-    /// stats keep aggregating everything, so under concurrent jobs each
-    /// event is attributed to exactly one job and the per-job snapshots
-    /// sum to the global ones (eviction counts stay global: they belong
-    /// to the shared cache, not to whichever job triggered them).
+    /// [`Self::read_ranges`] with per-job attribution (see
+    /// [`Self::read_ranges_into`] for the counter contract).
     pub fn read_ranges_tracked(
         &self,
         ranges: &[ByteRange],
         job: Option<&IoStats>,
     ) -> crate::Result<Vec<Vec<u8>>> {
+        let mut scratch = RangeScratch::new();
+        let mut bufs = Vec::with_capacity(ranges.len());
+        self.read_ranges_into(ranges, job, &mut scratch, &mut bufs)?;
+        // move assembled buffers out; only page views need a copy
+        Ok(bufs
+            .into_iter()
+            .map(|b| match b {
+                RangeBuf::Owned(v) => v,
+                ref p => p.as_slice().to_vec(),
+            })
+            .collect())
+    }
+
+    /// The zero-copy batch read. Results land in `out` (cleared first;
+    /// its previous `Owned` buffers are recycled into `scratch`): one
+    /// [`RangeBuf`] per requested range, single-page ranges as borrowed
+    /// page views, page-spanning ranges assembled into scratch buffers.
+    /// With a warm cache and a warm scratch the call performs **zero
+    /// heap allocations**.
+    ///
+    /// Per-job attribution: every counter this batch moves (requests,
+    /// hits/misses, merges, waits, physical reads, bytes) is also
+    /// recorded into `job` when given. The substrate's own stats keep
+    /// aggregating everything, so under concurrent jobs each event is
+    /// attributed to exactly one job and the per-job snapshots sum to
+    /// the global ones (eviction counts stay global: they belong to the
+    /// shared cache, not to whichever job triggered them).
+    pub fn read_ranges_into(
+        &self,
+        ranges: &[ByteRange],
+        job: Option<&IoStats>,
+        scratch: &mut RangeScratch,
+        out: &mut Vec<RangeBuf>,
+    ) -> crate::Result<()> {
+        scratch.recycle(out);
         self.stats.add_read_request(ranges.len() as u64);
         if let Some(j) = job {
             j.add_read_request(ranges.len() as u64);
         }
+        // split-borrow the scratch so the free list stays usable while
+        // the page-set vectors are live
+        let RangeScratch { needed, have, misses, free, allocs } = scratch;
+        needed.clear();
+        have.clear();
+        misses.clear();
+
         // 1. collect the distinct pages each range needs
-        let mut needed: Vec<u64> = Vec::new();
         for &(off, len) in ranges {
             if off + len as u64 > self.len {
                 bail!(
@@ -118,9 +245,7 @@ impl SemFile {
 
         // 2. cache pass — split hits from misses (`have`/`misses` carry
         //    file-local page numbers; only cache calls add the key base)
-        let mut have: Vec<(u64, Arc<[u8]>)> = Vec::with_capacity(needed.len());
-        let mut misses: Vec<u64> = Vec::new();
-        for &p in &needed {
+        for &p in needed.iter() {
             match self.cache.get_tracked(self.key_base + p, job) {
                 Some(d) => have.push((p, d)),
                 None => misses.push(p),
@@ -129,7 +254,7 @@ impl SemFile {
 
         // 3. dispatch misses as coalesced runs, serviced concurrently
         if !misses.is_empty() {
-            let runs = coalesce(&misses, self.pool.config().max_run_pages);
+            let runs = coalesce(misses, self.pool.config().max_run_pages);
             self.stats.add_merged((misses.len() - runs.len()) as u64);
             if let Some(j) = job {
                 j.add_merged((misses.len() - runs.len()) as u64);
@@ -155,27 +280,48 @@ impl SemFile {
                 let reply = rx.recv().context("io pool reply channel closed")?;
                 if let Some(j) = job {
                     // the pool already counted this run into the global
-                    // stats; mirror it into the requesting job's
-                    j.add_physical_read(1);
-                    j.add_bytes_read((reply.pages.len() * PAGE_SIZE) as u64);
+                    // stats; mirror its actual cost into the job's
+                    if reply.bytes_read > 0 {
+                        j.add_physical_read(1);
+                        j.add_bytes_read(reply.bytes_read);
+                    }
                 }
-                for (i, data) in reply.pages.into_iter().enumerate() {
+                for i in 0..reply.npages {
                     let p = reply.start_page + i as u64;
-                    self.cache.insert(self.key_base + p, data.clone());
-                    have.push((p, data));
+                    let view = reply.page(i);
+                    self.cache.insert(self.key_base + p, view.clone());
+                    have.push((p, view));
                 }
             }
         }
         have.sort_unstable_by_key(|&(p, _)| p);
 
         // 4. assemble the requested ranges from the page set
-        let lookup = |p: u64| -> &Arc<[u8]> {
+        let lookup = |p: u64| -> &PageRef {
             let idx = have.binary_search_by_key(&p, |&(q, _)| q).expect("page present");
             &have[idx].1
         };
-        let mut out = Vec::with_capacity(ranges.len());
         for &(off, len) in ranges {
-            let mut buf = Vec::with_capacity(len);
+            let first = off / PAGE_SIZE as u64;
+            let in_page = (off % PAGE_SIZE as u64) as usize;
+            if len == 0 || in_page + len <= PAGE_SIZE {
+                // common case: the whole range lives in one page — hand
+                // out a view, copy nothing. (Empty ranges view page 0 of
+                // the range's nominal position iff it exists; use an
+                // empty owned buffer instead to avoid a fake lookup.)
+                if len == 0 {
+                    out.push(RangeBuf::Owned(take_buf(free, allocs, 0)));
+                } else {
+                    out.push(RangeBuf::Page {
+                        page: lookup(first).clone(),
+                        start: in_page,
+                        len,
+                    });
+                }
+                continue;
+            }
+            // page-spanning: assemble into a recycled scratch buffer
+            let mut buf = take_buf(free, allocs, len);
             let mut pos = off;
             let end = off + len as u64;
             while pos < end {
@@ -185,9 +331,12 @@ impl SemFile {
                 buf.extend_from_slice(&lookup(p)[in_page..in_page + take]);
                 pos += take as u64;
             }
-            out.push(buf);
+            out.push(RangeBuf::Owned(buf));
         }
-        Ok(out)
+        // drop the batch's page refs so evicted pages' run buffers can
+        // free between batches
+        have.clear();
+        Ok(())
     }
 
     /// Prefetch hint: asynchronously warm the cache for the byte ranges
@@ -230,8 +379,8 @@ impl SemFile {
         std::thread::spawn(move || {
             for _ in 0..nruns {
                 if let Ok(reply) = rx.recv() {
-                    for (i, data) in reply.pages.into_iter().enumerate() {
-                        cache.insert(key_base + reply.start_page + i as u64, data);
+                    for i in 0..reply.npages {
+                        cache.insert(key_base + reply.start_page + i as u64, reply.page(i));
                     }
                 }
             }
@@ -241,6 +390,34 @@ impl SemFile {
     /// Stats handle (shared with cache + pool).
     pub fn stats(&self) -> &Arc<IoStats> {
         &self.stats
+    }
+}
+
+/// Pop a recycled assembly buffer with at least `len` capacity,
+/// counting any fresh allocation or growth into `allocs`. Fit-aware:
+/// a recycled buffer that is already big enough is preferred over
+/// growing a smaller one, so repeated batches with the same range mix
+/// converge to zero growth (the free list is a handful of entries —
+/// one per page-spanning range of a batch — so the scan is trivial).
+fn take_buf(free: &mut Vec<Vec<u8>>, allocs: &mut u64, len: usize) -> Vec<u8> {
+    if let Some(i) = free.iter().position(|v| v.capacity() >= len) {
+        let mut v = free.swap_remove(i);
+        v.clear();
+        return v;
+    }
+    match free.pop() {
+        Some(mut v) => {
+            v.clear();
+            *allocs += 1;
+            v.reserve(len);
+            v
+        }
+        None => {
+            if len > 0 {
+                *allocs += 1;
+            }
+            Vec::with_capacity(len)
+        }
     }
 }
 
@@ -412,6 +589,78 @@ mod tests {
         let g = f.stats().snapshot();
         assert_eq!(g.read_requests, j.read_requests);
         assert_eq!(g.bytes_read, j.bytes_read);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn single_page_ranges_are_zero_copy_views() {
+        let data = pattern(PAGE_SIZE * 4);
+        let (path, f) = setup(&data, 128);
+        let mut scratch = RangeScratch::new();
+        let mut out = Vec::new();
+        f.read_ranges_into(
+            &[
+                (10, 100),                                   // within page 0
+                (PAGE_SIZE as u64 - 50, 100),                // spans 0|1
+                (PAGE_SIZE as u64 * 2, PAGE_SIZE),           // exactly page 2
+                (7, 0),                                      // empty
+            ],
+            None,
+            &mut scratch,
+            &mut out,
+        )
+        .unwrap();
+        assert!(matches!(out[0], RangeBuf::Page { .. }), "in-page range must be a view");
+        assert!(matches!(out[1], RangeBuf::Owned(_)), "spanning range must assemble");
+        assert!(matches!(out[2], RangeBuf::Page { .. }), "page-aligned full page is a view");
+        assert_eq!(&out[0][..], &data[10..110]);
+        assert_eq!(&out[1][..], &data[PAGE_SIZE - 50..PAGE_SIZE + 50]);
+        assert_eq!(&out[2][..], &data[PAGE_SIZE * 2..PAGE_SIZE * 3]);
+        assert!(out[3].is_empty());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn warm_batches_allocate_nothing_through_the_scratch() {
+        let data = pattern(PAGE_SIZE * 8);
+        let (path, f) = setup(&data, 128);
+        let ranges: Vec<ByteRange> = vec![
+            (100, 200),
+            (PAGE_SIZE as u64 - 10, 20), // spanning: exercises the free list
+            (PAGE_SIZE as u64 * 3 + 7, 64),
+        ];
+        let mut scratch = RangeScratch::new();
+        let mut out = Vec::new();
+        // cold call: pages read, buffers allocated
+        f.read_ranges_into(&ranges, None, &mut scratch, &mut out).unwrap();
+        for (got, &(off, len)) in out.iter().zip(&ranges) {
+            assert_eq!(&got[..], &data[off as usize..off as usize + len]);
+        }
+        // warm calls: same batch must be allocation-free via the scratch
+        let warm = scratch.allocs();
+        for _ in 0..10 {
+            f.read_ranges_into(&ranges, None, &mut scratch, &mut out).unwrap();
+            for (got, &(off, len)) in out.iter().zip(&ranges) {
+                assert_eq!(&got[..], &data[off as usize..off as usize + len]);
+            }
+        }
+        assert_eq!(scratch.allocs(), warm, "warm batches must not allocate");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn range_views_survive_eviction_of_their_pages() {
+        let data = pattern(PAGE_SIZE * 256);
+        let (path, f) = setup(&data, 64); // 1 frame per shard
+        let mut scratch = RangeScratch::new();
+        let mut out = Vec::new();
+        f.read_ranges_into(&[(5, 50)], None, &mut scratch, &mut out).unwrap();
+        let held = out.pop().unwrap();
+        // thrash the cache so page 0 is long evicted
+        for i in 0..255u64 {
+            f.read(i * PAGE_SIZE as u64, PAGE_SIZE).unwrap();
+        }
+        assert_eq!(&held[..], &data[5..55], "view must outlive eviction");
         let _ = std::fs::remove_file(path);
     }
 

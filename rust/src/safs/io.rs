@@ -21,7 +21,7 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use super::page_cache::PAGE_SIZE;
+use super::page_cache::{PageRef, PAGE_SIZE};
 use super::stats::IoStats;
 
 /// Pool configuration.
@@ -50,10 +50,30 @@ pub(crate) struct RunRequest {
     pub reply: Sender<RunReply>,
 }
 
-/// Completed run: the pages in order.
+/// Completed run: one shared buffer holding every page contiguously.
+///
+/// This is the zero-copy pivot of the fetch path: the pool allocates
+/// **once** per coalesced run (up to `max_run_pages` pages), and the
+/// cache, the range assembler and the decoder all work through
+/// [`PageRef`] views into this buffer — a 256-page run that used to cost
+/// 256 page allocations plus copies now costs one allocation and zero
+/// copies.
 pub(crate) struct RunReply {
     pub start_page: u64,
-    pub pages: Vec<Arc<[u8]>>,
+    /// Pages in the run; `buf.len() == npages * PAGE_SIZE`.
+    pub npages: usize,
+    /// The run buffer. The tail past `bytes_read` is EOF zero padding.
+    pub buf: Arc<[u8]>,
+    /// Bytes actually read from disk (0 for a fully-past-EOF run).
+    pub bytes_read: u64,
+}
+
+impl RunReply {
+    /// Zero-copy view of page `i` of the run.
+    #[inline]
+    pub fn page(&self, i: usize) -> PageRef {
+        PageRef::new(self.buf.clone(), i * PAGE_SIZE)
+    }
 }
 
 struct Queue {
@@ -124,40 +144,49 @@ impl IoPool {
                     q = queue.cv.wait(q).unwrap();
                 }
             };
-            let pages = Self::service(&req, &stats, delay_us);
+            let reply = Self::service(&req, &stats, delay_us);
             // receiver may have gone away (caller panicked); ignore.
-            let _ = req.reply.send(RunReply { start_page: req.start_page, pages });
+            let _ = req.reply.send(reply);
         }
     }
 
-    /// Execute one run: a single pread covering all pages, split up and
-    /// zero-padded at EOF.
-    fn service(req: &RunRequest, stats: &IoStats, delay_us: u64) -> Vec<Arc<[u8]>> {
+    /// Execute one run: a single pread into one shared buffer covering
+    /// all pages, zero-padded at EOF.
+    ///
+    /// Stats count what actually happened: `bytes_read` is the byte
+    /// count the pread returned (not the padded run size), and a run
+    /// lying entirely past EOF performs no pread, pays no injected
+    /// latency and moves no counters.
+    fn service(req: &RunRequest, stats: &IoStats, delay_us: u64) -> RunReply {
         let offset = req.start_page * PAGE_SIZE as u64;
         let want = req.npages * PAGE_SIZE;
-        let mut buf = vec![0u8; want];
-        // read as much as the file holds; rest stays zero (EOF padding)
+        // single run buffer; the TrustedLen collect writes it in place
+        let mut buf: Arc<[u8]> = (0..want).map(|_| 0u8).collect();
         let avail = (req.file_len.saturating_sub(offset) as usize).min(want);
+        let mut done = 0;
         if avail > 0 {
-            let mut done = 0;
+            let dst = Arc::get_mut(&mut buf).expect("fresh run buffer is uniquely owned");
             while done < avail {
-                match req.file.read_at(&mut buf[done..avail], offset + done as u64) {
+                match req.file.read_at(&mut dst[done..avail], offset + done as u64) {
                     Ok(0) => break,
                     Ok(n) => done += n,
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                     Err(e) => panic!("safs pread failed: {e}"),
                 }
             }
+            if delay_us > 0 {
+                // emulate SSD access latency per physical request
+                std::thread::sleep(std::time::Duration::from_micros(delay_us));
+            }
+            stats.add_physical_read(1);
+            stats.add_bytes_read(done as u64);
         }
-        if delay_us > 0 {
-            // emulate SSD access latency per physical request
-            std::thread::sleep(std::time::Duration::from_micros(delay_us));
+        RunReply {
+            start_page: req.start_page,
+            npages: req.npages,
+            buf,
+            bytes_read: done as u64,
         }
-        stats.add_physical_read(1);
-        stats.add_bytes_read(want as u64);
-        buf.chunks(PAGE_SIZE)
-            .map(|c| Arc::from(c.to_vec().into_boxed_slice()))
-            .collect()
     }
 }
 
@@ -234,13 +263,48 @@ mod tests {
             reply: tx,
         });
         let reply = rx.recv().unwrap();
-        assert_eq!(reply.pages.len(), 2);
-        assert_eq!(&reply.pages[0][..], &data[..PAGE_SIZE]);
-        assert_eq!(&reply.pages[1][..PAGE_SIZE / 2], &data[PAGE_SIZE..]);
-        assert!(reply.pages[1][PAGE_SIZE / 2..].iter().all(|&b| b == 0), "EOF padding");
+        assert_eq!(reply.npages, 2);
+        assert_eq!(reply.buf.len(), 2 * PAGE_SIZE);
+        assert_eq!(&reply.page(0)[..], &data[..PAGE_SIZE]);
+        assert_eq!(&reply.page(1)[..PAGE_SIZE / 2], &data[PAGE_SIZE..]);
+        assert!(reply.page(1)[PAGE_SIZE / 2..].iter().all(|&b| b == 0), "EOF padding");
         let s = stats.snapshot();
         assert_eq!(s.physical_reads, 1);
-        assert_eq!(s.bytes_read, 2 * PAGE_SIZE as u64);
+        // stats count the bytes the disk produced, not the padded run
+        assert_eq!(s.bytes_read, data.len() as u64);
+        assert_eq!(reply.bytes_read, data.len() as u64);
+        drop(pool);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn fully_past_eof_run_skips_the_read_and_the_stats() {
+        // 1 page of data; request pages [8, 10): nothing to read
+        let data = vec![3u8; PAGE_SIZE];
+        let (path, file) = temp_file(&data);
+        let stats = Arc::new(IoStats::new());
+        // huge delay would show up in the test's runtime if the skipped
+        // pread still paid it
+        let pool = IoPool::new(
+            IoConfig { threads: 1, io_delay_us: 200_000, ..Default::default() },
+            stats.clone(),
+        );
+        let (tx, rx) = channel();
+        let t = std::time::Instant::now();
+        pool.submit(RunRequest {
+            file,
+            file_len: data.len() as u64,
+            start_page: 8,
+            npages: 2,
+            reply: tx,
+        });
+        let reply = rx.recv().unwrap();
+        assert!(t.elapsed() < std::time::Duration::from_millis(150), "no delay for no read");
+        assert_eq!(reply.bytes_read, 0);
+        assert!(reply.buf.iter().all(|&b| b == 0), "pure padding");
+        let s = stats.snapshot();
+        assert_eq!(s.physical_reads, 0, "no pread happened: {s:?}");
+        assert_eq!(s.bytes_read, 0, "no bytes moved: {s:?}");
         drop(pool);
         let _ = std::fs::remove_file(path);
     }
@@ -264,8 +328,8 @@ mod tests {
         drop(tx);
         let mut got = 0;
         while let Ok(r) = rx.recv() {
-            assert_eq!(r.pages.len(), 1);
-            assert!(r.pages[0].iter().all(|&b| b == 7));
+            assert_eq!(r.npages, 1);
+            assert!(r.page(0).iter().all(|&b| b == 7));
             got += 1;
         }
         assert_eq!(got, 64);

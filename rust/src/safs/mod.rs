@@ -26,7 +26,7 @@ pub mod io;
 pub mod page_cache;
 pub mod stats;
 
-pub use file::SemFile;
+pub use file::{RangeBuf, RangeScratch, SemFile};
 pub use io::{IoConfig, IoPool};
-pub use page_cache::{PageCache, PAGE_SIZE};
+pub use page_cache::{PageCache, PageRef, PAGE_SIZE};
 pub use stats::{IoStats, IoStatsSnapshot};

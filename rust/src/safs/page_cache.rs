@@ -4,8 +4,10 @@
 //! runs the 14 GB Twitter graph with a 2 GB cache. We implement a
 //! second-chance (clock) cache sharded by page number to keep lock
 //! contention off the hot lookup path. Pages are immutable once inserted
-//! (graph images are read-only at run time), handed out as `Arc<[u8]>` so
-//! eviction never invalidates readers.
+//! (graph images are read-only at run time), handed out as [`PageRef`]
+//! views into shared run buffers so eviction never invalidates readers
+//! and a coalesced multi-page read costs one allocation, not one per
+//! page.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -19,11 +21,70 @@ pub const PAGE_SIZE: usize = 4096;
 /// Number of shards (power of two).
 const SHARDS: usize = 64;
 
+/// A zero-copy view of one page inside a shared run buffer.
+///
+/// The I/O pool services a coalesced run of pages as **one** allocation
+/// (`Arc<[u8]>` of `npages * PAGE_SIZE` bytes); every page of the run is
+/// a `PageRef` — the buffer handle plus the page's byte offset. Cloning
+/// is two words and a refcount bump; no page bytes are ever copied
+/// between the pool, the cache and readers.
+///
+/// Memory note: the run buffer stays alive until the last of its page
+/// views drops, so evicting *some* pages of a run does not free bytes
+/// until all of them go. Per partially evicted run the overshoot is
+/// bounded by `max_run_pages × PAGE_SIZE`; in the worst case — an
+/// access pattern that keeps exactly one page of every large run hot —
+/// resident frames can pin up to `max_run_pages ×` the configured
+/// cache bytes, and `resident_bytes()` does not see the difference.
+/// Sequential SEM scans insert and evict whole runs together, so real
+/// workloads sit near the per-run bound; deployments that mix a huge
+/// `max_run_pages` with a small cache should shrink `max_run_pages`
+/// (the knob that caps the amplification) rather than rely on it.
+#[derive(Clone)]
+pub struct PageRef {
+    buf: Arc<[u8]>,
+    offset: usize,
+}
+
+impl PageRef {
+    /// View the `PAGE_SIZE` bytes of `buf` starting at `offset`.
+    pub fn new(buf: Arc<[u8]>, offset: usize) -> Self {
+        debug_assert!(offset + PAGE_SIZE <= buf.len());
+        PageRef { buf, offset }
+    }
+
+    /// The page bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.offset..self.offset + PAGE_SIZE]
+    }
+}
+
+impl std::ops::Deref for PageRef {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
 /// One cached page.
 struct Frame {
     page_no: u64,
-    data: Arc<[u8]>,
+    data: PageRef,
     ref_bit: bool,
+}
+
+/// What [`Shard::insert`] did — drives the exact residency/eviction
+/// accounting in [`PageCache::insert`].
+enum Inserted {
+    /// A new frame was occupied (cache grew by one resident page).
+    Fresh,
+    /// A victim frame was replaced (resident count unchanged).
+    Evicted,
+    /// The page was already cached (raced duplicate insert; no change).
+    Duplicate,
 }
 
 /// One shard: a clock over up to `cap` frames.
@@ -35,24 +96,23 @@ struct Shard {
 }
 
 impl Shard {
-    fn get(&mut self, page_no: u64) -> Option<Arc<[u8]>> {
+    fn get(&mut self, page_no: u64) -> Option<PageRef> {
         let &idx = self.map.get(&page_no)?;
         self.frames[idx].ref_bit = true;
         Some(self.frames[idx].data.clone())
     }
 
     /// Insert a page, evicting with second-chance if at capacity.
-    /// Returns true if an eviction happened.
-    fn insert(&mut self, page_no: u64, data: Arc<[u8]>) -> bool {
+    fn insert(&mut self, page_no: u64, data: PageRef) -> Inserted {
         if let Some(&idx) = self.map.get(&page_no) {
-            // raced: someone else inserted; refresh data (identical bytes)
+            // raced: someone else inserted; keep theirs (identical bytes)
             self.frames[idx].ref_bit = true;
-            return false;
+            return Inserted::Duplicate;
         }
         if self.frames.len() < self.cap {
             self.map.insert(page_no, self.frames.len());
             self.frames.push(Frame { page_no, data, ref_bit: true });
-            return false;
+            return Inserted::Fresh;
         }
         // clock sweep for a victim
         loop {
@@ -66,7 +126,7 @@ impl Shard {
                 self.map.insert(page_no, victim);
                 self.frames[victim] = Frame { page_no, data, ref_bit: true };
                 self.hand = (self.hand + 1) % self.frames.len();
-                return true;
+                return Inserted::Evicted;
             }
         }
     }
@@ -82,10 +142,14 @@ pub struct PageCache {
 
 impl PageCache {
     /// Build a cache holding at most `capacity_bytes` (rounded down to
-    /// whole pages, min 1 page per shard).
+    /// whole pages, min 1 page per shard). The effective capacity is
+    /// rounded up to a whole number of frames per shard, and
+    /// [`Self::capacity_pages`] reports that true frame bound, so
+    /// `resident_pages() <= capacity_pages()` holds exactly.
     pub fn new(capacity_bytes: usize, stats: Arc<IoStats>) -> Self {
-        let capacity_pages = (capacity_bytes / PAGE_SIZE).max(SHARDS);
-        let per_shard = capacity_pages.div_ceil(SHARDS);
+        let requested = (capacity_bytes / PAGE_SIZE).max(SHARDS);
+        let per_shard = requested.div_ceil(SHARDS);
+        let capacity_pages = per_shard * SHARDS;
         let shards = (0..SHARDS)
             .map(|_| {
                 Mutex::new(Shard {
@@ -107,7 +171,7 @@ impl PageCache {
     }
 
     /// Look up a page; counts hit/miss in stats.
-    pub fn get(&self, page_no: u64) -> Option<Arc<[u8]>> {
+    pub fn get(&self, page_no: u64) -> Option<PageRef> {
         self.get_tracked(page_no, None)
     }
 
@@ -116,7 +180,7 @@ impl PageCache {
     /// channel for service mode: concurrent jobs sharing one cache each
     /// pass their own [`IoStats`], so every access lands in exactly one
     /// job's counters while the global ones still aggregate everything.
-    pub fn get_tracked(&self, page_no: u64, extra: Option<&IoStats>) -> Option<Arc<[u8]>> {
+    pub fn get_tracked(&self, page_no: u64, extra: Option<&IoStats>) -> Option<PageRef> {
         let got = self.shard_of(page_no).lock().unwrap().get(page_no);
         if got.is_some() {
             self.stats.add_cache_hit(1);
@@ -133,18 +197,22 @@ impl PageCache {
     }
 
     /// Look up without touching hit/miss counters (used by prefetch).
-    pub fn peek(&self, page_no: u64) -> Option<Arc<[u8]>> {
+    pub fn peek(&self, page_no: u64) -> Option<PageRef> {
         self.shard_of(page_no).lock().unwrap().get(page_no)
     }
 
-    /// Insert a page read from disk.
-    pub fn insert(&self, page_no: u64, data: Arc<[u8]>) {
-        debug_assert_eq!(data.len(), PAGE_SIZE);
-        let evicted = self.shard_of(page_no).lock().unwrap().insert(page_no, data);
-        if evicted {
-            self.stats.add_eviction(1);
-        } else {
-            self.resident.fetch_add(1, Ordering::Relaxed);
+    /// Insert a page read from disk. Only genuinely new frames bump the
+    /// residency count: a raced duplicate insert (two batches missing on
+    /// the same page) leaves residency untouched, and an eviction swaps
+    /// a frame without changing it.
+    pub fn insert(&self, page_no: u64, data: PageRef) {
+        debug_assert_eq!(data.as_slice().len(), PAGE_SIZE);
+        match self.shard_of(page_no).lock().unwrap().insert(page_no, data) {
+            Inserted::Fresh => {
+                self.resident.fetch_add(1, Ordering::Relaxed);
+            }
+            Inserted::Evicted => self.stats.add_eviction(1),
+            Inserted::Duplicate => {}
         }
     }
 
@@ -153,9 +221,12 @@ impl PageCache {
         self.capacity_pages
     }
 
-    /// Currently resident pages (approximate under concurrency).
+    /// Currently resident pages. Exact: only [`Inserted::Fresh`] frames
+    /// count, so no clamp is needed — the count can never exceed
+    /// [`Self::capacity_pages`] (frames are only ever added up to each
+    /// shard's cap, then recycled in place).
     pub fn resident_pages(&self) -> u64 {
-        self.resident.load(Ordering::Relaxed).min(self.capacity_pages as u64)
+        self.resident.load(Ordering::Relaxed)
     }
 
     /// Resident bytes (approximate).
@@ -173,8 +244,8 @@ impl PageCache {
 mod tests {
     use super::*;
 
-    fn page(fill: u8) -> Arc<[u8]> {
-        Arc::from(vec![fill; PAGE_SIZE].into_boxed_slice())
+    fn page(fill: u8) -> PageRef {
+        PageRef::new(Arc::from(vec![fill; PAGE_SIZE].into_boxed_slice()), 0)
     }
 
     fn cache(pages: usize) -> PageCache {
@@ -309,6 +380,55 @@ mod tests {
         assert_eq!(d.cache_misses, 0, "warm rescan must not miss: {d:?}");
         assert_eq!(d.cache_hits, 4 * 128);
         assert!(d.hit_ratio() > 0.999);
+    }
+
+    #[test]
+    fn duplicate_insert_does_not_overcount_residency() {
+        // two batches can miss on the same page and both insert it; only
+        // the first occupies a frame, so residency must count once
+        let c = cache(128);
+        c.insert(5, page(5));
+        c.insert(5, page(5));
+        c.insert(5, page(5));
+        assert_eq!(c.resident_pages(), 1, "duplicate inserts must not count");
+        c.insert(9, page(9));
+        assert_eq!(c.resident_pages(), 2);
+        assert_eq!(c.stats().snapshot().evictions, 0);
+    }
+
+    #[test]
+    fn residency_is_exact_without_clamping() {
+        // hammer one frame per shard with duplicates + distinct pages:
+        // the unclamped count must stay within the true frame capacity
+        let c = cache(SHARDS);
+        for round in 0..4u64 {
+            for i in 0..(SHARDS as u64 * 2) {
+                c.insert(i, page((i + round) as u8));
+            }
+        }
+        assert!(
+            c.resident_pages() <= c.capacity_pages() as u64,
+            "exact residency {} exceeds capacity {}",
+            c.resident_pages(),
+            c.capacity_pages()
+        );
+        assert!(c.resident_pages() > 0);
+    }
+
+    #[test]
+    fn page_ref_views_share_one_run_buffer() {
+        // a 4-page run buffer serves 4 cache frames with zero copies
+        let run: Arc<[u8]> = (0..4 * PAGE_SIZE).map(|i| (i / PAGE_SIZE) as u8).collect();
+        let c = cache(128);
+        for i in 0..4 {
+            c.insert(100 + i as u64, PageRef::new(run.clone(), i * PAGE_SIZE));
+        }
+        for i in 0..4u64 {
+            let p = c.get(100 + i).expect("inserted view");
+            assert_eq!(p.len(), PAGE_SIZE);
+            assert!(p.iter().all(|&b| b == i as u8), "view {i} bytes wrong");
+        }
+        assert_eq!(c.resident_pages(), 4);
     }
 
     #[test]

@@ -145,6 +145,13 @@ pub struct JobStatus {
     pub error: Option<String>,
     /// Engine rounds executed.
     pub rounds: u64,
+    /// Frontier chunks stolen between engine workers during the run —
+    /// nonzero means the work-stealing scheduler rebalanced a skewed
+    /// frontier for this job.
+    pub steals: u64,
+    /// Max/min per-worker busy-time ratio (1.0 = perfectly balanced;
+    /// `f64::INFINITY` if a worker recorded no busy time).
+    pub busy_ratio: f64,
     /// Wall time of the run (zero unless it ran).
     pub wall: Duration,
     /// This job's own I/O, disjointly attributed via its private
@@ -273,6 +280,8 @@ impl GraphService {
             summary: None,
             error: None,
             rounds: 0,
+            steals: 0,
+            busy_ratio: 1.0,
             wall: Duration::ZERO,
             io: IoStatsSnapshot::default(),
             finish_seq: 0,
@@ -496,8 +505,12 @@ impl GraphService {
                 j.status.wall = wall;
                 j.status.finish_seq = self.next_finish.fetch_add(1, Ordering::Relaxed) + 1;
                 match result {
-                    Ok(Ok((summary, rounds, io))) => {
-                        j.status.rounds = rounds;
+                    Ok(Ok((summary, report, io))) => {
+                        if let Some(r) = &report {
+                            j.status.rounds = r.rounds;
+                            j.status.steals = r.engine.steals;
+                            j.status.busy_ratio = r.engine.busy_ratio();
+                        }
                         j.status.io = io;
                         j.status.summary = Some(summary);
                         if cancel.load(Ordering::Relaxed) {
@@ -527,7 +540,7 @@ impl GraphService {
         req: &JobRequest,
         spec: &AlgSpec,
         cancel: Arc<AtomicBool>,
-    ) -> crate::Result<(String, u64, IoStatsSnapshot)> {
+    ) -> crate::Result<(String, Option<crate::engine::RunReport>, IoStatsSnapshot)> {
         let shared = self.registry.open(&req.graph)?;
         let jg = JobGraph::new(shared);
         let mut rc = RunConfig {
@@ -543,8 +556,7 @@ impl GraphService {
         }
         rc.cancel = Some(cancel);
         let out = run_alg(&jg, spec, &rc);
-        let rounds = out.report.as_ref().map_or(0, |r| r.rounds);
-        Ok((out.summary, rounds, jg.job_stats().snapshot()))
+        Ok((out.summary, out.report, jg.job_stats().snapshot()))
     }
 }
 

@@ -433,6 +433,12 @@ pub fn status_to_json(st: &JobStatus) -> Json {
         ),
         ("error", st.error.clone().map_or(Json::Null, Json::Str)),
         ("rounds", Json::u(st.rounds)),
+        ("steals", Json::u(st.steals)),
+        // JSON has no Infinity; an unbounded imbalance encodes as null
+        (
+            "busy_ratio",
+            if st.busy_ratio.is_finite() { Json::f(st.busy_ratio) } else { Json::Null },
+        ),
         ("wall_ms", Json::f(st.wall.as_secs_f64() * 1e3)),
         ("finish_seq", Json::u(st.finish_seq)),
         ("io", snapshot_to_json(&st.io)),

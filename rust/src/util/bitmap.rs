@@ -60,6 +60,28 @@ impl AtomicBitmap {
         }
     }
 
+    /// Word-level clear of exactly `[start, end)`: one `store(0)` per
+    /// fully covered 64-bit word instead of a per-bit test-and-clear
+    /// scan, plus one masked `fetch_and` when `end` is ragged — bits at
+    /// `end` and above are preserved. `start` must be word-aligned (the
+    /// scheduler's chunks are). Callers must own the span exclusively
+    /// (the scheduler clears a chunk only after the claiming worker
+    /// finished scanning it, and nothing sets bits in the current-round
+    /// bitmap during the vertex phase).
+    pub fn clear_span(&self, start: usize, end: usize) {
+        debug_assert_eq!(start % 64, 0, "clear_span start must be word-aligned");
+        debug_assert!(end >= start && end <= self.len);
+        let first = start / 64;
+        let full = end / 64; // words fully inside the span
+        for w in &self.words[first..full] {
+            w.store(0, Ordering::Relaxed);
+        }
+        if end % 64 != 0 {
+            // ragged tail: clear only bits below `end` in the last word
+            self.words[full].fetch_and(!0u64 << (end % 64), Ordering::Relaxed);
+        }
+    }
+
     /// Population count.
     pub fn count(&self) -> usize {
         self.words
@@ -174,6 +196,29 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(bm.count(), 100_000);
+    }
+
+    #[test]
+    fn clear_span_word_level() {
+        let bm = AtomicBitmap::new(300);
+        for i in 0..300 {
+            bm.set(i);
+        }
+        // aligned start, ragged end: exactly [64, 200) cleared — live
+        // bits at 200.. in the tail word must survive
+        bm.clear_span(64, 200);
+        let got: Vec<usize> = bm.iter_set().collect();
+        let want: Vec<usize> = (0..64).chain(200..300).collect();
+        assert_eq!(got, want);
+        // empty span is a no-op
+        bm.clear_span(0, 0);
+        assert_eq!(bm.count(), want.len());
+        // sub-word ragged span
+        bm.clear_span(0, 10);
+        assert_eq!(bm.iter_set_range(0, 64).collect::<Vec<_>>(), (10..64).collect::<Vec<_>>());
+        // full clear via span (ragged at len)
+        bm.clear_span(0, 300);
+        assert_eq!(bm.count(), 0);
     }
 
     #[test]

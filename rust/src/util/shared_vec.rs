@@ -2,10 +2,15 @@
 //!
 //! Vertex programs own O(n) state arrays that workers mutate concurrently
 //! — but only ever *their own vertex's* slot during `run_on_vertex` /
-//! `run_on_message` (the engine guarantees each vertex is processed by
-//! exactly one worker at a time). `SharedVec` encodes that contract: reads
-//! from any thread, writes through [`SharedVec::set`]/[`SharedVec::get_mut`]
-//! which the caller promises are per-slot exclusive.
+//! `run_on_message`. The engine guarantees each vertex is processed by
+//! exactly one worker at a time: messages for `v` are delivered by `v`'s
+//! owner worker in the message phase, and `v`'s vertex run executes on
+//! whichever worker claimed `v`'s frontier chunk (possibly a stealing
+//! one) — each phase gives one exclusive writer per slot, and the global
+//! barrier between phases orders them. `SharedVec` encodes that
+//! contract: reads from any thread, writes through
+//! [`SharedVec::set`]/[`SharedVec::get_mut`] which the caller promises
+//! are per-slot exclusive.
 //!
 //! This mirrors FlashGraph's design, where vertex state lives in flat
 //! arrays indexed by vertex id and the engine's partitioning provides

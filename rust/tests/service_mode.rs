@@ -90,16 +90,33 @@ fn concurrent_mixed_jobs_share_one_image_with_disjoint_io() {
     }
 
     // per-job I/O is disjointly attributed: each job saw traffic, and
-    // the per-job deltas sum exactly to the shared substrate's counters
+    // the per-job deltas sum exactly to the shared substrate's counters.
+    // The engine now fetches through the zero-copy arena path
+    // (JobGraph::fetch_batch_into → SemGraph::fetch_batch_tracked_into),
+    // so these equalities prove the arena preserved exact attribution.
     let global = svc.substrate_stats().delta(&before);
     let sum_reqs: u64 = statuses.iter().map(|s| s.io.read_requests).sum();
     let sum_logical: u64 = statuses.iter().map(|s| s.io.logical_bytes).sum();
+    let sum_hits: u64 = statuses.iter().map(|s| s.io.cache_hits).sum();
+    let sum_misses: u64 = statuses.iter().map(|s| s.io.cache_misses).sum();
+    let sum_preads: u64 = statuses.iter().map(|s| s.io.physical_reads).sum();
+    let sum_disk: u64 = statuses.iter().map(|s| s.io.bytes_read).sum();
     for st in &statuses {
         assert!(st.io.read_requests > 0, "job did no I/O: {st:?}");
         assert!(st.io.logical_bytes > 0, "job read no bytes: {st:?}");
     }
     assert_eq!(sum_reqs, global.read_requests, "read requests not disjoint");
     assert_eq!(sum_logical, global.logical_bytes, "logical bytes not disjoint");
+    // demand lookups all flow through tracked gets: hit/miss counters
+    // are fully attributed (prefetch peeks don't touch them)
+    assert_eq!(sum_hits, global.cache_hits, "cache hits not disjoint");
+    assert_eq!(sum_misses, global.cache_misses, "cache misses not disjoint");
+    // physical reads/bytes include *unattributed speculative prefetch*
+    // in the global counters, so per-job sums are a lower bound that
+    // must never exceed the substrate totals
+    assert!(sum_preads <= global.physical_reads, "{sum_preads} > {}", global.physical_reads);
+    assert!(sum_disk <= global.bytes_read, "{sum_disk} > {}", global.bytes_read);
+    assert!(sum_preads > 0, "tiny shared cache must force physical reads");
 
     svc.shutdown();
     cleanup(&base);
