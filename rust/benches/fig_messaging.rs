@@ -1,0 +1,132 @@
+//! Figure M — message transports: combiner lanes vs queue lanes.
+//!
+//! The message-phase counterpart of `fig_scaling`: the same program on
+//! the dense O(n) combiner lanes and on the recycled queue-lane
+//! baseline, at 1/2/8 workers, plus an edge-factor sweep showing that
+//! combiner-lane message memory depends on n only (the paper's
+//! "minimize message memory", §4.2 / Fig. 3).
+//!
+//! This bench doubles as the CI tier-2 messaging smoke (run at
+//! `GRAPHYTI_BENCH_SCALE=10`): it *asserts* that
+//!
+//! 1. PageRank's combiner-lane peak message bytes stay within a small
+//!    multiple of `n × size_of::<f32>()` (concretely `3 × workers ×
+//!    size_of::<f64>()` bytes per vertex — 12 × n×4 B at 2 workers),
+//! 2. that peak is bit-identical across edge factors at fixed n
+//!    (O(n), not O(m)),
+//! 3. both transports produce the same results,
+//!
+//! and exits nonzero (panics) if any bound breaks.
+
+use std::mem::size_of;
+
+use graphyti::algs::pagerank::pagerank_push;
+use graphyti::algs::wcc::wcc;
+use graphyti::coordinator::benchkit::{banner, bench_scale, open_sem, rmat_workload, FigTable};
+use graphyti::engine::TransportMode;
+use graphyti::util::fmt_bytes;
+
+const TRANSPORTS: [(&str, TransportMode); 2] =
+    [("queue", TransportMode::Queue), ("combiner", TransportMode::Auto)];
+
+fn main() {
+    let scale = bench_scale();
+    let n = 1usize << scale;
+    let (base, cfg) = rmat_workload(scale, 16, true, "figmsg");
+    banner(
+        "Figure M",
+        "combiner lanes vs queue lanes (minimize message memory)",
+        &format!(
+            "R-MAT scale {scale}, ef 16, directed, cache=1/7 adj, io_delay={}us",
+            cfg.io_delay_us
+        ),
+    );
+    let thr = 1e-3 / n as f64;
+
+    let mut t = FigTable::new();
+    let mut pr_ranks: Vec<(usize, TransportMode, Vec<f64>)> = Vec::new();
+    for workers in [1usize, 2, 8] {
+        for (name, transport) in TRANSPORTS {
+            let g = open_sem(&base, &cfg);
+            let mut e = cfg.engine();
+            e.workers = workers;
+            e.transport = transport;
+            let r = pagerank_push(&g, cfg.alpha, thr, &e);
+            if transport == TransportMode::Auto {
+                let bound = (3 * workers * size_of::<f64>() * n) as u64;
+                assert!(
+                    r.report.engine.peak_msg_bytes <= bound,
+                    "PR combiner peak {} exceeds O(n) bound {} (w={workers})",
+                    r.report.engine.peak_msg_bytes,
+                    bound
+                );
+                assert!(
+                    r.report.engine.combined_msgs > 0,
+                    "hub-heavy R-MAT PageRank must fold messages"
+                );
+                assert_eq!(r.report.engine.msg_allocs, 0, "combiner path never allocates");
+            }
+            t.add(&format!("PR-push {name} w={workers}"), &r.report);
+            pr_ranks.push((workers, transport, r.rank));
+        }
+    }
+    // both transports converge to the same ranking at every worker count
+    let baseline = &pr_ranks[0].2;
+    for (workers, transport, rank) in &pr_ranks[1..] {
+        let l1: f64 = rank.iter().zip(baseline).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 0.05, "PR transports disagree: L1 {l1} (w={workers}, {transport:?})");
+    }
+
+    let mut wcc_labels: Option<Vec<graphyti::VertexId>> = None;
+    for workers in [1usize, 2, 8] {
+        for (name, transport) in TRANSPORTS {
+            let g = open_sem(&base, &cfg);
+            let mut e = cfg.engine();
+            e.workers = workers;
+            e.transport = transport;
+            let (labels, r) = wcc(&g, &e);
+            if transport == TransportMode::Auto {
+                let bound = (3 * workers * size_of::<u32>() * n) as u64;
+                assert!(
+                    r.engine.peak_msg_bytes <= bound,
+                    "WCC combiner peak {} exceeds O(n) bound {} (w={workers})",
+                    r.engine.peak_msg_bytes,
+                    bound
+                );
+            }
+            t.add(&format!("WCC {name} w={workers}"), &r);
+            match &wcc_labels {
+                None => wcc_labels = Some(labels),
+                Some(want) => assert_eq!(
+                    &labels, want,
+                    "WCC labels must not depend on transport/workers ({name}, w={workers})"
+                ),
+            }
+        }
+    }
+    t.print();
+
+    // ---- O(n) vs O(m): fixed n, growing edge factor ------------------
+    println!("\nmessage memory vs edge factor (PR-push, combiner lanes, 2 workers):");
+    let mut peaks = Vec::new();
+    for ef in [8usize, 16] {
+        let (base, cfg) = rmat_workload(scale, ef, true, "figmsg");
+        let g = open_sem(&base, &cfg);
+        let mut e = cfg.engine();
+        e.workers = 2;
+        let r = pagerank_push(&g, cfg.alpha, thr, &e).report;
+        println!(
+            "  ef={ef:>2}: peak {} | {} sends, {} folded away, {} delivered",
+            fmt_bytes(r.engine.peak_msg_bytes),
+            r.engine.send_ops(),
+            r.engine.combined_msgs,
+            r.engine.deliveries,
+        );
+        peaks.push(r.engine.peak_msg_bytes);
+    }
+    assert!(
+        peaks.windows(2).all(|w| w[0] == w[1]),
+        "combiner message memory must be independent of edge count: {peaks:?}"
+    );
+    println!("combiner peak message bytes identical across edge factors: O(n), not O(m)");
+}

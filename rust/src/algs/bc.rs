@@ -54,6 +54,13 @@ enum LaneState {
 }
 
 /// Messages carry lane + phase metadata (§4.4).
+///
+/// Path counting is *not* commutative-associative across message kinds
+/// (a `Fwd` σ-sum and a `Bwd` δ-contribution for different lanes and
+/// distances cannot be folded into one value), so BC declares no
+/// [`crate::engine::Combiner`] and rides the recycled SPSC queue lanes
+/// — the transport whose multicast entries share one payload per
+/// destination worker.
 #[derive(Clone)]
 enum BcMsg {
     /// Forward: shortest-path count contribution from a level-(d-1)

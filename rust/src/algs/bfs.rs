@@ -11,7 +11,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::engine::{Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
+use crate::engine::{Combiner, Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
 use crate::graph::format::{EdgeRequest, VertexEdges};
 use crate::graph::source::EdgeSource;
 use crate::util::SharedVec;
@@ -28,6 +28,11 @@ impl VertexProgram for UniBfs {
 
     fn edge_request(&self, _v: VertexId) -> EdgeRequest {
         EdgeRequest::Out
+    }
+
+    // proposed levels fold to their minimum
+    fn combiner(&self) -> Option<Combiner<i64>> {
+        Some(Combiner { identity: || i64::MAX, combine: |a, b| *a = (*a).min(*b) })
     }
 
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, edges: &VertexEdges) {
@@ -101,6 +106,12 @@ impl VertexProgram for MsBfs {
 
     fn edge_request(&self, _v: VertexId) -> EdgeRequest {
         EdgeRequest::Out
+    }
+
+    // lane masks union: the diameter-estimation bitsets are the
+    // textbook OR-combinable message
+    fn combiner(&self) -> Option<Combiner<u64>> {
+        Some(Combiner { identity: || 0, combine: |a, b| *a |= *b })
     }
 
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, u64>, v: VertexId, edges: &VertexEdges) {

@@ -19,10 +19,17 @@
 //! **Pruning**: after a wave quiesces, the next k is jumped to the
 //! minimum remaining degree instead of k+1 — the paper credits this alone
 //! with an order of magnitude (Fig. 3).
+//!
+//! Messages are decrement *counts* (additively combinable), so the
+//! engine routes them through dense combiner lanes: a vertex losing
+//! several neighbors in one wave receives a single folded decrement —
+//! under combining, `deliveries` counts touched destinations per round
+//! (p2p still touches strictly fewer than multicast late in the peel,
+//! because it skips already-deleted destinations entirely).
 
 use std::sync::atomic::{AtomicU32, Ordering};
 
-use crate::engine::{Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
+use crate::engine::{Combiner, Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
 use crate::graph::format::{EdgeRequest, VertexEdges};
 use crate::graph::source::EdgeSource;
 use crate::util::SharedVec;
@@ -112,7 +119,14 @@ impl Coreness {
 }
 
 impl VertexProgram for Coreness {
-    type Msg = (); // "decrement your degree"
+    // "decrement your degree by this many deleted neighbors" — a count
+    // rather than a unit ping, so decrements to the same vertex fold by
+    // addition in the combiner lanes (one delivery applies them all)
+    type Msg = u32;
+
+    fn combiner(&self) -> Option<Combiner<u32>> {
+        Some(Combiner { identity: || 0, combine: |a, b| *a += *b })
+    }
 
     fn edge_request(&self, v: VertexId) -> EdgeRequest {
         // a vertex only needs its neighbor list at deletion time
@@ -123,7 +137,7 @@ impl VertexProgram for Coreness {
         }
     }
 
-    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, edges: &VertexEdges) {
+    fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, u32>, v: VertexId, edges: &VertexEdges) {
         if self.deleted(v) {
             return;
         }
@@ -149,20 +163,23 @@ impl VertexProgram for Coreness {
             // O(n) in-memory state that makes this filtering possible)
             for &u in neighbors {
                 if !self.deleted(u) {
-                    ctx.send(u, ());
+                    ctx.send(u, 1);
                 }
             }
         } else {
-            ctx.multicast(neighbors, ());
+            ctx.multicast(neighbors, 1);
         }
     }
 
-    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, ()>, v: VertexId, _m: &()) {
+    fn run_on_message(&self, ctx: &mut WorkerCtx<'_, u32>, v: VertexId, m: &u32) {
         if self.deleted(v) {
             return; // wasted delivery — the cost multicast pays late
         }
+        // `m` may be a folded batch of decrements from several deleted
+        // neighbors; applying it at once is exactly the sum of applying
+        // them one by one
         let d = self.deg.get_mut(v as usize);
-        *d = d.saturating_sub(1);
+        *d = d.saturating_sub(*m);
         if *d <= self.k.load(Ordering::Relaxed) {
             ctx.activate(v); // same-round cascade within the peel wave
         }

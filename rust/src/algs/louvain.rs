@@ -58,6 +58,11 @@ pub struct LouvainResult {
 
 // ------------------------------------------------- level-0 local moves --
 
+// Level-0 pings carry no foldable value (the information is "someone
+// near you moved", and the handler just re-activates), so Louvain stays
+// on the queue lanes, where a whole neighborhood ping is one multicast
+// entry per destination worker — declaring a trivial combiner would buy
+// nothing the Multi entry doesn't already provide.
 struct LouvainL0 {
     /// Current community of each vertex (racy cross-reads are fine for
     /// the greedy heuristic; own-slot writes are claimant-exclusive).

@@ -25,7 +25,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::engine::{Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
+use crate::engine::{Combiner, Engine, EngineConfig, EndCtx, RunReport, VertexProgram, WorkerCtx};
 use crate::graph::format::{EdgeRequest, VertexEdges};
 use crate::graph::source::EdgeSource;
 use crate::util::atomic_f64::{atomic_f64_vec, AtomicF64};
@@ -57,6 +57,12 @@ impl VertexProgram for PrPush {
 
     fn edge_request(&self, _v: VertexId) -> EdgeRequest {
         EdgeRequest::Out // the whole point: never touch in-lists
+    }
+
+    // rank mass is additive: shares to the same destination fold in the
+    // dense combiner lanes (O(n) message memory, one delivery per dst)
+    fn combiner(&self) -> Option<Combiner<f64>> {
+        Some(Combiner { identity: || 0.0, combine: |a, b| *a += *b })
     }
 
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, f64>, v: VertexId, edges: &VertexEdges) {
@@ -123,6 +129,10 @@ impl VertexProgram for PrPull {
 
     fn edge_request(&self, _v: VertexId) -> EdgeRequest {
         EdgeRequest::Out
+    }
+
+    fn combiner(&self) -> Option<Combiner<f64>> {
+        Some(Combiner { identity: || 0.0, combine: |a, b| *a += *b })
     }
 
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, f64>, v: VertexId, edges: &VertexEdges) {

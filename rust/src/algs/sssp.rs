@@ -4,7 +4,7 @@
 //! extra (the image format is unweighted; see DESIGN.md).
 
 use crate::algs::oracle::edge_weight;
-use crate::engine::{Engine, EngineConfig, RunReport, VertexProgram, WorkerCtx};
+use crate::engine::{Combiner, Engine, EngineConfig, RunReport, VertexProgram, WorkerCtx};
 use crate::graph::format::{EdgeRequest, VertexEdges};
 use crate::graph::source::EdgeSource;
 use crate::util::SharedVec;
@@ -19,6 +19,11 @@ impl VertexProgram for Sssp {
 
     fn edge_request(&self, _v: VertexId) -> EdgeRequest {
         EdgeRequest::Out
+    }
+
+    // label correction keeps only the best proposal: min-combinable
+    fn combiner(&self) -> Option<Combiner<u64>> {
+        Some(Combiner { identity: || u64::MAX, combine: |a, b| *a = (*a).min(*b) })
     }
 
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, u64>, v: VertexId, edges: &VertexEdges) {

@@ -1,6 +1,6 @@
 //! Weakly connected components by min-label propagation (library extra).
 
-use crate::engine::{Engine, EngineConfig, RunReport, VertexProgram, WorkerCtx};
+use crate::engine::{Combiner, Engine, EngineConfig, RunReport, VertexProgram, WorkerCtx};
 use crate::graph::format::{EdgeRequest, VertexEdges};
 use crate::graph::source::EdgeSource;
 use crate::util::SharedVec;
@@ -16,6 +16,12 @@ impl VertexProgram for Wcc {
     fn edge_request(&self, _v: VertexId) -> EdgeRequest {
         // weak connectivity: propagate along both directions
         EdgeRequest::Both
+    }
+
+    // min-label propagation: only the smallest proposed label matters,
+    // so labels to the same destination fold to their minimum
+    fn combiner(&self) -> Option<Combiner<VertexId>> {
+        Some(Combiner { identity: || VertexId::MAX, combine: |a, b| *a = (*a).min(*b) })
     }
 
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, VertexId>, v: VertexId, edges: &VertexEdges) {

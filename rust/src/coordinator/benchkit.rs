@@ -4,7 +4,8 @@
 //!
 //! Every bench prints the same row schema so EXPERIMENTS.md can quote
 //! them directly: variant, wall time, rounds, read requests, logical
-//! bytes, physical bytes, messages, waits.
+//! bytes, physical bytes, messages (sends, combiner folds, peak
+//! transport bytes, summed phase-A wall), waits.
 
 use std::path::PathBuf;
 
@@ -244,6 +245,9 @@ impl FigTable {
                 "p2p",
                 "mcast",
                 "deliver",
+                "combined",
+                "peak-msg",
+                "phaseA",
                 "waits",
                 "steals",
                 "busy-ratio",
@@ -272,6 +276,9 @@ impl FigTable {
             r.engine.p2p_msgs.to_string(),
             r.engine.multicast_msgs.to_string(),
             r.engine.deliveries.to_string(),
+            r.engine.combined_msgs.to_string(),
+            fmt_bytes(r.engine.peak_msg_bytes),
+            fmt_dur(r.engine.phase_a()),
             r.io.thread_waits.to_string(),
             r.engine.steals.to_string(),
             fmt_ratio(r.engine.busy_ratio()),

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
-use crate::engine::EngineConfig;
+use crate::engine::{EngineConfig, TransportMode};
 use crate::safs::IoConfig;
 
 /// All tunables for a run.
@@ -29,6 +29,9 @@ pub struct RunConfig {
     pub workers: usize,
     /// Vertices per fetch batch.
     pub batch: usize,
+    /// Message transport: `auto` (combiner lanes when the program
+    /// declares a combiner) or `queue` (force the queue-lane baseline).
+    pub transport: TransportMode,
     /// PageRank damping factor.
     pub alpha: f64,
     /// PageRank convergence threshold (absolute rank delta).
@@ -50,6 +53,7 @@ impl Default for RunConfig {
             max_run_pages: 256,
             workers: 0,
             batch: 1024,
+            transport: TransportMode::Auto,
             alpha: 0.85,
             threshold: 1e-10,
             seed: 42,
@@ -69,6 +73,13 @@ impl RunConfig {
             "max_run_pages" => self.max_run_pages = v.parse().context("max_run_pages")?,
             "workers" => self.workers = v.parse().context("workers")?,
             "batch" => self.batch = v.parse().context("batch")?,
+            "transport" => {
+                self.transport = match v {
+                    "auto" => TransportMode::Auto,
+                    "queue" => TransportMode::Queue,
+                    other => bail!("transport must be 'auto' or 'queue', got '{other}'"),
+                }
+            }
             "alpha" => self.alpha = v.parse().context("alpha")?,
             "threshold" => self.threshold = v.parse().context("threshold")?,
             "seed" => self.seed = v.parse().context("seed")?,
@@ -102,6 +113,7 @@ impl RunConfig {
             e.workers = self.workers;
         }
         e.batch = self.batch;
+        e.transport = self.transport;
         e.cancel = self.cancel.clone();
         e
     }
@@ -133,6 +145,13 @@ mod tests {
         c.set("alpha", "0.9").unwrap();
         assert_eq!(c.cache_mb, 8);
         assert!((c.alpha - 0.9).abs() < 1e-12);
+        assert_eq!(c.transport, TransportMode::Auto);
+        c.set("transport", "queue").unwrap();
+        assert_eq!(c.transport, TransportMode::Queue);
+        assert_eq!(c.engine().transport, TransportMode::Queue);
+        c.set("transport", "auto").unwrap();
+        assert_eq!(c.transport, TransportMode::Auto);
+        assert!(c.set("transport", "carrier-pigeon").is_err());
         assert!(c.set("nonsense", "1").is_err());
         assert!(c.set("cache_mb", "abc").is_err());
     }

@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use crate::engine::messages::{Inboxes, Outbox};
+use crate::engine::messages::{Delivery, MessagePlane, Transport};
 use crate::graph::format::{EdgeRequest, GraphIndex, VertexEdges};
 use crate::graph::source::EdgeSource;
 use crate::util::AtomicBitmap;
@@ -15,9 +15,10 @@ pub const N_RED_SLOTS: usize = 8;
 
 /// Context handed to `run_on_vertex` / `run_on_message`.
 ///
-/// One per worker thread; lives for the whole run. Message sends and
-/// counters are buffered locally and flushed at phase boundaries so the
-/// hot path takes no locks.
+/// One per worker thread; lives for the whole run. Sends go straight
+/// into this worker's own message lanes (combiner slab or SPSC queue —
+/// no locks either way), while statistics and the pending-delivery
+/// count are accumulated locally and published at phase boundaries.
 pub struct WorkerCtx<'a, M> {
     pub(crate) worker: usize,
     pub(crate) num_workers: usize,
@@ -27,8 +28,7 @@ pub struct WorkerCtx<'a, M> {
     pub(crate) source: &'a dyn EdgeSource,
     pub(crate) index: &'a GraphIndex,
     pub(crate) bitmaps: &'a [AtomicBitmap; 2],
-    pub(crate) inboxes: &'a Inboxes<M>,
-    pub(crate) outbox: Outbox<M>,
+    pub(crate) plane: &'a MessagePlane<M>,
     // local counters, merged into EngineStats at round end
     pub(crate) c_p2p: u64,
     pub(crate) c_multicast: u64,
@@ -36,6 +36,11 @@ pub struct WorkerCtx<'a, M> {
     pub(crate) c_vertex_runs: u64,
     /// Frontier chunks this worker claimed from another worker's span.
     pub(crate) c_steals: u64,
+    /// Sends folded into an already-touched combiner slot this round.
+    pub(crate) c_combined: u64,
+    /// Fresh pending deliveries staged this phase (batched into the
+    /// plane's atomic pending counter at phase ends).
+    pub(crate) c_pending: usize,
     // local reductions, merged at round end
     pub(crate) red_add: [f64; N_RED_SLOTS],
     pub(crate) red_max: [f64; N_RED_SLOTS],
@@ -95,37 +100,77 @@ impl<'a, M: Send + Sync + Clone + 'static> WorkerCtx<'a, M> {
     }
 
     /// Point-to-point message to `dst` (delivered next round).
+    ///
+    /// On the combiner transport this folds into the dense lane in
+    /// place (no allocation, no lock); on the queue transport it
+    /// appends to this worker's private SPSC lane toward `dst`'s owner.
     #[inline]
     pub fn send(&mut self, dst: VertexId, msg: M) {
         self.c_p2p += 1;
-        let w = self.owner(dst);
-        if self.outbox.send(w, dst, msg) {
-            self.outbox.flush_one(self.inboxes, self.send_parity(), w);
+        let p = self.send_parity();
+        match &self.plane.transport {
+            Transport::Combine(lanes) => {
+                if lanes.send(p, self.worker, dst, &msg) {
+                    self.c_pending += 1;
+                } else {
+                    self.c_combined += 1;
+                }
+            }
+            Transport::Queue(q) => {
+                q.push(p, self.worker, self.owner(dst), Delivery::P2p(dst, msg));
+                self.c_pending += 1;
+            }
         }
     }
 
-    /// Multicast `msg` to all of `dsts` (delivered next round). One queue
-    /// entry per destination worker — far cheaper per destination than
-    /// repeated [`WorkerCtx::send`] (§4.2).
+    /// Multicast `msg` to all of `dsts` (delivered next round). On the
+    /// queue transport this is one entry per destination worker (a
+    /// shared payload slice — far cheaper per destination than repeated
+    /// [`WorkerCtx::send`], §4.2); on the combiner transport each
+    /// destination folds into its dense slot, which subsumes the same
+    /// economy without the shared-slice allocation.
     pub fn multicast(&mut self, dsts: &[VertexId], msg: M) {
         if dsts.is_empty() {
             return;
         }
         self.c_multicast += 1;
         let parity = self.send_parity();
-        // group consecutive same-owner runs (dst lists are sorted)
-        let mut i = 0;
-        while i < dsts.len() {
-            let w = self.owner(dsts[i]);
-            let mut j = i + 1;
-            while j < dsts.len() && self.owner(dsts[j]) == w {
-                j += 1;
+        match &self.plane.transport {
+            Transport::Combine(lanes) => {
+                for &d in dsts {
+                    if lanes.send(parity, self.worker, d, &msg) {
+                        self.c_pending += 1;
+                    } else {
+                        self.c_combined += 1;
+                    }
+                }
             }
-            let slice: Arc<[VertexId]> = Arc::from(&dsts[i..j]);
-            if self.outbox.multicast(w, slice, msg.clone()) {
-                self.outbox.flush_one(self.inboxes, parity, w);
+            Transport::Queue(q) => {
+                // group consecutive same-owner runs (dst lists are sorted)
+                let mut i = 0;
+                while i < dsts.len() {
+                    let w = self.owner(dsts[i]);
+                    let mut j = i + 1;
+                    while j < dsts.len() && self.owner(dsts[j]) == w {
+                        j += 1;
+                    }
+                    let slice: Arc<[VertexId]> = Arc::from(&dsts[i..j]);
+                    q.push(parity, self.worker, w, Delivery::Multi(slice, msg.clone()));
+                    self.c_pending += 1;
+                    i = j;
+                }
             }
-            i = j;
+        }
+    }
+
+    /// Publish this phase's staged send count to the plane's pending
+    /// counter (one relaxed `fetch_add`; called by the runner at the
+    /// end of each phase).
+    #[inline]
+    pub(crate) fn flush_sends(&mut self) {
+        if self.c_pending > 0 {
+            self.plane.add_pending(self.send_parity(), self.c_pending);
+            self.c_pending = 0;
         }
     }
 

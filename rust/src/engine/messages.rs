@@ -1,18 +1,107 @@
-//! Message transport: per-worker outboxes flushing into double-buffered
-//! per-worker inboxes.
+//! Message transport: two lane disciplines selected per program.
+//!
+//! The engine's message phase used to funnel every point-to-point send
+//! through a `Mutex<Vec<_>>` inbox — O(m) queue entries per round and a
+//! lock convoy exactly where the paper says messaging dominates
+//! (§4.2, Fig. 3). This module replaces that with two transports:
+//!
+//! * **Combiner lanes** ([`CombinerLanes`]) — for programs whose
+//!   messages are commutative-associative (PageRank rank mass, WCC/BFS/
+//!   SSSP minima, coreness decrement counts, diameter lane bitsets).
+//!   The program declares a [`Combiner`]; each send then *folds in
+//!   place* into a dense per-sending-worker slab indexed by destination
+//!   vertex, with a touched-bitmap so delivery sweeps only written
+//!   slots. Message memory is `2 × workers × n` slots **regardless of
+//!   how many messages are sent** — O(n), not O(m) — and the hot path
+//!   takes no locks and performs no per-message allocation.
+//! * **Queue lanes** ([`QueueLanes`]) — for programs whose messages
+//!   cannot be folded (BC's lane/phase-tagged path counts, Louvain's
+//!   pings). Per-(sender, receiver, parity) SPSC segment queues whose
+//!   segments are recycled through a free list across rounds, so
+//!   steady-state sends are allocation-free ([`QueueLanes`] counts
+//!   segment allocations the way `FetchArena::allocs` counts fetch-path
+//!   allocations, and tests assert the counter goes flat once warm).
+//!
+//! Both transports are wrapped by [`MessagePlane`], which also keeps the
+//! per-parity pending counters (one relaxed atomic each — replacing the
+//! old lock-every-queue `pending()` scan) and the peak-message-byte /
+//! allocation accounting surfaced in `EngineStats`.
+//!
+//! ## Ownership protocol (why there are no locks)
+//!
+//! Every lane is written by exactly one worker and read by exactly one
+//! worker, in *barrier-separated* rounds:
+//!
+//! * During round `r`, worker `s` sends at parity `p̄ = (r+1) % 2`,
+//!   writing only its own lanes `(p̄, s, ·)`.
+//! * During round `r+1` (whose current parity is `p̄`), worker `w`
+//!   drains lanes `(p̄, ·, w)` in phase A — after the round-`r` end
+//!   barrier published the writes — while round-`r+1` sends go to the
+//!   *other* parity.
+//! * Recycled queue segments stay inside their `(sender, receiver,
+//!   parity)` lane: the receiver frees them during its drain, the
+//!   sender reuses them one round later, again barrier-separated.
 //!
 //! A **point-to-point** send is one `(dst, msg)` tuple. A **multicast**
-//! send is a *single* queue entry per destination worker carrying a
-//! shared destination slice — one allocation and one queue slot for the
-//! whole fan-out, which is why multicast is cheaper per destination
-//! (paper §4.2). Message counters distinguish the two so benches can
-//! report messaging volume the way Figure 3 does.
+//! send on the queue transport is a *single* queue entry per destination
+//! worker carrying a shared destination slice (paper §4.2); on the
+//! combiner transport multicast folds per destination like any other
+//! send — the fold *is* the minimize-message-memory mechanism.
 
-use std::sync::{Arc, Mutex};
+use std::cell::UnsafeCell;
+use std::mem::size_of;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
+use crate::util::{AtomicBitmap, SharedVec};
 use crate::VertexId;
 
-/// One inbox entry.
+/// How the engine moves messages for a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportMode {
+    /// Combiner lanes when the program declares a [`Combiner`], queue
+    /// lanes otherwise.
+    #[default]
+    Auto,
+    /// Force queue lanes even for combinable programs — the baseline
+    /// path, kept selectable for oracle comparisons and benches.
+    Queue,
+}
+
+/// A commutative-associative fold for a program's message type.
+///
+/// Declared by [`crate::engine::VertexProgram::combiner`]. When present
+/// (and the run is in [`TransportMode::Auto`]), the engine delivers each
+/// destination vertex **one** folded message per round instead of one
+/// `run_on_message` call per send, and message memory drops from O(m)
+/// queue entries to a dense O(n) slab per worker.
+///
+/// Contract: `combine` must be commutative and associative over the
+/// message domain, and `identity` must be a neutral element
+/// (`combine(identity, m) == m`). The engine folds in a fixed
+/// *structural* order (send order within a sender lane, worker-id
+/// order across lanes), so integer folds are bit-stable everywhere.
+/// For non-associative-in-floating-point folds like `+`, note that the
+/// work-stealing scheduler may assign the same logical send to a
+/// different sender lane from run to run: float results are exactly
+/// reproducible at `workers = 1` (single lane, ascending delivery) and
+/// oracle-tight — not bit-identical — at higher worker counts, same as
+/// the queue transport's arrival-order folds before it.
+pub struct Combiner<M> {
+    /// Neutral element (used to pre-fill the dense slabs).
+    pub identity: fn() -> M,
+    /// Fold `msg` into the accumulator in place.
+    pub combine: fn(&mut M, &M),
+}
+
+impl<M> Clone for Combiner<M> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<M> Copy for Combiner<M> {}
+
+/// One queue-lane entry.
 pub enum Delivery<M> {
     /// Point-to-point message.
     P2p(VertexId, M),
@@ -31,77 +120,408 @@ impl<M> Delivery<M> {
     }
 }
 
-/// Double-buffered inboxes: `bufs[parity][worker]`. Messages sent during
-/// round `r` land in parity `(r + 1) % 2` and are drained in round `r+1`.
-pub struct Inboxes<M> {
-    bufs: [Vec<Mutex<Vec<Delivery<M>>>>; 2],
+// ------------------------------------------------------ combiner lanes --
+
+/// Dense per-sender message slabs with touched-bitmaps (O(n) transport).
+///
+/// Layout: `slab[parity][sender][dst]` — `2 × workers` slabs of `n`
+/// message slots plus `n`-bit touched maps. A send folds into the
+/// sender's own slab (no lock, no allocation); after the phase-A
+/// barrier the destination's owner worker sweeps its vertex range of
+/// every sender's slab, folds across senders, and delivers one combined
+/// message per touched vertex. Memory is fixed at construction —
+/// [`CombinerLanes::mem_bytes`] — independent of message count.
+pub struct CombinerLanes<M> {
+    n: usize,
+    combiner: Combiner<M>,
+    /// `slabs[parity][sender]`, each `n` slots.
+    slabs: [Vec<SharedVec<M>>; 2],
+    /// Matching touched maps: bit `v` set ⇔ `slabs[p][s][v]` holds a
+    /// live folded message.
+    touched: [Vec<AtomicBitmap>; 2],
+    /// Two-level sparsity index: bit `w` set ⇔ touched-map word `w`
+    /// (64 vertices) may hold live bits. Lets the delivery sweep skip
+    /// empty 4096-vertex blocks, so a sparse round (a handful of
+    /// messages over a huge graph — think label-correcting SSSP on a
+    /// road network) costs ~n/4096 word loads instead of n/64. Set by
+    /// the sender on fresh touches, read-only for receivers (a stale
+    /// bit costs one wasted 64-word scan, never correctness), cleared
+    /// by the sender via [`CombinerLanes::begin_send_round`] one full
+    /// round after the receivers finished reading it.
+    summary: [Vec<AtomicBitmap>; 2],
 }
 
-impl<M> Inboxes<M> {
-    /// Build for `workers` workers.
-    pub fn new(workers: usize) -> Self {
-        let mk = || (0..workers).map(|_| Mutex::new(Vec::new())).collect();
-        Inboxes { bufs: [mk(), mk()] }
-    }
-
-    /// Append deliveries for `worker` into parity `p`.
-    pub fn push(&self, p: usize, worker: usize, items: &mut Vec<Delivery<M>>) {
-        let mut q = self.bufs[p][worker].lock().unwrap();
-        q.append(items);
-    }
-
-    /// Take the whole inbox of `worker` at parity `p`.
-    pub fn take(&self, p: usize, worker: usize) -> Vec<Delivery<M>> {
-        std::mem::take(&mut *self.bufs[p][worker].lock().unwrap())
-    }
-
-    /// Total queued deliveries (entries, not fanout) at parity `p`.
-    pub fn pending(&self, p: usize) -> usize {
-        self.bufs[p].iter().map(|q| q.lock().unwrap().len()).sum()
-    }
-}
-
-/// A worker's staging buffers, one per destination worker; flushed into
-/// the shared inboxes when large or at phase end.
-pub struct Outbox<M> {
-    staged: Vec<Vec<Delivery<M>>>,
-    /// Flush threshold per destination worker.
-    flush_at: usize,
-}
-
-impl<M> Outbox<M> {
-    /// Build for `workers` destination workers.
-    pub fn new(workers: usize, flush_at: usize) -> Self {
-        Outbox { staged: (0..workers).map(|_| Vec::new()).collect(), flush_at }
-    }
-
-    /// Stage a p2p message; returns destination workers needing a flush.
-    #[inline]
-    pub fn send(&mut self, dst_worker: usize, dst: VertexId, msg: M) -> bool {
-        let q = &mut self.staged[dst_worker];
-        q.push(Delivery::P2p(dst, msg));
-        q.len() >= self.flush_at
-    }
-
-    /// Stage a multicast slice for one destination worker.
-    #[inline]
-    pub fn multicast(&mut self, dst_worker: usize, dsts: Arc<[VertexId]>, msg: M) -> bool {
-        let q = &mut self.staged[dst_worker];
-        q.push(Delivery::Multi(dsts, msg));
-        q.len() >= self.flush_at
-    }
-
-    /// Flush one destination worker's staging buffer.
-    pub fn flush_one(&mut self, inboxes: &Inboxes<M>, parity: usize, dst_worker: usize) {
-        if !self.staged[dst_worker].is_empty() {
-            inboxes.push(parity, dst_worker, &mut self.staged[dst_worker]);
+impl<M: Clone> CombinerLanes<M> {
+    /// Build lanes for `workers` senders over `n` vertices.
+    pub fn new(workers: usize, n: usize, combiner: Combiner<M>) -> Self {
+        let nwords = n.div_ceil(64);
+        let mk_slabs = || {
+            (0..workers)
+                .map(|_| SharedVec::new(n, (combiner.identity)()))
+                .collect::<Vec<_>>()
+        };
+        let mk_maps = |bits: usize| {
+            (0..workers).map(|_| AtomicBitmap::new(bits)).collect::<Vec<_>>()
+        };
+        CombinerLanes {
+            n,
+            combiner,
+            slabs: [mk_slabs(), mk_slabs()],
+            touched: [mk_maps(n), mk_maps(n)],
+            summary: [mk_maps(nwords), mk_maps(nwords)],
         }
     }
 
-    /// Flush everything.
-    pub fn flush_all(&mut self, inboxes: &Inboxes<M>, parity: usize) {
-        for w in 0..self.staged.len() {
-            self.flush_one(inboxes, parity, w);
+    /// Fixed transport memory: slabs + touched maps + word summaries,
+    /// both parities.
+    pub fn mem_bytes(&self) -> u64 {
+        let nwords = self.n.div_ceil(64);
+        let per_lane = self.n * size_of::<M>() + nwords * 8 + nwords.div_ceil(64) * 8;
+        (2 * self.slabs[0].len() * per_lane) as u64
+    }
+
+    /// Reset `sender`'s word summary for the lane it is about to write
+    /// (the runner calls this at the start of each round, before any
+    /// sends). Safe because the lane's receivers finished their sweep a
+    /// full round — two barriers — earlier, and its touched bits were
+    /// all cleared by that sweep.
+    pub fn begin_send_round(&self, parity: usize, sender: usize) {
+        self.summary[parity][sender].clear_all();
+    }
+
+    /// Fold `msg` toward `dst` into `sender`'s lane at `parity`.
+    /// Returns `true` when the slot was fresh (a new pending delivery),
+    /// `false` when the send combined into an existing one.
+    ///
+    /// Protocol: only worker `sender` may call this for its own lane,
+    /// and only during the round whose sends target `parity`.
+    #[inline]
+    pub fn send(&self, parity: usize, sender: usize, dst: VertexId, msg: &M) -> bool {
+        let slot = self.slabs[parity][sender].get_mut(dst as usize);
+        if self.touched[parity][sender].set(dst as usize) {
+            // fresh slot: the message *is* the fold so far (identity ∘ m)
+            *slot = msg.clone();
+            // mark the 64-vertex word dirty in the sparsity index (load
+            // first: the common repeated case stays RMW-free)
+            let sw = dst as usize / 64;
+            let summary = &self.summary[parity][sender];
+            if !summary.get(sw) {
+                summary.set(sw);
+            }
+            true
+        } else {
+            (self.combiner.combine)(slot, msg);
+            false
+        }
+    }
+
+    /// Sweep destination vertices `[lo, hi)` of every sender's lane at
+    /// `parity`, fold across senders, call `f(v, combined)` once per
+    /// touched vertex (ascending `v`), and clear the touched bits.
+    ///
+    /// The sweep is driven by the word-summary index, so its cost
+    /// scales with the number of *dirty 64-vertex words*, not with `n`:
+    /// a sparse round over a huge graph skips whole 4096-vertex blocks
+    /// with one summary-word load per lane.
+    ///
+    /// `lane_words` is caller-owned scratch (one slot per sender lane,
+    /// reused across calls so the sweep allocates nothing once warm).
+    ///
+    /// Protocol: only the owner worker of `[lo, hi)` may sweep it, in
+    /// the round *after* the lanes were written (barrier-separated);
+    /// `f` may send — sends target the other parity, never these lanes.
+    pub fn deliver(
+        &self,
+        parity: usize,
+        lo: usize,
+        hi: usize,
+        lane_words: &mut Vec<u64>,
+        mut f: impl FnMut(VertexId, &M),
+    ) {
+        if lo >= hi {
+            return;
+        }
+        let slabs = &self.slabs[parity];
+        let touched = &self.touched[parity];
+        let summary = &self.summary[parity];
+        let first_word = lo / 64;
+        let last_word = (hi - 1) / 64;
+        for swi in first_word / 64..=last_word / 64 {
+            // level 1: which 64-vertex words of this 4096-vertex block
+            // are dirty in ANY lane (restricted to the owned words)
+            let sbase = swi * 64;
+            let s_lo = if sbase < first_word { !0u64 << (first_word - sbase) } else { !0 };
+            let s_hi = if sbase + 64 > last_word + 1 {
+                !0u64 >> (sbase + 64 - (last_word + 1))
+            } else {
+                !0
+            };
+            let mut dirty_words = 0u64;
+            for t in summary {
+                dirty_words |= t.word(swi);
+            }
+            dirty_words &= s_lo & s_hi;
+            while dirty_words != 0 {
+                let wb = dirty_words.trailing_zeros() as usize;
+                dirty_words &= dirty_words - 1;
+                let wi = sbase + wb;
+                // level 2: the touched word itself
+                let base = wi * 64;
+                // restrict to the owned [lo, hi) bits of this word
+                let lo_mask = if base < lo { !0u64 << (lo - base) } else { !0 };
+                let hi_mask = if base + 64 > hi { !0u64 >> (base + 64 - hi) } else { !0 };
+                let range_mask = lo_mask & hi_mask;
+                lane_words.clear();
+                let mut union = 0u64;
+                for t in touched {
+                    let w = t.word(wi) & range_mask;
+                    lane_words.push(w);
+                    union |= w;
+                }
+                if union == 0 {
+                    continue; // stale summary bit: one wasted word load
+                }
+                let mut bits = union;
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let v = base + b;
+                    // fold across senders in worker-id order (bit-stable
+                    // for integer folds; see the Combiner float caveat)
+                    let mut acc: Option<M> = None;
+                    for (s, &w) in lane_words.iter().enumerate() {
+                        if w & (1 << b) != 0 {
+                            let m = slabs[s].get(v);
+                            match &mut acc {
+                                None => acc = Some(m.clone()),
+                                Some(a) => (self.combiner.combine)(a, m),
+                            }
+                        }
+                    }
+                    let msg = acc.expect("touched bit with no sender lane set");
+                    f(v as VertexId, &msg);
+                }
+                for (s, &w) in lane_words.iter().enumerate() {
+                    if w != 0 {
+                        // atomic: boundary words are shared with the
+                        // neighboring owner's range
+                        touched[s].clear_word_bits(wi, w);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- queue lanes --
+
+/// One `(sender, receiver, parity)` SPSC lane: filled segments awaiting
+/// drain, the segment being filled, and drained empties for reuse.
+struct SegQueue<M> {
+    full: Vec<Vec<Delivery<M>>>,
+    active: Vec<Delivery<M>>,
+    free: Vec<Vec<Delivery<M>>>,
+}
+
+/// Per-(sender, receiver) segment queues for non-combinable programs.
+///
+/// Replaces the old `Mutex<Vec<Delivery>>` inboxes: a send appends to a
+/// lane only its sender touches this round, a drain reads a lane only
+/// its receiver touches this round (see the module docs for the barrier
+/// protocol), so the hot path takes no locks. Segments are fixed-
+/// capacity `Vec`s recycled through a per-lane free list across rounds;
+/// [`QueueLanes::allocs`] counts segment allocations so tests can
+/// assert steady-state sends allocate nothing once warm.
+pub struct QueueLanes<M> {
+    workers: usize,
+    seg_cap: usize,
+    /// `lanes[parity][sender * workers + receiver]`.
+    lanes: [Vec<UnsafeCell<SegQueue<M>>>; 2],
+    allocs: AtomicU64,
+    seg_bytes: AtomicU64,
+}
+
+// Safety: interior mutability is gated by the single-writer /
+// single-reader barrier protocol documented on the module — the engine
+// never lets two threads touch the same (parity, sender, receiver)
+// lane in the same round, and rounds are barrier-separated.
+unsafe impl<M: Send> Send for QueueLanes<M> {}
+unsafe impl<M: Send> Sync for QueueLanes<M> {}
+
+impl<M> QueueLanes<M> {
+    /// Build lanes for `workers` workers with `seg_cap` deliveries per
+    /// segment.
+    pub fn new(workers: usize, seg_cap: usize) -> Self {
+        let mk = || {
+            (0..workers * workers)
+                .map(|_| {
+                    UnsafeCell::new(SegQueue {
+                        full: Vec::new(),
+                        active: Vec::new(),
+                        free: Vec::new(),
+                    })
+                })
+                .collect::<Vec<_>>()
+        };
+        QueueLanes {
+            workers,
+            seg_cap: seg_cap.max(1),
+            lanes: [mk(), mk()],
+            allocs: AtomicU64::new(0),
+            seg_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Segment allocations so far (flat once every lane is warm).
+    pub fn allocs(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently held in allocated segments (segments are never
+    /// freed mid-run, so this is also the peak).
+    pub fn mem_bytes(&self) -> u64 {
+        self.seg_bytes.load(Ordering::Relaxed)
+    }
+
+    fn fresh_segment(&self) -> Vec<Delivery<M>> {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        self.seg_bytes
+            .fetch_add((self.seg_cap * size_of::<Delivery<M>>()) as u64, Ordering::Relaxed);
+        Vec::with_capacity(self.seg_cap)
+    }
+
+    /// Append one delivery to lane `(parity, sender, receiver)`.
+    ///
+    /// Protocol: only worker `sender`, only during the round whose sends
+    /// target `parity`.
+    #[inline]
+    pub fn push(&self, parity: usize, sender: usize, receiver: usize, d: Delivery<M>) {
+        let cell = &self.lanes[parity][sender * self.workers + receiver];
+        let q = unsafe { &mut *cell.get() };
+        if q.active.len() == q.active.capacity() {
+            // segment full (or never initialized): hand it off and pull a
+            // recycled one — allocation only until the lane is warm
+            if q.active.capacity() > 0 {
+                let seg = std::mem::take(&mut q.active);
+                q.full.push(seg);
+            }
+            q.active = q.free.pop().unwrap_or_else(|| self.fresh_segment());
+        }
+        q.active.push(d);
+    }
+
+    /// Drain lane `(parity, sender, receiver)` in FIFO order, recycling
+    /// every segment into the lane's free list.
+    ///
+    /// Protocol: only worker `receiver`, in the round after the lane was
+    /// written. `f` may send — sends target the other parity, never the
+    /// lane being drained.
+    pub fn drain(
+        &self,
+        parity: usize,
+        sender: usize,
+        receiver: usize,
+        mut f: impl FnMut(&Delivery<M>),
+    ) {
+        let cell = &self.lanes[parity][sender * self.workers + receiver];
+        // detach the segments so no lane borrow is held across `f`
+        // (handlers re-enter the plane to send at the other parity)
+        let (full, mut active) = {
+            let q = unsafe { &mut *cell.get() };
+            (std::mem::take(&mut q.full), std::mem::take(&mut q.active))
+        };
+        for seg in &full {
+            for d in seg {
+                f(d);
+            }
+        }
+        for d in &active {
+            f(d);
+        }
+        active.clear();
+        let q = unsafe { &mut *cell.get() };
+        for mut seg in full {
+            seg.clear();
+            q.free.push(seg);
+        }
+        q.active = active;
+    }
+}
+
+// ------------------------------------------------------- message plane --
+
+/// The transport behind a [`MessagePlane`].
+pub enum Transport<M> {
+    /// Dense combiner lanes (program declared a [`Combiner`]).
+    Combine(CombinerLanes<M>),
+    /// SPSC segment queues (non-combinable messages).
+    Queue(QueueLanes<M>),
+}
+
+/// One run's message fabric: the selected transport plus the per-parity
+/// pending counters and memory/allocation accounting.
+///
+/// `pending` is a relaxed atomic per parity, batched into by workers at
+/// phase ends — replacing the old lock-every-queue scan worker 0 paid
+/// (twice!) per round for quiescence detection.
+pub struct MessagePlane<M> {
+    /// The selected transport.
+    pub transport: Transport<M>,
+    pending: [AtomicUsize; 2],
+}
+
+impl<M: Clone> MessagePlane<M> {
+    /// Combiner-lane plane for `workers` workers over `n` vertices.
+    pub fn new_combine(workers: usize, n: usize, combiner: Combiner<M>) -> Self {
+        MessagePlane {
+            transport: Transport::Combine(CombinerLanes::new(workers, n, combiner)),
+            pending: [AtomicUsize::new(0), AtomicUsize::new(0)],
+        }
+    }
+}
+
+impl<M> MessagePlane<M> {
+    /// Queue-lane plane for `workers` workers.
+    pub fn new_queue(workers: usize, seg_cap: usize) -> Self {
+        MessagePlane {
+            transport: Transport::Queue(QueueLanes::new(workers, seg_cap)),
+            pending: [AtomicUsize::new(0), AtomicUsize::new(0)],
+        }
+    }
+
+    /// Pending deliveries staged at `parity` (fresh combiner touches /
+    /// queue entries — not fanout). One relaxed load.
+    pub fn pending(&self, parity: usize) -> usize {
+        self.pending[parity].load(Ordering::Relaxed)
+    }
+
+    /// Batch-add staged sends (called by workers at phase ends).
+    pub fn add_pending(&self, parity: usize, k: usize) {
+        if k > 0 {
+            self.pending[parity].fetch_add(k, Ordering::Relaxed);
+        }
+    }
+
+    /// Zero the counter for a drained parity (worker 0, bookkeeping).
+    pub fn reset_pending(&self, parity: usize) {
+        self.pending[parity].store(0, Ordering::Relaxed);
+    }
+
+    /// Peak transport memory over the run: the fixed O(n) slabs for
+    /// combiner lanes, total allocated segment bytes for queue lanes.
+    pub fn peak_msg_bytes(&self) -> u64 {
+        match &self.transport {
+            Transport::Combine(l) => l.mem_bytes(),
+            Transport::Queue(q) => q.mem_bytes(),
+        }
+    }
+
+    /// Transport allocations over the run (0 for combiner lanes, whose
+    /// memory is fixed at construction).
+    pub fn msg_allocs(&self) -> u64 {
+        match &self.transport {
+            Transport::Combine(_) => 0,
+            Transport::Queue(q) => q.allocs(),
         }
     }
 }
@@ -110,54 +530,219 @@ impl<M> Outbox<M> {
 mod tests {
     use super::*;
 
+    fn min_combiner() -> Combiner<u32> {
+        Combiner { identity: || u32::MAX, combine: |a, b| *a = (*a).min(*b) }
+    }
+
+    fn deliver_all<M: Clone>(
+        lanes: &CombinerLanes<M>,
+        parity: usize,
+        n: usize,
+        f: &mut impl FnMut(VertexId, &M),
+    ) {
+        let mut scratch = Vec::new();
+        lanes.deliver(parity, 0, n, &mut scratch, |v, m| f(v, m));
+    }
+
     #[test]
-    fn p2p_roundtrip() {
-        let inboxes: Inboxes<u32> = Inboxes::new(2);
-        let mut out = Outbox::new(2, 1000);
-        out.send(1, 7, 99);
-        out.send(0, 3, 42);
-        out.flush_all(&inboxes, 0);
-        let w1 = inboxes.take(0, 1);
-        assert_eq!(w1.len(), 1);
-        match &w1[0] {
-            Delivery::P2p(v, m) => {
-                assert_eq!((*v, *m), (7, 99));
-            }
-            _ => panic!("expected p2p"),
+    fn combiner_folds_per_destination() {
+        let lanes = CombinerLanes::new(2, 8, min_combiner());
+        assert!(lanes.send(0, 0, 3, &9), "first touch is fresh");
+        assert!(!lanes.send(0, 0, 3, &4), "second send folds");
+        assert!(!lanes.send(0, 0, 3, &7));
+        assert!(lanes.send(0, 1, 3, &5), "other sender's lane is fresh");
+        assert!(lanes.send(0, 1, 6, &2));
+        let mut got = Vec::new();
+        deliver_all(&lanes, 0, 8, &mut |v, m| got.push((v, *m)));
+        // v3 folded across both senders: min(9,4,7,5) = 4; ascending order
+        assert_eq!(got, vec![(3, 4), (6, 2)]);
+        // drained: a second sweep sees nothing
+        let mut again = Vec::new();
+        deliver_all(&lanes, 0, 8, &mut |v, m| again.push((v, *m)));
+        assert!(again.is_empty(), "touched bits cleared by delivery");
+    }
+
+    #[test]
+    fn combiner_parity_separation_and_reuse() {
+        let lanes = CombinerLanes::new(1, 4, min_combiner());
+        lanes.send(0, 0, 1, &10);
+        lanes.send(1, 0, 1, &20);
+        let mut p0 = Vec::new();
+        deliver_all(&lanes, 0, 4, &mut |v, m| p0.push((v, *m)));
+        assert_eq!(p0, vec![(1, 10)]);
+        // parity 1 untouched by the parity-0 sweep
+        let mut p1 = Vec::new();
+        deliver_all(&lanes, 1, 4, &mut |v, m| p1.push((v, *m)));
+        assert_eq!(p1, vec![(1, 20)]);
+        // slots are reusable after drain (fresh again)
+        assert!(lanes.send(0, 0, 1, &30));
+        let mut p0b = Vec::new();
+        deliver_all(&lanes, 0, 4, &mut |v, m| p0b.push((v, *m)));
+        assert_eq!(p0b, vec![(1, 30)]);
+    }
+
+    #[test]
+    fn combiner_delivery_respects_owner_ranges() {
+        // two receivers split [0, 128): each sweep must deliver and
+        // clear only its own half, even within a shared boundary word
+        let lanes = CombinerLanes::new(1, 128, min_combiner());
+        for v in [0u32, 59, 60, 63, 64, 90, 127] {
+            lanes.send(0, 0, v, &(v + 1));
         }
-        assert_eq!(inboxes.pending(0), 1); // worker 0 still queued
-        assert_eq!(inboxes.pending(1), 0);
+        let mut scratch = Vec::new();
+        let mut left = Vec::new();
+        lanes.deliver(0, 0, 60, &mut scratch, |v, m| left.push((v, *m)));
+        assert_eq!(left, vec![(0, 1), (59, 60)]);
+        let mut right = Vec::new();
+        lanes.deliver(0, 60, 128, &mut scratch, |v, m| right.push((v, *m)));
+        assert_eq!(right, vec![(60, 61), (63, 64), (64, 65), (90, 91), (127, 128)]);
     }
 
     #[test]
-    fn multicast_single_entry_fanout() {
-        let inboxes: Inboxes<u8> = Inboxes::new(1);
-        let mut out = Outbox::new(1, 1000);
+    fn combiner_sparse_delivery_across_summary_blocks() {
+        // a handful of sends scattered over many 4096-vertex summary
+        // blocks: the two-level sweep must find exactly them, in order,
+        // and survive summary resets across send rounds
+        let n = 64 * 64 * 3 + 17; // several summary words, ragged tail
+        let lanes = CombinerLanes::new(2, n, min_combiner());
+        let targets = [0u32, 4095, 4096, 8191, 12288, (n - 1) as u32];
+        for &v in &targets {
+            lanes.send(0, (v as usize) % 2, v, &v);
+        }
+        let mut got = Vec::new();
+        deliver_all(&lanes, 0, n, &mut |v, m| got.push((v, *m)));
+        let want: Vec<(VertexId, u32)> = targets.iter().map(|&v| (v, v)).collect();
+        assert_eq!(got, want);
+        // next cycle: senders reset their summaries, slots are fresh again
+        lanes.begin_send_round(0, 0);
+        lanes.begin_send_round(0, 1);
+        assert!(lanes.send(0, 0, 8191, &7));
+        let mut again = Vec::new();
+        deliver_all(&lanes, 0, n, &mut |v, m| again.push((v, *m)));
+        assert_eq!(again, vec![(8191, 7)]);
+    }
+
+    #[test]
+    fn combiner_mem_is_o_n_not_o_m() {
+        let lanes = CombinerLanes::new(2, 1000, min_combiner());
+        let fixed = lanes.mem_bytes();
+        assert!(fixed > 0);
+        // a million sends move the memory accounting not one byte
+        for i in 0..1_000_000u32 {
+            lanes.send(0, 0, i % 1000, &i);
+        }
+        assert_eq!(lanes.mem_bytes(), fixed);
+    }
+
+    #[test]
+    fn queue_roundtrip_fifo() {
+        let q: QueueLanes<u32> = QueueLanes::new(2, 4);
+        q.push(0, 0, 1, Delivery::P2p(7, 99));
+        q.push(0, 0, 1, Delivery::P2p(3, 42));
+        let mut got = Vec::new();
+        q.drain(0, 0, 1, |d| match d {
+            Delivery::P2p(v, m) => got.push((*v, *m)),
+            _ => panic!("expected p2p"),
+        });
+        assert_eq!(got, vec![(7, 99), (3, 42)], "FIFO within a lane");
+        // other lanes untouched
+        let mut empty = 0;
+        q.drain(0, 1, 0, |_| empty += 1);
+        assert_eq!(empty, 0);
+    }
+
+    #[test]
+    fn queue_multicast_single_entry_fanout() {
+        let q: QueueLanes<u8> = QueueLanes::new(1, 16);
         let dsts: Arc<[VertexId]> = Arc::from(vec![1, 2, 3, 4].into_boxed_slice());
-        out.multicast(0, dsts, 5);
-        out.flush_all(&inboxes, 1);
-        let got = inboxes.take(1, 0);
-        assert_eq!(got.len(), 1, "one queue slot for the whole fanout");
-        assert_eq!(got[0].fanout(), 4);
+        q.push(1, 0, 0, Delivery::Multi(dsts, 5));
+        let mut entries = 0;
+        let mut fanout = 0;
+        q.drain(1, 0, 0, |d| {
+            entries += 1;
+            fanout += d.fanout();
+        });
+        assert_eq!(entries, 1, "one queue slot for the whole fanout");
+        assert_eq!(fanout, 4);
     }
 
     #[test]
-    fn flush_threshold_signals() {
-        let mut out: Outbox<u8> = Outbox::new(1, 2);
-        assert!(!out.send(0, 0, 0));
-        assert!(out.send(0, 1, 0), "hit threshold");
+    fn messages_allocation_free_once_warm() {
+        // the satellite invariant: after a warm-up round at each parity,
+        // steady-state rounds recycle segments and never allocate
+        let q: QueueLanes<u64> = QueueLanes::new(1, 8);
+        let round = |parity: usize, msgs: usize| {
+            for i in 0..msgs {
+                q.push(parity, 0, 0, Delivery::P2p(i as VertexId, i as u64));
+            }
+            let mut n = 0;
+            q.drain(parity, 0, 0, |_| n += 1);
+            assert_eq!(n, msgs);
+        };
+        round(0, 40); // warm parity 0 (40 msgs / seg_cap 8 = 5+ segments)
+        round(1, 40); // warm parity 1
+        let warm = q.allocs();
+        assert!(warm > 0, "warmup must have allocated segments");
+        let bytes = q.mem_bytes();
+        for r in 0..50 {
+            round(r % 2, 40);
+        }
+        assert_eq!(q.allocs(), warm, "steady-state sends must be allocation-free");
+        assert_eq!(q.mem_bytes(), bytes, "segment memory flat once warm");
     }
 
     #[test]
-    fn parity_separation() {
-        let inboxes: Inboxes<u8> = Inboxes::new(1);
-        let mut out = Outbox::new(1, 1000);
-        out.send(0, 0, 1);
-        out.flush_all(&inboxes, 0);
-        out.send(0, 0, 2);
-        out.flush_all(&inboxes, 1);
-        assert_eq!(inboxes.take(0, 0).len(), 1);
-        assert_eq!(inboxes.take(1, 0).len(), 1);
-        assert_eq!(inboxes.take(0, 0).len(), 0, "take drains");
+    fn queue_growth_allocates_only_new_peaks() {
+        let q: QueueLanes<u8> = QueueLanes::new(1, 4);
+        for i in 0..8 {
+            q.push(0, 0, 0, Delivery::P2p(i, 0));
+        }
+        let two_segs = q.allocs();
+        assert_eq!(two_segs, 2);
+        q.drain(0, 0, 0, |_| {});
+        // same volume again: fully recycled
+        for i in 0..8 {
+            q.push(0, 0, 0, Delivery::P2p(i, 0));
+        }
+        assert_eq!(q.allocs(), two_segs);
+        // a higher peak allocates only the difference
+        for i in 0..8 {
+            q.push(0, 0, 0, Delivery::P2p(i, 0));
+        }
+        assert_eq!(q.allocs(), two_segs + 2);
+    }
+
+    #[test]
+    fn plane_pending_counters() {
+        let plane: MessagePlane<u32> = MessagePlane::new_queue(2, 8);
+        assert_eq!(plane.pending(0), 0);
+        plane.add_pending(0, 5);
+        plane.add_pending(0, 0); // no-op fast path
+        plane.add_pending(1, 2);
+        assert_eq!(plane.pending(0), 5);
+        assert_eq!(plane.pending(1), 2);
+        plane.reset_pending(0);
+        assert_eq!(plane.pending(0), 0);
+        assert_eq!(plane.pending(1), 2);
+    }
+
+    #[test]
+    fn plane_accounting_by_transport() {
+        let adder = Combiner { identity: || 0u64, combine: |a: &mut u64, b: &u64| *a += *b };
+        let combine: MessagePlane<u64> = MessagePlane::new_combine(2, 256, adder);
+        assert_eq!(combine.msg_allocs(), 0, "combiner memory is fixed at construction");
+        // per lane: 256 slots × 8 B + 4 touched words + 1 summary word
+        let expect = 2 * 2 * (256 * 8 + 4 * 8 + 8) as u64;
+        assert_eq!(combine.peak_msg_bytes(), expect);
+
+        let queue: MessagePlane<u64> = MessagePlane::new_queue(1, 8);
+        assert_eq!(queue.peak_msg_bytes(), 0, "no segments until traffic");
+        if let Transport::Queue(q) = &queue.transport {
+            q.push(0, 0, 0, Delivery::P2p(0, 1));
+        } else {
+            panic!("queue plane expected");
+        }
+        assert_eq!(queue.msg_allocs(), 1);
+        assert!(queue.peak_msg_bytes() > 0);
     }
 }

@@ -37,11 +37,28 @@
 //!
 //! ## Messaging discipline
 //!
-//! Point-to-point sends enqueue one `(dst, msg)` tuple each; **multicast**
-//! sends enqueue a single shared destination list per destination worker
-//! (one allocation, one queue slot), which is exactly why multicast is
-//! cheaper per destination and why the paper's hybrid switchover
-//! (§4.2 "minimize messaging") matters.
+//! Message transport is selected per program ([`messages`]):
+//!
+//! * Programs that declare a [`Combiner`] (commutative-associative
+//!   messages: rank mass, minima, bitsets, decrement counts) ride
+//!   **combiner lanes** — each send folds in place into a dense
+//!   per-worker slab indexed by destination vertex. Message memory is
+//!   O(n) no matter how many messages are sent, the hot path takes no
+//!   locks and allocates nothing, and each destination receives one
+//!   folded `run_on_message` per round (the folds appear in
+//!   `EngineStats::combined_msgs`).
+//! * Everything else rides **queue lanes** — per-(sender, receiver)
+//!   SPSC segment queues with a recycled free list, so steady-state
+//!   sends are allocation-free. Point-to-point sends enqueue one
+//!   `(dst, msg)` tuple; **multicast** sends enqueue a single shared
+//!   destination list per destination worker (one allocation, one queue
+//!   slot), which is exactly why multicast is cheaper per destination
+//!   and why the paper's hybrid switchover (§4.2 "minimize messaging")
+//!   matters on this path.
+//!
+//! Both transports rely on lane ownership + the round barriers instead
+//! of locks; [`runner::EngineConfig::transport`] can force the queue
+//! baseline for oracle comparisons.
 
 pub mod context;
 pub mod messages;
@@ -50,6 +67,7 @@ pub mod runner;
 pub mod stats;
 
 pub use context::{EndCtx, WorkerCtx};
+pub use messages::{Combiner, TransportMode};
 pub use program::VertexProgram;
 pub use runner::{Engine, EngineConfig, RunReport};
 pub use stats::EngineStats;

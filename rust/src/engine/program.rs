@@ -2,6 +2,7 @@
 //! FlashGraph's programming interface (paper Fig. 1a).
 
 use crate::engine::context::{EndCtx, WorkerCtx};
+use crate::engine::messages::Combiner;
 use crate::graph::format::{EdgeRequest, VertexEdges};
 use crate::VertexId;
 
@@ -27,6 +28,26 @@ pub trait VertexProgram: Send + Sync {
     /// the whole vertex phase of a round (the engine evaluates it one
     /// prefetch batch ahead of processing).
     fn edge_request(&self, v: VertexId) -> EdgeRequest;
+
+    /// Optional commutative-associative message fold (the paper's
+    /// "minimize message memory" principle taken to its limit).
+    ///
+    /// Return `Some` when messages to the same destination can be
+    /// combined without loss — rank mass (`+`), min-label/min-distance
+    /// (`min`), lane bitsets (`|`), decrement counts (`+`). The engine
+    /// then routes sends through dense O(n) combiner lanes: no
+    /// per-message allocation, no locks, and each destination receives
+    /// **one** folded `run_on_message` per round instead of one per
+    /// send. Programs whose messages carry non-foldable structure (BC's
+    /// per-lane path counts, Louvain's pings) keep the default `None`
+    /// and ride the recycled SPSC queue lanes.
+    ///
+    /// Contract: see [`Combiner`] — `combine` commutative + associative,
+    /// `identity` neutral, and `run_on_message` must treat a folded
+    /// message exactly like the equivalent message sequence.
+    fn combiner(&self) -> Option<Combiner<Self::Msg>> {
+        None
+    }
 
     /// Process an activated vertex; `edges` holds the requested lists.
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, Self::Msg>, v: VertexId, edges: &VertexEdges);

@@ -22,17 +22,17 @@
 //! bits in the *current* round's bitmap during the vertex phase.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use crate::engine::context::{EndCtx, WorkerCtx, N_RED_SLOTS};
-use crate::engine::messages::{Delivery, Inboxes, Outbox};
+use crate::engine::messages::{Delivery, MessagePlane, Transport, TransportMode};
 use crate::engine::program::VertexProgram;
 use crate::engine::stats::{EngineStats, EngineStatsSnapshot};
 use crate::graph::format::EdgeRequest;
 use crate::graph::source::{EdgeSource, FetchArena};
 use crate::safs::IoStatsSnapshot;
-use crate::util::AtomicBitmap;
+use crate::util::{AtomicBitmap, SharedVec};
 use crate::VertexId;
 
 /// Bits per frontier chunk (a multiple of 64 so chunk edges are word
@@ -48,6 +48,14 @@ fn chunk_span(wid: usize, workers: usize, nchunks: usize) -> (usize, usize) {
     ((wid * nchunks).div_ceil(workers), ((wid + 1) * nchunks).div_ceil(workers))
 }
 
+/// Vertex range `[lo, hi)` owned by worker `wid` — the exact inverse of
+/// `WorkerCtx::owner` (`owner(v) = v·W/n`), used by the combiner-lane
+/// delivery sweep so each worker drains precisely its own destinations.
+#[inline]
+fn owner_span(wid: usize, workers: usize, n: usize) -> (usize, usize) {
+    ((wid * n).div_ceil(workers), ((wid + 1) * n).div_ceil(workers))
+}
+
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -55,8 +63,14 @@ pub struct EngineConfig {
     pub workers: usize,
     /// Active vertices fetched per batch — the unit of I/O overlap.
     pub batch: usize,
-    /// Outbox flush threshold per destination worker.
-    pub flush_at: usize,
+    /// Queue-lane segment capacity (deliveries per recycled segment).
+    /// Only used when the run is on the queue transport.
+    pub seg_cap: usize,
+    /// Message transport selection: [`TransportMode::Auto`] routes
+    /// programs with a declared [`crate::engine::Combiner`] through the
+    /// dense combiner lanes; [`TransportMode::Queue`] forces the
+    /// recycled SPSC queue lanes (baseline / oracle comparisons).
+    pub transport: TransportMode,
     /// Hard round cap (safety net; algorithms converge on their own).
     pub max_rounds: usize,
     /// Cooperative cancellation token, checked once per round at the
@@ -70,7 +84,14 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        EngineConfig { workers, batch: 1024, flush_at: 4096, max_rounds: 1_000_000, cancel: None }
+        EngineConfig {
+            workers,
+            batch: 1024,
+            seg_cap: 1024,
+            transport: TransportMode::Auto,
+            max_rounds: 1_000_000,
+            cancel: None,
+        }
     }
 }
 
@@ -112,6 +133,12 @@ impl RunReport {
             out.engine.p2p_msgs += r.engine.p2p_msgs;
             out.engine.multicast_msgs += r.engine.multicast_msgs;
             out.engine.deliveries += r.engine.deliveries;
+            out.engine.combined_msgs += r.engine.combined_msgs;
+            // each run owns its transport, so the aggregate peak is the
+            // largest single-run footprint, not a sum
+            out.engine.peak_msg_bytes = out.engine.peak_msg_bytes.max(r.engine.peak_msg_bytes);
+            out.engine.msg_allocs += r.engine.msg_allocs;
+            out.engine.phase_a_ns += r.engine.phase_a_ns;
             out.engine.vertex_runs += r.engine.vertex_runs;
             out.engine.rounds += r.engine.rounds;
             out.engine.steals += r.engine.steals;
@@ -141,16 +168,21 @@ impl RunReport {
     }
 }
 
+/// Per-worker reduction snapshot: (add accumulators, max accumulators).
+type RedPair = ([f64; N_RED_SLOTS], [f64; N_RED_SLOTS]);
+
 /// Shared state for one run.
 struct Shared<M> {
     bitmaps: [AtomicBitmap; 2],
-    inboxes: Inboxes<M>,
+    plane: MessagePlane<M>,
     barrier: Barrier,
     stop: AtomicBool,
     round: AtomicUsize,
     stats: EngineStats,
-    // merged per-round reductions: (add, max)
-    reductions: Mutex<([f64; N_RED_SLOTS], [f64; N_RED_SLOTS])>,
+    /// Per-worker reduction slots: each worker overwrites its own slot
+    /// before the phase-B barrier, worker 0 merges after it — replacing
+    /// the per-round mutex every worker used to contend on.
+    reductions: SharedVec<RedPair>,
     /// Per-worker chunk cursors over the activation bitmap; worker 0
     /// resets them to each span's start during round bookkeeping.
     cursors: Vec<AtomicUsize>,
@@ -264,14 +296,25 @@ impl Engine {
         assert!(n > 0, "empty graph");
         let workers = cfg.workers.max(1).min(n);
         let nchunks = n.div_ceil(CHUNK_BITS);
+        // transport selection: programs that declare a commutative-
+        // associative combiner get the dense O(n) lanes (unless the run
+        // forces the queue baseline); everything else gets recycled
+        // SPSC segment queues
+        let plane = match (cfg.transport, program.combiner()) {
+            (TransportMode::Auto, Some(c)) => MessagePlane::new_combine(workers, n, c),
+            _ => MessagePlane::new_queue(workers, cfg.seg_cap),
+        };
         let shared = Shared {
             bitmaps: [AtomicBitmap::new(n), AtomicBitmap::new(n)],
-            inboxes: Inboxes::<P::Msg>::new(workers),
+            plane,
             barrier: Barrier::new(workers),
             stop: AtomicBool::new(false),
             round: AtomicUsize::new(0),
             stats: EngineStats::with_workers(workers),
-            reductions: Mutex::new(([0.0; N_RED_SLOTS], [f64::NEG_INFINITY; N_RED_SLOTS])),
+            reductions: SharedVec::new(
+                workers,
+                ([0.0; N_RED_SLOTS], [f64::NEG_INFINITY; N_RED_SLOTS]),
+            ),
             cursors: (0..workers)
                 .map(|w| AtomicUsize::new(chunk_span(w, workers, nchunks).0))
                 .collect(),
@@ -292,6 +335,10 @@ impl Engine {
             }
         });
         let wall = t0.elapsed();
+        // fold the transport's memory/allocation accounting into the
+        // engine counters (single-threaded: workers have joined)
+        shared.stats.peak_msg_bytes.store(shared.plane.peak_msg_bytes(), Ordering::Relaxed);
+        shared.stats.msg_allocs.store(shared.plane.msg_allocs(), Ordering::Relaxed);
         let io = source.io_stats().snapshot().delta(&io_before);
         RunReport { rounds: shared.stats.rounds.load(Ordering::Relaxed), wall, engine: shared.stats.snapshot(), io }
     }
@@ -314,13 +361,14 @@ impl Engine {
             source,
             index: source.index(),
             bitmaps: &shared.bitmaps,
-            inboxes: &shared.inboxes,
-            outbox: Outbox::new(workers, cfg.flush_at),
+            plane: &shared.plane,
             c_p2p: 0,
             c_multicast: 0,
             c_deliveries: 0,
             c_vertex_runs: 0,
             c_steals: 0,
+            c_combined: 0,
+            c_pending: 0,
             red_add: [0.0; N_RED_SLOTS],
             red_max: [f64::NEG_INFINITY; N_RED_SLOTS],
         };
@@ -329,6 +377,9 @@ impl Engine {
         // per-worker fetch arena: decoded edges + range scratch reused
         // across every batch of the run (allocation-free once warm)
         let mut arena = FetchArena::new();
+        // combiner-lane delivery scratch (one word slot per sender lane,
+        // reused every round — the sweep allocates nothing once warm)
+        let mut lane_words: Vec<u64> = Vec::with_capacity(workers);
 
         loop {
             let round = shared.round.load(Ordering::Acquire);
@@ -338,25 +389,44 @@ impl Engine {
             let t0 = Instant::now();
 
             // ---- phase A: deliver messages sent last round -------------
+            // Lane ownership makes this lock-free both ways: combiner
+            // lanes are swept per destination range (one folded message
+            // per touched vertex), queue lanes are drained per sender
+            // (each lane written by exactly one worker last round).
+            // Handler sends target the *other* parity, never these lanes.
             ctx.in_message_phase = true;
-            let deliveries = shared.inboxes.take(cur_parity, wid);
-            for d in &deliveries {
-                match d {
-                    Delivery::P2p(v, m) => {
+            match &shared.plane.transport {
+                Transport::Combine(lanes) => {
+                    // reset this worker's send-lane sparsity index before
+                    // any round-r send can happen (its readers finished a
+                    // full round ago)
+                    lanes.begin_send_round(nxt_parity, wid);
+                    let (lo, hi) = owner_span(wid, workers, n);
+                    lanes.deliver(cur_parity, lo, hi, &mut lane_words, |v, m| {
                         ctx.c_deliveries += 1;
-                        program.run_on_message(&mut ctx, *v, m);
-                    }
-                    Delivery::Multi(dsts, m) => {
-                        ctx.c_deliveries += dsts.len() as u64;
-                        for &v in dsts.iter() {
-                            program.run_on_message(&mut ctx, v, m);
-                        }
+                        program.run_on_message(&mut ctx, v, m);
+                    });
+                }
+                Transport::Queue(q) => {
+                    for s in 0..workers {
+                        q.drain(cur_parity, s, wid, |d| match d {
+                            Delivery::P2p(v, m) => {
+                                ctx.c_deliveries += 1;
+                                program.run_on_message(&mut ctx, *v, m);
+                            }
+                            Delivery::Multi(dsts, m) => {
+                                ctx.c_deliveries += dsts.len() as u64;
+                                for &v in dsts.iter() {
+                                    program.run_on_message(&mut ctx, v, m);
+                                }
+                            }
+                        });
                     }
                 }
             }
-            drop(deliveries);
-            ctx.outbox.flush_all(&shared.inboxes, nxt_parity);
+            ctx.flush_sends();
             let t1 = Instant::now();
+            let phase_a = t1 - t0;
             shared.barrier.wait();
             let t2 = Instant::now();
 
@@ -405,28 +475,25 @@ impl Engine {
                 std::mem::swap(&mut batch_reqs, &mut next_reqs);
             }
             ctx.c_steals += stream.claimer.steals;
-            ctx.outbox.flush_all(&shared.inboxes, nxt_parity);
+            ctx.flush_sends();
 
-            // merge local counters + reductions
+            // merge local counters + publish this worker's reductions
             shared.stats.p2p_msgs.fetch_add(ctx.c_p2p, Ordering::Relaxed);
             shared.stats.multicast_msgs.fetch_add(ctx.c_multicast, Ordering::Relaxed);
             shared.stats.deliveries.fetch_add(ctx.c_deliveries, Ordering::Relaxed);
+            shared.stats.combined_msgs.fetch_add(ctx.c_combined, Ordering::Relaxed);
             shared.stats.vertex_runs.fetch_add(ctx.c_vertex_runs, Ordering::Relaxed);
             shared.stats.steals.fetch_add(ctx.c_steals, Ordering::Relaxed);
+            shared.stats.phase_a_ns.fetch_add(phase_a.as_nanos() as u64, Ordering::Relaxed);
             ctx.c_p2p = 0;
             ctx.c_multicast = 0;
             ctx.c_deliveries = 0;
             ctx.c_vertex_runs = 0;
             ctx.c_steals = 0;
-            {
-                let mut red = shared.reductions.lock().unwrap();
-                for i in 0..N_RED_SLOTS {
-                    red.0[i] += ctx.red_add[i];
-                    if ctx.red_max[i] > red.1[i] {
-                        red.1[i] = ctx.red_max[i];
-                    }
-                }
-            }
+            ctx.c_combined = 0;
+            // own-slot write, merged by worker 0 after the barrier below
+            // (contention-free: the old shared mutex is gone)
+            shared.reductions.set(wid, (ctx.red_add, ctx.red_max));
             ctx.red_add = [0.0; N_RED_SLOTS];
             ctx.red_max = [f64::NEG_INFINITY; N_RED_SLOTS];
             let t3 = Instant::now();
@@ -436,19 +503,29 @@ impl Engine {
             // ---- round bookkeeping (worker 0 only) ---------------------
             if wid == 0 {
                 shared.stats.rounds.fetch_add(1, Ordering::Relaxed);
-                let (red_add, red_max) = {
-                    let mut red = shared.reductions.lock().unwrap();
-                    let vals = (red.0, red.1);
-                    red.0 = [0.0; N_RED_SLOTS];
-                    red.1 = [f64::NEG_INFINITY; N_RED_SLOTS];
-                    vals
-                };
+                // merge the per-worker reduction slots (every worker
+                // overwrote its slot before the barrier above)
+                let mut red_add = [0.0; N_RED_SLOTS];
+                let mut red_max = [f64::NEG_INFINITY; N_RED_SLOTS];
+                for w in 0..workers {
+                    let (a, m) = shared.reductions.get(w);
+                    for i in 0..N_RED_SLOTS {
+                        red_add[i] += a[i];
+                        if m[i] > red_max[i] {
+                            red_max[i] = m[i];
+                        }
+                    }
+                }
+                // pending is one relaxed load (the counter was batched in
+                // by every worker before the barrier) — read once; the
+                // end hook cannot send, so no recount is needed
+                let pending = shared.plane.pending(nxt_parity);
                 let next = &shared.bitmaps[nxt_parity];
                 let mut end = EndCtx {
                     round,
                     num_vertices: n,
                     next_active: next.count(),
-                    pending_msgs: shared.inboxes.pending(nxt_parity),
+                    pending_msgs: pending,
                     next_bitmap: next,
                     red_add,
                     red_max,
@@ -458,9 +535,13 @@ impl Engine {
                 program.run_on_iteration_end(&mut end);
                 let stop_requested = end.stop_requested;
                 let continue_requested = end.continue_requested;
-                // recount after the hook (it may have activated vertices)
+                // recount activations after the hook (it may have
+                // activated vertices — unlike pending, which it can't
+                // change; the old second lock-every-queue scan is gone)
                 let next_active = next.count();
-                let pending = shared.inboxes.pending(nxt_parity);
+                // the current parity was fully drained in phase A; zero
+                // its counter so round r+2's senders start clean
+                shared.plane.reset_pending(cur_parity);
                 let cancelled =
                     cfg.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed));
                 let done = stop_requested
@@ -500,7 +581,8 @@ mod tests {
     use crate::graph::source::MemGraph;
     use crate::util::SharedVec;
 
-    /// BFS levels via messages: the canonical engine smoke test.
+    /// BFS levels via messages: the canonical engine smoke test. Levels
+    /// are min-combinable, so this also exercises the combiner lanes.
     struct Bfs {
         level: SharedVec<i64>,
     }
@@ -510,6 +592,13 @@ mod tests {
 
         fn edge_request(&self, _v: VertexId) -> EdgeRequest {
             EdgeRequest::Out
+        }
+
+        fn combiner(&self) -> Option<crate::engine::messages::Combiner<i64>> {
+            Some(crate::engine::messages::Combiner {
+                identity: || i64::MAX,
+                combine: |a, b| *a = (*a).min(*b),
+            })
         }
 
         fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, edges: &VertexEdges) {
@@ -559,6 +648,121 @@ mod tests {
         // two components: 0->1, 2->3
         let lv = bfs_levels(4, &[(0, 1), (2, 3)], 0, 2);
         assert_eq!(lv, vec![0, 1, -1, -1]);
+    }
+
+    #[test]
+    fn combiner_and_queue_transports_agree() {
+        // the same program on both transports, across worker counts and
+        // skew shapes, must produce identical results — the tentpole's
+        // core safety property
+        let rmat = gen::rmat(9, 4000, 19);
+        let star = gen::star(512);
+        for (name, edges) in [("rmat", &rmat), ("star", &star)] {
+            let g = MemGraph::from_edges(512, edges, true);
+            let baseline = {
+                let prog = Bfs { level: SharedVec::new(512, -1) };
+                prog.level.set(0, 0);
+                let cfg = EngineConfig {
+                    workers: 1,
+                    transport: TransportMode::Queue,
+                    ..Default::default()
+                };
+                Engine::run(&prog, &g, &[0], &cfg);
+                prog.level.to_vec()
+            };
+            for workers in [1, 2, 8] {
+                for transport in [TransportMode::Auto, TransportMode::Queue] {
+                    let prog = Bfs { level: SharedVec::new(512, -1) };
+                    prog.level.set(0, 0);
+                    let cfg = EngineConfig { workers, transport, batch: 8, ..Default::default() };
+                    let r = Engine::run(&prog, &g, &[0], &cfg);
+                    assert_eq!(
+                        prog.level.to_vec(),
+                        baseline,
+                        "{name}: workers={workers} transport={transport:?}"
+                    );
+                    if transport == TransportMode::Auto {
+                        assert_eq!(r.engine.msg_allocs, 0, "combiner path never allocates");
+                        assert!(r.engine.peak_msg_bytes > 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combiner_counts_folds_and_delivers_once() {
+        // every vertex p2p-sends 1 to vertex 0 with a `+` combiner:
+        // vertex 0 must observe the full sum in ONE delivery per round,
+        // and all but `workers` sends (one fresh slot per sender lane)
+        // must be counted as folds
+        struct SumToZero {
+            got: SharedVec<u64>,
+        }
+        impl VertexProgram for SumToZero {
+            type Msg = u64;
+            fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+                EdgeRequest::None
+            }
+            fn combiner(&self) -> Option<crate::engine::messages::Combiner<u64>> {
+                Some(crate::engine::messages::Combiner {
+                    identity: || 0,
+                    combine: |a, b| *a += *b,
+                })
+            }
+            fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, u64>, _v: VertexId, _e: &VertexEdges) {
+                ctx.send(0, 1);
+            }
+            fn run_on_message(&self, _c: &mut WorkerCtx<'_, u64>, v: VertexId, m: &u64) {
+                *self.got.get_mut(v as usize) += *m;
+            }
+        }
+        let n = 600;
+        let g = MemGraph::from_edges(n, &gen::path(n), true);
+        let workers = 4;
+        let prog = SumToZero { got: SharedVec::new(n, 0u64) };
+        let all: Vec<VertexId> = (0..n as VertexId).collect();
+        let cfg = EngineConfig { workers, ..Default::default() };
+        let r = Engine::run(&prog, &g, &all, &cfg);
+        assert_eq!(*prog.got.get(0), n as u64, "folded sum must equal the send count");
+        assert_eq!(r.engine.p2p_msgs, n as u64);
+        // the delivery sweep folds across sender lanes too: vertex 0
+        // gets exactly ONE run_on_message for all n sends
+        assert_eq!(r.engine.deliveries, 1, "{:?}", r.engine);
+        // all sends but the (≤ workers) fresh first-touches were folds
+        assert!(
+            r.engine.combined_msgs >= (n - workers) as u64 && r.engine.combined_msgs < n as u64,
+            "{:?}",
+            r.engine
+        );
+    }
+
+    #[test]
+    fn queue_lane_segments_recycle_across_rounds() {
+        // one message per round for n-1 rounds: cross-round segment
+        // recycling keeps the allocation count bounded by the number of
+        // lanes, not the number of rounds
+        let n = 256;
+        let g = MemGraph::from_edges(n, &gen::path(n), true);
+        let prog = Bfs { level: SharedVec::new(n, -1) };
+        prog.level.set(0, 0);
+        let workers = 2;
+        let cfg = EngineConfig {
+            workers,
+            transport: TransportMode::Queue,
+            ..Default::default()
+        };
+        let r = Engine::run(&prog, &g, &[0], &cfg);
+        assert_eq!(r.rounds, n as u64, "path BFS takes one round per hop");
+        let lane_bound = (2 * workers * workers) as u64;
+        assert!(
+            r.engine.msg_allocs <= lane_bound,
+            "{} rounds must not allocate more than {} segments (got {})",
+            r.rounds,
+            lane_bound,
+            r.engine.msg_allocs
+        );
+        assert!(r.engine.peak_msg_bytes > 0);
     }
 
     #[test]

@@ -18,8 +18,25 @@ pub struct EngineStats {
     pub p2p_msgs: AtomicU64,
     /// Multicast operations sent (one per destination-worker slice).
     pub multicast_msgs: AtomicU64,
-    /// Total `run_on_message` deliveries (p2p + multicast fanout).
+    /// Total `run_on_message` deliveries. On the queue transport this is
+    /// p2p + multicast fanout; on the combiner transport each folded
+    /// destination counts once per round (the folds it absorbed are in
+    /// [`EngineStats::combined_msgs`]).
     pub deliveries: AtomicU64,
+    /// Sends folded into an already-touched combiner-lane slot — each is
+    /// a queue entry *and* a `run_on_message` call that never happened.
+    pub combined_msgs: AtomicU64,
+    /// Peak bytes held by the message transport over the run: the fixed
+    /// O(n) slabs for combiner lanes, total recycled-segment bytes for
+    /// queue lanes. Independent of edge count on the combiner path.
+    pub peak_msg_bytes: AtomicU64,
+    /// Transport allocations over the run (queue-lane segments; 0 on the
+    /// combiner path). Flat once warm — the messaging analogue of
+    /// `FetchArena::allocs`.
+    pub msg_allocs: AtomicU64,
+    /// Summed per-worker wall time in phase A (message delivery), ns —
+    /// the phase the transport rework targets.
+    pub phase_a_ns: AtomicU64,
     /// Total `run_on_vertex` invocations.
     pub vertex_runs: AtomicU64,
     /// Rounds executed.
@@ -72,6 +89,10 @@ impl EngineStats {
             p2p_msgs: self.p2p_msgs.load(Ordering::Relaxed),
             multicast_msgs: self.multicast_msgs.load(Ordering::Relaxed),
             deliveries: self.deliveries.load(Ordering::Relaxed),
+            combined_msgs: self.combined_msgs.load(Ordering::Relaxed),
+            peak_msg_bytes: self.peak_msg_bytes.load(Ordering::Relaxed),
+            msg_allocs: self.msg_allocs.load(Ordering::Relaxed),
+            phase_a_ns: self.phase_a_ns.load(Ordering::Relaxed),
             vertex_runs: self.vertex_runs.load(Ordering::Relaxed),
             rounds: self.rounds.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
@@ -95,6 +116,16 @@ pub struct EngineStatsSnapshot {
     pub p2p_msgs: u64,
     pub multicast_msgs: u64,
     pub deliveries: u64,
+    /// Sends absorbed by combiner-lane folds (0 on the queue transport).
+    pub combined_msgs: u64,
+    /// Peak transport bytes over the run (O(n)-bounded on the combiner
+    /// path regardless of edge count).
+    pub peak_msg_bytes: u64,
+    /// Queue-lane segment allocations (flat once warm; 0 on the
+    /// combiner path).
+    pub msg_allocs: u64,
+    /// Summed per-worker phase-A (message delivery) wall time, ns.
+    pub phase_a_ns: u64,
     pub vertex_runs: u64,
     pub rounds: u64,
     /// Non-empty frontier chunks executed by a worker other than their
@@ -144,15 +175,22 @@ impl EngineStatsSnapshot {
         std::time::Duration::from_nanos(self.worker_idle_ns.iter().sum())
     }
 
+    /// Phase-A (message delivery) wall time summed over workers.
+    pub fn phase_a(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.phase_a_ns)
+    }
+
     /// Terse single-line report.
     pub fn report(&self) -> String {
         let mut s = format!(
-            "rounds={} vertex_runs={} p2p={} multicast={} deliveries={} steals={}",
+            "rounds={} vertex_runs={} p2p={} multicast={} deliveries={} combined={} peak_msg={} steals={}",
             self.rounds,
             self.vertex_runs,
             self.p2p_msgs,
             self.multicast_msgs,
             self.deliveries,
+            self.combined_msgs,
+            crate::util::fmt_bytes(self.peak_msg_bytes),
             self.steals,
         );
         if self.worker_busy_ns.len() >= 2 {

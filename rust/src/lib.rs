@@ -12,8 +12,9 @@
 //!   delta+varint compressed, see `docs/FORMAT.md`), converters,
 //!   synthetic workload generators, and the in-memory CSR baseline.
 //! * [`engine`] — the vertex-centric BSP engine (FlashGraph analogue):
-//!   activation scheduling, multicast/point-to-point messaging, global
-//!   barriers, asynchronous phase mode, per-iteration statistics.
+//!   activation scheduling, multicast/point-to-point messaging over
+//!   dense O(n) combiner lanes or recycled lock-free queue lanes,
+//!   global barriers, asynchronous phase mode, per-iteration statistics.
 //! * [`algs`] — the paper's six algorithms, each in its unoptimized and
 //!   Graphyti-optimized variants, plus library extras.
 //! * [`runtime`] — PJRT bridge executing the AOT-compiled JAX/Pallas

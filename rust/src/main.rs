@@ -130,7 +130,7 @@ fn build_config(args: &Args) -> graphyti::Result<RunConfig> {
         Some(p) => RunConfig::load(&PathBuf::from(p))?,
         None => RunConfig::default(),
     };
-    for key in ["cache-mb", "io-threads", "io-delay-us", "workers", "batch", "seed"] {
+    for key in ["cache-mb", "io-threads", "io-delay-us", "workers", "batch", "seed", "transport"] {
         if let Some(v) = args.get(key) {
             cfg.set(&key.replace('-', "_").replace("cache_mb", "cache_mb"), v)?;
         }

@@ -95,14 +95,20 @@ impl AdmissionController {
     }
 }
 
-/// Estimated in-memory vertex-state footprint of a job, in bytes.
+/// Estimated in-memory vertex-state footprint of a job, in bytes, for
+/// an engine run at `workers` worker threads.
 ///
 /// Per-vertex constants approximate what each algorithm's program holds
 /// (rank/residual floats, level/label words, per-source BC state, …)
-/// plus the engine's two activation bitmaps and message headroom. These
-/// are deliberately round over-estimates: admission control needs a
-/// stable upper bound, not an exact census.
-pub fn estimate_state_bytes(spec: &AlgSpec, n: u64) -> u64 {
+/// plus the engine's two activation bitmaps and message headroom. On
+/// top of that, algorithms with a declared message combiner run on the
+/// dense combiner lanes, whose slabs are a real O(n) allocation **per
+/// worker per parity** (`2 × workers × n` message slots plus bitmaps)
+/// — at service worker counts that term dominates the program state,
+/// so it must be admission-accounted or the budget stops bounding
+/// actual memory. These are deliberately round over-estimates:
+/// admission control needs a stable upper bound, not an exact census.
+pub fn estimate_state_bytes(spec: &AlgSpec, n: u64, workers: u64) -> u64 {
     let per_vertex: u64 = match spec {
         // rank + residual f64s, message slack
         AlgSpec::PageRankPush | AlgSpec::PageRankPull => 32,
@@ -123,7 +129,28 @@ pub fn estimate_state_bytes(spec: &AlgSpec, n: u64) -> u64 {
         AlgSpec::Degree => 16,
         AlgSpec::ScanStat => 24,
     };
-    n * per_vertex + n / 4 + 4096
+    // Combiner-lane transport: message size per slot for the algorithms
+    // that declare a combiner (0 = queue-lane algorithms, whose
+    // in-flight entries are covered by the per-vertex message slack
+    // above). The term is charged by algorithm, not by the job's
+    // transport override: a combinable job forced onto `transport=queue`
+    // keeps this reservation as message headroom. Queue-lane segment
+    // memory is proportional to per-round in-flight traffic, which has
+    // no useful a-priori bound short of O(m) — charging that would
+    // reject every BC/Louvain job on a dense graph — so the budget is a
+    // hard bound for combiner-path jobs and a best-effort estimate for
+    // queue-path ones (as it was before combiner lanes existed).
+    let msg_bytes: u64 = match spec {
+        AlgSpec::PageRankPush | AlgSpec::PageRankPull => 8, // f64 shares
+        AlgSpec::Bfs { .. } | AlgSpec::Diameter { .. } => 8, // i64 / u64 lanes
+        AlgSpec::Sssp { .. } => 8,                          // u64 distances
+        AlgSpec::Wcc => 4,                                  // u32 labels
+        AlgSpec::Coreness(_) => 4,                          // u32 counts
+        _ => 0,
+    };
+    // +1 B/slot rounds up the touched + summary bitmaps
+    let transport = if msg_bytes == 0 { 0 } else { 2 * workers.max(1) * n * (msg_bytes + 1) };
+    n * per_vertex + transport + n / 4 + 4096
 }
 
 #[cfg(test)]
@@ -170,16 +197,22 @@ mod tests {
     }
 
     #[test]
-    fn estimates_scale_with_n_and_sources() {
+    fn estimates_scale_with_n_sources_and_workers() {
         let n = 1 << 20;
-        let pr = estimate_state_bytes(&AlgSpec::PageRankPush, n);
-        assert!(pr >= 32 * n && pr < 64 * n);
+        let pr = estimate_state_bytes(&AlgSpec::PageRankPush, n, 2);
+        // program state + 2×2×n combiner slots (8 B + bitmap round-up)
+        assert!(pr >= (32 + 36) * n && pr < 96 * n, "pr = {pr}");
+        // the combiner slabs scale with the worker count; queue-lane
+        // algorithms (BC) don't pay the transport term
+        let pr8 = estimate_state_bytes(&AlgSpec::PageRankPush, n, 8);
+        assert!(pr8 > pr, "more workers ⇒ more lane memory");
         let bc1 = estimate_state_bytes(
             &AlgSpec::Bc {
                 num_sources: 1,
                 variant: crate::algs::bc::BcVariant::MultiSourceAsync,
             },
             n,
+            2,
         );
         let bc32 = estimate_state_bytes(
             &AlgSpec::Bc {
@@ -187,7 +220,20 @@ mod tests {
                 variant: crate::algs::bc::BcVariant::MultiSourceAsync,
             },
             n,
+            2,
         );
         assert!(bc32 > bc1, "more sources must cost more");
+        assert_eq!(
+            bc1,
+            estimate_state_bytes(
+                &AlgSpec::Bc {
+                    num_sources: 1,
+                    variant: crate::algs::bc::BcVariant::MultiSourceAsync,
+                },
+                n,
+                8,
+            ),
+            "queue-lane algorithms pay no per-worker transport term"
+        );
     }
 }

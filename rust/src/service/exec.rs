@@ -152,6 +152,12 @@ pub struct JobStatus {
     /// Max/min per-worker busy-time ratio (1.0 = perfectly balanced;
     /// `f64::INFINITY` if a worker recorded no busy time).
     pub busy_ratio: f64,
+    /// Sends absorbed by combiner-lane folds — nonzero means the job's
+    /// program ran on the dense O(n) message transport.
+    pub combined_msgs: u64,
+    /// Peak message-transport bytes for the run (O(n)-bounded on the
+    /// combiner path; useful next to `state_bytes` when budgeting).
+    pub peak_msg_bytes: u64,
     /// Wall time of the run (zero unless it ran).
     pub wall: Duration,
     /// This job's own I/O, disjointly attributed via its private
@@ -254,6 +260,13 @@ impl GraphService {
         // than when the job eventually runs.
         const SUBSTRATE_KEYS: [&str; 4] =
             ["cache_mb", "io_threads", "io_delay_us", "max_run_pages"];
+        // validate overrides by applying them to a config shaped the way
+        // the executor will build it — one resolution path, so the
+        // worker count admission charges is the worker count the engine
+        // will actually run with (combiner-lane message memory is per
+        // worker, so a per-job `workers` override changes the footprint
+        // being reserved)
+        let mut rc = RunConfig { workers: self.cfg.default_workers, ..Default::default() };
         for (k, v) in &req.overrides {
             let key = k.trim();
             anyhow::ensure!(
@@ -261,11 +274,14 @@ impl GraphService {
                 "config '{key}' sizes the shared substrate and is fixed at service \
                  start; set it via the `serve` flags instead"
             );
-            RunConfig::default().set(key, v)?;
+            rc.set(key, v)?;
         }
         let g = self.registry.open(&req.graph)?;
         let n = g.index().num_vertices() as u64;
-        let cost = estimate_state_bytes(&spec, n);
+        // rc.engine() resolves 0 => one worker per core, exactly as the
+        // run will; Engine::run additionally clamps to n
+        let workers = (rc.engine().workers as u64).min(n.max(1));
+        let cost = estimate_state_bytes(&spec, n, workers);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let rejected = cost > self.admission.budget();
@@ -282,6 +298,8 @@ impl GraphService {
             rounds: 0,
             steals: 0,
             busy_ratio: 1.0,
+            combined_msgs: 0,
+            peak_msg_bytes: 0,
             wall: Duration::ZERO,
             io: IoStatsSnapshot::default(),
             finish_seq: 0,
@@ -510,6 +528,8 @@ impl GraphService {
                             j.status.rounds = r.rounds;
                             j.status.steals = r.engine.steals;
                             j.status.busy_ratio = r.engine.busy_ratio();
+                            j.status.combined_msgs = r.engine.combined_msgs;
+                            j.status.peak_msg_bytes = r.engine.peak_msg_bytes;
                         }
                         j.status.io = io;
                         j.status.summary = Some(summary);

@@ -434,6 +434,8 @@ pub fn status_to_json(st: &JobStatus) -> Json {
         ("error", st.error.clone().map_or(Json::Null, Json::Str)),
         ("rounds", Json::u(st.rounds)),
         ("steals", Json::u(st.steals)),
+        ("combined_msgs", Json::u(st.combined_msgs)),
+        ("peak_msg_bytes", Json::u(st.peak_msg_bytes)),
         // JSON has no Infinity; an unbounded imbalance encodes as null
         (
             "busy_ratio",

@@ -82,6 +82,21 @@ impl AtomicBitmap {
         }
     }
 
+    /// Raw 64-bit word `wi` (bits `[wi*64, wi*64 + 64)`), relaxed load.
+    /// Lets scanners batch-read and lets the combiner-lane delivery
+    /// sweep union several bitmaps word-at-a-time.
+    #[inline]
+    pub fn word(&self, wi: usize) -> u64 {
+        self.words[wi].load(Ordering::Relaxed)
+    }
+
+    /// Atomically clear exactly the bits of `mask` within word `wi`
+    /// (other bits untouched — safe on words shared between owners).
+    #[inline]
+    pub fn clear_word_bits(&self, wi: usize, mask: u64) {
+        self.words[wi].fetch_and(!mask, Ordering::Relaxed);
+    }
+
     /// Population count.
     pub fn count(&self) -> usize {
         self.words
@@ -219,6 +234,23 @@ mod tests {
         // full clear via span (ragged at len)
         bm.clear_span(0, 300);
         assert_eq!(bm.count(), 0);
+    }
+
+    #[test]
+    fn word_access_and_masked_clear() {
+        let bm = AtomicBitmap::new(130);
+        for i in [0usize, 3, 64, 65, 127, 129] {
+            bm.set(i);
+        }
+        assert_eq!(bm.word(0), 0b1001);
+        assert_eq!(bm.word(1), (1 << 0) | (1 << 1) | (1 << 63));
+        // clear only bit 65 (bit 1 of word 1): neighbors survive
+        bm.clear_word_bits(1, 1 << 1);
+        assert_eq!(bm.word(1), (1 << 0) | (1 << 63));
+        assert!(bm.get(64) && bm.get(127) && !bm.get(65));
+        // clearing already-clear bits is a no-op
+        bm.clear_word_bits(0, 0b0110);
+        assert_eq!(bm.word(0), 0b1001);
     }
 
     #[test]

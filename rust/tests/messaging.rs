@@ -1,0 +1,193 @@
+//! Transport-equivalence and message-memory tests for the engine's two
+//! message lanes (combiner vs queue).
+//!
+//! Every combinable algorithm must produce *identical* results on the
+//! dense combiner lanes and on the queue-lane baseline (bit-identical
+//! for integer state, oracle-tight for floats), at 1/2/8 workers, on
+//! both a star (worst-case skew: the whole frontier funnels through one
+//! hub) and an R-MAT power-law graph. On top of that, the combiner
+//! path's peak message memory must be O(n): independent of the edge
+//! factor at fixed n.
+
+use graphyti::algs::bfs::{bfs, ms_bfs};
+use graphyti::algs::coreness::{coreness, CorenessOptions};
+use graphyti::algs::oracle;
+use graphyti::algs::pagerank::{pagerank_pull, pagerank_push};
+use graphyti::algs::sssp::sssp;
+use graphyti::algs::wcc::wcc;
+use graphyti::engine::{EngineConfig, TransportMode};
+use graphyti::graph::csr::Csr;
+use graphyti::graph::gen;
+use graphyti::graph::source::MemGraph;
+use graphyti::VertexId;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+const TRANSPORTS: [TransportMode; 2] = [TransportMode::Queue, TransportMode::Auto];
+
+fn cfg(workers: usize, transport: TransportMode) -> EngineConfig {
+    EngineConfig { workers, transport, batch: 64, ..Default::default() }
+}
+
+fn l1(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// Integer-state algorithms: results must be bit-identical across both
+/// transports and all worker counts, and match the in-memory oracle.
+#[test]
+fn integer_algorithms_bit_identical_across_transports() {
+    let rmat = gen::rmat(9, 4000, 33);
+    let star = gen::star(512);
+    for (name, edges) in [("rmat", &rmat), ("star", &star)] {
+        let n = 512;
+        let csr_d = Csr::from_edges(n, edges, true);
+        let want_bfs = oracle::bfs_levels(&csr_d, 0);
+        let want_sssp = oracle::sssp(&csr_d, 0);
+        let want_wcc = oracle::wcc(&csr_d);
+        for workers in WORKER_COUNTS {
+            for transport in TRANSPORTS {
+                let tag = format!("{name} workers={workers} transport={transport:?}");
+                let g = MemGraph::from_edges(n, edges, true);
+                let e = cfg(workers, transport);
+                assert_eq!(bfs(&g, 0, &e).0, want_bfs, "bfs {tag}");
+                assert_eq!(sssp(&g, 0, &e).0, want_sssp, "sssp {tag}");
+                assert_eq!(wcc(&g, &e).0, want_wcc, "wcc {tag}");
+            }
+        }
+    }
+}
+
+/// Coreness: decrement counts fold by addition on the combiner path —
+/// the peel must come out identical to the queue path and the oracle
+/// for every messaging discipline (p2p / multicast / hybrid).
+#[test]
+fn coreness_decrement_folds_match_queue_path() {
+    let edges = gen::rmat(9, 5000, 29);
+    let n = 512;
+    let csr = Csr::from_edges(n, &edges, false);
+    let want = oracle::coreness(&csr);
+    for opts in [
+        CorenessOptions::unoptimized(),
+        CorenessOptions::pruned(),
+        CorenessOptions::graphyti(),
+    ] {
+        for workers in WORKER_COUNTS {
+            for transport in TRANSPORTS {
+                let g = MemGraph::from_edges(n, &edges, false);
+                let r = coreness(&g, opts, &cfg(workers, transport));
+                assert_eq!(
+                    r.core, want,
+                    "coreness {opts:?} workers={workers} transport={transport:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Multi-source BFS lane bitsets fold by OR; eccentricities (and hence
+/// diameter estimates) must be transport- and worker-count-invariant.
+#[test]
+fn ms_bfs_or_folds_match_queue_path() {
+    let edges = gen::rmat(9, 4000, 61);
+    let n = 512;
+    let csr = Csr::from_edges(n, &edges, true);
+    let sources: Vec<VertexId> = vec![0, 3, 17, 42, 99, 256];
+    let want: Vec<i64> = sources.iter().map(|&s| oracle::eccentricity(&csr, s)).collect();
+    for workers in WORKER_COUNTS {
+        for transport in TRANSPORTS {
+            let g = MemGraph::from_edges(n, &edges, true);
+            let (ecc, _) = ms_bfs(&g, &sources, &cfg(workers, transport));
+            assert_eq!(ecc, want, "workers={workers} transport={transport:?}");
+        }
+    }
+}
+
+/// PageRank (float mass): both transports and all worker counts must be
+/// oracle-tight; the two transports must agree to well under the
+/// convergence tolerance.
+#[test]
+fn pagerank_oracle_tight_on_both_transports() {
+    let edges = gen::rmat(9, 4000, 45);
+    let n = 512;
+    let csr = Csr::from_edges(n, &edges, true);
+    let want = oracle::pagerank(&csr, 0.85, 200);
+    for workers in WORKER_COUNTS {
+        let mut per_transport: Vec<Vec<f64>> = Vec::new();
+        for transport in TRANSPORTS {
+            let g = MemGraph::from_edges(n, &edges, true);
+            let e = cfg(workers, transport);
+            let push = pagerank_push(&g, 0.85, 1e-12, &e);
+            let pull = pagerank_pull(&g, 0.85, 1e-12, 500, &e);
+            assert!(
+                l1(&push.rank, &want) < 1e-6,
+                "push workers={workers} transport={transport:?} L1 {}",
+                l1(&push.rank, &want)
+            );
+            assert!(
+                l1(&pull.rank, &want) < 1e-6,
+                "pull workers={workers} transport={transport:?} L1 {}",
+                l1(&pull.rank, &want)
+            );
+            per_transport.push(push.rank);
+        }
+        let cross = l1(&per_transport[0], &per_transport[1]);
+        assert!(cross < 1e-8, "transports disagree beyond fold-order noise: {cross}");
+    }
+}
+
+/// The acceptance bound: combiner-lane peak message bytes at fixed n
+/// must not move when the edge count quadruples, and must stay within a
+/// small multiple of n × 4 B — while the counters prove the combiner
+/// path actually ran (folds > 0, allocation-free).
+#[test]
+fn combiner_message_memory_is_o_n_not_o_m() {
+    let n = 512;
+    let workers = 2;
+    let mut pr_peaks = Vec::new();
+    let mut wcc_peaks = Vec::new();
+    for ef in [4usize, 16] {
+        let edges = gen::rmat(9, n * ef, 7);
+        let g = MemGraph::from_edges(n, &edges, true);
+        let e = cfg(workers, TransportMode::Auto);
+        let pr = pagerank_push(&g, 0.85, 1e-9, &e).report;
+        assert!(pr.engine.combined_msgs > 0, "ef={ef}: PR must fold on the combiner path");
+        assert_eq!(pr.engine.msg_allocs, 0, "combiner path allocates nothing");
+        pr_peaks.push(pr.engine.peak_msg_bytes);
+        let (_, wr) = wcc(&g, &e);
+        assert!(wr.engine.combined_msgs > 0, "ef={ef}: WCC must fold on the combiner path");
+        wcc_peaks.push(wr.engine.peak_msg_bytes);
+    }
+    assert_eq!(pr_peaks[0], pr_peaks[1], "PR message memory must not scale with edges");
+    assert_eq!(wcc_peaks[0], wcc_peaks[1], "WCC message memory must not scale with edges");
+    // small multiple of n × size_of::<f32>(): 3 × workers × 8 B/vertex
+    // = 12 × (n × 4 B) at 2 workers
+    let bound = (3 * workers * std::mem::size_of::<f64>() * n) as u64;
+    assert!(pr_peaks[0] > 0 && pr_peaks[0] <= bound, "peak {} bound {bound}", pr_peaks[0]);
+    // the queue baseline on the same PR workload allocates real segment
+    // memory and combines nothing — the counters tell the paths apart
+    let edges = gen::rmat(9, n * 16, 7);
+    let g = MemGraph::from_edges(n, &edges, true);
+    let qr = pagerank_push(&g, 0.85, 1e-9, &cfg(workers, TransportMode::Queue)).report;
+    assert_eq!(qr.engine.combined_msgs, 0, "queue path never folds");
+    assert!(qr.engine.msg_allocs > 0 && qr.engine.peak_msg_bytes > 0);
+}
+
+/// Cross-round segment recycling at the engine level: a long-lived
+/// queue-transport run (one message per round for hundreds of rounds)
+/// must allocate no more segments than it has lanes.
+#[test]
+fn queue_transport_allocation_bounded_by_lanes_not_rounds() {
+    let n = 512;
+    let edges = gen::path(n);
+    let g = MemGraph::from_edges(n, &edges, true);
+    let workers = 4;
+    let (_, r) = bfs(&g, 0, &cfg(workers, TransportMode::Queue));
+    assert_eq!(r.rounds, n as u64, "path BFS pays one round per hop");
+    let lane_bound = (2 * workers * workers) as u64;
+    assert!(
+        r.engine.msg_allocs <= lane_bound,
+        "{} rounds allocated {} segments (lane bound {lane_bound})",
+        r.rounds,
+        r.engine.msg_allocs
+    );
+}

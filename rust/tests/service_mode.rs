@@ -125,12 +125,13 @@ fn concurrent_mixed_jobs_share_one_image_with_disjoint_io() {
 #[test]
 fn admission_budget_rejects_and_serializes() {
     let base = build_image("adm", true, 11, 20_000); // n = 2048
-    // pagerank footprint: 2048 * 32 + 2048/4 + 4096 = 70,144 bytes.
+    // pagerank footprint at 2 workers: program state 2048 * 32 +
+    // combiner lanes 2 * 2 * 2048 * 9 + 2048/4 + 4096 = 143,872 bytes.
     // budget fits exactly one such job at a time.
     let svc = GraphService::start(ServiceConfig {
         cache_mb: 1,
         exec_threads: 2,
-        budget_bytes: 100_000,
+        budget_bytes: 150_000,
         default_workers: 2,
         ..Default::default()
     });
@@ -152,7 +153,7 @@ fn admission_budget_rejects_and_serializes() {
         let st = svc.wait(id, Duration::from_secs(300)).unwrap();
         assert_eq!(st.state, JobState::Done, "{st:?}");
     }
-    assert!(svc.admission().peak() <= 100_000, "peak {}", svc.admission().peak());
+    assert!(svc.admission().peak() <= 150_000, "peak {}", svc.admission().peak());
     assert!(svc.admission().peak() > 0);
     assert_eq!(svc.admission().in_use(), 0, "all footprints released");
 
