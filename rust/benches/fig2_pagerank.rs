@@ -28,6 +28,7 @@ fn main() {
     let push = pagerank_push(&g, cfg.alpha, thr, &cfg.engine());
     t.add("PR-push (Graphyti)", &push.report);
     t.print();
+    t.write_json("fig2_pagerank", &format!("rmat s{scale} ef16 directed")).unwrap();
 
     let speedup = pull.report.wall.as_secs_f64() / push.report.wall.as_secs_f64();
     let io_ratio = pull.report.io.logical_bytes as f64 / push.report.io.logical_bytes.max(1) as f64;

@@ -29,6 +29,7 @@ fn main() {
     let graphyti = coreness(&g, CorenessOptions::graphyti(), &cfg.engine());
     t.add("pruning + hybrid (Graphyti)", &graphyti.report);
     t.print();
+    t.write_json("fig3_coreness", &format!("rmat s{scale} ef16 undirected")).unwrap();
 
     assert_eq!(unopt.core, pruned.core);
     assert_eq!(unopt.core, graphyti.core);

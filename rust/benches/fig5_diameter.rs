@@ -22,6 +22,7 @@ fn main() {
     let multi = estimate_diameter(&g, 32, DiameterVariant::MultiSource, &cfg.engine());
     t.add("multi-source BFS (Graphyti)", &multi.report);
     t.print();
+    t.write_json("fig5_diameter", &format!("rmat s{scale} ef16 directed, 32 sweeps")).unwrap();
 
     assert_eq!(uni.diameter, multi.diameter, "estimates must agree");
     println!(

@@ -21,6 +21,8 @@ fn main() {
         &format!("R-MAT scale {scale}, directed, cache=1/7 adj, io_delay={}us", cfg.io_delay_us),
     );
 
+    // one flat collector across source counts for the JSON baseline
+    let mut all = FigTable::new();
     for nsrc in [8usize, 16, 32] {
         println!("\n--- {nsrc} sources ---");
         let g0 = open_sem(&base, &cfg);
@@ -43,6 +45,9 @@ fn main() {
         let async_hits = g.io_stats().snapshot().hit_ratio();
         t.add("multi-source + async", &asyn.report);
         t.print();
+        all.add(&format!("uni-source xN src={nsrc}"), &uni.report);
+        all.add(&format!("multi-source (sync) src={nsrc}"), &sync.report);
+        all.add(&format!("multi-source + async src={nsrc}"), &asyn.report);
 
         println!(
             "cache hit ratio: uni {:.3}  sync {:.3}  async {:.3} (Fig 6a shape: multi >= uni)",
@@ -59,4 +64,5 @@ fn main() {
             assert!((a - b).abs() < 1e-6 * (1.0 + b.abs()), "bc[{i}] uni {a} vs async {b}");
         }
     }
+    all.write_json("fig6_bc", &format!("rmat s{scale} ef16 directed, 8/16/32 sources")).unwrap();
 }

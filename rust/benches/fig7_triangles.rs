@@ -52,6 +52,7 @@ fn main() {
         t.add(label, &r.report);
     }
     t.print();
+    t.write_json("fig7_triangles", &format!("rmat s{scale} ef16 undirected")).unwrap();
     assert!(counts.windows(2).all(|w| w[0] == w[1]), "all variants must agree: {counts:?}");
     println!(
         "\ntriangles: {}   total speedup scan -> all-optimized: {:.1}x (paper: ~100x)",

@@ -6,7 +6,7 @@
 //! modifying implementation.
 
 use graphyti::algs::louvain::{louvain, LouvainMode};
-use graphyti::coordinator::benchkit::{banner, bench_scale, open_sem, rmat_workload};
+use graphyti::coordinator::benchkit::{banner, bench_scale, open_sem, rmat_workload, FigTable};
 use graphyti::coordinator::Table;
 use graphyti::util::fmt_dur;
 
@@ -23,6 +23,7 @@ fn main() {
         "variant", "total", "local-moves", "aggregation", "levels", "Q",
     ]);
     let mut totals = Vec::new();
+    let mut fig = FigTable::new();
     for (mode, label) in [
         (LouvainMode::Physical, "physical materialization (RAMDisk best case)"),
         (LouvainMode::Graphyti, "Graphyti (metadata + messaging)"),
@@ -32,6 +33,7 @@ fn main() {
         let r = louvain(&g, mode, 10, &cfg.engine());
         let total = start.elapsed();
         totals.push((label, total, r.modularity));
+        fig.add(label, &r.report);
         t.row(&[
             label.to_string(),
             fmt_dur(total),
@@ -47,4 +49,5 @@ fn main() {
         totals[0].1.as_secs_f64() / totals[1].1.as_secs_f64()
     );
     println!("note: quality (Q) is equivalent; the win is avoiding the rewrite.");
+    fig.write_json("fig8_louvain", &format!("rmat s{scale} ef16 undirected")).unwrap();
 }

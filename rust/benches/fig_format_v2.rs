@@ -9,7 +9,7 @@
 
 use graphyti::algs::bfs::bfs;
 use graphyti::algs::pagerank::pagerank_push;
-use graphyti::coordinator::benchkit::{banner, bench_scale, compare_formats};
+use graphyti::coordinator::benchkit::{banner, bench_scale, compare_formats, FigTable};
 use graphyti::engine::EngineConfig;
 
 fn main() {
@@ -23,7 +23,7 @@ fn main() {
         &format!("R-MAT scale {scale}, directed, cache=1/7 of v1 adj"),
     );
     let thr = 1e-3 / n as f64;
-    compare_formats(scale, 16, true, "fmtpr", |g| {
+    let pr = compare_formats(scale, 16, true, "fmtpr", |g| {
         pagerank_push(g, 0.85, thr, &ecfg).report
     });
 
@@ -32,5 +32,12 @@ fn main() {
         "delta+varint adjacency vs fixed u32 — BFS from vertex 0",
         &format!("R-MAT scale {scale}, directed, cache=1/7 of v1 adj"),
     );
-    compare_formats(scale, 16, true, "fmtbfs", |g| bfs(g, 0, &ecfg).1);
+    let bf = compare_formats(scale, 16, true, "fmtbfs", |g| bfs(g, 0, &ecfg).1);
+
+    let mut t = FigTable::new();
+    t.add("pagerank v1 fixed-u32", &pr.v1);
+    t.add("pagerank v2 delta+varint", &pr.v2);
+    t.add("bfs v1 fixed-u32", &bf.v1);
+    t.add("bfs v2 delta+varint", &bf.v2);
+    t.write_json("fig_format_v2", &format!("rmat s{scale} ef16 directed")).unwrap();
 }

@@ -105,6 +105,8 @@ fn main() {
         }
     }
     t.print();
+    t.write_json("fig_messaging", &format!("rmat s{scale} ef16 directed, workers 1/2/8"))
+        .unwrap();
 
     // ---- O(n) vs O(m): fixed n, growing edge factor ------------------
     println!("\nmessage memory vs edge factor (PR-push, combiner lanes, 2 workers):");

@@ -15,7 +15,7 @@
 
 use graphyti::algs::bfs::bfs;
 use graphyti::algs::pagerank::pagerank_push;
-use graphyti::coordinator::benchkit::{banner, bench_scale, rmat_workload, worker_scaling};
+use graphyti::coordinator::benchkit::{banner, bench_scale, rmat_workload, worker_scaling, FigTable};
 use graphyti::engine::EngineConfig;
 
 fn main() {
@@ -32,16 +32,27 @@ fn main() {
 
     println!("\n-- PageRank-push (balanced frontier) --");
     let thr = 1e-3 / n as f64;
-    worker_scaling(&base, &cfg, &counts, |g, w| {
-        let ecfg = EngineConfig { workers: w, ..Default::default() };
+    // trace=on so the JSON baseline carries per-round I/O summaries
+    let pr_reports = worker_scaling(&base, &cfg, &counts, |g, w| {
+        let ecfg = EngineConfig { workers: w, trace: true, ..Default::default() };
         pagerank_push(g, cfg.alpha, thr, &ecfg).report
     });
 
     println!("\n-- BFS from vertex 0 (skew-prone frontier) --");
     let reports = worker_scaling(&base, &cfg, &counts, |g, w| {
-        let ecfg = EngineConfig { workers: w, ..Default::default() };
+        let ecfg = EngineConfig { workers: w, trace: true, ..Default::default() };
         bfs(g, 0, &ecfg).1
     });
+
+    let mut fig = FigTable::new();
+    for (w, r) in counts.iter().zip(&pr_reports) {
+        fig.add(&format!("pagerank-push w={w}"), r);
+    }
+    for (w, r) in counts.iter().zip(&reports) {
+        fig.add(&format!("bfs w={w}"), r);
+    }
+    fig.write_json("fig_scaling", &format!("rmat s{scale} ef16 directed, workers 1/2/4/8"))
+        .unwrap();
 
     // the scheduler's contract: multi-worker runs stay balanced
     for r in &reports[1..] {

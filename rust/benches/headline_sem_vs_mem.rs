@@ -5,7 +5,7 @@
 use graphyti::algs::coreness::{coreness, CorenessOptions};
 use graphyti::algs::pagerank::pagerank_push;
 use graphyti::algs::wcc::wcc;
-use graphyti::coordinator::benchkit::{banner, bench_scale, open_sem, rmat_workload};
+use graphyti::coordinator::benchkit::{banner, bench_scale, open_sem, rmat_workload, FigTable};
 use graphyti::coordinator::Table;
 use graphyti::graph::builder::RamImage;
 use graphyti::graph::format::GraphIndex;
@@ -83,6 +83,15 @@ fn main() {
         fmt_bytes(sem_r.io.bytes_read),
     ]);
     t.print();
+
+    let mut fig = FigTable::new();
+    fig.add("pagerank-push sem", &sem.report);
+    fig.add("pagerank-push mem", &mem.report);
+    fig.add("coreness sem", &sem_c.report);
+    fig.add("coreness mem", &mem_c.report);
+    fig.add("wcc sem", &sem_r);
+    fig.add("wcc mem", &mem_r);
+    fig.write_json("headline_sem_vs_mem", &format!("rmat s{scale} ef16")).unwrap();
 
     let g = open_sem(&base_d, &cfg);
     let m = open_mem(&base_d);

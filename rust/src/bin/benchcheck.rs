@@ -1,0 +1,57 @@
+//! `benchcheck` — compare a current `BENCH_<fig>.json` against a
+//! committed baseline and exit non-zero on a regression.
+//!
+//! Usage: `benchcheck BASELINE.json CURRENT.json [--wall-tolerance F]`
+//!
+//! Policy (see `docs/METRICS.md`): wall time may regress up to the
+//! tolerance (default 15%, machine noise); `bytes_read` may not grow at
+//! all (read volume is deterministic for a fixed image + cache size).
+//! A baseline with no rows — the bootstrap placeholder committed before
+//! any toolchain has produced real numbers — passes with a note.
+
+use std::process::ExitCode;
+
+use graphyti::coordinator::benchkit::bench_compare;
+use graphyti::util::Json;
+
+fn load(path: &str) -> graphyti::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+    Json::parse(&text)
+}
+
+fn run() -> graphyti::Result<bool> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    anyhow::ensure!(
+        args.len() >= 2,
+        "usage: benchcheck BASELINE.json CURRENT.json [--wall-tolerance F]"
+    );
+    let mut tolerance = 0.15;
+    if let Some(i) = args.iter().position(|a| a == "--wall-tolerance") {
+        let v = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--wall-tolerance needs a value"))?;
+        tolerance = v.parse()?;
+    }
+    let baseline = load(&args[0])?;
+    let current = load(&args[1])?;
+    let fig = current.get("fig").and_then(Json::as_str).unwrap_or("?");
+    let check = bench_compare(&baseline, &current, tolerance);
+    println!("benchcheck {fig}: {} (wall tolerance {:.0}%)",
+        if check.ok { "PASS" } else { "FAIL" },
+        tolerance * 100.0
+    );
+    for note in &check.notes {
+        println!("  {note}");
+    }
+    Ok(check.ok)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("benchcheck error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -16,7 +16,7 @@ use crate::graph::builder::GraphBuilder;
 use crate::graph::gen;
 use crate::graph::source::{EdgeSource, SemGraph};
 use crate::safs::IoStatsSnapshot;
-use crate::util::{fmt_bytes, fmt_dur};
+use crate::util::{fmt_bytes, fmt_dur, Json};
 
 /// Standard SSD-emulation latency for benches (µs per physical read).
 /// Restores the I/O-bound regime the paper measures in (DESIGN.md §5);
@@ -217,10 +217,19 @@ pub fn measure_io<T>(
     (out, source.io_stats().snapshot().delta(&before))
 }
 
-/// Collector printing the uniform figure-row schema.
+/// Output directory for machine-readable bench baselines
+/// (`BENCH_<fig>.json`); override with `GRAPHYTI_BENCH_OUT`.
+pub fn bench_out_dir() -> PathBuf {
+    std::env::var("GRAPHYTI_BENCH_OUT").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("."))
+}
+
+/// Collector printing the uniform figure-row schema. Every added run is
+/// also retained verbatim so [`FigTable::write_json`] can emit a
+/// machine-readable `BENCH_<fig>.json` baseline next to the table.
 pub struct FigTable {
     table: Table,
     baseline_wall: Option<f64>,
+    rows: Vec<(String, RunReport)>,
 }
 
 impl Default for FigTable {
@@ -233,6 +242,7 @@ impl FigTable {
     /// New empty table.
     pub fn new() -> Self {
         FigTable {
+            rows: Vec::new(),
             table: Table::new(&[
                 "variant",
                 "wall",
@@ -283,12 +293,149 @@ impl FigTable {
             r.engine.steals.to_string(),
             fmt_ratio(r.engine.busy_ratio()),
         ]);
+        self.rows.push((variant.to_string(), r.clone()));
     }
 
     /// Print the table.
     pub fn print(&self) {
         self.table.print();
     }
+
+    /// Machine-readable rendering of every added run: the baseline
+    /// schema `benchcheck` compares against (see `docs/METRICS.md`).
+    pub fn to_json(&self, fig: &str, workload: &str) -> Json {
+        Json::obj(vec![
+            ("fig", Json::s(fig)),
+            ("workload", Json::s(workload)),
+            ("schema", Json::u(1)),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(|(v, r)| report_row_json(v, r)).collect()),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<fig>.json` into [`bench_out_dir`]; returns the
+    /// path. Benches call this unconditionally — the file is the
+    /// machine-readable twin of the printed table.
+    pub fn write_json(&self, fig: &str, workload: &str) -> std::io::Result<PathBuf> {
+        let path = bench_out_dir().join(format!("BENCH_{fig}.json"));
+        std::fs::write(&path, self.to_json(fig, workload).encode_pretty())?;
+        println!("baseline written: {}", path.display());
+        Ok(path)
+    }
+}
+
+/// One bench row as JSON. Wall time is milliseconds (f64); everything
+/// else is the raw counter. The trace summary rides along when the run
+/// recorded one.
+fn report_row_json(variant: &str, r: &RunReport) -> Json {
+    let mut fields = vec![
+        ("variant", Json::s(variant)),
+        ("wall_ms", Json::f(r.wall.as_secs_f64() * 1e3)),
+        ("rounds", Json::u(r.rounds)),
+        (
+            "io",
+            Json::obj(vec![
+                ("read_requests", Json::u(r.io.read_requests)),
+                ("logical_bytes", Json::u(r.io.logical_bytes)),
+                ("bytes_read", Json::u(r.io.bytes_read)),
+                ("physical_reads", Json::u(r.io.physical_reads)),
+                ("cache_hits", Json::u(r.io.cache_hits)),
+                ("cache_misses", Json::u(r.io.cache_misses)),
+                ("thread_waits", Json::u(r.io.thread_waits)),
+                ("fetch_p50_us", Json::u(r.io.latency.fetch.p50)),
+                ("fetch_p99_us", Json::u(r.io.latency.fetch.p99)),
+            ]),
+        ),
+        (
+            "engine",
+            Json::obj(vec![
+                ("p2p_msgs", Json::u(r.engine.p2p_msgs)),
+                ("multicast_msgs", Json::u(r.engine.multicast_msgs)),
+                ("deliveries", Json::u(r.engine.deliveries)),
+                ("combined_msgs", Json::u(r.engine.combined_msgs)),
+                ("peak_msg_bytes", Json::u(r.engine.peak_msg_bytes)),
+                ("steals", Json::u(r.engine.steals)),
+                ("vertex_runs", Json::u(r.engine.vertex_runs)),
+                (
+                    "busy_ratio",
+                    if r.engine.busy_ratio().is_finite() {
+                        Json::f(r.engine.busy_ratio())
+                    } else {
+                        Json::Null
+                    },
+                ),
+            ]),
+        ),
+    ];
+    if let Some(tr) = &r.trace {
+        fields.push(("trace", tr.summary_json()));
+    }
+    Json::obj(fields)
+}
+
+/// Outcome of a baseline-vs-current bench comparison.
+pub struct BenchCheck {
+    /// Whether the current run is within the regression budget.
+    pub ok: bool,
+    /// One human-readable line per compared (or skipped) row.
+    pub notes: Vec<String>,
+}
+
+/// Compare a current `BENCH_<fig>.json` against a committed baseline.
+///
+/// Rows are matched by `variant`. A matched row fails when wall time
+/// regresses more than `wall_tolerance` (fraction, e.g. 0.15) or when
+/// `bytes_read` grows at all — read volume is deterministic for a given
+/// image + cache size, so any growth is a real I/O regression, while
+/// wall time gets slack for machine noise. A baseline with no rows (the
+/// bootstrap placeholder committed before a toolchain ran the benches)
+/// passes with a note, so CI can adopt the gate before the first real
+/// baseline lands.
+pub fn bench_compare(baseline: &Json, current: &Json, wall_tolerance: f64) -> BenchCheck {
+    let rows = |j: &Json| -> Vec<(String, f64, u64)> {
+        j.get("rows")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|r| {
+                Some((
+                    r.get("variant")?.as_str()?.to_string(),
+                    r.get("wall_ms")?.as_f64()?,
+                    r.get("io")?.get("bytes_read")?.as_u64()?,
+                ))
+            })
+            .collect()
+    };
+    let base_rows = rows(baseline);
+    let cur_rows = rows(current);
+    let mut notes = Vec::new();
+    let mut ok = true;
+    if base_rows.is_empty() {
+        notes.push("baseline has no rows (bootstrap placeholder): pass".to_string());
+        return BenchCheck { ok: true, notes };
+    }
+    for (variant, base_wall, base_bytes) in &base_rows {
+        let Some((_, cur_wall, cur_bytes)) =
+            cur_rows.iter().find(|(v, _, _)| v == variant)
+        else {
+            ok = false;
+            notes.push(format!("{variant}: MISSING from current run"));
+            continue;
+        };
+        let wall_ratio = cur_wall / base_wall.max(1e-9);
+        let wall_ok = wall_ratio <= 1.0 + wall_tolerance;
+        let bytes_ok = cur_bytes <= base_bytes;
+        ok &= wall_ok && bytes_ok;
+        notes.push(format!(
+            "{variant}: wall {base_wall:.1} -> {cur_wall:.1} ms ({wall_ratio:.2}x, {}), \
+             bytes_read {base_bytes} -> {cur_bytes} ({})",
+            if wall_ok { "ok" } else { "FAIL" },
+            if bytes_ok { "ok" } else { "FAIL" },
+        ));
+    }
+    BenchCheck { ok, notes }
 }
 
 /// Print a figure banner.
@@ -343,6 +490,66 @@ mod tests {
         assert_eq!(reports[0].engine.worker_busy_ns.len(), 1, "1-worker run tracks 1 slot");
         assert_eq!(reports[1].engine.worker_busy_ns.len(), 2, "2-worker run tracks 2 slots");
         assert!(reports[0].rounds > 0 && reports[1].rounds > 0);
+    }
+
+    fn report_with(wall_ms: u64, bytes_read: u64) -> RunReport {
+        let mut r = RunReport {
+            rounds: 3,
+            wall: std::time::Duration::from_millis(wall_ms),
+            engine: Default::default(),
+            io: Default::default(),
+            trace: None,
+        };
+        r.io.bytes_read = bytes_read;
+        r
+    }
+
+    fn table_json(rows: &[(&str, u64, u64)]) -> Json {
+        let mut t = FigTable::new();
+        for (v, wall, bytes) in rows {
+            t.add(v, &report_with(*wall, *bytes));
+        }
+        t.to_json("fig_unit", "unit workload")
+    }
+
+    #[test]
+    fn fig_table_json_round_trips() {
+        let j = table_json(&[("push", 100, 4096), ("pull", 150, 8192)]);
+        let j = Json::parse(&j.encode_pretty()).unwrap();
+        assert_eq!(j.get("fig").unwrap().as_str(), Some("fig_unit"));
+        let rows = j.get("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("variant").unwrap().as_str(), Some("push"));
+        assert_eq!(rows[1].get("io").unwrap().get("bytes_read").unwrap().as_u64(), Some(8192));
+        assert_eq!(rows[0].get("wall_ms").unwrap().as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn bench_compare_flags_regressions() {
+        let base = table_json(&[("push", 100, 4096)]);
+        // within wall tolerance, same bytes: ok
+        let c = bench_compare(&base, &table_json(&[("push", 110, 4096)]), 0.15);
+        assert!(c.ok, "{:?}", c.notes);
+        // wall blown past tolerance
+        let c = bench_compare(&base, &table_json(&[("push", 200, 4096)]), 0.15);
+        assert!(!c.ok, "{:?}", c.notes);
+        // any bytes_read growth fails
+        let c = bench_compare(&base, &table_json(&[("push", 100, 4097)]), 0.15);
+        assert!(!c.ok, "{:?}", c.notes);
+        // bytes shrinking is fine
+        let c = bench_compare(&base, &table_json(&[("push", 100, 1024)]), 0.15);
+        assert!(c.ok, "{:?}", c.notes);
+        // variant missing from the current run fails
+        let c = bench_compare(&base, &table_json(&[("pull", 100, 4096)]), 0.15);
+        assert!(!c.ok, "{:?}", c.notes);
+    }
+
+    #[test]
+    fn bench_compare_passes_on_bootstrap_baseline() {
+        let empty = table_json(&[]);
+        let c = bench_compare(&empty, &table_json(&[("push", 100, 4096)]), 0.15);
+        assert!(c.ok);
+        assert!(c.notes[0].contains("bootstrap"), "{:?}", c.notes);
     }
 
     #[test]

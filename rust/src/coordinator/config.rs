@@ -13,6 +13,25 @@ use anyhow::{bail, Context};
 use crate::engine::{EngineConfig, TransportMode};
 use crate::safs::IoConfig;
 
+/// How (and whether) to surface the per-round engine trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// No trace recorded (default; zero overhead).
+    #[default]
+    Off,
+    /// Record and print a per-round table after the run.
+    Table,
+    /// Record and print the trace as one JSON line after the run.
+    Json,
+}
+
+impl TraceMode {
+    /// Whether the engine should record at all.
+    pub fn enabled(self) -> bool {
+        self != TraceMode::Off
+    }
+}
+
 /// All tunables for a run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -42,6 +61,9 @@ pub struct RunConfig {
     /// at round boundaries). Set by the service executor per job; not a
     /// `key=value` knob.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Per-round trace recording and rendering
+    /// (`trace=off|on|table|json`; `on` is an alias for `table`).
+    pub trace: TraceMode,
 }
 
 impl Default for RunConfig {
@@ -58,6 +80,7 @@ impl Default for RunConfig {
             threshold: 1e-10,
             seed: 42,
             cancel: None,
+            trace: TraceMode::Off,
         }
     }
 }
@@ -83,6 +106,14 @@ impl RunConfig {
             "alpha" => self.alpha = v.parse().context("alpha")?,
             "threshold" => self.threshold = v.parse().context("threshold")?,
             "seed" => self.seed = v.parse().context("seed")?,
+            "trace" => {
+                self.trace = match v {
+                    "off" | "false" | "0" => TraceMode::Off,
+                    "on" | "table" | "true" | "1" => TraceMode::Table,
+                    "json" => TraceMode::Json,
+                    other => bail!("trace must be off/on/table/json, got '{other}'"),
+                }
+            }
             other => bail!("unknown config key: {other}"),
         }
         Ok(())
@@ -115,6 +146,7 @@ impl RunConfig {
         e.batch = self.batch;
         e.transport = self.transport;
         e.cancel = self.cancel.clone();
+        e.trace = self.trace.enabled();
         e
     }
 
@@ -154,6 +186,16 @@ mod tests {
         assert!(c.set("transport", "carrier-pigeon").is_err());
         assert!(c.set("nonsense", "1").is_err());
         assert!(c.set("cache_mb", "abc").is_err());
+        assert_eq!(c.trace, TraceMode::Off);
+        assert!(!c.engine().trace);
+        c.set("trace", "on").unwrap();
+        assert_eq!(c.trace, TraceMode::Table);
+        assert!(c.engine().trace);
+        c.set("trace", "json").unwrap();
+        assert_eq!(c.trace, TraceMode::Json);
+        c.set("trace", "off").unwrap();
+        assert_eq!(c.trace, TraceMode::Off);
+        assert!(c.set("trace", "loud").is_err());
     }
 
     #[test]

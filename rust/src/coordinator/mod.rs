@@ -14,6 +14,6 @@ pub mod config;
 pub mod jobs;
 pub mod report;
 
-pub use config::RunConfig;
+pub use config::{RunConfig, TraceMode};
 pub use jobs::{open_graph, run_alg, AlgSpec, GraphMode, JobOutput};
 pub use report::Table;

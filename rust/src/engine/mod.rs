@@ -65,9 +65,11 @@ pub mod messages;
 pub mod program;
 pub mod runner;
 pub mod stats;
+pub mod trace;
 
 pub use context::{EndCtx, WorkerCtx};
 pub use messages::{Combiner, TransportMode};
 pub use program::VertexProgram;
 pub use runner::{Engine, EngineConfig, RunReport};
 pub use stats::EngineStats;
+pub use trace::{RoundSample, RoundTrace, WorkerPhases};

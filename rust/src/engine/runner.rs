@@ -22,13 +22,14 @@
 //! bits in the *current* round's bitmap during the vertex phase.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::engine::context::{EndCtx, WorkerCtx, N_RED_SLOTS};
 use crate::engine::messages::{Delivery, MessagePlane, Transport, TransportMode};
 use crate::engine::program::VertexProgram;
 use crate::engine::stats::{EngineStats, EngineStatsSnapshot};
+use crate::engine::trace::{EngineCum, RoundTrace};
 use crate::graph::format::EdgeRequest;
 use crate::graph::source::{EdgeSource, FetchArena};
 use crate::safs::IoStatsSnapshot;
@@ -79,6 +80,11 @@ pub struct EngineConfig {
     /// vertex work finishes, so state stays consistent. Service-mode
     /// jobs each get their own token; `None` disables the check.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Record a per-round [`RoundTrace`] into the [`RunReport`]. Off by
+    /// default: an untraced run takes no snapshots and pays nothing; a
+    /// traced run preallocates its ring up front and records
+    /// allocation-free (one uncontended lock by worker 0 per round).
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -91,6 +97,7 @@ impl Default for EngineConfig {
             transport: TransportMode::Auto,
             max_rounds: 1_000_000,
             cancel: None,
+            trace: false,
         }
     }
 }
@@ -106,6 +113,8 @@ pub struct RunReport {
     pub engine: EngineStatsSnapshot,
     /// I/O counters delta over the run (from the edge source).
     pub io: IoStatsSnapshot,
+    /// Per-round trace (only when `EngineConfig.trace` was set).
+    pub trace: Option<RoundTrace>,
 }
 
 impl RunReport {
@@ -118,6 +127,10 @@ impl RunReport {
             wall: Duration::ZERO,
             engine: Default::default(),
             io: Default::default(),
+            // traces don't concatenate across separately-configured
+            // runs; a single-run "merge" is an identity, so its trace
+            // survives (multi-phase callers keep per-phase reports)
+            trace: if reports.len() == 1 { reports[0].trace.clone() } else { None },
         };
         fn add_per_worker(acc: &mut Vec<u64>, v: &[u64]) {
             if acc.len() < v.len() {
@@ -142,6 +155,7 @@ impl RunReport {
             out.engine.vertex_runs += r.engine.vertex_runs;
             out.engine.rounds += r.engine.rounds;
             out.engine.steals += r.engine.steals;
+            out.engine.fetch_allocs += r.engine.fetch_allocs;
             add_per_worker(&mut out.engine.worker_busy_ns, &r.engine.worker_busy_ns);
             add_per_worker(&mut out.engine.worker_idle_ns, &r.engine.worker_idle_ns);
             out.io.read_requests += r.io.read_requests;
@@ -188,6 +202,14 @@ struct Shared<M> {
     cursors: Vec<AtomicUsize>,
     /// Total chunks in the bitmap.
     nchunks: usize,
+    /// Per-worker phase timings for the round in flight, published
+    /// before the phase-B barrier when tracing (ns triples: phase A,
+    /// phase B, inter-phase barrier).
+    phase_ns: SharedVec<(u64, u64, u64)>,
+    /// The per-round recorder. Only worker 0 touches it — during
+    /// bookkeeping, when every other worker is parked between barriers
+    /// — so the lock is uncontended; `None` when tracing is off.
+    trace: Option<Mutex<RoundTrace>>,
 }
 
 /// Claims frontier chunks: first from this worker's own span, then —
@@ -304,6 +326,9 @@ impl Engine {
             (TransportMode::Auto, Some(c)) => MessagePlane::new_combine(workers, n, c),
             _ => MessagePlane::new_queue(workers, cfg.seg_cap),
         };
+        // snapshot before the trace is built: it is the base of both
+        // the run-level delta and the trace's first per-round delta
+        let io_before = source.io_stats().snapshot();
         let shared = Shared {
             bitmaps: [AtomicBitmap::new(n), AtomicBitmap::new(n)],
             plane,
@@ -319,12 +344,16 @@ impl Engine {
                 .map(|w| AtomicUsize::new(chunk_span(w, workers, nchunks).0))
                 .collect(),
             nchunks,
+            phase_ns: SharedVec::new(workers, (0u64, 0u64, 0u64)),
+            trace: cfg.trace.then(|| Mutex::new(RoundTrace::new(workers, io_before))),
         };
         for &v in init_active {
             shared.bitmaps[0].set(v as usize);
         }
+        if let Some(tr) = &shared.trace {
+            tr.lock().unwrap().set_initial_frontier(shared.bitmaps[0].count() as u64);
+        }
 
-        let io_before = source.io_stats().snapshot();
         let t0 = Instant::now();
         std::thread::scope(|s| {
             for wid in 0..workers {
@@ -339,8 +368,22 @@ impl Engine {
         // engine counters (single-threaded: workers have joined)
         shared.stats.peak_msg_bytes.store(shared.plane.peak_msg_bytes(), Ordering::Relaxed);
         shared.stats.msg_allocs.store(shared.plane.msg_allocs(), Ordering::Relaxed);
-        let io = source.io_stats().snapshot().delta(&io_before);
-        RunReport { rounds: shared.stats.rounds.load(Ordering::Relaxed), wall, engine: shared.stats.snapshot(), io }
+        let io_final = source.io_stats().snapshot();
+        let io = io_final.delta(&io_before);
+        // close the trace against the post-join snapshot so straggler
+        // async I/O lands in the final round's delta (exact-sum invariant)
+        let trace = shared.trace.map(|m| {
+            let mut t = m.into_inner().unwrap();
+            t.finish(io_final);
+            t
+        });
+        RunReport {
+            rounds: shared.stats.rounds.load(Ordering::Relaxed),
+            wall,
+            engine: shared.stats.snapshot(),
+            io,
+            trace,
+        }
     }
 
     fn worker_loop<P: VertexProgram>(
@@ -497,6 +540,18 @@ impl Engine {
             ctx.red_add = [0.0; N_RED_SLOTS];
             ctx.red_max = [f64::NEG_INFINITY; N_RED_SLOTS];
             let t3 = Instant::now();
+            if shared.trace.is_some() {
+                // publish this round's phase timings for worker 0's
+                // trace sample (own-slot write, read after the barrier)
+                shared.phase_ns.set(
+                    wid,
+                    (
+                        phase_a.as_nanos() as u64,
+                        (t3 - t2).as_nanos() as u64,
+                        (t2 - t1).as_nanos() as u64,
+                    ),
+                );
+            }
             shared.barrier.wait();
             let t4 = Instant::now();
 
@@ -542,6 +597,28 @@ impl Engine {
                 // the current parity was fully drained in phase A; zero
                 // its counter so round r+2's senders start clean
                 shared.plane.reset_pending(cur_parity);
+                if let Some(tr) = &shared.trace {
+                    // every worker merged its round-r counters before
+                    // the barrier above, so these cumulative loads are
+                    // exact for rounds 0..=r
+                    let st = &shared.stats;
+                    let eng = EngineCum {
+                        sent: st.p2p_msgs.load(Ordering::Relaxed)
+                            + st.multicast_msgs.load(Ordering::Relaxed),
+                        delivered: st.deliveries.load(Ordering::Relaxed),
+                        combined: st.combined_msgs.load(Ordering::Relaxed),
+                        vertex_runs: st.vertex_runs.load(Ordering::Relaxed),
+                        steals: st.steals.load(Ordering::Relaxed),
+                    };
+                    let io_now = source.io_stats().snapshot();
+                    tr.lock().unwrap().record(
+                        round as u64,
+                        next_active as u64,
+                        eng,
+                        io_now,
+                        (0..workers).map(|w| shared.phase_ns.get(w)),
+                    );
+                }
                 let cancelled =
                     cfg.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed));
                 let done = stop_requested
@@ -570,6 +647,10 @@ impl Engine {
                 break;
             }
         }
+        // fold this worker's fetch-path allocation count into the run
+        // counters (steady-state-zero once the arena is warm; the trace
+        // overhead test pins tracing to not move it)
+        shared.stats.fetch_allocs.fetch_add(arena.allocs(), Ordering::Relaxed);
     }
 }
 

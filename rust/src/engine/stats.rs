@@ -45,6 +45,10 @@ pub struct EngineStats {
     /// at least one active vertex (empty claimed chunks don't count —
     /// they rebalanced no work).
     pub steals: AtomicU64,
+    /// Fetch-path heap allocations, folded from each worker's
+    /// `FetchArena::allocs` at run end. Flat once warm; the trace
+    /// overhead test asserts tracing does not move it.
+    pub fetch_allocs: AtomicU64,
     /// Per-worker time spent working (phases A/B + bookkeeping), ns.
     worker_busy_ns: Vec<AtomicU64>,
     /// Per-worker time spent waiting at barriers, ns.
@@ -96,6 +100,7 @@ impl EngineStats {
             vertex_runs: self.vertex_runs.load(Ordering::Relaxed),
             rounds: self.rounds.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
+            fetch_allocs: self.fetch_allocs.load(Ordering::Relaxed),
             worker_busy_ns: self
                 .worker_busy_ns
                 .iter()
@@ -131,6 +136,9 @@ pub struct EngineStatsSnapshot {
     /// Non-empty frontier chunks executed by a worker other than their
     /// span owner.
     pub steals: u64,
+    /// Fetch-path heap allocations over the run (warm steady state: 0
+    /// per round).
+    pub fetch_allocs: u64,
     /// Per-worker busy time in nanoseconds (empty when untracked).
     pub worker_busy_ns: Vec<u64>,
     /// Per-worker barrier-wait time in nanoseconds.

@@ -1,0 +1,392 @@
+//! Per-round engine traces — the time series behind the paper's
+//! figures.
+//!
+//! A [`RoundTrace`] is a bounded ring buffer of [`RoundSample`]s,
+//! recorded by worker 0 during round bookkeeping (between the
+//! phase-B barrier and the final barrier, when every worker's counters
+//! for the round have been merged and no new I/O is being issued).
+//! Recording is **allocation-free once warm**: every sample slot and
+//! its per-worker phase vector are preallocated at construction, and
+//! `record` only copies plain values into them. Tracing is off by
+//! default (`EngineConfig.trace`); an untraced run pays nothing.
+//!
+//! ## I/O attribution and the telescoping invariant
+//!
+//! Each sample's `io` field is the delta between consecutive round-
+//! boundary snapshots of the run's [`crate::safs::IoStats`], so the
+//! per-round deltas *telescope*: summed, they equal the run-level
+//! snapshot delta exactly. Asynchronous prefetch I/O completing after
+//! the last boundary would break that, so [`RoundTrace::finish`]
+//! (called once after the workers join) recomputes the final sample's
+//! delta against the post-join snapshot. Mid-run prefetch completions
+//! are attributed to the round whose boundary observes them — off by
+//! at most one round, never lost. The invariant holds whenever the
+//! ring did not overflow (`dropped() == 0`); overflow keeps the most
+//! recent [`TRACE_CAP`] rounds and gives up the exact-sum property.
+
+use crate::safs::IoStatsSnapshot;
+use crate::util::Json;
+
+/// Ring capacity in rounds. Most algorithms converge in far fewer;
+/// diameter-style multi-phase runs that exceed it keep the tail.
+pub const TRACE_CAP: usize = 1024;
+
+/// One worker's phase timings for one round, nanoseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerPhases {
+    /// Phase A (message delivery) wall time.
+    pub phase_a_ns: u64,
+    /// Phase B (vertex phase) wall time.
+    pub phase_b_ns: u64,
+    /// Wait at the barrier between the phases.
+    pub barrier_ns: u64,
+}
+
+/// Everything one round did.
+#[derive(Debug, Clone, Default)]
+pub struct RoundSample {
+    /// Round number (0-based).
+    pub round: u64,
+    /// Active vertices entering this round.
+    pub frontier: u64,
+    /// Vertices activated for the next round (post-hook recount).
+    pub activations: u64,
+    /// Send operations this round (p2p + multicast).
+    pub sent: u64,
+    /// `run_on_message` deliveries this round.
+    pub delivered: u64,
+    /// Sends absorbed by combiner folds this round.
+    pub combined: u64,
+    /// `run_on_vertex` invocations this round.
+    pub vertex_runs: u64,
+    /// Productive foreign chunk claims this round.
+    pub steals: u64,
+    /// Per-worker phase timings (length = worker count).
+    pub workers: Vec<WorkerPhases>,
+    /// I/O attributed to this round (boundary-snapshot delta; the
+    /// `latency` field carries cumulative summaries, see module docs).
+    pub io: IoStatsSnapshot,
+}
+
+/// Cumulative engine counters at a round boundary — the recorder
+/// differences consecutive boundaries to get per-round values.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineCum {
+    pub sent: u64,
+    pub delivered: u64,
+    pub combined: u64,
+    pub vertex_runs: u64,
+    pub steals: u64,
+}
+
+/// Bounded per-round trace recorder. See the module docs for the
+/// recording protocol and the telescoping invariant.
+#[derive(Debug, Clone)]
+pub struct RoundTrace {
+    /// Preallocated ring slots (`TRACE_CAP` samples, each with a
+    /// worker-count phase vector).
+    slots: Vec<RoundSample>,
+    /// Total samples ever recorded (ring index = total % capacity).
+    total: u64,
+    /// Frontier size for the *next* round to be recorded.
+    next_frontier: u64,
+    /// Engine counters at the last recorded boundary.
+    last_eng: EngineCum,
+    /// I/O snapshot at the last recorded boundary.
+    last_io: IoStatsSnapshot,
+    /// I/O snapshot at the boundary *before* the last one — what
+    /// `finish` re-differences the final sample against.
+    prev_io: IoStatsSnapshot,
+}
+
+impl RoundTrace {
+    /// Preallocate a trace for `workers` workers. `io_before` is the
+    /// run's starting I/O snapshot (the base of the first delta).
+    pub fn new(workers: usize, io_before: IoStatsSnapshot) -> Self {
+        RoundTrace {
+            slots: (0..TRACE_CAP)
+                .map(|_| RoundSample {
+                    workers: vec![WorkerPhases::default(); workers],
+                    ..Default::default()
+                })
+                .collect(),
+            total: 0,
+            next_frontier: 0,
+            last_eng: EngineCum::default(),
+            last_io: io_before,
+            prev_io: io_before,
+        }
+    }
+
+    /// Set the frontier size of round 0 (the initial activation count).
+    pub fn set_initial_frontier(&mut self, frontier: u64) {
+        self.next_frontier = frontier;
+    }
+
+    /// Record one round. `eng` and `io_now` are *cumulative* at this
+    /// boundary; `activations` is the post-hook recount of the next
+    /// round's frontier; `phases` yields one timing triple
+    /// `(phase_a_ns, phase_b_ns, barrier_ns)` per worker. Allocates
+    /// nothing: the slot and its phase vector are preallocated.
+    pub fn record(
+        &mut self,
+        round: u64,
+        activations: u64,
+        eng: EngineCum,
+        io_now: IoStatsSnapshot,
+        phases: impl Iterator<Item = (u64, u64, u64)>,
+    ) {
+        let cap = self.slots.len();
+        let slot = &mut self.slots[(self.total % cap as u64) as usize];
+        slot.round = round;
+        slot.frontier = self.next_frontier;
+        slot.activations = activations;
+        slot.sent = eng.sent.saturating_sub(self.last_eng.sent);
+        slot.delivered = eng.delivered.saturating_sub(self.last_eng.delivered);
+        slot.combined = eng.combined.saturating_sub(self.last_eng.combined);
+        slot.vertex_runs = eng.vertex_runs.saturating_sub(self.last_eng.vertex_runs);
+        slot.steals = eng.steals.saturating_sub(self.last_eng.steals);
+        slot.io = io_now.delta(&self.last_io);
+        slot.workers.clear();
+        for (a, b, bar) in phases {
+            slot.workers.push(WorkerPhases {
+                phase_a_ns: a,
+                phase_b_ns: b,
+                barrier_ns: bar,
+            });
+        }
+        self.total += 1;
+        self.next_frontier = activations;
+        self.last_eng = eng;
+        self.prev_io = self.last_io;
+        self.last_io = io_now;
+    }
+
+    /// Close the trace against the run's final (post-join) snapshot:
+    /// I/O that completed between the last round boundary and the join
+    /// — asynchronous prefetch inserts, mostly — is folded into the
+    /// final sample so the per-round deltas sum exactly to the
+    /// run-level delta.
+    pub fn finish(&mut self, io_final: IoStatsSnapshot) {
+        if self.total == 0 {
+            return;
+        }
+        let cap = self.slots.len() as u64;
+        let last = &mut self.slots[((self.total - 1) % cap) as usize];
+        last.io = io_final.delta(&self.prev_io);
+        self.last_io = io_final;
+    }
+
+    /// Recorded rounds currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        (self.total).min(self.slots.len() as u64) as usize
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Total rounds ever recorded (including dropped ones).
+    pub fn rounds_recorded(&self) -> u64 {
+        self.total
+    }
+
+    /// Rounds evicted by ring overflow (0 = the exact-sum invariant
+    /// holds).
+    pub fn dropped(&self) -> u64 {
+        self.total.saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Samples oldest-first.
+    pub fn samples(&self) -> impl Iterator<Item = &RoundSample> {
+        let cap = self.slots.len() as u64;
+        let first = self.total.saturating_sub(cap);
+        (first..self.total).map(move |i| &self.slots[(i % cap) as usize])
+    }
+
+    /// Sum of the per-round I/O deltas — equals the run-level delta
+    /// when `dropped() == 0` (the tested invariant).
+    pub fn io_sum(&self) -> IoStatsSnapshot {
+        let mut out = IoStatsSnapshot::default();
+        for s in self.samples() {
+            out.read_requests += s.io.read_requests;
+            out.cache_hits += s.io.cache_hits;
+            out.cache_misses += s.io.cache_misses;
+            out.physical_reads += s.io.physical_reads;
+            out.bytes_read += s.io.bytes_read;
+            out.merged_requests += s.io.merged_requests;
+            out.logical_bytes += s.io.logical_bytes;
+            out.thread_waits += s.io.thread_waits;
+            out.evictions += s.io.evictions;
+        }
+        out.latency = self.last_io.latency;
+        out
+    }
+
+    /// Full trace as JSON (one object per round).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rounds", Json::u(self.rounds_recorded())),
+            ("dropped", Json::u(self.dropped())),
+            (
+                "samples",
+                Json::Arr(self.samples().map(sample_to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Compact summary for bench baselines: round count plus frontier
+    /// and I/O aggregates.
+    pub fn summary_json(&self) -> Json {
+        let peak_frontier = self.samples().map(|s| s.frontier).max().unwrap_or(0);
+        let io = self.io_sum();
+        Json::obj(vec![
+            ("rounds", Json::u(self.rounds_recorded())),
+            ("dropped", Json::u(self.dropped())),
+            ("peak_frontier", Json::u(peak_frontier)),
+            ("bytes_read", Json::u(io.bytes_read)),
+            ("physical_reads", Json::u(io.physical_reads)),
+        ])
+    }
+}
+
+fn sample_to_json(s: &RoundSample) -> Json {
+    Json::obj(vec![
+        ("round", Json::u(s.round)),
+        ("frontier", Json::u(s.frontier)),
+        ("activations", Json::u(s.activations)),
+        ("sent", Json::u(s.sent)),
+        ("delivered", Json::u(s.delivered)),
+        ("combined", Json::u(s.combined)),
+        ("vertex_runs", Json::u(s.vertex_runs)),
+        ("steals", Json::u(s.steals)),
+        (
+            "workers",
+            Json::Arr(
+                s.workers
+                    .iter()
+                    .map(|w| {
+                        Json::Arr(vec![
+                            Json::u(w.phase_a_ns),
+                            Json::u(w.phase_b_ns),
+                            Json::u(w.barrier_ns),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "io",
+            Json::obj(vec![
+                ("bytes_read", Json::u(s.io.bytes_read)),
+                ("physical_reads", Json::u(s.io.physical_reads)),
+                ("read_requests", Json::u(s.io.read_requests)),
+                ("cache_hits", Json::u(s.io.cache_hits)),
+                ("cache_misses", Json::u(s.io.cache_misses)),
+                ("hit_ratio", Json::f(s.io.hit_ratio())),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::safs::IoStats;
+
+    fn io_snap(bytes: u64, preads: u64) -> IoStatsSnapshot {
+        let s = IoStats::new();
+        s.add_bytes_read(bytes);
+        s.add_physical_read(preads);
+        s.snapshot()
+    }
+
+    #[test]
+    fn deltas_telescope_to_the_final_snapshot() {
+        let base = io_snap(100, 1);
+        let mut t = RoundTrace::new(2, base);
+        t.set_initial_frontier(10);
+        t.record(
+            0,
+            4,
+            EngineCum { sent: 5, delivered: 5, ..Default::default() },
+            io_snap(300, 3),
+            [(1, 2, 3), (4, 5, 6)].into_iter(),
+        );
+        t.record(
+            1,
+            0,
+            EngineCum { sent: 9, delivered: 9, ..Default::default() },
+            io_snap(450, 5),
+            [(1, 2, 3), (4, 5, 6)].into_iter(),
+        );
+        // async I/O lands after the last boundary; finish folds it in
+        let fin = io_snap(500, 6);
+        t.finish(fin);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 0);
+        let sum = t.io_sum();
+        let run = fin.delta(&base);
+        assert_eq!(sum.bytes_read, run.bytes_read);
+        assert_eq!(sum.physical_reads, run.physical_reads);
+        // per-round values
+        let rounds: Vec<_> = t.samples().collect();
+        assert_eq!(rounds[0].frontier, 10);
+        assert_eq!(rounds[0].activations, 4);
+        assert_eq!(rounds[1].frontier, 4);
+        assert_eq!(rounds[0].sent, 5);
+        assert_eq!(rounds[1].sent, 4);
+        assert_eq!(rounds[0].io.bytes_read, 200);
+        assert_eq!(rounds[1].io.bytes_read, 200, "finish extends the last round");
+        assert_eq!(rounds[0].workers.len(), 2);
+        assert_eq!(rounds[0].workers[1].phase_b_ns, 5);
+    }
+
+    #[test]
+    fn ring_overflow_keeps_the_tail_and_counts_drops() {
+        let mut t = RoundTrace::new(1, IoStatsSnapshot::default());
+        let rounds = TRACE_CAP as u64 + 10;
+        for r in 0..rounds {
+            t.record(
+                r,
+                1,
+                EngineCum { sent: r + 1, ..Default::default() },
+                IoStatsSnapshot::default(),
+                std::iter::once((0, 0, 0)),
+            );
+        }
+        assert_eq!(t.len(), TRACE_CAP);
+        assert_eq!(t.dropped(), 10);
+        assert_eq!(t.rounds_recorded(), rounds);
+        let first = t.samples().next().unwrap();
+        assert_eq!(first.round, 10, "oldest surviving sample");
+        let last = t.samples().last().unwrap();
+        assert_eq!(last.round, rounds - 1);
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut t = RoundTrace::new(1, IoStatsSnapshot::default());
+        t.set_initial_frontier(3);
+        t.record(
+            0,
+            0,
+            EngineCum::default(),
+            io_snap(64, 1),
+            std::iter::once((10, 20, 30)),
+        );
+        let j = t.to_json();
+        assert_eq!(j.get("rounds").unwrap().as_u64(), Some(1));
+        let s0 = &j.get("samples").unwrap().as_array().unwrap()[0];
+        assert_eq!(s0.get("frontier").unwrap().as_u64(), Some(3));
+        assert_eq!(
+            s0.get("io").unwrap().get("bytes_read").unwrap().as_u64(),
+            Some(64)
+        );
+        // roundtrips through the encoder
+        assert!(Json::parse(&j.encode()).is_ok());
+        let sum = t.summary_json();
+        assert_eq!(sum.get("peak_frontier").unwrap().as_u64(), Some(3));
+    }
+}

@@ -11,6 +11,8 @@
 //! * `serve`    — run the multi-tenant job service (JSON-lines TCP).
 //! * `submit`   — submit a job to a running service.
 //! * `status`   — query a running service (one job or the whole table).
+//! * `metrics`  — dump the unified metrics registry from a running
+//!   service (JSON by default, Prometheus text with `--text`).
 //!
 //! Arguments are `--key value` pairs (clap is unavailable offline; the
 //! parser below is deliberately minimal).
@@ -22,7 +24,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use graphyti::algs::degree::degree_stats;
-use graphyti::coordinator::{open_graph, run_alg, AlgSpec, GraphMode, RunConfig, Table};
+use graphyti::coordinator::{open_graph, run_alg, AlgSpec, GraphMode, RunConfig, Table, TraceMode};
+use graphyti::engine::RoundTrace;
 use graphyti::graph::builder::GraphBuilder;
 use graphyti::graph::csr::Csr;
 use graphyti::graph::format::GraphIndex;
@@ -43,7 +46,7 @@ USAGE:
   graphyti info     --graph PATH
   graphyti run ALG  --graph PATH [--mem] [--variant V] [--num N]
                     [--cache-mb N] [--io-threads N] [--io-delay-us N]
-                    [--workers N] [--config FILE]
+                    [--workers N] [--config FILE] [--trace off|table|json]
   graphyti verify   --graph PATH [--iters N]
   graphyti serve    [--port P] [--cache-mb N] [--budget-mb N]
                     [--exec-threads N] [--io-threads N] [--io-delay-us N]
@@ -51,6 +54,7 @@ USAGE:
   graphyti submit ALG --graph PATH [--addr HOST:PORT] [--variant V]
                     [--num N] [--priority 0-9] [--wait] [--timeout-ms N]
   graphyti status   [--addr HOST:PORT] [--job ID]
+  graphyti metrics  [--addr HOST:PORT] [--text]
 
 ALG: pagerank (push|pull), coreness (graphyti|pruned|unopt),
      diameter (multi|uni), bc (async|sync|uni), triangles
@@ -63,7 +67,12 @@ rewrites v1 images as v2 (the default target) and back.
 
 Service mode: `serve` multiplexes concurrent jobs over one shared page
 cache + I/O pool, with an admission budget on summed per-job O(n) state.
-`submit`/`status` speak its JSON-lines TCP protocol.
+`submit`/`status`/`metrics` speak its JSON-lines TCP protocol.
+
+Observability: `--trace table` prints a per-round table (frontier,
+messages, per-phase time, exact per-round I/O deltas); `--trace json`
+emits the same trace as one JSON line. `metrics --text` produces a
+Prometheus-style exposition for scraping.
 ";
 
 /// Parse a `--format` value ("v1"/"1"/"v2"/"2") into a version number.
@@ -130,7 +139,9 @@ fn build_config(args: &Args) -> graphyti::Result<RunConfig> {
         Some(p) => RunConfig::load(&PathBuf::from(p))?,
         None => RunConfig::default(),
     };
-    for key in ["cache-mb", "io-threads", "io-delay-us", "workers", "batch", "seed", "transport"] {
+    for key in
+        ["cache-mb", "io-threads", "io-delay-us", "workers", "batch", "seed", "transport", "trace"]
+    {
         if let Some(v) = args.get(key) {
             cfg.set(&key.replace('-', "_").replace("cache_mb", "cache_mb"), v)?;
         }
@@ -252,8 +263,48 @@ fn cmd_run(args: &Args) -> graphyti::Result<()> {
     println!("mode={mode:?} wall={}", graphyti::util::fmt_dur(wall));
     if let Some(r) = out.report {
         println!("{}", r.report());
+        if let Some(tr) = &r.trace {
+            match cfg.trace {
+                TraceMode::Table => print_trace_table(tr),
+                TraceMode::Json => println!("{}", tr.to_json().encode()),
+                TraceMode::Off => {}
+            }
+        }
     }
     Ok(())
+}
+
+/// Render a recorded trace as one row per round. Phase columns are the
+/// slowest worker's time (the critical path for that phase).
+fn print_trace_table(tr: &RoundTrace) {
+    let ms = |ns: u64| format!("{:.2}", ns as f64 / 1e6);
+    let mut t = Table::new(&[
+        "round", "frontier", "activ", "sent", "comb", "steals", "phA ms", "phB ms", "bar ms",
+        "disk", "preads", "hit%",
+    ]);
+    for s in tr.samples() {
+        let pa = s.workers.iter().map(|w| w.phase_a_ns).max().unwrap_or(0);
+        let pb = s.workers.iter().map(|w| w.phase_b_ns).max().unwrap_or(0);
+        let bar = s.workers.iter().map(|w| w.barrier_ns).max().unwrap_or(0);
+        t.row(&[
+            s.round.to_string(),
+            s.frontier.to_string(),
+            s.activations.to_string(),
+            s.sent.to_string(),
+            s.combined.to_string(),
+            s.steals.to_string(),
+            ms(pa),
+            ms(pb),
+            ms(bar),
+            fmt_bytes(s.io.bytes_read),
+            s.io.physical_reads.to_string(),
+            format!("{:.1}", s.io.hit_ratio() * 100.0),
+        ]);
+    }
+    t.print();
+    if tr.dropped() > 0 {
+        println!("(trace ring overflowed: {} oldest rounds dropped)", tr.dropped());
+    }
 }
 
 fn cmd_verify(args: &Args) -> graphyti::Result<()> {
@@ -321,7 +372,9 @@ fn cmd_serve(args: &Args) -> graphyti::Result<()> {
         fmt_bytes(cfg.budget_bytes),
         cfg.exec_threads.max(1),
     );
-    println!("protocol: one JSON object per line; ops: submit status wait list cancel stats shutdown");
+    println!(
+        "protocol: one JSON object per line; ops: submit status wait list cancel stats metrics shutdown"
+    );
     server.wait();
     println!("service stopped");
     Ok(())
@@ -427,7 +480,10 @@ fn cmd_status(args: &Args) -> graphyti::Result<()> {
     let resp = call(&addr, &Json::obj(vec![("op", Json::s("list"))]), Duration::from_secs(30))?;
     check_ok(&resp)?;
     let jobs = resp.get("jobs").and_then(Json::as_array).unwrap_or(&[]);
-    let mut t = Table::new(&["job", "state", "prio", "alg", "wall", "reads", "disk", "summary"]);
+    let mut t = Table::new(&[
+        "job", "state", "prio", "alg", "wall", "reads", "disk", "steals", "busy", "p99 fetch",
+        "peak msg", "summary",
+    ]);
     for job in jobs {
         t.row(&[
             job_field_u64(job, "job").to_string(),
@@ -444,6 +500,14 @@ fn cmd_status(args: &Args) -> graphyti::Result<()> {
             format!("{:.1} ms", job.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0)),
             job.get("io").map_or(0, |io| job_field_u64(io, "read_requests")).to_string(),
             fmt_bytes(job.get("io").map_or(0, |io| job_field_u64(io, "bytes_read"))),
+            job_field_u64(job, "steals").to_string(),
+            // null busy_ratio means "unbounded imbalance" (a worker did 0)
+            match job.get("busy_ratio").and_then(Json::as_f64) {
+                Some(b) => format!("{b:.2}"),
+                None => "-".to_string(),
+            },
+            format!("{} us", job_field_u64(job, "p99_fetch_us")),
+            fmt_bytes(job_field_u64(job, "peak_msg_bytes")),
             job.get("summary")
                 .and_then(Json::as_str)
                 .or_else(|| job.get("error").and_then(Json::as_str))
@@ -468,6 +532,29 @@ fn cmd_status(args: &Args) -> graphyti::Result<()> {
     Ok(())
 }
 
+fn cmd_metrics(args: &Args) -> graphyti::Result<()> {
+    let addr = default_addr(args);
+    let mut fields = vec![("op", Json::s("metrics"))];
+    if args.has("text") {
+        fields.push(("format", Json::s("text")));
+    }
+    let resp = call(&addr, &Json::obj(fields), Duration::from_secs(30))?;
+    check_ok(&resp)?;
+    if args.has("text") {
+        let text = resp
+            .get("text")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("malformed response: {}", resp.encode()))?;
+        print!("{text}");
+    } else {
+        let m = resp
+            .get("metrics")
+            .ok_or_else(|| anyhow::anyhow!("malformed response: {}", resp.encode()))?;
+        println!("{}", m.encode());
+    }
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
@@ -484,6 +571,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
+        "metrics" => cmd_metrics(&args),
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");
             return ExitCode::FAILURE;

@@ -214,6 +214,7 @@ impl SemFile {
         out: &mut Vec<RangeBuf>,
     ) -> crate::Result<()> {
         scratch.recycle(out);
+        let fetch_t0 = std::time::Instant::now();
         self.stats.add_read_request(ranges.len() as u64);
         if let Some(j) = job {
             j.add_read_request(ranges.len() as u64);
@@ -271,11 +272,13 @@ impl SemFile {
                 });
             }
             drop(tx);
-            // block for completions — counted as a thread wait
+            // block for completions — counted as a thread wait; the
+            // wait-latency histogram times the whole completion drain
             self.stats.add_thread_wait(1);
             if let Some(j) = job {
                 j.add_thread_wait(1);
             }
+            let wait_t0 = std::time::Instant::now();
             for _ in 0..nruns {
                 let reply = rx.recv().context("io pool reply channel closed")?;
                 if let Some(j) = job {
@@ -292,6 +295,11 @@ impl SemFile {
                     self.cache.insert(self.key_base + p, view.clone());
                     have.push((p, view));
                 }
+            }
+            let wait_us = wait_t0.elapsed().as_micros() as u64;
+            self.stats.wait_latency_us.record(wait_us);
+            if let Some(j) = job {
+                j.wait_latency_us.record(wait_us);
             }
         }
         have.sort_unstable_by_key(|&(p, _)| p);
@@ -336,6 +344,11 @@ impl SemFile {
         // drop the batch's page refs so evicted pages' run buffers can
         // free between batches
         have.clear();
+        let fetch_us = fetch_t0.elapsed().as_micros() as u64;
+        self.stats.fetch_latency_us.record(fetch_us);
+        if let Some(j) = job {
+            j.fetch_latency_us.record(fetch_us);
+        }
         Ok(())
     }
 

@@ -165,6 +165,7 @@ impl IoPool {
         let avail = (req.file_len.saturating_sub(offset) as usize).min(want);
         let mut done = 0;
         if avail > 0 {
+            let t0 = std::time::Instant::now();
             let dst = Arc::get_mut(&mut buf).expect("fresh run buffer is uniquely owned");
             while done < avail {
                 match req.file.read_at(&mut dst[done..avail], offset + done as u64) {
@@ -180,6 +181,10 @@ impl IoPool {
             }
             stats.add_physical_read(1);
             stats.add_bytes_read(done as u64);
+            // latency includes the injected delay so figure runs show
+            // the emulated SSD cost; EOF-only runs record nothing
+            stats.pread_latency_us.record(t0.elapsed().as_micros() as u64);
+            stats.run_pages.record(req.npages as u64);
         }
         RunReply {
             start_page: req.start_page,
@@ -273,6 +278,9 @@ mod tests {
         // stats count the bytes the disk produced, not the padded run
         assert_eq!(s.bytes_read, data.len() as u64);
         assert_eq!(reply.bytes_read, data.len() as u64);
+        assert_eq!(s.latency.pread.count, 1, "one pread, one latency sample");
+        assert_eq!(s.latency.run_pages.count, 1);
+        assert!(s.latency.run_pages.p50 >= 2, "2-page run: {:?}", s.latency.run_pages);
         drop(pool);
         let _ = std::fs::remove_file(path);
     }
@@ -305,6 +313,7 @@ mod tests {
         let s = stats.snapshot();
         assert_eq!(s.physical_reads, 0, "no pread happened: {s:?}");
         assert_eq!(s.bytes_read, 0, "no bytes moved: {s:?}");
+        assert_eq!(s.latency.pread.count, 0, "EOF-only runs record no latency");
         drop(pool);
         let _ = std::fs::remove_file(path);
     }

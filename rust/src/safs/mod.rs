@@ -29,4 +29,4 @@ pub mod stats;
 pub use file::{RangeBuf, RangeScratch, SemFile};
 pub use io::{IoConfig, IoPool};
 pub use page_cache::{PageCache, PageRef, PAGE_SIZE};
-pub use stats::{IoStats, IoStatsSnapshot};
+pub use stats::{IoLatency, IoStats, IoStatsSnapshot};

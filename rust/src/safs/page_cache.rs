@@ -234,6 +234,12 @@ impl PageCache {
         self.resident_pages() * PAGE_SIZE as u64
     }
 
+    /// Fraction of frame capacity in use, in [0, 1] — the metrics
+    /// export's cache fill gauge.
+    pub fn occupancy(&self) -> f64 {
+        self.resident_pages() as f64 / self.capacity_pages as f64
+    }
+
     /// Shared stats handle.
     pub fn stats(&self) -> &Arc<IoStats> {
         &self.stats

@@ -7,6 +7,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::util::hist::{HistSummary, Histogram};
+
 /// Global, concurrently-updated I/O counters.
 #[derive(Debug, Default)]
 pub struct IoStats {
@@ -30,6 +32,17 @@ pub struct IoStats {
     pub thread_waits: AtomicU64,
     /// Pages evicted from the cache.
     pub evictions: AtomicU64,
+    /// Per-batch edge-fetch latency (`SemFile::read_ranges_into`), in
+    /// microseconds — the caller-visible end-to-end cost of one fetch.
+    pub fetch_latency_us: Histogram,
+    /// Time a caller thread spent blocked on I/O completions, in
+    /// microseconds (recorded alongside `thread_waits`).
+    pub wait_latency_us: Histogram,
+    /// Per-`pread` service latency inside the I/O pool, in microseconds
+    /// (includes the injected `io_delay_us`, so figure runs show it).
+    pub pread_latency_us: Histogram,
+    /// Coalesced run sizes in pages — how well adjacent requests merge.
+    pub run_pages: Histogram,
 }
 
 impl IoStats {
@@ -75,7 +88,7 @@ impl IoStats {
         self.evictions.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Point-in-time copy of all counters.
+    /// Point-in-time copy of all counters (histograms summarized).
     pub fn snapshot(&self) -> IoStatsSnapshot {
         IoStatsSnapshot {
             read_requests: self.read_requests.load(Ordering::Relaxed),
@@ -87,6 +100,12 @@ impl IoStats {
             logical_bytes: self.logical_bytes.load(Ordering::Relaxed),
             thread_waits: self.thread_waits.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            latency: IoLatency {
+                fetch: self.fetch_latency_us.summary(),
+                wait: self.wait_latency_us.summary(),
+                pread: self.pread_latency_us.summary(),
+                run_pages: self.run_pages.summary(),
+            },
         }
     }
 
@@ -101,7 +120,25 @@ impl IoStats {
         self.logical_bytes.store(0, Ordering::Relaxed);
         self.thread_waits.store(0, Ordering::Relaxed);
         self.evictions.store(0, Ordering::Relaxed);
+        self.fetch_latency_us.reset();
+        self.wait_latency_us.reset();
+        self.pread_latency_us.reset();
+        self.run_pages.reset();
     }
+}
+
+/// Summaries of the four hot-path histograms at snapshot time. All
+/// fields are integer summaries so the snapshot stays `Copy + Eq`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoLatency {
+    /// End-to-end edge-fetch batch latency (us).
+    pub fetch: HistSummary,
+    /// Time blocked behind I/O completions (us).
+    pub wait: HistSummary,
+    /// Per-`pread` service latency in the pool (us).
+    pub pread: HistSummary,
+    /// Coalesced run sizes (pages).
+    pub run_pages: HistSummary,
 }
 
 /// Immutable copy of [`IoStats`] at a point in time.
@@ -116,21 +153,29 @@ pub struct IoStatsSnapshot {
     pub logical_bytes: u64,
     pub thread_waits: u64,
     pub evictions: u64,
+    /// Histogram summaries (cumulative at snapshot time; see `delta`).
+    pub latency: IoLatency,
 }
 
 impl IoStatsSnapshot {
-    /// Component-wise `self - earlier` (counters are monotonic).
+    /// Component-wise saturating `self - earlier`. Counters are
+    /// monotonic, so underflow only happens when a reset raced the
+    /// earlier snapshot — in that case the delta reports zeros instead
+    /// of panicking in debug builds. Latency distributions do not
+    /// difference meaningfully; the delta carries `self`'s (later)
+    /// cumulative summaries unchanged.
     pub fn delta(&self, earlier: &IoStatsSnapshot) -> IoStatsSnapshot {
         IoStatsSnapshot {
-            read_requests: self.read_requests - earlier.read_requests,
-            cache_hits: self.cache_hits - earlier.cache_hits,
-            cache_misses: self.cache_misses - earlier.cache_misses,
-            physical_reads: self.physical_reads - earlier.physical_reads,
-            bytes_read: self.bytes_read - earlier.bytes_read,
-            merged_requests: self.merged_requests - earlier.merged_requests,
-            logical_bytes: self.logical_bytes - earlier.logical_bytes,
-            thread_waits: self.thread_waits - earlier.thread_waits,
-            evictions: self.evictions - earlier.evictions,
+            read_requests: self.read_requests.saturating_sub(earlier.read_requests),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(earlier.cache_misses),
+            physical_reads: self.physical_reads.saturating_sub(earlier.physical_reads),
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            merged_requests: self.merged_requests.saturating_sub(earlier.merged_requests),
+            logical_bytes: self.logical_bytes.saturating_sub(earlier.logical_bytes),
+            thread_waits: self.thread_waits.saturating_sub(earlier.thread_waits),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            latency: self.latency,
         }
     }
 
@@ -144,9 +189,9 @@ impl IoStatsSnapshot {
         }
     }
 
-    /// Terse single-line report.
+    /// Terse single-line report (fetch latency appended when present).
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "reqs={} hits={} misses={} hit%={:.1} preads={} bytes={} merged={} waits={}",
             self.read_requests,
             self.cache_hits,
@@ -156,7 +201,20 @@ impl IoStatsSnapshot {
             crate::util::fmt_bytes(self.bytes_read),
             self.merged_requests,
             self.thread_waits,
-        )
+        );
+        if self.latency.fetch.count > 0 {
+            s.push_str(&format!(
+                " fetch_us[p50={} p99={} mean={}]",
+                self.latency.fetch.p50, self.latency.fetch.p99, self.latency.fetch.mean,
+            ));
+        }
+        if self.latency.pread.count > 0 {
+            s.push_str(&format!(
+                " pread_us[p50={} p99={}]",
+                self.latency.pread.p50, self.latency.pread.p99,
+            ));
+        }
+        s
     }
 }
 
@@ -195,7 +253,43 @@ mod tests {
         let s = IoStats::new();
         s.add_eviction(2);
         s.add_thread_wait(9);
+        s.fetch_latency_us.record(120);
         s.reset();
         assert_eq!(s.snapshot(), IoStatsSnapshot::default());
+    }
+
+    #[test]
+    fn delta_saturates_after_reset_race() {
+        // a reset between the two snapshots makes `later < earlier`;
+        // the delta must report zeros, not underflow
+        let s = IoStats::new();
+        s.add_bytes_read(1000);
+        s.add_read_request(10);
+        let earlier = s.snapshot();
+        s.reset();
+        s.add_bytes_read(5);
+        let later = s.snapshot();
+        let d = later.delta(&earlier);
+        assert_eq!(d.bytes_read, 0);
+        assert_eq!(d.read_requests, 0);
+    }
+
+    #[test]
+    fn snapshot_embeds_latency_summaries() {
+        let s = IoStats::new();
+        s.fetch_latency_us.record(100);
+        s.fetch_latency_us.record(200);
+        s.pread_latency_us.record(50);
+        s.run_pages.record(8);
+        let snap = s.snapshot();
+        assert_eq!(snap.latency.fetch.count, 2);
+        assert_eq!(snap.latency.fetch.mean, 150);
+        assert_eq!(snap.latency.pread.count, 1);
+        assert_eq!(snap.latency.run_pages.count, 1);
+        let r = snap.report();
+        assert!(r.contains("fetch_us["), "report should show latency: {r}");
+        // delta carries the later snapshot's cumulative summaries
+        let d = snap.delta(&IoStatsSnapshot::default());
+        assert_eq!(d.latency, snap.latency);
     }
 }

@@ -163,6 +163,9 @@ pub struct JobStatus {
     /// This job's own I/O, disjointly attributed via its private
     /// [`crate::safs::IoStats`] (snapshot delta over the run).
     pub io: IoStatsSnapshot,
+    /// Full engine counters for the run (zeroed until it finishes) —
+    /// the source the metrics export enumerates per job.
+    pub engine: crate::engine::stats::EngineStatsSnapshot,
     /// Monotonic completion order (1-based; 0 = not finished). Lets
     /// callers audit scheduling order without wall-clock comparisons.
     pub finish_seq: u64,
@@ -302,6 +305,7 @@ impl GraphService {
             peak_msg_bytes: 0,
             wall: Duration::ZERO,
             io: IoStatsSnapshot::default(),
+            engine: Default::default(),
             finish_seq: 0,
         };
         if rejected {
@@ -408,6 +412,88 @@ impl GraphService {
     /// Substrate-wide I/O counters (all jobs, all graphs).
     pub fn substrate_stats(&self) -> IoStatsSnapshot {
         self.registry.stats().snapshot()
+    }
+
+    /// Enumerate the whole service — SAFS substrate, cache, admission,
+    /// scheduler and per-job engine counters — into one
+    /// [`MetricsRegistry`], the source for both the `{"op":"metrics"}`
+    /// protocol op (JSON) and the Prometheus-style text dump.
+    pub fn metrics(&self) -> crate::util::MetricsRegistry {
+        let mut m = crate::util::MetricsRegistry::new();
+
+        // SAFS substrate: every counter + the four hot-path histograms
+        let io = self.substrate_stats();
+        m.counter("io_read_requests", io.read_requests);
+        m.counter("io_logical_bytes", io.logical_bytes);
+        m.counter("io_bytes_read", io.bytes_read);
+        m.counter("io_physical_reads", io.physical_reads);
+        m.counter("io_cache_hits", io.cache_hits);
+        m.counter("io_cache_misses", io.cache_misses);
+        m.counter("io_merged_requests", io.merged_requests);
+        m.counter("io_thread_waits", io.thread_waits);
+        m.counter("io_evictions", io.evictions);
+        m.hist("io_fetch_latency_us", io.latency.fetch);
+        m.hist("io_wait_latency_us", io.latency.wait);
+        m.hist("io_pread_latency_us", io.latency.pread);
+        m.hist("io_run_pages", io.latency.run_pages);
+
+        // cache + admission + registry
+        let cache = self.registry.cache();
+        m.gauge("cache_occupancy", cache.occupancy());
+        m.gauge("cache_resident_pages", cache.resident_pages() as f64);
+        m.gauge("cache_capacity_pages", cache.capacity_pages() as f64);
+        m.gauge("admission_budget_bytes", self.admission.budget() as f64);
+        m.gauge("admission_in_use_bytes", self.admission.in_use() as f64);
+        m.gauge("admission_peak_bytes", self.admission.peak() as f64);
+        m.gauge("graphs_open", self.registry.num_graphs() as f64);
+        m.gauge("resident_index_bytes", self.registry.resident_index_bytes() as f64);
+
+        // scheduler
+        let counts = self.job_counts();
+        m.gauge("jobs_queued", counts.queued as f64);
+        m.gauge("jobs_running", counts.running as f64);
+        m.counter("jobs_done", counts.done as u64);
+        m.counter("jobs_failed", counts.failed as u64);
+        m.counter("jobs_cancelled", counts.cancelled as u64);
+        m.counter("jobs_rejected", counts.rejected as u64);
+
+        // engine counters: service-wide aggregates over every job that
+        // ran, then a labeled per-job breakdown
+        let jobs = self.list();
+        let mut agg = crate::engine::stats::EngineStatsSnapshot::default();
+        for st in &jobs {
+            agg.p2p_msgs += st.engine.p2p_msgs;
+            agg.multicast_msgs += st.engine.multicast_msgs;
+            agg.deliveries += st.engine.deliveries;
+            agg.combined_msgs += st.engine.combined_msgs;
+            agg.peak_msg_bytes = agg.peak_msg_bytes.max(st.engine.peak_msg_bytes);
+            agg.msg_allocs += st.engine.msg_allocs;
+            agg.phase_a_ns += st.engine.phase_a_ns;
+            agg.vertex_runs += st.engine.vertex_runs;
+            agg.rounds += st.engine.rounds;
+            agg.steals += st.engine.steals;
+            agg.fetch_allocs += st.engine.fetch_allocs;
+        }
+        m.counter("engine_p2p_msgs", agg.p2p_msgs);
+        m.counter("engine_multicast_msgs", agg.multicast_msgs);
+        m.counter("engine_deliveries", agg.deliveries);
+        m.counter("engine_combined_msgs", agg.combined_msgs);
+        m.gauge("engine_peak_msg_bytes", agg.peak_msg_bytes as f64);
+        m.counter("engine_msg_allocs", agg.msg_allocs);
+        m.counter("engine_phase_a_ns", agg.phase_a_ns);
+        m.counter("engine_vertex_runs", agg.vertex_runs);
+        m.counter("engine_rounds", agg.rounds);
+        m.counter("engine_steals", agg.steals);
+        m.counter("engine_fetch_allocs", agg.fetch_allocs);
+        for st in &jobs {
+            let labels = format!("{{job=\"{}\",alg=\"{}\"}}", st.id, st.alg);
+            m.counter(format!("job_rounds{labels}"), st.rounds);
+            m.counter(format!("job_steals{labels}"), st.steals);
+            m.counter(format!("job_bytes_read{labels}"), st.io.bytes_read);
+            m.gauge(format!("job_busy_ratio{labels}"), st.busy_ratio);
+            m.hist(format!("job_fetch_latency_us{labels}"), st.io.latency.fetch);
+        }
+        m
     }
 
     /// The admission controller (budget/in-use/peak introspection).
@@ -530,6 +616,7 @@ impl GraphService {
                             j.status.busy_ratio = r.engine.busy_ratio();
                             j.status.combined_msgs = r.engine.combined_msgs;
                             j.status.peak_msg_bytes = r.engine.peak_msg_bytes;
+                            j.status.engine = r.engine.clone();
                         }
                         j.status.io = io;
                         j.status.summary = Some(summary);

@@ -220,8 +220,14 @@ mod tests {
         owned_job.fetch_batch(&reqs).unwrap();
         let mut arena = FetchArena::new();
         arena_job.fetch_batch_into(&reqs, &mut arena).unwrap();
-        let a = owned_job.job_stats().snapshot();
-        let b = arena_job.job_stats().snapshot();
+        let mut a = owned_job.job_stats().snapshot();
+        let mut b = arena_job.job_stats().snapshot();
+        // wall-clock latency summaries legitimately differ between the
+        // two jobs; the attribution contract is about the counters
+        assert_eq!(a.latency.fetch.count, 1);
+        assert_eq!(b.latency.fetch.count, 1);
+        a.latency = Default::default();
+        b.latency = Default::default();
         assert_eq!(a, b, "arena path must attribute exactly like the owned path");
         assert_eq!(a.read_requests, 256);
         assert!(a.cache_hits > 0 && a.cache_misses == 0, "warm run: {a:?}");

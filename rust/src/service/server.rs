@@ -210,6 +210,15 @@ fn dispatch_inner(svc: &Arc<GraphService>, line: &str) -> crate::Result<(Json, b
                 false,
             )
         }
+        "metrics" => {
+            let m = svc.metrics();
+            match req.get("format").and_then(Json::as_str) {
+                // Prometheus-style exposition, shipped as one JSON
+                // string field (the transport stays JSON-lines)
+                Some("text") => (ok_obj(vec![("text", Json::s(m.to_prometheus("graphyti")))]), false),
+                _ => (ok_obj(vec![("metrics", m.to_json())]), false),
+            }
+        }
         "shutdown" => (ok_obj(vec![]), true),
         other => (err_obj(&format!("unknown op '{other}'")), false),
     })

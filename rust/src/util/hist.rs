@@ -9,6 +9,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Concurrent histogram with power-of-two buckets: bucket `i` counts
 /// values in `[2^i, 2^(i+1))` (bucket 0 counts 0 and 1).
+#[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     sum: AtomicU64,
@@ -55,7 +56,10 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile (bucket upper bound containing quantile `q`).
+    /// Approximate quantile (exact upper bound of the bucket containing
+    /// quantile `q`). Bucket 0 spans [0, 2) so its bound is 1; bucket
+    /// `i` in 1..63 spans [2^i, 2^(i+1)) so its bound is 2^(i+1) - 1;
+    /// bucket 63 spans [2^63, u64::MAX] so its bound is u64::MAX.
     pub fn quantile(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -66,10 +70,45 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                return 1u64 << (i + 1).min(63);
+                return Self::bucket_bound(i);
             }
         }
         u64::MAX
+    }
+
+    /// Largest value bucket `i` can hold.
+    #[inline]
+    fn bucket_bound(i: usize) -> u64 {
+        if i == 0 {
+            1
+        } else if i >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << (i + 1)) - 1
+        }
+    }
+
+    /// Integer summary of the distribution: count, mean, p50, p99.
+    pub fn summary(&self) -> HistSummary {
+        let c = self.count();
+        HistSummary {
+            count: c,
+            mean: if c == 0 { 0 } else { self.sum.load(Ordering::Relaxed) / c },
+            p50: self.quantile(0.5),
+            p99: self.quantile(0.99),
+        }
+    }
+
+    /// Copy another histogram's buckets into this one (additive).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     /// Reset all counters.
@@ -80,6 +119,22 @@ impl Histogram {
         self.sum.store(0, Ordering::Relaxed);
         self.count.store(0, Ordering::Relaxed);
     }
+}
+
+/// Integer snapshot of a [`Histogram`]'s shape. All fields are plain
+/// `u64` so the type is `Copy + Eq` and can embed in snapshot structs
+/// that are compared for equality (`mean` is the truncated integer
+/// mean; quantiles are bucket upper bounds).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    /// Number of recorded values.
+    pub count: u64,
+    /// Integer mean of recorded values (0 when empty).
+    pub mean: u64,
+    /// Median (upper bound of the bucket holding the 50th percentile).
+    pub p50: u64,
+    /// 99th percentile (bucket upper bound).
+    pub p99: u64,
 }
 
 #[cfg(test)]
@@ -104,6 +159,66 @@ mod tests {
         }
         assert!(h.quantile(0.1) <= h.quantile(0.5));
         assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn quantile_bucket_bounds_are_exact() {
+        // all-zero histogram: bucket 0 spans [0,2), bound must be 1
+        let h = Histogram::new();
+        for _ in 0..10 {
+            h.record(0);
+        }
+        assert_eq!(h.quantile(0.5), 1, "bucket 0 upper bound is 1, not 2");
+
+        // all-ones: still bucket 0
+        let h = Histogram::new();
+        h.record(1);
+        assert_eq!(h.quantile(1.0), 1);
+
+        // values in [2^10, 2^11) report 2^11 - 1, never a power of two
+        let h = Histogram::new();
+        h.record(1024);
+        h.record(2047);
+        assert_eq!(h.quantile(1.0), 2047);
+    }
+
+    #[test]
+    fn quantile_top_bucket_reports_u64_max() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(1u64 << 63);
+        assert_eq!(h.quantile(0.5), u64::MAX);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        // a value just below 2^63 lands in bucket 62: bound 2^63 - 1
+        let h = Histogram::new();
+        h.record((1u64 << 63) - 1);
+        assert_eq!(h.quantile(1.0), (1u64 << 63) - 1);
+    }
+
+    #[test]
+    fn summary_reports_integer_stats() {
+        let h = Histogram::new();
+        assert_eq!(h.summary(), HistSummary::default());
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean, 25);
+        assert!(s.p50 <= s.p99);
+        assert!(s.p99 >= 40 && s.p99 < 64, "p99 bucket bound: {}", s.p99);
+    }
+
+    #[test]
+    fn merge_from_adds_counts() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(5);
+        b.record(500);
+        b.record(7);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.mean() - (512.0 / 3.0)).abs() < 1e-9);
     }
 
     #[test]

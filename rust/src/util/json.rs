@@ -1,0 +1,474 @@
+//! Minimal JSON value type with a recursive-descent parser and encoder.
+//!
+//! No serde in the offline image, so this module carries a small JSON
+//! implementation — enough for the service wire protocol, the metrics
+//! export and the machine-readable bench baselines. It lives in `util`
+//! (rather than `service::protocol`, where it started) so the
+//! coordinator and benchkit can emit JSON without depending on the
+//! service layer.
+
+use anyhow::{bail, ensure};
+
+/// A JSON value. Objects preserve insertion order (no map semantics
+/// needed at this scale).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Shorthand: string value.
+    pub fn s(v: impl Into<String>) -> Json {
+        Json::Str(v.into())
+    }
+
+    /// Shorthand: unsigned number (callers stay well under 2^53).
+    pub fn u(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Shorthand: float number.
+    pub fn f(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    /// Shorthand: boolean.
+    pub fn b(v: bool) -> Json {
+        Json::Bool(v)
+    }
+
+    /// Shorthand: object from (key, value) pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String accessor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Float accessor.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Unsigned accessor (rejects negatives and fractions).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Bool accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array accessor.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Parse a complete JSON document (trailing whitespace allowed).
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+        Ok(v)
+    }
+
+    /// Encode to a single-line JSON string.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode with two-space indentation — for files meant to be
+    /// diffed and read by humans (bench baselines, metrics dumps).
+    pub fn encode_pretty(&self) -> String {
+        let mut out = String::new();
+        self.encode_pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn encode_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => encode_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.encode_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    encode_string(k, out);
+                    out.push(':');
+                    v.encode_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn encode_pretty_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(depth + 1));
+                    v.encode_pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push(']');
+            }
+            Json::Obj(pairs) if !pairs.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(depth + 1));
+                    encode_string(k, out);
+                    out.push_str(": ");
+                    v.encode_pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push('}');
+            }
+            other => other.encode_into(out),
+        }
+    }
+}
+
+fn encode_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> crate::Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", b as char, self.pos);
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> crate::Result<Json> {
+        ensure!(
+            self.bytes[self.pos..].starts_with(lit.as_bytes()),
+            "invalid literal at byte {}",
+            self.pos
+        );
+        self.pos += lit.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("unexpected '{}' at byte {}", c as char, self.pos),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn number(&mut self) -> crate::Result<Json> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        match text.parse::<f64>() {
+            Ok(x) => Ok(Json::Num(x)),
+            Err(_) => bail!("bad number '{text}' at byte {start}"),
+        }
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else { bail!("unterminated string") };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else { bail!("dangling escape") };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                ensure!(
+                                    (0xDC00..0xE000).contains(&lo),
+                                    "bad low surrogate"
+                                );
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            match char::from_u32(code) {
+                                Some(ch) => out.push(ch),
+                                None => bail!("invalid \\u escape {code:#x}"),
+                            }
+                        }
+                        other => bail!("bad escape '\\{}'", other as char),
+                    }
+                }
+                c if c < 0x20 => bail!("raw control byte in string"),
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // multi-byte UTF-8: width from the lead byte, then
+                    // validate just that scalar (not the whole rest of
+                    // the input, which would be quadratic)
+                    let start = self.pos - 1;
+                    let width = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => bail!("invalid UTF-8 lead byte in string"),
+                    };
+                    ensure!(
+                        start + width <= self.bytes.len(),
+                        "truncated UTF-8 in string"
+                    );
+                    let s = std::str::from_utf8(&self.bytes[start..start + width])
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?;
+                    out.push_str(s);
+                    self.pos = start + width;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> crate::Result<u32> {
+        ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u escape");
+        let text = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+        let v = u32::from_str_radix(text, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape '{text}'"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn array(&mut self) -> crate::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> crate::Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_encode_roundtrip() {
+        let text = r#"{"op":"submit","graph":"/tmp/g","num":8,"deep":[1,2.5,null,true,{"k":"v"}]}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str(), Some("submit"));
+        assert_eq!(v.get("num").unwrap().as_u64(), Some(8));
+        let arr = v.get("deep").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 5);
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[2], Json::Null);
+        // encode -> parse is stable
+        let re = Json::parse(&v.encode()).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::parse(r#""line\nbreak \"quoted\" tab\t uA 😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("line\nbreak \"quoted\" tab\t uA \u{1F600}"));
+        let enc = Json::Str("a\"b\\c\nd".to_string()).encode();
+        assert_eq!(Json::parse(&enc).unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("123 456").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(Json::parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
+        assert_eq!(Json::parse("18014398509481984").unwrap().as_u64(), Some(1 << 54));
+        assert_eq!(Json::u(0).encode(), "0");
+        assert_eq!(Json::f(2.5).encode(), "2.5");
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn pretty_encoding_roundtrips() {
+        let v = Json::obj(vec![
+            ("name", Json::s("fig")),
+            ("rows", Json::Arr(vec![Json::u(1), Json::u(2)])),
+            ("empty", Json::Obj(vec![])),
+        ]);
+        let pretty = v.encode_pretty();
+        assert!(pretty.contains("\n  \"rows\": ["));
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+}

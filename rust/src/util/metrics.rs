@@ -1,0 +1,231 @@
+//! Unified metrics registry — one schema over engine, SAFS and
+//! per-job service telemetry.
+//!
+//! The registry itself is deliberately dumb: an ordered list of named
+//! counters, gauges and histogram summaries. Producers (the service,
+//! the CLI) enumerate their snapshots into it; consumers get one of
+//! two renderings — a JSON object for the `{"op":"metrics"}` protocol
+//! op, or Prometheus-style text exposition for scraping. Living in
+//! `util` keeps the dependency direction clean: `safs` and `engine`
+//! produce the numbers, this module never needs to know about them.
+//!
+//! Metric names may carry Prometheus-style labels inline, e.g.
+//! `job_rounds{job="3",alg="pagerank"}` — the text renderer prefixes
+//! and sanitizes only the part before the brace.
+
+use crate::util::hist::HistSummary;
+use crate::util::json::Json;
+
+/// What a metric is, for the `# TYPE` exposition line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+}
+
+/// An ordered collection of named metrics.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    scalars: Vec<(String, Kind, f64)>,
+    hists: Vec<(String, HistSummary)>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a monotonic counter.
+    pub fn counter(&mut self, name: impl Into<String>, v: u64) {
+        self.scalars.push((name.into(), Kind::Counter, v as f64));
+    }
+
+    /// Add a point-in-time gauge.
+    pub fn gauge(&mut self, name: impl Into<String>, v: f64) {
+        self.scalars.push((name.into(), Kind::Gauge, v));
+    }
+
+    /// Add a histogram summary.
+    pub fn hist(&mut self, name: impl Into<String>, h: HistSummary) {
+        self.hists.push((name.into(), h));
+    }
+
+    /// Number of registered metrics (scalars + histograms).
+    pub fn len(&self) -> usize {
+        self.scalars.len() + self.hists.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// JSON rendering: `{"counters":{..},"gauges":{..},"histograms":
+    /// {name:{count,mean,p50,p99}}}`. Non-finite gauge values encode
+    /// as null (JSON has no Infinity).
+    pub fn to_json(&self) -> Json {
+        let pick = |want: Kind| -> Json {
+            Json::Obj(
+                self.scalars
+                    .iter()
+                    .filter(|(_, k, _)| *k == want)
+                    .map(|(n, _, v)| {
+                        let jv = if v.is_finite() { Json::f(*v) } else { Json::Null };
+                        (n.clone(), jv)
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("counters", pick(Kind::Counter)),
+            ("gauges", pick(Kind::Gauge)),
+            (
+                "histograms",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(n, h)| {
+                            (
+                                n.clone(),
+                                Json::obj(vec![
+                                    ("count", Json::u(h.count)),
+                                    ("mean", Json::u(h.mean)),
+                                    ("p50", Json::u(h.p50)),
+                                    ("p99", Json::u(h.p99)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Prometheus-style text exposition. Every name gets `prefix_`
+    /// prepended and non-identifier characters (before any `{label}`
+    /// part) replaced with `_`. Histograms render as summaries with
+    /// `quantile` labels plus `_count` and `_sum` series.
+    pub fn to_prometheus(&self, prefix: &str) -> String {
+        let mut out = String::new();
+        for (name, kind, v) in &self.scalars {
+            let (base, labels) = split_labels(name);
+            let full = format!("{prefix}_{}", sanitize(base));
+            let kind_s = match kind {
+                Kind::Counter => "counter",
+                Kind::Gauge => "gauge",
+            };
+            out.push_str(&format!("# TYPE {full} {kind_s}\n"));
+            out.push_str(&format!("{full}{labels} {}\n", fmt_value(*v)));
+        }
+        for (name, h) in &self.hists {
+            let (base, labels) = split_labels(name);
+            let full = format!("{prefix}_{}", sanitize(base));
+            let extra = |q: &str| merge_labels(labels, &format!("quantile=\"{q}\""));
+            out.push_str(&format!("# TYPE {full} summary\n"));
+            out.push_str(&format!("{full}{} {}\n", extra("0.5"), h.p50));
+            out.push_str(&format!("{full}{} {}\n", extra("0.99"), h.p99));
+            out.push_str(&format!("{full}_count{labels} {}\n", h.count));
+            // integer mean * count reconstructs an approximate sum
+            out.push_str(&format!("{full}_sum{labels} {}\n", h.mean.saturating_mul(h.count)));
+        }
+        out
+    }
+}
+
+/// Split `name{labels}` into (`name`, `{labels}`); labels may be empty.
+fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], &name[i..]),
+        None => (name, ""),
+    }
+}
+
+/// Merge an extra label into an existing (possibly empty) label set.
+fn merge_labels(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        format!("{{{extra}}}")
+    } else {
+        // "{a=\"b\"}" -> "{a=\"b\",extra}"
+        format!("{},{extra}}}", &labels[..labels.len() - 1])
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
+}
+
+fn fmt_value(v: f64) -> String {
+    if !v.is_finite() {
+        // Prometheus text format spells infinities this way
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hist::Histogram;
+
+    fn sample_registry() -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        m.counter("io_bytes_read", 4096);
+        m.gauge("cache_occupancy", 0.5);
+        m.counter("job_rounds{job=\"3\",alg=\"pagerank\"}", 12);
+        let h = Histogram::new();
+        h.record(100);
+        h.record(300);
+        m.hist("io_fetch_latency_us", h.summary());
+        m
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = sample_registry().to_json();
+        assert_eq!(
+            j.get("counters").unwrap().get("io_bytes_read").unwrap().as_u64(),
+            Some(4096)
+        );
+        assert_eq!(
+            j.get("gauges").unwrap().get("cache_occupancy").unwrap().as_f64(),
+            Some(0.5)
+        );
+        let h = j.get("histograms").unwrap().get("io_fetch_latency_us").unwrap();
+        assert_eq!(h.get("count").unwrap().as_u64(), Some(2));
+        assert_eq!(h.get("mean").unwrap().as_u64(), Some(200));
+        // round-trips through the encoder
+        assert!(Json::parse(&j.encode()).is_ok());
+    }
+
+    #[test]
+    fn non_finite_gauges_encode_as_null() {
+        let mut m = MetricsRegistry::new();
+        m.gauge("busy_ratio", f64::INFINITY);
+        let j = m.to_json();
+        assert_eq!(j.get("gauges").unwrap().get("busy_ratio"), Some(&Json::Null));
+        assert!(m.to_prometheus("gy").contains("gy_busy_ratio +Inf\n"));
+    }
+
+    #[test]
+    fn prometheus_exposition() {
+        let text = sample_registry().to_prometheus("graphyti");
+        assert!(text.contains("# TYPE graphyti_io_bytes_read counter\n"));
+        assert!(text.contains("graphyti_io_bytes_read 4096\n"));
+        assert!(text.contains("graphyti_cache_occupancy 0.5\n"));
+        // labeled counter keeps its labels, sanitizes only the base
+        assert!(
+            text.contains("graphyti_job_rounds{job=\"3\",alg=\"pagerank\"} 12\n"),
+            "{text}"
+        );
+        // histogram renders as a summary with quantile labels
+        assert!(text.contains("graphyti_io_fetch_latency_us{quantile=\"0.5\"}"));
+        assert!(text.contains("graphyti_io_fetch_latency_us_count 2\n"));
+        assert!(text.contains("graphyti_io_fetch_latency_us_sum 400\n"));
+    }
+}

@@ -10,6 +10,8 @@ pub mod atomic_f64;
 pub mod bench;
 pub mod bitmap;
 pub mod hist;
+pub mod json;
+pub mod metrics;
 pub mod prng;
 pub mod prop;
 pub mod shared_vec;
@@ -17,7 +19,9 @@ pub mod shared_vec;
 pub use atomic_f64::{atomic_f64_vec, AtomicF64};
 pub use bench::{bench, BenchResult};
 pub use bitmap::AtomicBitmap;
-pub use hist::Histogram;
+pub use hist::{HistSummary, Histogram};
+pub use json::Json;
+pub use metrics::MetricsRegistry;
 pub use prng::XorShift;
 pub use shared_vec::SharedVec;
 

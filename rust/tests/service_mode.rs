@@ -263,6 +263,36 @@ fn tcp_protocol_round_trip() {
             > Some(0)
     );
 
+    // metrics op: unified registry with I/O latency quantiles and the
+    // engine counter aggregates, in both renderings
+    let resp = call(&addr, &Json::obj(vec![("op", Json::s("metrics"))]), t).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{}", resp.encode());
+    let m = resp.get("metrics").unwrap();
+    let counters = m.get("counters").unwrap();
+    assert!(
+        counters.get("io_read_requests").and_then(Json::as_u64) > Some(0),
+        "{}",
+        m.encode()
+    );
+    for key in ["engine_vertex_runs", "engine_deliveries", "engine_rounds", "engine_steals"] {
+        assert!(counters.get(key).and_then(Json::as_u64).is_some(), "missing {key}");
+    }
+    let hists = m.get("histograms").unwrap();
+    let fetch = hists.get("io_fetch_latency_us").unwrap();
+    assert!(fetch.get("count").and_then(Json::as_u64) > Some(0), "{}", m.encode());
+    assert!(fetch.get("p50").and_then(Json::as_u64).is_some());
+    assert!(fetch.get("p99").and_then(Json::as_u64).is_some());
+    assert!(
+        fetch.get("p99").and_then(Json::as_u64) >= fetch.get("p50").and_then(Json::as_u64)
+    );
+
+    let text_req =
+        Json::obj(vec![("op", Json::s("metrics")), ("format", Json::s("text"))]);
+    let resp = call(&addr, &text_req, t).unwrap();
+    let text = resp.get("text").and_then(Json::as_str).unwrap();
+    assert!(text.contains("# TYPE graphyti_io_read_requests counter"), "{text}");
+    assert!(text.contains("graphyti_io_fetch_latency_us{quantile=\"0.99\"}"), "{text}");
+
     // shutdown op stops the service and the accept loop
     let resp = call(&addr, &Json::obj(vec![("op", Json::s("shutdown"))]), t).unwrap();
     assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));

@@ -1,0 +1,142 @@
+//! Trace invariants over the full stack: with `EngineConfig.trace` on,
+//! the per-round boundary-snapshot deltas must sum *exactly* to the
+//! run-level I/O delta (the telescoping contract in `engine/trace.rs`),
+//! the ring must hold one sample per executed round, and recording must
+//! not perturb the engine's allocation behavior.
+
+use std::path::PathBuf;
+
+use graphyti::algs::bc::{betweenness, BcVariant};
+use graphyti::algs::pagerank::pagerank_push;
+use graphyti::engine::{EngineConfig, RunReport, TransportMode};
+use graphyti::graph::builder::GraphBuilder;
+use graphyti::graph::gen;
+use graphyti::graph::source::SemGraph;
+use graphyti::safs::{IoConfig, IoStatsSnapshot};
+use graphyti::VertexId;
+
+fn build_image(n: usize, edges: &[(VertexId, VertexId)], directed: bool, tag: &str) -> PathBuf {
+    let base =
+        std::env::temp_dir().join(format!("graphyti-trace-{}-{tag}", std::process::id()));
+    let mut b = GraphBuilder::new(n, directed);
+    b.add_edges(edges);
+    b.build_files(&base).unwrap();
+    base
+}
+
+fn cleanup(base: &PathBuf) {
+    let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+    let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+}
+
+fn open_small(base: &PathBuf) -> SemGraph {
+    // 64-page cache keeps real misses (and evictions) in play
+    SemGraph::open(base, 64 * 4096, IoConfig { threads: 2, ..Default::default() }).unwrap()
+}
+
+/// Zero the cumulative latency summaries so whole-struct equality
+/// compares only the nine differenceable counters.
+fn counters_only(mut s: IoStatsSnapshot) -> IoStatsSnapshot {
+    s.latency = Default::default();
+    s
+}
+
+/// The tentpole invariant: one sample per round, per-round I/O deltas
+/// telescoping exactly to the run-level delta, and per-round engine
+/// counters summing to the run totals.
+fn assert_trace_consistent(r: &RunReport, workers: usize, what: &str) {
+    let tr = r.trace.as_ref().unwrap_or_else(|| panic!("{what}: trace missing"));
+    assert_eq!(tr.dropped(), 0, "{what}: ring must not overflow here");
+    assert_eq!(tr.len() as u64, r.rounds, "{what}: one sample per round");
+    assert_eq!(tr.rounds_recorded(), r.rounds, "{what}");
+    assert_eq!(
+        counters_only(tr.io_sum()),
+        counters_only(r.io),
+        "{what}: per-round I/O deltas must sum exactly to the run delta"
+    );
+    let sent: u64 = tr.samples().map(|s| s.sent).sum();
+    let delivered: u64 = tr.samples().map(|s| s.delivered).sum();
+    let combined: u64 = tr.samples().map(|s| s.combined).sum();
+    let steals: u64 = tr.samples().map(|s| s.steals).sum();
+    assert_eq!(sent, r.engine.p2p_msgs + r.engine.multicast_msgs, "{what}: sends");
+    assert_eq!(delivered, r.engine.deliveries, "{what}: deliveries");
+    assert_eq!(combined, r.engine.combined_msgs, "{what}: combiner folds");
+    assert_eq!(steals, r.engine.steals, "{what}: steals");
+    for s in tr.samples() {
+        assert_eq!(s.workers.len(), workers, "{what}: phase slots per round");
+    }
+    // the export is valid JSON with one entry per round
+    let j = graphyti::util::Json::parse(&tr.to_json().encode()).unwrap();
+    assert_eq!(j.get("rounds").unwrap().as_u64(), Some(r.rounds), "{what}: JSON rounds");
+    let samples = j.get("samples").unwrap().as_array().unwrap();
+    assert_eq!(samples.len() as u64, r.rounds, "{what}: JSON samples");
+}
+
+/// Test-unique `tag` prefix keeps concurrently-running tests from
+/// racing on the same temp image paths.
+fn workloads(tag: &str) -> Vec<(PathBuf, &'static str)> {
+    // a hub star (frontier collapses onto vertex 0) and a hubby R-MAT
+    vec![
+        (build_image(512, &gen::star(512), true, &format!("{tag}-star")), "star"),
+        (build_image(1024, &gen::rmat(10, 12_000, 7), true, &format!("{tag}-rmat")), "rmat"),
+    ]
+}
+
+#[test]
+fn pagerank_trace_deltas_sum_to_run_delta() {
+    for (base, name) in workloads("pr") {
+        for workers in [1usize, 2, 8] {
+            let g = open_small(&base);
+            let ecfg = EngineConfig { workers, trace: true, ..Default::default() };
+            let r = pagerank_push(&g, 0.85, 1e-10, &ecfg).report;
+            assert!(r.rounds > 1, "{name}: need a multi-round run");
+            assert_trace_consistent(&r, workers, &format!("pagerank/{name}/w{workers}"));
+        }
+        cleanup(&base);
+    }
+}
+
+#[test]
+fn bc_queue_transport_trace_deltas_sum_to_run_delta() {
+    for (base, name) in workloads("bc") {
+        for workers in [1usize, 2, 8] {
+            let g = open_small(&base);
+            let ecfg = EngineConfig {
+                workers,
+                trace: true,
+                transport: TransportMode::Queue,
+                ..Default::default()
+            };
+            let sources: Vec<VertexId> = vec![0, 1, 2];
+            let r = betweenness(&g, &sources, BcVariant::MultiSourceSync, &ecfg).report;
+            assert!(r.rounds > 1, "{name}: need a multi-round run");
+            assert_trace_consistent(&r, workers, &format!("bc/{name}/w{workers}"));
+        }
+        cleanup(&base);
+    }
+}
+
+#[test]
+fn tracing_is_allocation_free_once_warm() {
+    // the trace recorder preallocates its ring: a traced run must show
+    // exactly the allocation counters of an untraced one
+    let base = build_image(1024, &gen::rmat(10, 12_000, 9), true, "alloc");
+    let run = |trace: bool| {
+        let g = open_small(&base);
+        let ecfg = EngineConfig { workers: 1, trace, ..Default::default() };
+        pagerank_push(&g, 0.85, 1e-10, &ecfg).report
+    };
+    let off = run(false);
+    let on = run(true);
+    assert!(off.trace.is_none() && on.trace.is_some());
+    assert_eq!(
+        on.engine.fetch_allocs, off.engine.fetch_allocs,
+        "tracing must not change fetch-arena allocations"
+    );
+    assert_eq!(
+        on.engine.msg_allocs, off.engine.msg_allocs,
+        "tracing must not change message-lane allocations"
+    );
+    assert_eq!(on.engine.msg_allocs, 0, "combiner steady state allocates nothing");
+    cleanup(&base);
+}
