@@ -27,20 +27,27 @@ fn main() {
     banner(
         "Worker scaling",
         "chunk-claiming + work stealing vs worker count",
-        &format!("R-MAT scale {scale}, directed, cache=1/7 adj, io_delay={}us", cfg.io_delay_us),
+        &format!(
+            "R-MAT scale {scale}, directed, cache=1/7 adj, io_delay={}us, mode={:?}, \
+             fetch_window={}",
+            cfg.io_delay_us, cfg.mode, cfg.fetch_window
+        ),
     );
 
     println!("\n-- PageRank-push (balanced frontier) --");
     let thr = 1e-3 / n as f64;
-    // trace=on so the JSON baseline carries per-round I/O summaries
+    // derive engine knobs (mode / pull_density / fetch_window /
+    // transport) from the workload config so GRAPHYTI_BENCH_MODE and
+    // config files reach the engine; trace=on so the JSON baseline
+    // carries per-round I/O summaries
     let pr_reports = worker_scaling(&base, &cfg, &counts, |g, w| {
-        let ecfg = EngineConfig { workers: w, trace: true, ..Default::default() };
+        let ecfg = EngineConfig { workers: w, trace: true, ..cfg.engine() };
         pagerank_push(g, cfg.alpha, thr, &ecfg).report
     });
 
     println!("\n-- BFS from vertex 0 (skew-prone frontier) --");
     let reports = worker_scaling(&base, &cfg, &counts, |g, w| {
-        let ecfg = EngineConfig { workers: w, trace: true, ..Default::default() };
+        let ecfg = EngineConfig { workers: w, trace: true, ..cfg.engine() };
         bfs(g, 0, &ecfg).1
     });
 

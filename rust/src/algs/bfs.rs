@@ -46,6 +46,17 @@ impl VertexProgram for UniBfs {
             ctx.activate(v);
         }
     }
+
+    fn supports_pull(&self) -> bool {
+        true
+    }
+
+    fn pull_message(&self, src: VertexId, _dst: VertexId) -> Option<i64> {
+        // level[src] is written only in run_on_message (phase A), so it
+        // is stable through phase B — exactly what a push round's
+        // multicast would have carried
+        Some(*self.level.get(src as usize) + 1)
+    }
 }
 
 /// BFS levels from `src` (-1 = unreachable), plus the run report.

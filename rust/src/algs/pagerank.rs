@@ -50,6 +50,12 @@ struct PrPush {
     // so plain SharedVec slots — no atomics on the hot path
     rank: SharedVec<f64>,
     residual: SharedVec<f64>,
+    /// This round's outgoing share per vertex, stashed by
+    /// `run_on_vertex` so pull rounds can synthesize the identical
+    /// message per out-edge (written in B1, read in B2 — the
+    /// stable-in-phase discipline [`VertexProgram::pull_message`]
+    /// requires).
+    share: SharedVec<f64>,
 }
 
 impl VertexProgram for PrPush {
@@ -67,16 +73,22 @@ impl VertexProgram for PrPush {
 
     fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, f64>, v: VertexId, edges: &VertexEdges) {
         let r = std::mem::take(self.residual.get_mut(v as usize));
-        if r == 0.0 {
-            return;
+        // the share is computed from the index degree, not the fetched
+        // list, so a pull round's edge-less B1 pass stashes exactly what
+        // a push round would multicast
+        let outdeg = ctx.out_deg(v) as usize;
+        let share = if r == 0.0 || outdeg == 0 {
+            0.0 // dangling: mass retained, not redistributed
+        } else {
+            self.alpha * r / outdeg as f64
+        };
+        *self.share.get_mut(v as usize) = share;
+        if r != 0.0 {
+            *self.rank.get_mut(v as usize) += r;
         }
-        *self.rank.get_mut(v as usize) += r;
-        let outs = &edges.out_neighbors;
-        if outs.is_empty() {
-            return; // dangling: mass retained, not redistributed
+        if share != 0.0 && !edges.out_neighbors.is_empty() {
+            ctx.multicast(&edges.out_neighbors, share);
         }
-        let share = self.alpha * r / outs.len() as f64;
-        ctx.multicast(outs, share);
     }
 
     fn run_on_message(&self, ctx: &mut WorkerCtx<'_, f64>, v: VertexId, share: &f64) {
@@ -87,6 +99,15 @@ impl VertexProgram for PrPush {
             // drained promptly while its cache pages are likely warm
             ctx.activate(v);
         }
+    }
+
+    fn supports_pull(&self) -> bool {
+        true
+    }
+
+    fn pull_message(&self, src: VertexId, _dst: VertexId) -> Option<f64> {
+        let share = *self.share.get(src as usize);
+        (share != 0.0).then_some(share)
     }
 }
 
@@ -104,6 +125,7 @@ pub fn pagerank_push(
         threshold,
         rank: SharedVec::new(n, 0.0),
         residual: SharedVec::new(n, (1.0 - alpha) / n as f64),
+        share: SharedVec::new(n, 0.0),
     };
     let all: Vec<VertexId> = (0..n as VertexId).collect();
     let report = Engine::run(&prog, source, &all, cfg);

@@ -41,6 +41,17 @@ impl VertexProgram for Sssp {
             ctx.activate(v); // label-correcting: re-relax promptly
         }
     }
+
+    fn supports_pull(&self) -> bool {
+        true
+    }
+
+    fn pull_message(&self, src: VertexId, dst: VertexId) -> Option<u64> {
+        // the weight is a pure function of the edge endpoints, so the
+        // pull side reconstructs exactly the proposal push would send;
+        // dist[src] is phase-A-written and stable through phase B
+        Some(*self.dist.get(src as usize) + edge_weight(src, dst))
+    }
 }
 
 /// Shortest synthetic-weight distances from `src` (u64::MAX unreachable).

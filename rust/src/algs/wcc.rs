@@ -37,6 +37,22 @@ impl VertexProgram for Wcc {
             ctx.activate(v);
         }
     }
+
+    fn supports_pull(&self) -> bool {
+        true
+    }
+
+    fn pull_request(&self) -> EdgeRequest {
+        // push multicasts along out- AND in-lists, i.e. across every
+        // incident edge — the pull sweep must traverse the same set
+        EdgeRequest::Both
+    }
+
+    fn pull_message(&self, src: VertexId, _dst: VertexId) -> Option<VertexId> {
+        // labels are written only in phase A (run_on_message), so the
+        // value an active src would have multicast is stable here
+        Some(*self.label.get(src as usize))
+    }
 }
 
 /// Component label (min reachable vertex id) per vertex.

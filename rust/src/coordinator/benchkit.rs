@@ -36,6 +36,15 @@ pub fn bench_scale() -> u32 {
         .unwrap_or(15)
 }
 
+/// Round direction for benches (default `push`, the historical baseline
+/// regime; override `GRAPHYTI_BENCH_MODE=push|pull|auto`).
+pub fn bench_mode() -> crate::engine::RunMode {
+    std::env::var("GRAPHYTI_BENCH_MODE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(crate::engine::RunMode::Push)
+}
+
 /// Build (once, cached on disk) an R-MAT image for benching and return
 /// `(base path, RunConfig)` with the cache in the paper's 1/7 regime.
 pub fn rmat_workload(scale: u32, edge_factor: usize, directed: bool, tag: &str) -> (PathBuf, RunConfig) {
@@ -79,6 +88,7 @@ pub fn rmat_workload_fmt(
     let mut cfg = RunConfig::default();
     cfg.cache_mb = cache_bytes.div_ceil(1024 * 1024).max(1);
     cfg.io_delay_us = bench_io_delay_us();
+    cfg.mode = bench_mode();
     (base, cfg)
 }
 
@@ -344,6 +354,7 @@ fn report_row_json(variant: &str, r: &RunReport) -> Json {
                 ("cache_hits", Json::u(r.io.cache_hits)),
                 ("cache_misses", Json::u(r.io.cache_misses)),
                 ("thread_waits", Json::u(r.io.thread_waits)),
+                ("retries", Json::u(r.io.retries)),
                 ("fetch_p50_us", Json::u(r.io.latency.fetch.p50)),
                 ("fetch_p99_us", Json::u(r.io.latency.fetch.p99)),
             ]),
@@ -358,6 +369,9 @@ fn report_row_json(variant: &str, r: &RunReport) -> Json {
                 ("peak_msg_bytes", Json::u(r.engine.peak_msg_bytes)),
                 ("steals", Json::u(r.engine.steals)),
                 ("vertex_runs", Json::u(r.engine.vertex_runs)),
+                ("pull_rounds", Json::u(r.engine.pull_rounds)),
+                ("blocks_skipped", Json::u(r.engine.blocks_skipped)),
+                ("overlap_ratio", Json::f(r.engine.overlap_ratio())),
                 (
                     "busy_ratio",
                     if r.engine.busy_ratio().is_finite() {
@@ -392,7 +406,11 @@ pub struct BenchCheck {
 /// wall time gets slack for machine noise. A baseline with no rows (the
 /// bootstrap placeholder committed before a toolchain ran the benches)
 /// passes with a note, so CI can adopt the gate before the first real
-/// baseline lands.
+/// baseline lands. The same courtesy applies per row: a baseline row
+/// with `wall_ms == 0` is a hand-written placeholder, and since its
+/// `bytes_read` is equally fictional, BOTH gates are skipped for it —
+/// gating real reads against a made-up zero would fail every adoption
+/// run.
 pub fn bench_compare(baseline: &Json, current: &Json, wall_tolerance: f64) -> BenchCheck {
     let rows = |j: &Json| -> Vec<(String, f64, u64)> {
         j.get("rows")
@@ -424,6 +442,12 @@ pub fn bench_compare(baseline: &Json, current: &Json, wall_tolerance: f64) -> Be
             notes.push(format!("{variant}: MISSING from current run"));
             continue;
         };
+        if *base_wall == 0.0 {
+            notes.push(format!(
+                "{variant}: baseline is a bootstrap placeholder row (wall 0 ms): pass"
+            ));
+            continue;
+        }
         let wall_ratio = cur_wall / base_wall.max(1e-9);
         let wall_ok = wall_ratio <= 1.0 + wall_tolerance;
         let bytes_ok = cur_bytes <= base_bytes;
@@ -550,6 +574,20 @@ mod tests {
         let c = bench_compare(&empty, &table_json(&[("push", 100, 4096)]), 0.15);
         assert!(c.ok);
         assert!(c.notes[0].contains("bootstrap"), "{:?}", c.notes);
+    }
+
+    #[test]
+    fn bench_compare_skips_both_gates_on_zero_wall_placeholder_row() {
+        // a hand-written placeholder row carries wall_ms == 0 AND a
+        // fictional bytes_read — any real run would "regress" both
+        // infinitely, so the row must be skipped outright
+        let base = table_json(&[("push", 0, 0), ("pull", 100, 4096)]);
+        let c = bench_compare(&base, &table_json(&[("push", 250, 9999), ("pull", 100, 4096)]), 0.15);
+        assert!(c.ok, "{:?}", c.notes);
+        assert!(c.notes[0].contains("placeholder"), "{:?}", c.notes);
+        // real rows alongside the placeholder still gate
+        let c = bench_compare(&base, &table_json(&[("push", 250, 9999), ("pull", 100, 8192)]), 0.15);
+        assert!(!c.ok, "{:?}", c.notes);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
-use crate::engine::{EngineConfig, TransportMode};
+use crate::engine::{EngineConfig, RunMode, TransportMode};
 use crate::safs::IoConfig;
 
 /// How (and whether) to surface the per-round engine trace.
@@ -51,6 +51,14 @@ pub struct RunConfig {
     /// Message transport: `auto` (combiner lanes when the program
     /// declares a combiner) or `queue` (force the queue-lane baseline).
     pub transport: TransportMode,
+    /// Push/pull round direction (`mode=push|pull|auto`); `auto`
+    /// switches per round on frontier density for programs that opt in.
+    pub mode: RunMode,
+    /// `mode=auto` density threshold (active fraction ≥ this → pull).
+    pub pull_density: f64,
+    /// Edge batches kept in flight per worker beyond the one being
+    /// processed (0 = synchronous fetch-then-compute baseline).
+    pub fetch_window: usize,
     /// PageRank damping factor.
     pub alpha: f64,
     /// PageRank convergence threshold (absolute rank delta).
@@ -76,6 +84,9 @@ impl Default for RunConfig {
             workers: 0,
             batch: 1024,
             transport: TransportMode::Auto,
+            mode: RunMode::Push,
+            pull_density: 0.125,
+            fetch_window: 2,
             alpha: 0.85,
             threshold: 1e-10,
             seed: 42,
@@ -103,6 +114,16 @@ impl RunConfig {
                     other => bail!("transport must be 'auto' or 'queue', got '{other}'"),
                 }
             }
+            "mode" => {
+                self.mode = match v {
+                    "push" => RunMode::Push,
+                    "pull" => RunMode::Pull,
+                    "auto" => RunMode::Auto,
+                    other => bail!("mode must be push/pull/auto, got '{other}'"),
+                }
+            }
+            "pull_density" => self.pull_density = v.parse().context("pull_density")?,
+            "fetch_window" => self.fetch_window = v.parse().context("fetch_window")?,
             "alpha" => self.alpha = v.parse().context("alpha")?,
             "threshold" => self.threshold = v.parse().context("threshold")?,
             "seed" => self.seed = v.parse().context("seed")?,
@@ -145,6 +166,9 @@ impl RunConfig {
         }
         e.batch = self.batch;
         e.transport = self.transport;
+        e.mode = self.mode;
+        e.pull_density = self.pull_density;
+        e.fetch_window = self.fetch_window;
         e.cancel = self.cancel.clone();
         e.trace = self.trace.enabled();
         e
@@ -156,6 +180,7 @@ impl RunConfig {
             threads: self.io_threads,
             io_delay_us: self.io_delay_us,
             max_run_pages: self.max_run_pages,
+            fault: None,
         }
     }
 
@@ -196,6 +221,23 @@ mod tests {
         c.set("trace", "off").unwrap();
         assert_eq!(c.trace, TraceMode::Off);
         assert!(c.set("trace", "loud").is_err());
+        assert_eq!(c.mode, RunMode::Push);
+        c.set("mode", "auto").unwrap();
+        assert_eq!(c.mode, RunMode::Auto);
+        assert_eq!(c.engine().mode, RunMode::Auto);
+        c.set("mode", "pull").unwrap();
+        assert_eq!(c.mode, RunMode::Pull);
+        c.set("mode", "push").unwrap();
+        assert_eq!(c.mode, RunMode::Push);
+        assert!(c.set("mode", "sideways").is_err());
+        assert!((c.pull_density - 0.125).abs() < 1e-12);
+        c.set("pull_density", "0.25").unwrap();
+        assert!((c.engine().pull_density - 0.25).abs() < 1e-12);
+        assert_eq!(c.fetch_window, 2);
+        c.set("fetch_window", "0").unwrap();
+        assert_eq!(c.fetch_window, 0);
+        assert_eq!(c.engine().fetch_window, 0);
+        assert!(c.set("fetch_window", "many").is_err());
     }
 
     #[test]

@@ -19,11 +19,19 @@
 //!    fixed-size chunks claimed through per-worker atomic cursors,
 //!    **stealing** remaining chunks from other workers once their own
 //!    span is empty (see [`runner`] for the scheduler). Each batch's
-//!    edge requests are fetched through the [`crate::graph::EdgeSource`]
-//!    *as one batch* into a per-worker [`crate::graph::source::FetchArena`]
-//!    (this is where SEM I/O overlaps computation, with zero steady-state
-//!    allocations), then `run_on_vertex` runs per vertex. Activations
-//!    here land in round *r+1*; messages are delivered in round *r+1*.
+//!    edge requests are *submitted* asynchronously through the
+//!    [`crate::graph::EdgeSource`] into per-worker
+//!    [`crate::graph::source::FetchSlot`]s — up to
+//!    [`runner::EngineConfig::fetch_window`] batches ride in flight
+//!    while the worker processes whichever batch's pages landed first
+//!    (this is where SEM I/O overlaps computation, with zero
+//!    steady-state allocations), then `run_on_vertex` runs per vertex.
+//!    Programs that opt in via [`VertexProgram::supports_pull`] can run
+//!    dense rounds in **pull** direction instead (destinations fetch
+//!    their neighbor lists and synthesize messages from active sources;
+//!    per-chunk source-summary words skip I/O for chunks with no active
+//!    source — see [`runner`]). Activations here land in round *r+1*;
+//!    messages are delivered in round *r+1*.
 //! 3. **Barrier** — per-worker functional reductions are merged,
 //!    `run_on_iteration_end` runs once, and the engine stops when no
 //!    activations and no messages remain.
@@ -70,6 +78,8 @@ pub mod trace;
 pub use context::{EndCtx, WorkerCtx};
 pub use messages::{Combiner, TransportMode};
 pub use program::VertexProgram;
-pub use runner::{Engine, EngineConfig, RunReport};
+pub use runner::{
+    frontier_summary_word, source_bucket, Engine, EngineConfig, RunMode, RunReport, CHUNK_BITS,
+};
 pub use stats::EngineStats;
 pub use trace::{RoundSample, RoundTrace, WorkerPhases};

@@ -60,4 +60,42 @@ pub trait VertexProgram: Send + Sync {
     /// Runs once per round at the global barrier (single-threaded).
     /// Default: no-op.
     fn run_on_iteration_end(&self, _ctx: &mut EndCtx<'_>) {}
+
+    /// Opt into pull-mode rounds (GraphMP-style dense iteration): on a
+    /// dense frontier the engine iterates *destination* vertices and,
+    /// for each neighboring source that is active, synthesizes the
+    /// message via [`Self::pull_message`] instead of having the source
+    /// push it. Default `false`: the engine never runs this program in
+    /// pull mode (`mode=pull` degrades to push), which is correct for
+    /// programs whose `run_on_vertex` side effects are not captured by
+    /// a per-edge message function (stateful multicast masks, weighted
+    /// phase logic, etc.).
+    fn supports_pull(&self) -> bool {
+        false
+    }
+
+    /// Which edge direction pull rounds traverse *from the
+    /// destination's perspective* (program-wide, unlike the per-vertex
+    /// [`Self::edge_request`]): `In` means "my in-neighbors push to me
+    /// along out-edges" — the common case — while `Both` covers
+    /// programs that multicast along both directions (WCC on a
+    /// symmetrized view).
+    fn pull_request(&self) -> EdgeRequest {
+        EdgeRequest::In
+    }
+
+    /// Synthesize the message an *active* `src` would have pushed to
+    /// `dst` in this round, or `None` for no message. Contract: for any
+    /// frontier, delivering `pull_message(src, dst)` for every active
+    /// `src` adjacent to `dst` must be observationally identical (up to
+    /// combiner fold order) to the sends `run_on_vertex(src)` performs
+    /// — the push/pull equivalence tests enforce this per algorithm.
+    /// Only consulted when [`Self::supports_pull`] is true; reads of
+    /// `src`'s state follow the same stable-in-phase discipline as
+    /// `run_on_vertex`, which on pull rounds runs for active vertices
+    /// *before* any pulls are evaluated (so it may stash per-vertex
+    /// values — e.g. PageRank's share — that `pull_message` then reads).
+    fn pull_message(&self, _src: VertexId, _dst: VertexId) -> Option<Self::Msg> {
+        None
+    }
 }

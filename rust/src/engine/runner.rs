@@ -20,8 +20,35 @@
 //! (`store(0)` per 64 bits) for reuse in the next round — replacing the
 //! old per-bit test-and-clear sweep. This is safe because nothing sets
 //! bits in the *current* round's bitmap during the vertex phase.
+//!
+//! ## Overlapped I/O
+//!
+//! The vertex phase is completion-driven: each worker keeps up to
+//! `fetch_window + 1` edge batches in flight as async submissions to
+//! the I/O pool ([`crate::graph::source::FetchSlot`]), processes
+//! whichever batch's pages land first, and only charges `io_wait_ns`
+//! when it must block on a batch that has not completed. With
+//! `fetch_window = 0` the pipeline degenerates to the strictly
+//! synchronous fetch-then-compute baseline (every fetch is a timed
+//! wait), which is what the overlap regression tests compare against.
+//!
+//! ## Push/pull hybrid rounds
+//!
+//! Programs that opt in ([`VertexProgram::supports_pull`]) can run
+//! dense rounds in **pull** mode: instead of active sources pushing
+//! along their out-edges, every destination with relevant edges fetches
+//! its neighbor list once and synthesizes messages from the active
+//! sources it finds ([`VertexProgram::pull_message`]). A pull round
+//! splits phase B in two: **B1** runs `run_on_vertex` (edge-less) over
+//! the live frontier so per-vertex state and pull stashes update
+//! exactly as a push round would, then after a barrier **B2** sweeps
+//! destination chunks. Per-chunk **source-summary words**
+//! (one 64-bit bucket mask per [`CHUNK_BITS`] destinations, built on
+//! first scan) let later pull rounds skip the I/O for chunks whose
+//! sources are all inactive — `blocks_skipped` in the stats.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
@@ -30,8 +57,8 @@ use crate::engine::messages::{Delivery, MessagePlane, Transport, TransportMode};
 use crate::engine::program::VertexProgram;
 use crate::engine::stats::{EngineStats, EngineStatsSnapshot};
 use crate::engine::trace::{EngineCum, RoundTrace};
-use crate::graph::format::EdgeRequest;
-use crate::graph::source::{EdgeSource, FetchArena};
+use crate::graph::format::{EdgeRequest, VertexEdges};
+use crate::graph::source::{EdgeSource, FetchSlot};
 use crate::safs::IoStatsSnapshot;
 use crate::util::{AtomicBitmap, SharedVec};
 use crate::VertexId;
@@ -55,6 +82,33 @@ fn chunk_span(wid: usize, workers: usize, nchunks: usize) -> (usize, usize) {
 #[inline]
 fn owner_span(wid: usize, workers: usize, n: usize) -> (usize, usize) {
     ((wid * n).div_ceil(workers), ((wid + 1) * n).div_ceil(workers))
+}
+
+/// Per-round vertex-phase direction strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// Frontier-driven push every round (the classic path; default).
+    Push,
+    /// Pull every round on programs that opt in via
+    /// [`VertexProgram::supports_pull`]; others degrade to push.
+    Pull,
+    /// Decide per round: pull when the next frontier's density reaches
+    /// [`EngineConfig::pull_density`], push otherwise — the FlashGraph /
+    /// Ligra-style direction switch.
+    Auto,
+}
+
+impl std::str::FromStr for RunMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "push" => Ok(RunMode::Push),
+            "pull" => Ok(RunMode::Pull),
+            "auto" => Ok(RunMode::Auto),
+            _ => Err(format!("unknown mode '{s}' (expected push|pull|auto)")),
+        }
+    }
 }
 
 /// Engine tuning knobs.
@@ -85,6 +139,18 @@ pub struct EngineConfig {
     /// traced run preallocates its ring up front and records
     /// allocation-free (one uncontended lock by worker 0 per round).
     pub trace: bool,
+    /// Push/pull round strategy. Defaults to [`RunMode::Push`] (the
+    /// classic frontier-driven path); `Auto` switches direction per
+    /// round on programs that opt into pull.
+    pub mode: RunMode,
+    /// `Auto` threshold: pull when the frontier holds at least this
+    /// fraction of all vertices.
+    pub pull_density: f64,
+    /// Edge batches each worker keeps in flight *beyond* the one it is
+    /// processing (the overlap window). `0` forces the synchronous
+    /// fetch-then-compute baseline; the service layer charges
+    /// `workers × (fetch_window + 1)` slot footprints to admission.
+    pub fetch_window: usize,
 }
 
 impl Default for EngineConfig {
@@ -98,6 +164,9 @@ impl Default for EngineConfig {
             max_rounds: 1_000_000,
             cancel: None,
             trace: false,
+            mode: RunMode::Push,
+            pull_density: 0.125,
+            fetch_window: 2,
         }
     }
 }
@@ -152,8 +221,12 @@ impl RunReport {
             out.engine.peak_msg_bytes = out.engine.peak_msg_bytes.max(r.engine.peak_msg_bytes);
             out.engine.msg_allocs += r.engine.msg_allocs;
             out.engine.phase_a_ns += r.engine.phase_a_ns;
+            out.engine.phase_b_ns += r.engine.phase_b_ns;
+            out.engine.io_wait_ns += r.engine.io_wait_ns;
             out.engine.vertex_runs += r.engine.vertex_runs;
             out.engine.rounds += r.engine.rounds;
+            out.engine.pull_rounds += r.engine.pull_rounds;
+            out.engine.blocks_skipped += r.engine.blocks_skipped;
             out.engine.steals += r.engine.steals;
             out.engine.fetch_allocs += r.engine.fetch_allocs;
             add_per_worker(&mut out.engine.worker_busy_ns, &r.engine.worker_busy_ns);
@@ -167,6 +240,7 @@ impl RunReport {
             out.io.logical_bytes += r.io.logical_bytes;
             out.io.thread_waits += r.io.thread_waits;
             out.io.evictions += r.io.evictions;
+            out.io.retries += r.io.retries;
         }
         out
     }
@@ -200,12 +274,27 @@ struct Shared<M> {
     /// Per-worker chunk cursors over the activation bitmap; worker 0
     /// resets them to each span's start during round bookkeeping.
     cursors: Vec<AtomicUsize>,
+    /// Separate cursors for the pull sweep (B2) — B1 drains the
+    /// frontier through `cursors`, so pull rounds need their own claim
+    /// state over the destination chunks.
+    pull_cursors: Vec<AtomicUsize>,
+    /// Direction of the round in flight; worker 0 decides the next
+    /// round's value at bookkeeping, published by the final barrier.
+    pull_round: AtomicBool,
+    /// Per-chunk source-summary words: bit `b` set means some vertex of
+    /// bucket `b` (see [`source_bucket`]) has an edge into this chunk.
+    /// `0` is the "not yet scanned" sentinel — a chunk's claimant
+    /// publishes its word after the first full pull scan, and later
+    /// pull rounds skip chunks whose word misses the frontier summary
+    /// entirely. The graph is static, so a published word never
+    /// changes.
+    block_src: Vec<AtomicU64>,
     /// Total chunks in the bitmap.
     nchunks: usize,
     /// Per-worker phase timings for the round in flight, published
-    /// before the phase-B barrier when tracing (ns triples: phase A,
-    /// phase B, inter-phase barrier).
-    phase_ns: SharedVec<(u64, u64, u64)>,
+    /// before the phase-B barrier when tracing (ns quads: phase A,
+    /// phase B, inter-phase barrier, I/O wait inside phase B).
+    phase_ns: SharedVec<(u64, u64, u64, u64)>,
     /// The per-round recorder. Only worker 0 touches it — during
     /// bookkeeping, when every other worker is parked between barriers
     /// — so the lock is uncontended; `None` when tracing is off.
@@ -275,6 +364,11 @@ struct FrontierStream<'a> {
     /// foreign-and-not-yet-counted-as-steal).
     cur: Option<(crate::util::bitmap::SetBits<'a>, usize, usize, bool)>,
     n: usize,
+    /// Clear each chunk after scanning it (push rounds). Pull rounds
+    /// stream non-clearing: B2 still tests `bm.get(src)` after B1
+    /// drained the frontier, so worker 0 retires the whole bitmap at
+    /// bookkeeping instead.
+    clear: bool,
 }
 
 impl FrontierStream<'_> {
@@ -291,7 +385,9 @@ impl FrontierStream<'_> {
                 }
                 // fully scanned: word-level clear readies the chunk for
                 // round r+1 (replaces the per-bit lo..hi sweep)
-                self.bm.clear_span(*start, *end);
+                if self.clear {
+                    self.bm.clear_span(*start, *end);
+                }
                 self.cur = None;
             }
             let (c, foreign) = self.claimer.next_chunk()?;
@@ -300,6 +396,109 @@ impl FrontierStream<'_> {
             self.cur = Some((self.bm.iter_set_range(start, end), start, end, foreign));
         }
     }
+}
+
+/// Map a vertex id to one of 64 equal-width **source buckets** — the
+/// bit it occupies in a chunk's source-summary word and in the round's
+/// frontier summary. Buckets partition `[0, n)` so every vertex lands
+/// in exactly one bit.
+#[inline]
+pub fn source_bucket(v: VertexId, n: usize) -> u32 {
+    debug_assert!((v as usize) < n);
+    (v as u64 * 64 / n as u64) as u32
+}
+
+/// Conservative 64-bit summary of a frontier bitmap: bit `b` is set if
+/// any vertex of bucket `b` **may** be active. Built word-wise — a
+/// nonzero bitmap word sets every bucket its 64-vertex range overlaps —
+/// so the summary over-approximates (never misses) the true active set.
+/// The block filter is therefore safe: a pull chunk is skipped only
+/// when `block_src & summary == 0`, which implies no active vertex has
+/// an edge into the chunk.
+pub fn frontier_summary_word(bm: &AtomicBitmap, n: usize) -> u64 {
+    let mut out = 0u64;
+    for wi in 0..n.div_ceil(64) {
+        if bm.word(wi) != 0 {
+            let lo = source_bucket((wi * 64) as VertexId, n);
+            let hi = source_bucket((wi * 64 + 63).min(n - 1) as VertexId, n);
+            for b in lo..=hi {
+                out |= 1u64 << b;
+            }
+        }
+    }
+    out
+}
+
+/// Drive one worker's vertex phase through the overlapped fetch
+/// pipeline: `fill` stages the next batch of edge requests into a slot
+/// (returning `false` when the frontier is drained), `process` consumes
+/// a completed slot. With `window > 0`, up to `window + 1` slots are in
+/// flight at once and the worker finishes whichever completed first —
+/// only a blocking wait on a still-in-flight batch is charged to
+/// `io_wait_ns`. With `window == 0` every batch is a synchronous, fully
+/// timed fetch (the forced-baseline the overlap tests compare against).
+fn run_pipeline(
+    source: &dyn EdgeSource,
+    slots: &mut Vec<FetchSlot>,
+    window: usize,
+    io_wait_ns: &mut u64,
+    mut fill: impl FnMut(&mut FetchSlot) -> bool,
+    mut process: impl FnMut(&FetchSlot),
+) {
+    const FETCH_ERR: &str = "edge fetch failed (graph image unreadable)";
+    if window == 0 {
+        let slot = &mut slots[0];
+        while fill(slot) {
+            let t = Instant::now();
+            source.finish_batch(slot).expect(FETCH_ERR);
+            *io_wait_ns += t.elapsed().as_nanos() as u64;
+            process(slot);
+        }
+        return;
+    }
+    let mut free: Vec<FetchSlot> = std::mem::take(slots);
+    let mut inflight: VecDeque<FetchSlot> = VecDeque::with_capacity(free.len());
+    let mut drained = false;
+    loop {
+        // keep the window full before touching completions
+        while !drained && inflight.len() < window + 1 {
+            let Some(mut s) = free.pop() else { break };
+            if fill(&mut s) {
+                source.submit_batch(&mut s).expect(FETCH_ERR);
+                inflight.push_back(s);
+            } else {
+                drained = true;
+                free.push(s);
+            }
+        }
+        if inflight.is_empty() {
+            break;
+        }
+        // prefer whichever batch's pages have already landed (oldest
+        // first, so in-memory sources process in submission order)
+        let ready = (0..inflight.len()).find(|&i| source.poll_batch(&mut inflight[i]));
+        let mut s = match ready {
+            Some(i) => {
+                let mut s = inflight.remove(i).unwrap();
+                // completed: finish assembles + decodes without blocking
+                source.finish_batch(&mut s).expect(FETCH_ERR);
+                s
+            }
+            None => {
+                // nothing landed yet — block on the oldest submission
+                // and charge the stall to io_wait
+                let mut s = inflight.pop_front().unwrap();
+                let t = Instant::now();
+                source.finish_batch(&mut s).expect(FETCH_ERR);
+                *io_wait_ns += t.elapsed().as_nanos() as u64;
+                s
+            }
+        };
+        process(&s);
+        s.reqs.clear();
+        free.push(s);
+    }
+    *slots = free;
 }
 
 /// The BSP engine.
@@ -343,15 +542,33 @@ impl Engine {
             cursors: (0..workers)
                 .map(|w| AtomicUsize::new(chunk_span(w, workers, nchunks).0))
                 .collect(),
+            pull_cursors: (0..workers)
+                .map(|w| AtomicUsize::new(chunk_span(w, workers, nchunks).0))
+                .collect(),
+            pull_round: AtomicBool::new(false),
+            block_src: (0..nchunks).map(|_| AtomicU64::new(0)).collect(),
             nchunks,
-            phase_ns: SharedVec::new(workers, (0u64, 0u64, 0u64)),
+            phase_ns: SharedVec::new(workers, (0u64, 0u64, 0u64, 0u64)),
             trace: cfg.trace.then(|| Mutex::new(RoundTrace::new(workers, io_before))),
         };
         for &v in init_active {
             shared.bitmaps[0].set(v as usize);
         }
+        // round 0's direction, single-threaded (worker 0 decides every
+        // later round at bookkeeping): pull only on opted-in programs,
+        // and under Auto only when the initial frontier is dense enough
+        let init_frontier = shared.bitmaps[0].count();
+        let pull0 = program.supports_pull()
+            && match cfg.mode {
+                RunMode::Push => false,
+                RunMode::Pull => true,
+                RunMode::Auto => {
+                    init_frontier > 0 && init_frontier as f64 >= cfg.pull_density * n as f64
+                }
+            };
+        shared.pull_round.store(pull0, Ordering::Relaxed);
         if let Some(tr) = &shared.trace {
-            tr.lock().unwrap().set_initial_frontier(shared.bitmaps[0].count() as u64);
+            tr.lock().unwrap().set_initial_frontier(init_frontier as u64);
         }
 
         let t0 = Instant::now();
@@ -415,11 +632,12 @@ impl Engine {
             red_add: [0.0; N_RED_SLOTS],
             red_max: [f64::NEG_INFINITY; N_RED_SLOTS],
         };
-        let mut batch_reqs: Vec<(VertexId, EdgeRequest)> = Vec::with_capacity(cfg.batch);
-        let mut next_reqs: Vec<(VertexId, EdgeRequest)> = Vec::with_capacity(cfg.batch);
-        // per-worker fetch arena: decoded edges + range scratch reused
-        // across every batch of the run (allocation-free once warm)
-        let mut arena = FetchArena::new();
+        // per-worker fetch slots: each holds one batch's requests plus
+        // its decoded-edge arena, reused across every batch of the run
+        // (allocation-free once warm). `fetch_window + 1` slots bound
+        // how many batches can be in flight at once.
+        let mut slots: Vec<FetchSlot> =
+            (0..cfg.fetch_window + 1).map(|_| FetchSlot::new()).collect();
         // combiner-lane delivery scratch (one word slot per sender lane,
         // reused every round — the sweep allocates nothing once warm)
         let mut lane_words: Vec<u64> = Vec::with_capacity(workers);
@@ -429,6 +647,9 @@ impl Engine {
             ctx.round = round;
             let cur_parity = round % 2;
             let nxt_parity = (round + 1) % 2;
+            // this round's direction: stored by worker 0 before the
+            // round counter, published to us by the final barrier
+            let pull = shared.pull_round.load(Ordering::Relaxed);
             let t0 = Instant::now();
 
             // ---- phase A: deliver messages sent last round -------------
@@ -475,51 +696,148 @@ impl Engine {
 
             // ---- phase B: vertex phase over the activation bitmap ------
             // Chunked claim + steal (see module docs), feeding the
-            // two-batch pipeline: while batch k is being processed, batch
-            // k+1's pages are already streaming into the cache via the
-            // async prefetch — FlashGraph's overlap of computation with
-            // asynchronous I/O (EXPERIMENTS.md §Perf).
+            // completion-driven fetch pipeline: up to `fetch_window`
+            // batches are in flight as async submissions while the
+            // worker processes whichever batch completed first —
+            // FlashGraph's overlap of computation with asynchronous I/O
+            // (EXPERIMENTS.md §Perf).
             ctx.in_message_phase = false;
             let current = &shared.bitmaps[cur_parity];
-            let mut stream = FrontierStream {
-                bm: current,
-                claimer: ChunkClaimer::new(&shared.cursors, shared.nchunks, workers, wid),
-                cur: None,
-                n,
-            };
-            let collect = |stream: &mut FrontierStream<'_>,
-                           reqs: &mut Vec<(VertexId, EdgeRequest)>| {
-                reqs.clear();
+            let mut io_wait_ns = 0u64;
+            let mut blocks_skipped = 0u64;
+            if pull {
+                // ---- B1: edge-less pass over the live frontier --------
+                // run_on_vertex fires once per active vertex exactly as
+                // a push round would, but with no fetched edges: per-
+                // vertex state updates and pull stashes (e.g. PageRank's
+                // share) land here, while edge traffic is deferred to
+                // B2's pull sweep. Non-clearing: B2 still reads
+                // `current.get(src)`; worker 0 retires the bitmap at
+                // bookkeeping.
+                let empty = VertexEdges::default();
+                let mut stream = FrontierStream {
+                    bm: current,
+                    claimer: ChunkClaimer::new(&shared.cursors, shared.nchunks, workers, wid),
+                    cur: None,
+                    n,
+                    clear: false,
+                };
                 while let Some(v) = stream.next_vertex() {
-                    let v = v as VertexId;
-                    reqs.push((v, program.edge_request(v)));
-                    if reqs.len() >= cfg.batch {
-                        break;
-                    }
+                    ctx.c_vertex_runs += 1;
+                    program.run_on_vertex(&mut ctx, v as VertexId, &empty);
                 }
-            };
-            collect(&mut stream, &mut batch_reqs);
-            loop {
-                if batch_reqs.is_empty() {
-                    break;
-                }
-                // look ahead and warm the next batch before blocking
-                collect(&mut stream, &mut next_reqs);
-                if !next_reqs.is_empty() {
-                    source.prefetch(&next_reqs);
-                }
-                source
-                    .fetch_batch_into(&batch_reqs, &mut arena)
-                    .expect("edge fetch failed (graph image unreadable)");
-                ctx.c_vertex_runs += batch_reqs.len() as u64;
-                for (i, &(v, _)) in batch_reqs.iter().enumerate() {
-                    program.run_on_vertex(&mut ctx, v, &arena.edges()[i]);
-                }
-                std::mem::swap(&mut batch_reqs, &mut next_reqs);
+                ctx.c_steals += stream.claimer.steals;
+                // B1 → B2 barrier: stashes written by any worker must be
+                // visible before any worker pulls from them
+                shared.barrier.wait();
+
+                // ---- B2: pull sweep over destination chunks -----------
+                let fsummary = frontier_summary_word(current, n);
+                let pull_req = program.pull_request();
+                let index = source.index();
+                let mut claimer =
+                    ChunkClaimer::new(&shared.pull_cursors, shared.nchunks, workers, wid);
+                run_pipeline(
+                    source,
+                    &mut slots,
+                    cfg.fetch_window,
+                    &mut io_wait_ns,
+                    |slot| loop {
+                        let Some((c, _)) = claimer.next_chunk() else { return false };
+                        // block filter: a published summary disjoint
+                        // from the frontier proves no active source has
+                        // an edge into this chunk — skip its I/O
+                        let known = shared.block_src[c].load(Ordering::Relaxed);
+                        if known != 0 && known & fsummary == 0 {
+                            blocks_skipped += 1;
+                            continue;
+                        }
+                        let start = c * CHUNK_BITS;
+                        let end = ((c + 1) * CHUNK_BITS).min(n);
+                        slot.reqs.clear();
+                        for v in start..end {
+                            let vid = v as VertexId;
+                            let deg = match pull_req {
+                                EdgeRequest::In => index.in_deg(vid) as u64,
+                                EdgeRequest::Out => index.out_deg(vid) as u64,
+                                EdgeRequest::Both => {
+                                    index.in_deg(vid) as u64 + index.out_deg(vid) as u64
+                                }
+                                EdgeRequest::None => 0,
+                            };
+                            if deg > 0 {
+                                slot.reqs.push((vid, pull_req));
+                            }
+                        }
+                        if slot.reqs.is_empty() {
+                            continue;
+                        }
+                        slot.tag = c;
+                        return true;
+                    },
+                    |slot| {
+                        let mut bits = 0u64;
+                        for (&(dst, _), e) in slot.reqs.iter().zip(slot.edges()) {
+                            let (a, b): (&[VertexId], &[VertexId]) = match pull_req {
+                                EdgeRequest::In => (&e.in_neighbors, &[]),
+                                EdgeRequest::Out => (&e.out_neighbors, &[]),
+                                _ => (&e.in_neighbors, &e.out_neighbors),
+                            };
+                            for &u in a.iter().chain(b.iter()) {
+                                bits |= 1u64 << source_bucket(u, n);
+                                if current.get(u as usize) {
+                                    if let Some(m) = program.pull_message(u, dst) {
+                                        ctx.send(dst, m);
+                                    }
+                                }
+                            }
+                        }
+                        // first full scan publishes the chunk's source
+                        // summary (static graph → the value is final;
+                        // one claimant per chunk per round, and rounds
+                        // are barrier-separated)
+                        if bits != 0 && shared.block_src[slot.tag].load(Ordering::Relaxed) == 0
+                        {
+                            shared.block_src[slot.tag].store(bits, Ordering::Relaxed);
+                        }
+                    },
+                );
+            } else {
+                let mut stream = FrontierStream {
+                    bm: current,
+                    claimer: ChunkClaimer::new(&shared.cursors, shared.nchunks, workers, wid),
+                    cur: None,
+                    n,
+                    clear: true,
+                };
+                run_pipeline(
+                    source,
+                    &mut slots,
+                    cfg.fetch_window,
+                    &mut io_wait_ns,
+                    |slot| {
+                        slot.reqs.clear();
+                        while let Some(v) = stream.next_vertex() {
+                            let v = v as VertexId;
+                            slot.reqs.push((v, program.edge_request(v)));
+                            if slot.reqs.len() >= cfg.batch {
+                                break;
+                            }
+                        }
+                        !slot.reqs.is_empty()
+                    },
+                    |slot| {
+                        ctx.c_vertex_runs += slot.reqs.len() as u64;
+                        for (i, &(v, _)) in slot.reqs.iter().enumerate() {
+                            program.run_on_vertex(&mut ctx, v, &slot.edges()[i]);
+                        }
+                    },
+                );
+                ctx.c_steals += stream.claimer.steals;
             }
-            ctx.c_steals += stream.claimer.steals;
             ctx.flush_sends();
 
+            let t3 = Instant::now();
             // merge local counters + publish this worker's reductions
             shared.stats.p2p_msgs.fetch_add(ctx.c_p2p, Ordering::Relaxed);
             shared.stats.multicast_msgs.fetch_add(ctx.c_multicast, Ordering::Relaxed);
@@ -528,6 +846,9 @@ impl Engine {
             shared.stats.vertex_runs.fetch_add(ctx.c_vertex_runs, Ordering::Relaxed);
             shared.stats.steals.fetch_add(ctx.c_steals, Ordering::Relaxed);
             shared.stats.phase_a_ns.fetch_add(phase_a.as_nanos() as u64, Ordering::Relaxed);
+            shared.stats.phase_b_ns.fetch_add((t3 - t2).as_nanos() as u64, Ordering::Relaxed);
+            shared.stats.io_wait_ns.fetch_add(io_wait_ns, Ordering::Relaxed);
+            shared.stats.blocks_skipped.fetch_add(blocks_skipped, Ordering::Relaxed);
             ctx.c_p2p = 0;
             ctx.c_multicast = 0;
             ctx.c_deliveries = 0;
@@ -539,7 +860,6 @@ impl Engine {
             shared.reductions.set(wid, (ctx.red_add, ctx.red_max));
             ctx.red_add = [0.0; N_RED_SLOTS];
             ctx.red_max = [f64::NEG_INFINITY; N_RED_SLOTS];
-            let t3 = Instant::now();
             if shared.trace.is_some() {
                 // publish this round's phase timings for worker 0's
                 // trace sample (own-slot write, read after the barrier)
@@ -549,6 +869,7 @@ impl Engine {
                         phase_a.as_nanos() as u64,
                         (t3 - t2).as_nanos() as u64,
                         (t2 - t1).as_nanos() as u64,
+                        io_wait_ns,
                     ),
                 );
             }
@@ -558,6 +879,13 @@ impl Engine {
             // ---- round bookkeeping (worker 0 only) ---------------------
             if wid == 0 {
                 shared.stats.rounds.fetch_add(1, Ordering::Relaxed);
+                if pull {
+                    shared.stats.pull_rounds.fetch_add(1, Ordering::Relaxed);
+                    // B1 streamed the frontier non-clearing so B2 could
+                    // keep testing `current.get(src)` — retire it now so
+                    // round r+2's parity reuse starts clean
+                    current.clear_all();
+                }
                 // merge the per-worker reduction slots (every worker
                 // overwrote its slot before the barrier above)
                 let mut red_add = [0.0; N_RED_SLOTS];
@@ -609,11 +937,13 @@ impl Engine {
                         combined: st.combined_msgs.load(Ordering::Relaxed),
                         vertex_runs: st.vertex_runs.load(Ordering::Relaxed),
                         steals: st.steals.load(Ordering::Relaxed),
+                        blocks_skipped: st.blocks_skipped.load(Ordering::Relaxed),
                     };
                     let io_now = source.io_stats().snapshot();
                     tr.lock().unwrap().record(
                         round as u64,
                         next_active as u64,
+                        pull,
                         eng,
                         io_now,
                         (0..workers).map(|w| shared.phase_ns.get(w)),
@@ -625,12 +955,25 @@ impl Engine {
                     || cancelled
                     || (next_active == 0 && pending == 0 && !continue_requested)
                     || round + 1 >= cfg.max_rounds;
-                // rewind every chunk cursor for the next round (published
-                // to the other workers by the barrier below)
+                // rewind every chunk cursor (frontier and pull sweeps)
+                // for the next round (published to the other workers by
+                // the barrier below)
                 for w in 0..workers {
-                    shared.cursors[w]
-                        .store(chunk_span(w, workers, shared.nchunks).0, Ordering::Relaxed);
+                    let start = chunk_span(w, workers, shared.nchunks).0;
+                    shared.cursors[w].store(start, Ordering::Relaxed);
+                    shared.pull_cursors[w].store(start, Ordering::Relaxed);
                 }
+                // next round's direction, from the frontier the hook saw
+                let next_pull = program.supports_pull()
+                    && match cfg.mode {
+                        RunMode::Push => false,
+                        RunMode::Pull => true,
+                        RunMode::Auto => {
+                            next_active > 0
+                                && next_active as f64 >= cfg.pull_density * n as f64
+                        }
+                    };
+                shared.pull_round.store(next_pull, Ordering::Relaxed);
                 shared.stop.store(done, Ordering::Release);
                 shared.round.store(round + 1, Ordering::Release);
             }
@@ -648,9 +991,12 @@ impl Engine {
             }
         }
         // fold this worker's fetch-path allocation count into the run
-        // counters (steady-state-zero once the arena is warm; the trace
-        // overhead test pins tracing to not move it)
-        shared.stats.fetch_allocs.fetch_add(arena.allocs(), Ordering::Relaxed);
+        // counters (steady-state-zero once the slot arenas are warm; the
+        // trace overhead test pins tracing to not move it)
+        shared
+            .stats
+            .fetch_allocs
+            .fetch_add(slots.iter().map(|s| s.allocs()).sum::<u64>(), Ordering::Relaxed);
     }
 }
 
@@ -1090,6 +1436,187 @@ mod tests {
         assert!(*prog.ran.get(0));
         assert!(*prog.ran.get(1));
         assert!(!*prog.ran.get(2));
+    }
+
+    /// Pull-capable BFS: level proposals are min-combinable and
+    /// synthesizable per edge, so push and pull rounds must agree.
+    struct PullBfs {
+        level: SharedVec<i64>,
+    }
+
+    impl VertexProgram for PullBfs {
+        type Msg = i64;
+
+        fn edge_request(&self, _v: VertexId) -> EdgeRequest {
+            EdgeRequest::Out
+        }
+
+        fn combiner(&self) -> Option<crate::engine::messages::Combiner<i64>> {
+            Some(crate::engine::messages::Combiner {
+                identity: || i64::MAX,
+                combine: |a, b| *a = (*a).min(*b),
+            })
+        }
+
+        fn run_on_vertex(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, edges: &VertexEdges) {
+            let my = *self.level.get(v as usize);
+            ctx.multicast(&edges.out_neighbors, my + 1);
+        }
+
+        fn run_on_message(&self, ctx: &mut WorkerCtx<'_, i64>, v: VertexId, msg: &i64) {
+            let cur = self.level.get_mut(v as usize);
+            if *cur < 0 || *msg < *cur {
+                *cur = *msg;
+                ctx.activate(v);
+            }
+        }
+
+        fn supports_pull(&self) -> bool {
+            true
+        }
+
+        fn pull_message(&self, src: VertexId, _dst: VertexId) -> Option<i64> {
+            // level[src] is stable through phase B (only run_on_message
+            // writes it), exactly the discipline the contract requires
+            Some(*self.level.get(src as usize) + 1)
+        }
+    }
+
+    fn pull_bfs_levels(
+        n: usize,
+        edges: &[(VertexId, VertexId)],
+        src: VertexId,
+        workers: usize,
+        mode: RunMode,
+    ) -> (Vec<i64>, RunReport) {
+        let g = MemGraph::from_edges(n, edges, true);
+        let prog = PullBfs { level: SharedVec::new(n, -1) };
+        prog.level.set(src as usize, 0);
+        let cfg = EngineConfig { workers, batch: 8, mode, ..Default::default() };
+        let report = Engine::run(&prog, &g, &[src], &cfg);
+        (prog.level.to_vec(), report)
+    }
+
+    #[test]
+    fn source_bucket_and_summary_are_conservative() {
+        let n = 1000;
+        for v in 0..n {
+            assert!(source_bucket(v as VertexId, n) < 64);
+        }
+        assert_eq!(source_bucket(0, n), 0);
+        assert_eq!(source_bucket((n - 1) as VertexId, n), 63);
+        let bm = AtomicBitmap::new(n);
+        assert_eq!(frontier_summary_word(&bm, n), 0, "empty frontier → empty summary");
+        bm.set(0);
+        bm.set(537);
+        bm.set(999);
+        let s = frontier_summary_word(&bm, n);
+        // conservative: every active vertex's bucket must be present
+        for v in [0u32, 537, 999] {
+            assert!(s & (1u64 << source_bucket(v, n)) != 0, "bucket of {v} missing");
+        }
+    }
+
+    #[test]
+    fn pull_rounds_match_push_results() {
+        // push vs pull vs auto on skewed and regular shapes, across
+        // worker counts: levels must be identical, and forced pull on a
+        // supporting program must actually run pull rounds
+        let rmat = gen::rmat(9, 4000, 23);
+        let star = gen::star(512);
+        let cyc = gen::cycle(512);
+        for (name, edges) in [("rmat", &rmat), ("star", &star), ("cycle", &cyc)] {
+            let (baseline, _) = pull_bfs_levels(512, edges, 0, 1, RunMode::Push);
+            for workers in [1, 2, 8] {
+                for mode in [RunMode::Push, RunMode::Pull, RunMode::Auto] {
+                    let (got, r) = pull_bfs_levels(512, edges, 0, workers, mode);
+                    assert_eq!(got, baseline, "{name}: workers={workers} mode={mode:?}");
+                    match mode {
+                        RunMode::Push => assert_eq!(r.engine.pull_rounds, 0),
+                        RunMode::Pull => assert_eq!(
+                            r.engine.pull_rounds, r.engine.rounds,
+                            "{name}: forced pull must pull every round"
+                        ),
+                        RunMode::Auto => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_mode_pulls_only_on_dense_frontiers() {
+        // single-source BFS on a long path: every frontier is one
+        // vertex, far below the density threshold → auto never pulls
+        let n = 2048;
+        let path = gen::path(n);
+        let (_, sparse) = pull_bfs_levels(n, &path, 0, 2, RunMode::Auto);
+        assert_eq!(sparse.engine.pull_rounds, 0, "sparse frontiers must stay push");
+        // full-frontier start on a cycle: round 0 is maximally dense
+        let cyc = gen::cycle(512);
+        let g = MemGraph::from_edges(512, &cyc, true);
+        let prog = PullBfs { level: SharedVec::new(512, -1) };
+        prog.level.set(0, 0);
+        let all: Vec<VertexId> = (0..512).collect();
+        let cfg = EngineConfig { workers: 2, mode: RunMode::Auto, ..Default::default() };
+        let r = Engine::run(&prog, &g, &all, &cfg);
+        assert!(r.engine.pull_rounds >= 1, "dense round 0 must pull: {:?}", r.engine);
+    }
+
+    #[test]
+    fn pull_on_unsupporting_program_degrades_to_push() {
+        // plain Bfs never opts in: mode=Pull must silently run push and
+        // still converge to the same levels
+        let edges = gen::rmat(9, 3000, 31);
+        let baseline = bfs_levels(512, &edges, 0, 2);
+        let g = MemGraph::from_edges(512, &edges, true);
+        let prog = Bfs { level: SharedVec::new(512, -1) };
+        prog.level.set(0, 0);
+        let cfg = EngineConfig { workers: 2, mode: RunMode::Pull, ..Default::default() };
+        let r = Engine::run(&prog, &g, &[0], &cfg);
+        assert_eq!(prog.level.to_vec(), baseline);
+        assert_eq!(r.engine.pull_rounds, 0);
+        assert_eq!(r.engine.blocks_skipped, 0);
+    }
+
+    #[test]
+    fn pull_block_filter_skips_and_stays_correct() {
+        // banded graph u → (u + n/2) mod n: every chunk's sources sit
+        // half the id space away, so once round 0 publishes the
+        // summaries, round 1's one-vertex frontier intersects a single
+        // chunk and every other chunk is skipped without I/O
+        let n = CHUNK_BITS * 8;
+        let edges: Vec<(VertexId, VertexId)> =
+            (0..n).map(|u| (u as VertexId, ((u + n / 2) % n) as VertexId)).collect();
+        let (push_lv, _) = pull_bfs_levels(n, &edges, 0, 2, RunMode::Push);
+        let (pull_lv, r) = pull_bfs_levels(n, &edges, 0, 2, RunMode::Pull);
+        assert_eq!(pull_lv, push_lv, "filter must never change results");
+        assert!(
+            r.engine.blocks_skipped > 0,
+            "later pull rounds must skip summary-miss chunks: {:?}",
+            r.engine
+        );
+        assert_eq!(r.engine.pull_rounds, r.engine.rounds);
+    }
+
+    #[test]
+    fn fetch_window_sizes_agree() {
+        // the overlap window must be invisible to results: forced
+        // synchronous (0), default (2) and deep (7) pipelines produce
+        // identical levels and vertex-run counts
+        let edges = gen::rmat(9, 4000, 7);
+        let g = MemGraph::from_edges(512, &edges, true);
+        let mut runs = vec![];
+        for window in [0usize, 2, 7] {
+            let prog = Bfs { level: SharedVec::new(512, -1) };
+            prog.level.set(0, 0);
+            let cfg =
+                EngineConfig { workers: 3, batch: 8, fetch_window: window, ..Default::default() };
+            let r = Engine::run(&prog, &g, &[0], &cfg);
+            runs.push((prog.level.to_vec(), r.engine.vertex_runs));
+        }
+        assert_eq!(runs[0], runs[1], "window 0 vs 2");
+        assert_eq!(runs[0], runs[2], "window 0 vs 7");
     }
 
     /// Message-phase activation runs the vertex in the same round.

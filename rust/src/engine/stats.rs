@@ -37,10 +37,21 @@ pub struct EngineStats {
     /// Summed per-worker wall time in phase A (message delivery), ns —
     /// the phase the transport rework targets.
     pub phase_a_ns: AtomicU64,
+    /// Summed per-worker wall time in phase B (vertex phase), ns.
+    pub phase_b_ns: AtomicU64,
+    /// Of `phase_b_ns`, time spent *blocked* on edge-fetch completions.
+    /// The overlapped pipeline drives this toward zero while the I/O
+    /// threads stay busy — see [`EngineStatsSnapshot::overlap_ratio`].
+    pub io_wait_ns: AtomicU64,
     /// Total `run_on_vertex` invocations.
     pub vertex_runs: AtomicU64,
     /// Rounds executed.
     pub rounds: AtomicU64,
+    /// Rounds whose vertex phase ran in pull mode.
+    pub pull_rounds: AtomicU64,
+    /// Edge blocks whose I/O was skipped by the per-block source-summary
+    /// filter (pull rounds only).
+    pub blocks_skipped: AtomicU64,
     /// Frontier chunks claimed from another worker's span that yielded
     /// at least one active vertex (empty claimed chunks don't count —
     /// they rebalanced no work).
@@ -97,8 +108,12 @@ impl EngineStats {
             peak_msg_bytes: self.peak_msg_bytes.load(Ordering::Relaxed),
             msg_allocs: self.msg_allocs.load(Ordering::Relaxed),
             phase_a_ns: self.phase_a_ns.load(Ordering::Relaxed),
+            phase_b_ns: self.phase_b_ns.load(Ordering::Relaxed),
+            io_wait_ns: self.io_wait_ns.load(Ordering::Relaxed),
             vertex_runs: self.vertex_runs.load(Ordering::Relaxed),
             rounds: self.rounds.load(Ordering::Relaxed),
+            pull_rounds: self.pull_rounds.load(Ordering::Relaxed),
+            blocks_skipped: self.blocks_skipped.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
             fetch_allocs: self.fetch_allocs.load(Ordering::Relaxed),
             worker_busy_ns: self
@@ -131,8 +146,16 @@ pub struct EngineStatsSnapshot {
     pub msg_allocs: u64,
     /// Summed per-worker phase-A (message delivery) wall time, ns.
     pub phase_a_ns: u64,
+    /// Summed per-worker phase-B (vertex phase) wall time, ns.
+    pub phase_b_ns: u64,
+    /// Of `phase_b_ns`, time blocked on edge-fetch completions, ns.
+    pub io_wait_ns: u64,
     pub vertex_runs: u64,
     pub rounds: u64,
+    /// Rounds whose vertex phase ran in pull mode.
+    pub pull_rounds: u64,
+    /// Edge blocks skipped by the per-block source-summary filter.
+    pub blocks_skipped: u64,
     /// Non-empty frontier chunks executed by a worker other than their
     /// span owner.
     pub steals: u64,
@@ -188,6 +211,20 @@ impl EngineStatsSnapshot {
         std::time::Duration::from_nanos(self.phase_a_ns)
     }
 
+    /// Fraction of phase-B wall time that was compute rather than
+    /// blocked I/O wait: `1 − io_wait/phase_b`, clamped to `[0, 1]`;
+    /// `1.0` when phase B recorded no time at all. A fully serialized
+    /// fetch-then-compute round under I/O-dominated latency drives this
+    /// toward 0; the overlapped pipeline keeps it high — the quantity
+    /// the overlap regression test compares between the two.
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.phase_b_ns == 0 {
+            1.0
+        } else {
+            1.0 - (self.io_wait_ns.min(self.phase_b_ns) as f64 / self.phase_b_ns as f64)
+        }
+    }
+
     /// Terse single-line report.
     pub fn report(&self) -> String {
         let mut s = format!(
@@ -201,6 +238,15 @@ impl EngineStatsSnapshot {
             crate::util::fmt_bytes(self.peak_msg_bytes),
             self.steals,
         );
+        if self.pull_rounds > 0 {
+            s.push_str(&format!(
+                " pull_rounds={} blocks_skipped={}",
+                self.pull_rounds, self.blocks_skipped,
+            ));
+        }
+        if self.phase_b_ns > 0 {
+            s.push_str(&format!(" overlap={:.2}", self.overlap_ratio()));
+        }
         if self.worker_busy_ns.len() >= 2 {
             s.push_str(&format!(
                 " busy_ratio={:.2} busy={} idle={}",
@@ -241,6 +287,19 @@ mod tests {
         let snap = s.snapshot();
         assert!((snap.busy_ratio() - 2.0).abs() < 1e-12, "{}", snap.busy_ratio());
         assert_eq!(snap.total_busy(), std::time::Duration::from_nanos(250));
+    }
+
+    #[test]
+    fn overlap_ratio_edges() {
+        // no phase-B time recorded => neutral ratio
+        assert_eq!(EngineStatsSnapshot::default().overlap_ratio(), 1.0);
+        let mut s = EngineStatsSnapshot { phase_b_ns: 1000, io_wait_ns: 250, ..Default::default() };
+        assert!((s.overlap_ratio() - 0.75).abs() < 1e-12);
+        // wait can exceed phase time under clock skew; clamp to 0
+        s.io_wait_ns = 2000;
+        assert_eq!(s.overlap_ratio(), 0.0);
+        s.io_wait_ns = 0;
+        assert_eq!(s.overlap_ratio(), 1.0);
     }
 
     #[test]

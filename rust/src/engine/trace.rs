@@ -40,6 +40,10 @@ pub struct WorkerPhases {
     pub phase_b_ns: u64,
     /// Wait at the barrier between the phases.
     pub barrier_ns: u64,
+    /// Time inside phase B spent *blocked* on edge I/O completions.
+    /// `phase_b_ns - io_wait_ns` is compute that genuinely overlapped
+    /// in-flight I/O — the quantity the overlap regression test pins.
+    pub io_wait_ns: u64,
 }
 
 /// Everything one round did.
@@ -61,6 +65,12 @@ pub struct RoundSample {
     pub vertex_runs: u64,
     /// Productive foreign chunk claims this round.
     pub steals: u64,
+    /// True when the round's vertex phase ran in pull mode (dense-round
+    /// in-edge iteration) instead of frontier-driven push.
+    pub pull: bool,
+    /// Edge blocks whose I/O was skipped by the per-block source-summary
+    /// filter this round (pull rounds only; 0 on push rounds).
+    pub blocks_skipped: u64,
     /// Per-worker phase timings (length = worker count).
     pub workers: Vec<WorkerPhases>,
     /// I/O attributed to this round (boundary-snapshot delta; the
@@ -77,6 +87,7 @@ pub struct EngineCum {
     pub combined: u64,
     pub vertex_runs: u64,
     pub steals: u64,
+    pub blocks_skipped: u64,
 }
 
 /// Bounded per-round trace recorder. See the module docs for the
@@ -125,16 +136,19 @@ impl RoundTrace {
 
     /// Record one round. `eng` and `io_now` are *cumulative* at this
     /// boundary; `activations` is the post-hook recount of the next
-    /// round's frontier; `phases` yields one timing triple
-    /// `(phase_a_ns, phase_b_ns, barrier_ns)` per worker. Allocates
-    /// nothing: the slot and its phase vector are preallocated.
+    /// round's frontier; `pull` flags a pull-mode vertex phase;
+    /// `phases` yields one timing quad
+    /// `(phase_a_ns, phase_b_ns, barrier_ns, io_wait_ns)` per worker.
+    /// Allocates nothing: the slot and its phase vector are
+    /// preallocated.
     pub fn record(
         &mut self,
         round: u64,
         activations: u64,
+        pull: bool,
         eng: EngineCum,
         io_now: IoStatsSnapshot,
-        phases: impl Iterator<Item = (u64, u64, u64)>,
+        phases: impl Iterator<Item = (u64, u64, u64, u64)>,
     ) {
         let cap = self.slots.len();
         let slot = &mut self.slots[(self.total % cap as u64) as usize];
@@ -146,13 +160,17 @@ impl RoundTrace {
         slot.combined = eng.combined.saturating_sub(self.last_eng.combined);
         slot.vertex_runs = eng.vertex_runs.saturating_sub(self.last_eng.vertex_runs);
         slot.steals = eng.steals.saturating_sub(self.last_eng.steals);
+        slot.pull = pull;
+        slot.blocks_skipped =
+            eng.blocks_skipped.saturating_sub(self.last_eng.blocks_skipped);
         slot.io = io_now.delta(&self.last_io);
         slot.workers.clear();
-        for (a, b, bar) in phases {
+        for (a, b, bar, wait) in phases {
             slot.workers.push(WorkerPhases {
                 phase_a_ns: a,
                 phase_b_ns: b,
                 barrier_ns: bar,
+                io_wait_ns: wait,
             });
         }
         self.total += 1;
@@ -219,6 +237,7 @@ impl RoundTrace {
             out.logical_bytes += s.io.logical_bytes;
             out.thread_waits += s.io.thread_waits;
             out.evictions += s.io.evictions;
+            out.retries += s.io.retries;
         }
         out.latency = self.last_io.latency;
         out
@@ -261,6 +280,8 @@ fn sample_to_json(s: &RoundSample) -> Json {
         ("combined", Json::u(s.combined)),
         ("vertex_runs", Json::u(s.vertex_runs)),
         ("steals", Json::u(s.steals)),
+        ("pull", Json::u(s.pull as u64)),
+        ("blocks_skipped", Json::u(s.blocks_skipped)),
         (
             "workers",
             Json::Arr(
@@ -271,6 +292,7 @@ fn sample_to_json(s: &RoundSample) -> Json {
                             Json::u(w.phase_a_ns),
                             Json::u(w.phase_b_ns),
                             Json::u(w.barrier_ns),
+                            Json::u(w.io_wait_ns),
                         ])
                     })
                     .collect(),
@@ -310,16 +332,18 @@ mod tests {
         t.record(
             0,
             4,
+            false,
             EngineCum { sent: 5, delivered: 5, ..Default::default() },
             io_snap(300, 3),
-            [(1, 2, 3), (4, 5, 6)].into_iter(),
+            [(1, 2, 3, 1), (4, 5, 6, 2)].into_iter(),
         );
         t.record(
             1,
             0,
-            EngineCum { sent: 9, delivered: 9, ..Default::default() },
+            true,
+            EngineCum { sent: 9, delivered: 9, blocks_skipped: 3, ..Default::default() },
             io_snap(450, 5),
-            [(1, 2, 3), (4, 5, 6)].into_iter(),
+            [(1, 2, 3, 1), (4, 5, 6, 2)].into_iter(),
         );
         // async I/O lands after the last boundary; finish folds it in
         let fin = io_snap(500, 6);
@@ -341,6 +365,11 @@ mod tests {
         assert_eq!(rounds[1].io.bytes_read, 200, "finish extends the last round");
         assert_eq!(rounds[0].workers.len(), 2);
         assert_eq!(rounds[0].workers[1].phase_b_ns, 5);
+        assert_eq!(rounds[0].workers[1].io_wait_ns, 2);
+        assert!(!rounds[0].pull);
+        assert!(rounds[1].pull);
+        assert_eq!(rounds[0].blocks_skipped, 0);
+        assert_eq!(rounds[1].blocks_skipped, 3, "cumulative counter differenced");
     }
 
     #[test]
@@ -351,9 +380,10 @@ mod tests {
             t.record(
                 r,
                 1,
+                false,
                 EngineCum { sent: r + 1, ..Default::default() },
                 IoStatsSnapshot::default(),
-                std::iter::once((0, 0, 0)),
+                std::iter::once((0, 0, 0, 0)),
             );
         }
         assert_eq!(t.len(), TRACE_CAP);
@@ -372,14 +402,19 @@ mod tests {
         t.record(
             0,
             0,
-            EngineCum::default(),
+            true,
+            EngineCum { blocks_skipped: 2, ..Default::default() },
             io_snap(64, 1),
-            std::iter::once((10, 20, 30)),
+            std::iter::once((10, 20, 30, 5)),
         );
         let j = t.to_json();
         assert_eq!(j.get("rounds").unwrap().as_u64(), Some(1));
         let s0 = &j.get("samples").unwrap().as_array().unwrap()[0];
         assert_eq!(s0.get("frontier").unwrap().as_u64(), Some(3));
+        assert_eq!(s0.get("pull").unwrap().as_u64(), Some(1));
+        assert_eq!(s0.get("blocks_skipped").unwrap().as_u64(), Some(2));
+        let w0 = &s0.get("workers").unwrap().as_array().unwrap()[0];
+        assert_eq!(w0.as_array().unwrap().len(), 4, "phase quad incl. io_wait");
         assert_eq!(
             s0.get("io").unwrap().get("bytes_read").unwrap().as_u64(),
             Some(64)

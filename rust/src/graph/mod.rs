@@ -30,4 +30,4 @@ pub use csr::Csr;
 pub use format::{
     EdgeEncoding, EdgeRequest, FormatError, GraphHeader, GraphIndex, VertexEdges,
 };
-pub use source::{EdgeSource, FetchArena, MemGraph, SemGraph};
+pub use source::{EdgeSource, FetchArena, FetchSlot, MemGraph, SemGraph};

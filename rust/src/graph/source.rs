@@ -23,7 +23,9 @@ use std::sync::Arc;
 
 use crate::graph::builder::RamImage;
 use crate::graph::format::{EdgeRequest, GraphIndex, VertexEdges};
-use crate::safs::{IoConfig, IoPool, IoStats, PageCache, RangeBuf, RangeScratch, SemFile};
+use crate::safs::{
+    IoConfig, IoPool, IoStats, PageCache, PendingRead, RangeBuf, RangeScratch, SemFile,
+};
 use crate::VertexId;
 
 /// Per-worker reusable fetch state: the engine's steady-state
@@ -138,6 +140,48 @@ fn decode_record(
     }
 }
 
+/// One unit of the engine's overlapped fetch pipeline: a batch of
+/// requests, the per-slot [`FetchArena`] its results decode into, and
+/// (for SEM sources) the in-flight I/O between
+/// [`EdgeSource::submit_batch`] and [`EdgeSource::finish_batch`].
+///
+/// Engine workers keep a small ring of slots: fill `reqs`, submit, keep
+/// filling/submitting further slots while earlier ones' pages land, and
+/// finish whichever completes first. Slots are reused across batches so
+/// the steady state stays allocation-free (tracked by [`Self::allocs`]).
+#[derive(Default)]
+pub struct FetchSlot {
+    /// The batch's requests; valid between fill and `finish_batch`.
+    pub reqs: Vec<(VertexId, EdgeRequest)>,
+    /// Engine-assigned label for the work this slot carries (the chunk
+    /// id in the runner); opaque to sources.
+    pub tag: usize,
+    arena: FetchArena,
+    pending: Option<PendingRead>,
+}
+
+impl FetchSlot {
+    /// Fresh slot with no retained buffers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decoded edges of the last finished batch, aligned with `reqs`.
+    pub fn edges(&self) -> &[VertexEdges] {
+        self.arena.edges()
+    }
+
+    /// Cumulative heap allocations through the slot's arena.
+    pub fn allocs(&self) -> u64 {
+        self.arena.allocs()
+    }
+
+    /// True while a submitted batch has not been finished yet.
+    pub fn in_flight(&self) -> bool {
+        self.pending.is_some()
+    }
+}
+
 /// Abstract supply of per-vertex edge data.
 pub trait EdgeSource: Send + Sync {
     /// The in-memory vertex index (degrees, offsets).
@@ -164,6 +208,30 @@ pub trait EdgeSource: Send + Sync {
     /// Fetch a single vertex's edge data.
     fn fetch(&self, v: VertexId, req: EdgeRequest) -> crate::Result<VertexEdges> {
         Ok(self.fetch_batch(&[(v, req)])?.pop().unwrap())
+    }
+
+    /// Begin fetching `slot.reqs` without blocking. SEM sources probe
+    /// the cache and hand misses to the I/O pool here; the default is a
+    /// no-op, meaning all work happens in [`Self::finish_batch`] —
+    /// correct for in-memory sources, which have nothing to overlap.
+    fn submit_batch(&self, _slot: &mut FetchSlot) -> crate::Result<()> {
+        Ok(())
+    }
+
+    /// True once the slot's submitted I/O has fully landed, i.e.
+    /// [`Self::finish_batch`] will not block. Sources that do all work
+    /// synchronously are always ready.
+    fn poll_batch(&self, _slot: &mut FetchSlot) -> bool {
+        true
+    }
+
+    /// Complete the slot: wait for any outstanding I/O and decode
+    /// `slot.reqs` into the slot's arena (results via
+    /// [`FetchSlot::edges`]). Must also work on a slot that was never
+    /// submitted — the default simply performs the synchronous fetch.
+    fn finish_batch(&self, slot: &mut FetchSlot) -> crate::Result<()> {
+        let FetchSlot { reqs, arena, .. } = slot;
+        self.fetch_batch_into(reqs, arena)
     }
 
     /// Hint that these vertices will be fetched soon.
@@ -267,6 +335,63 @@ impl SemGraph {
         arena.decode_bufs(reqs, &self.index);
         Ok(())
     }
+
+    /// [`EdgeSource::submit_batch`] with per-job attribution: computes
+    /// the batch's byte ranges, counts logical bytes, probes the cache
+    /// and hands misses to the pool — all without blocking.
+    pub fn submit_batch_tracked(
+        &self,
+        slot: &mut FetchSlot,
+        job: Option<&IoStats>,
+    ) -> crate::Result<()> {
+        let FetchSlot { reqs, arena, pending, .. } = slot;
+        arena.ranges.clear();
+        let cap = arena.ranges.capacity();
+        arena.ranges.extend(reqs.iter().map(|&(v, r)| self.index.byte_range(v, r)));
+        if arena.ranges.capacity() != cap {
+            arena.allocs += 1;
+        }
+        let logical: u64 = arena.ranges.iter().map(|&(_, len)| len as u64).sum();
+        self.stats.add_logical_bytes(logical);
+        if let Some(j) = job {
+            j.add_logical_bytes(logical);
+        }
+        *pending = Some(self.adj.submit_ranges(&arena.ranges, job)?);
+        Ok(())
+    }
+
+    /// [`EdgeSource::poll_batch`] with per-job attribution.
+    pub fn poll_batch_tracked(&self, slot: &mut FetchSlot, job: Option<&IoStats>) -> bool {
+        match slot.pending.as_mut() {
+            Some(p) => self.adj.poll_ranges(p, job),
+            None => true,
+        }
+    }
+
+    /// [`EdgeSource::finish_batch`] with per-job attribution. A slot
+    /// that was never submitted falls back to the synchronous fetch.
+    pub fn finish_batch_tracked(
+        &self,
+        slot: &mut FetchSlot,
+        job: Option<&IoStats>,
+    ) -> crate::Result<()> {
+        match slot.pending.take() {
+            Some(p) => {
+                let FetchSlot { reqs, arena, .. } = slot;
+                let cap = arena.bufs.capacity();
+                self.adj.finish_ranges(&arena.ranges, p, job, &mut arena.scratch, &mut arena.bufs)?;
+                if arena.bufs.capacity() != cap {
+                    arena.allocs += 1;
+                }
+                arena.decode_bufs(reqs, &self.index);
+                Ok(())
+            }
+            None => {
+                let FetchSlot { reqs, arena, .. } = slot;
+                self.fetch_batch_tracked_into(reqs, job, arena)
+            }
+        }
+    }
 }
 
 impl EdgeSource for SemGraph {
@@ -284,6 +409,18 @@ impl EdgeSource for SemGraph {
         arena: &mut FetchArena,
     ) -> crate::Result<()> {
         self.fetch_batch_tracked_into(reqs, None, arena)
+    }
+
+    fn submit_batch(&self, slot: &mut FetchSlot) -> crate::Result<()> {
+        self.submit_batch_tracked(slot, None)
+    }
+
+    fn poll_batch(&self, slot: &mut FetchSlot) -> bool {
+        self.poll_batch_tracked(slot, None)
+    }
+
+    fn finish_batch(&self, slot: &mut FetchSlot) -> crate::Result<()> {
+        self.finish_batch_tracked(slot, None)
     }
 
     fn prefetch(&self, reqs: &[(VertexId, EdgeRequest)]) {
@@ -535,6 +672,100 @@ mod tests {
         for (i, e) in arena.edges().iter().enumerate() {
             assert_eq!(e.out_neighbors, owned[i].out_neighbors);
         }
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+
+    #[test]
+    fn slot_pipeline_agrees_with_sync_fetch() {
+        let n = 300;
+        let edges = gen::rmat(9, 3000, 5);
+        let edges: Vec<_> = edges
+            .into_iter()
+            .filter(|&(u, v)| (u as usize) < n && (v as usize) < n)
+            .collect();
+        let base = build_files(n, &edges, true, "slot-agree");
+        let sem = SemGraph::open(&base, 64 * 4096, IoConfig::default()).unwrap();
+        let mem = MemGraph::from_edges(n, &edges, true);
+        let reqs: Vec<_> = (0..n as VertexId)
+            .map(|v| {
+                let r = match v % 3 {
+                    0 => EdgeRequest::In,
+                    1 => EdgeRequest::Out,
+                    _ => EdgeRequest::Both,
+                };
+                (v, r)
+            })
+            .collect();
+        for src in [&sem as &dyn EdgeSource, &mem as &dyn EdgeSource] {
+            let owned = src.fetch_batch(&reqs).unwrap();
+            let mut slot = FetchSlot::new();
+            slot.reqs = reqs.clone();
+            src.submit_batch(&mut slot).unwrap();
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while !src.poll_batch(&mut slot) {
+                assert!(std::time::Instant::now() < deadline, "slot never became ready");
+                std::thread::yield_now();
+            }
+            src.finish_batch(&mut slot).unwrap();
+            assert!(!slot.in_flight());
+            assert_eq!(slot.edges().len(), reqs.len());
+            for (i, e) in slot.edges().iter().enumerate() {
+                assert_eq!(e.in_neighbors, owned[i].in_neighbors, "req {i}");
+                assert_eq!(e.out_neighbors, owned[i].out_neighbors, "req {i}");
+            }
+        }
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+
+    #[test]
+    fn overlapping_slots_finish_in_any_order() {
+        let n = 400;
+        let edges = gen::rmat(9, 4000, 21);
+        let edges: Vec<_> = edges
+            .into_iter()
+            .filter(|&(u, v)| (u as usize) < n && (v as usize) < n)
+            .collect();
+        let base = build_files(n, &edges, true, "slot-overlap");
+        let sem = SemGraph::open(&base, 64 * 4096, IoConfig::default()).unwrap();
+        let owned = sem
+            .fetch_batch(&(0..n as VertexId).map(|v| (v, EdgeRequest::Out)).collect::<Vec<_>>())
+            .unwrap();
+        // three in-flight slots over disjoint vertex thirds, finished in
+        // reverse submit order
+        let mut slots: Vec<FetchSlot> = (0..3)
+            .map(|k| {
+                let mut s = FetchSlot::new();
+                s.tag = k;
+                s.reqs = (0..n as VertexId)
+                    .filter(|v| *v as usize % 3 == k)
+                    .map(|v| (v, EdgeRequest::Out))
+                    .collect();
+                sem.submit_batch(&mut s).unwrap();
+                s
+            })
+            .collect();
+        while let Some(mut s) = slots.pop() {
+            sem.finish_batch(&mut s).unwrap();
+            for (&(v, _), e) in s.reqs.iter().zip(s.edges()) {
+                assert_eq!(e.out_neighbors, owned[v as usize].out_neighbors, "v={v}");
+            }
+        }
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+
+    #[test]
+    fn finish_without_submit_falls_back_to_sync_fetch() {
+        let edges = gen::cycle(64);
+        let base = build_files(64, &edges, true, "slot-nosubmit");
+        let sem = SemGraph::open(&base, 64 * 4096, IoConfig::default()).unwrap();
+        let mut slot = FetchSlot::new();
+        slot.reqs = vec![(5, EdgeRequest::Out), (6, EdgeRequest::Out)];
+        sem.finish_batch(&mut slot).unwrap();
+        assert_eq!(slot.edges()[0].out_neighbors, vec![6]);
+        assert_eq!(slot.edges()[1].out_neighbors, vec![7]);
         let _ = std::fs::remove_file(base.with_extension("gy-idx"));
         let _ = std::fs::remove_file(base.with_extension("gy-adj"));
     }

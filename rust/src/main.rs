@@ -46,7 +46,9 @@ USAGE:
   graphyti info     --graph PATH
   graphyti run ALG  --graph PATH [--mem] [--variant V] [--num N]
                     [--cache-mb N] [--io-threads N] [--io-delay-us N]
-                    [--workers N] [--config FILE] [--trace off|table|json]
+                    [--workers N] [--mode push|pull|auto] [--pull-density F]
+                    [--fetch-window N] [--config FILE]
+                    [--trace off|table|json]
   graphyti verify   --graph PATH [--iters N]
   graphyti serve    [--port P] [--cache-mb N] [--budget-mb N]
                     [--exec-threads N] [--io-threads N] [--io-delay-us N]
@@ -69,10 +71,16 @@ Service mode: `serve` multiplexes concurrent jobs over one shared page
 cache + I/O pool, with an admission budget on summed per-job O(n) state.
 `submit`/`status`/`metrics` speak its JSON-lines TCP protocol.
 
+Rounds: `--mode auto` pulls along in-edges on dense frontiers (programs
+that opt in) and pushes otherwise; `--fetch-window N` keeps N edge
+batches in flight per worker beyond the one being processed (0 =
+synchronous fetch-then-compute baseline).
+
 Observability: `--trace table` prints a per-round table (frontier,
-messages, per-phase time, exact per-round I/O deltas); `--trace json`
-emits the same trace as one JSON line. `metrics --text` produces a
-Prometheus-style exposition for scraping.
+messages, per-phase time, I/O-wait, direction, skipped edge blocks,
+exact per-round I/O deltas); `--trace json` emits the same trace as one
+JSON line. `metrics --text` produces a Prometheus-style exposition for
+scraping.
 ";
 
 /// Parse a `--format` value ("v1"/"1"/"v2"/"2") into a version number.
@@ -139,11 +147,21 @@ fn build_config(args: &Args) -> graphyti::Result<RunConfig> {
         Some(p) => RunConfig::load(&PathBuf::from(p))?,
         None => RunConfig::default(),
     };
-    for key in
-        ["cache-mb", "io-threads", "io-delay-us", "workers", "batch", "seed", "transport", "trace"]
-    {
+    for key in [
+        "cache-mb",
+        "io-threads",
+        "io-delay-us",
+        "workers",
+        "batch",
+        "seed",
+        "transport",
+        "mode",
+        "pull-density",
+        "fetch-window",
+        "trace",
+    ] {
         if let Some(v) = args.get(key) {
-            cfg.set(&key.replace('-', "_").replace("cache_mb", "cache_mb"), v)?;
+            cfg.set(&key.replace('-', "_"), v)?;
         }
     }
     Ok(cfg)
@@ -279,22 +297,26 @@ fn cmd_run(args: &Args) -> graphyti::Result<()> {
 fn print_trace_table(tr: &RoundTrace) {
     let ms = |ns: u64| format!("{:.2}", ns as f64 / 1e6);
     let mut t = Table::new(&[
-        "round", "frontier", "activ", "sent", "comb", "steals", "phA ms", "phB ms", "bar ms",
-        "disk", "preads", "hit%",
+        "round", "dir", "frontier", "activ", "sent", "comb", "steals", "skip", "phA ms", "phB ms",
+        "iow ms", "bar ms", "disk", "preads", "hit%",
     ]);
     for s in tr.samples() {
         let pa = s.workers.iter().map(|w| w.phase_a_ns).max().unwrap_or(0);
         let pb = s.workers.iter().map(|w| w.phase_b_ns).max().unwrap_or(0);
         let bar = s.workers.iter().map(|w| w.barrier_ns).max().unwrap_or(0);
+        let iow = s.workers.iter().map(|w| w.io_wait_ns).max().unwrap_or(0);
         t.row(&[
             s.round.to_string(),
+            if s.pull { "pull" } else { "push" }.to_string(),
             s.frontier.to_string(),
             s.activations.to_string(),
             s.sent.to_string(),
             s.combined.to_string(),
             s.steals.to_string(),
+            s.blocks_skipped.to_string(),
             ms(pa),
             ms(pb),
+            ms(iow),
             ms(bar),
             fmt_bytes(s.io.bytes_read),
             s.io.physical_reads.to_string(),

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
-use super::io::{coalesce, IoPool, RunRequest};
+use super::io::{coalesce, IoPool, RunReply, RunRequest};
 use super::page_cache::{PageCache, PageRef, PAGE_SIZE};
 use super::stats::IoStats;
 
@@ -105,6 +105,29 @@ impl RangeScratch {
                 self.free.push(v);
             }
         }
+    }
+}
+
+/// An in-flight batch read started by [`SemFile::submit_ranges`].
+///
+/// Holds the page views already secured (cache hits at submit time plus
+/// absorbed completions) and the count of coalesced runs still inside
+/// the pool. Dropping a `PendingRead` abandons the batch: outstanding
+/// runs still complete and land in the cache (the pool ignores a closed
+/// reply channel), they just aren't assembled.
+pub struct PendingRead {
+    rx: std::sync::mpsc::Receiver<RunReply>,
+    outstanding: usize,
+    /// Pages secured so far, `(file-local page number, view)`.
+    have: Vec<(u64, PageRef)>,
+    /// Submit time — end-to-end fetch latency is measured from here.
+    t0: std::time::Instant,
+}
+
+impl PendingRead {
+    /// Coalesced runs still being serviced by the pool.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
     }
 }
 
@@ -305,42 +328,7 @@ impl SemFile {
         have.sort_unstable_by_key(|&(p, _)| p);
 
         // 4. assemble the requested ranges from the page set
-        let lookup = |p: u64| -> &PageRef {
-            let idx = have.binary_search_by_key(&p, |&(q, _)| q).expect("page present");
-            &have[idx].1
-        };
-        for &(off, len) in ranges {
-            let first = off / PAGE_SIZE as u64;
-            let in_page = (off % PAGE_SIZE as u64) as usize;
-            if len == 0 || in_page + len <= PAGE_SIZE {
-                // common case: the whole range lives in one page — hand
-                // out a view, copy nothing. (Empty ranges view page 0 of
-                // the range's nominal position iff it exists; use an
-                // empty owned buffer instead to avoid a fake lookup.)
-                if len == 0 {
-                    out.push(RangeBuf::Owned(take_buf(free, allocs, 0)));
-                } else {
-                    out.push(RangeBuf::Page {
-                        page: lookup(first).clone(),
-                        start: in_page,
-                        len,
-                    });
-                }
-                continue;
-            }
-            // page-spanning: assemble into a recycled scratch buffer
-            let mut buf = take_buf(free, allocs, len);
-            let mut pos = off;
-            let end = off + len as u64;
-            while pos < end {
-                let p = pos / PAGE_SIZE as u64;
-                let in_page = (pos % PAGE_SIZE as u64) as usize;
-                let take = ((end - pos) as usize).min(PAGE_SIZE - in_page);
-                buf.extend_from_slice(&lookup(p)[in_page..in_page + take]);
-                pos += take as u64;
-            }
-            out.push(RangeBuf::Owned(buf));
-        }
+        assemble(ranges, have, free, allocs, out);
         // drop the batch's page refs so evicted pages' run buffers can
         // free between batches
         have.clear();
@@ -350,6 +338,153 @@ impl SemFile {
             j.fetch_latency_us.record(fetch_us);
         }
         Ok(())
+    }
+
+    /// Start a batch read without blocking: cache probes happen now
+    /// (hits and misses are counted at submit time), misses are
+    /// deduplicated, coalesced and handed to the pool, and the returned
+    /// [`PendingRead`] tracks the outstanding runs. Drive it with
+    /// [`Self::poll_ranges`] while doing other work, then call
+    /// [`Self::finish_ranges`] with the *same* `ranges` to assemble the
+    /// results.
+    ///
+    /// This is the engine's overlap primitive: several `PendingRead`s
+    /// from one worker can be in flight at once, and compute on a
+    /// completed batch proceeds while later batches' pages are still in
+    /// the pool. Stats attribution mirrors [`Self::read_ranges_into`]:
+    /// requests/hits/misses/merges at submit, physical reads and bytes
+    /// as completions are absorbed, a thread wait only if
+    /// `finish_ranges` actually blocks.
+    pub fn submit_ranges(
+        &self,
+        ranges: &[ByteRange],
+        job: Option<&IoStats>,
+    ) -> crate::Result<PendingRead> {
+        let t0 = std::time::Instant::now();
+        self.stats.add_read_request(ranges.len() as u64);
+        if let Some(j) = job {
+            j.add_read_request(ranges.len() as u64);
+        }
+        let mut needed: Vec<u64> = Vec::new();
+        for &(off, len) in ranges {
+            if off + len as u64 > self.len {
+                bail!(
+                    "read past EOF: offset {off} + len {len} > file len {}",
+                    self.len
+                );
+            }
+            if len == 0 {
+                continue;
+            }
+            let first = off / PAGE_SIZE as u64;
+            let last = (off + len as u64 - 1) / PAGE_SIZE as u64;
+            needed.extend(first..=last);
+        }
+        needed.sort_unstable();
+        needed.dedup();
+        let mut have = Vec::with_capacity(needed.len());
+        let mut misses = Vec::new();
+        for &p in &needed {
+            match self.cache.get_tracked(self.key_base + p, job) {
+                Some(d) => have.push((p, d)),
+                None => misses.push(p),
+            }
+        }
+        let (tx, rx) = channel();
+        let mut outstanding = 0;
+        if !misses.is_empty() {
+            let runs = coalesce(&misses, self.pool.config().max_run_pages);
+            self.stats.add_merged((misses.len() - runs.len()) as u64);
+            if let Some(j) = job {
+                j.add_merged((misses.len() - runs.len()) as u64);
+            }
+            outstanding = runs.len();
+            for (start, n) in runs {
+                self.pool.submit(RunRequest {
+                    file: self.file.clone(),
+                    file_len: self.len,
+                    start_page: start,
+                    npages: n,
+                    reply: tx.clone(),
+                });
+            }
+        }
+        drop(tx);
+        Ok(PendingRead { rx, outstanding, have, t0 })
+    }
+
+    /// Absorb any completions that have already landed, without
+    /// blocking. Returns `true` once every run of the batch is in (at
+    /// which point [`Self::finish_ranges`] will not block).
+    pub fn poll_ranges(&self, pending: &mut PendingRead, job: Option<&IoStats>) -> bool {
+        while pending.outstanding > 0 {
+            match pending.rx.try_recv() {
+                Ok(reply) => self.absorb_reply(reply, pending, job),
+                Err(_) => break,
+            }
+        }
+        pending.outstanding == 0
+    }
+
+    /// Complete a batch started by [`Self::submit_ranges`]: block for
+    /// any still-outstanding runs (counted as one thread wait, timed
+    /// into the wait histogram — zero-cost if polling already drained
+    /// them), then assemble `ranges` into `out` exactly as
+    /// [`Self::read_ranges_into`] does. `ranges` must be the same slice
+    /// contents the batch was submitted with.
+    pub fn finish_ranges(
+        &self,
+        ranges: &[ByteRange],
+        mut pending: PendingRead,
+        job: Option<&IoStats>,
+        scratch: &mut RangeScratch,
+        out: &mut Vec<RangeBuf>,
+    ) -> crate::Result<()> {
+        scratch.recycle(out);
+        if pending.outstanding > 0 {
+            self.stats.add_thread_wait(1);
+            if let Some(j) = job {
+                j.add_thread_wait(1);
+            }
+            let wait_t0 = std::time::Instant::now();
+            while pending.outstanding > 0 {
+                let reply = pending.rx.recv().context("io pool reply channel closed")?;
+                self.absorb_reply(reply, &mut pending, job);
+            }
+            let wait_us = wait_t0.elapsed().as_micros() as u64;
+            self.stats.wait_latency_us.record(wait_us);
+            if let Some(j) = job {
+                j.wait_latency_us.record(wait_us);
+            }
+        }
+        pending.have.sort_unstable_by_key(|&(p, _)| p);
+        let RangeScratch { free, allocs, .. } = scratch;
+        assemble(ranges, &pending.have, free, allocs, out);
+        let fetch_us = pending.t0.elapsed().as_micros() as u64;
+        self.stats.fetch_latency_us.record(fetch_us);
+        if let Some(j) = job {
+            j.fetch_latency_us.record(fetch_us);
+        }
+        Ok(())
+    }
+
+    /// Cache-insert one completed run and credit its cost. The pool
+    /// already counted the run into the global stats; only the per-job
+    /// mirror happens here.
+    fn absorb_reply(&self, reply: RunReply, pending: &mut PendingRead, job: Option<&IoStats>) {
+        if let Some(j) = job {
+            if reply.bytes_read > 0 {
+                j.add_physical_read(1);
+                j.add_bytes_read(reply.bytes_read);
+            }
+        }
+        for i in 0..reply.npages {
+            let p = reply.start_page + i as u64;
+            let view = reply.page(i);
+            self.cache.insert(self.key_base + p, view.clone());
+            pending.have.push((p, view));
+        }
+        pending.outstanding -= 1;
     }
 
     /// Prefetch hint: asynchronously warm the cache for the byte ranges
@@ -412,6 +547,55 @@ impl SemFile {
 /// growing a smaller one, so repeated batches with the same range mix
 /// converge to zero growth (the free list is a handful of entries —
 /// one per page-spanning range of a batch — so the scan is trivial).
+/// Step 4 of the batch read, shared by the sync and async paths:
+/// assemble each requested range from the sorted page set `have`.
+/// Single-page ranges become zero-copy views; page-spanning ranges are
+/// built in recycled scratch buffers.
+fn assemble(
+    ranges: &[ByteRange],
+    have: &[(u64, PageRef)],
+    free: &mut Vec<Vec<u8>>,
+    allocs: &mut u64,
+    out: &mut Vec<RangeBuf>,
+) {
+    let lookup = |p: u64| -> &PageRef {
+        let idx = have.binary_search_by_key(&p, |&(q, _)| q).expect("page present");
+        &have[idx].1
+    };
+    for &(off, len) in ranges {
+        let first = off / PAGE_SIZE as u64;
+        let in_page = (off % PAGE_SIZE as u64) as usize;
+        if len == 0 || in_page + len <= PAGE_SIZE {
+            // common case: the whole range lives in one page — hand
+            // out a view, copy nothing. (Empty ranges view page 0 of
+            // the range's nominal position iff it exists; use an
+            // empty owned buffer instead to avoid a fake lookup.)
+            if len == 0 {
+                out.push(RangeBuf::Owned(take_buf(free, allocs, 0)));
+            } else {
+                out.push(RangeBuf::Page {
+                    page: lookup(first).clone(),
+                    start: in_page,
+                    len,
+                });
+            }
+            continue;
+        }
+        // page-spanning: assemble into a recycled scratch buffer
+        let mut buf = take_buf(free, allocs, len);
+        let mut pos = off;
+        let end = off + len as u64;
+        while pos < end {
+            let p = pos / PAGE_SIZE as u64;
+            let in_page = (pos % PAGE_SIZE as u64) as usize;
+            let take = ((end - pos) as usize).min(PAGE_SIZE - in_page);
+            buf.extend_from_slice(&lookup(p)[in_page..in_page + take]);
+            pos += take as u64;
+        }
+        out.push(RangeBuf::Owned(buf));
+    }
+}
+
 fn take_buf(free: &mut Vec<Vec<u8>>, allocs: &mut u64, len: usize) -> Vec<u8> {
     if let Some(i) = free.iter().position(|v| v.capacity() >= len) {
         let mut v = free.swap_remove(i);
@@ -674,6 +858,100 @@ mod tests {
             f.read(i * PAGE_SIZE as u64, PAGE_SIZE).unwrap();
         }
         assert_eq!(&held[..], &data[5..55], "view must outlive eviction");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn submit_poll_finish_matches_sync_read() {
+        let data = pattern(PAGE_SIZE * 16);
+        let (path, f) = setup(&data, 128);
+        let ranges: Vec<ByteRange> = vec![
+            (10, 100),
+            (PAGE_SIZE as u64 - 50, 100), // page-spanning
+            (PAGE_SIZE as u64 * 7, PAGE_SIZE),
+            (3, 0), // empty
+        ];
+        let mut pending = f.submit_ranges(&ranges, None).unwrap();
+        assert!(pending.outstanding() > 0, "cold batch must go to the pool");
+        // drive to completion without blocking
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !f.poll_ranges(&mut pending, None) {
+            assert!(std::time::Instant::now() < deadline, "batch never completed");
+            std::thread::yield_now();
+        }
+        let mut scratch = RangeScratch::new();
+        let mut out = Vec::new();
+        let waits_before = f.stats().snapshot().thread_waits;
+        f.finish_ranges(&ranges, pending, None, &mut scratch, &mut out).unwrap();
+        for (got, &(off, len)) in out.iter().zip(&ranges) {
+            assert_eq!(&got[..], &data[off as usize..off as usize + len]);
+        }
+        assert_eq!(
+            f.stats().snapshot().thread_waits,
+            waits_before,
+            "fully-polled finish must not block"
+        );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn finish_without_poll_blocks_and_counts_a_wait() {
+        let data = pattern(PAGE_SIZE * 8);
+        let (path, f) = setup(&data, 128);
+        let ranges = [(0u64, PAGE_SIZE * 3)];
+        let job = IoStats::new();
+        let pending = f.submit_ranges(&ranges, Some(&job)).unwrap();
+        let mut scratch = RangeScratch::new();
+        let mut out = Vec::new();
+        f.finish_ranges(&ranges, pending, Some(&job), &mut scratch, &mut out).unwrap();
+        assert_eq!(&out[0][..], &data[..PAGE_SIZE * 3]);
+        let j = job.snapshot();
+        assert_eq!(j.read_requests, 1);
+        assert_eq!(j.cache_misses, 3);
+        assert_eq!(j.physical_reads, 1, "one coalesced run: {j:?}");
+        assert_eq!(j.bytes_read, 3 * PAGE_SIZE as u64);
+        assert_eq!(j.thread_waits, 1, "unpolled finish blocks once");
+        assert_eq!(j.latency.fetch.count, 1, "async fetch records latency");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn warm_submit_is_complete_immediately() {
+        let data = pattern(PAGE_SIZE * 4);
+        let (path, f) = setup(&data, 128);
+        let ranges = [(0u64, PAGE_SIZE * 2)];
+        f.read_ranges(&ranges).unwrap(); // warm the cache
+        let mut pending = f.submit_ranges(&ranges, None).unwrap();
+        assert_eq!(pending.outstanding(), 0, "warm batch needs no I/O");
+        assert!(f.poll_ranges(&mut pending, None));
+        let waits_before = f.stats().snapshot().thread_waits;
+        let mut scratch = RangeScratch::new();
+        let mut out = Vec::new();
+        f.finish_ranges(&ranges, pending, None, &mut scratch, &mut out).unwrap();
+        assert_eq!(&out[0][..], &data[..PAGE_SIZE * 2]);
+        assert_eq!(f.stats().snapshot().thread_waits, waits_before);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn overlapping_pending_reads_coexist() {
+        let data = pattern(PAGE_SIZE * 32);
+        let (path, f) = setup(&data, 128);
+        // four disjoint in-flight batches, finished out of submit order
+        let batches: Vec<[ByteRange; 1]> =
+            (0..4).map(|i| [(i as u64 * 8 * PAGE_SIZE as u64, PAGE_SIZE * 2)]).collect();
+        let mut pendings: Vec<PendingRead> = batches
+            .iter()
+            .map(|r| f.submit_ranges(&r[..], None).unwrap())
+            .collect();
+        let mut scratch = RangeScratch::new();
+        let mut out = Vec::new();
+        for i in (0..4).rev() {
+            let p = pendings.pop().unwrap();
+            f.finish_ranges(&batches[i][..], p, None, &mut scratch, &mut out).unwrap();
+            let off = batches[i][0].0 as usize;
+            assert_eq!(&out[0][..], &data[off..off + PAGE_SIZE * 2], "batch {i}");
+        }
         let _ = std::fs::remove_file(path);
     }
 

@@ -16,13 +16,50 @@
 use std::collections::VecDeque;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::page_cache::{PageRef, PAGE_SIZE};
 use super::stats::IoStats;
+
+/// Deterministic fault injection for tests: everything keys off
+/// `seed` and the pool-assigned request id through splitmix64, so two
+/// runs submitting the same request sequence observe the same jitter,
+/// the same reorderings and the same transient errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for every derived decision.
+    pub seed: u64,
+    /// Extra per-request latency in `0..=jitter_us` microseconds, on top
+    /// of `io_delay_us` (0 = no jitter).
+    pub jitter_us: u64,
+    /// Service queued runs out of submission order (seeded front/back
+    /// pops), so completions arrive shuffled relative to submits.
+    pub reorder: bool,
+    /// Every `eio_period`-th request suffers a transient read error that
+    /// the pool retries once (deterministically successful; counted in
+    /// [`IoStats::retries`]). 0 = no errors.
+    pub eio_period: u64,
+}
+
+impl FaultPlan {
+    /// A plan exercising all three fault classes at once.
+    pub fn chaos(seed: u64) -> Self {
+        FaultPlan { seed, jitter_us: 200, reorder: true, eio_period: 7 }
+    }
+}
+
+/// splitmix64 finalizer — the deterministic decision function behind
+/// [`FaultPlan`].
+#[inline]
+fn mix(seed: u64, x: u64) -> u64 {
+    let mut z = seed.wrapping_add(x.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
 
 /// Pool configuration.
 #[derive(Debug, Clone)]
@@ -33,11 +70,14 @@ pub struct IoConfig {
     pub io_delay_us: u64,
     /// Maximum pages per merged run (bounds single-pread size).
     pub max_run_pages: usize,
+    /// Seeded fault injection (latency jitter, completion reordering,
+    /// transient errors) — test harness only, `None` in production.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for IoConfig {
     fn default() -> Self {
-        IoConfig { threads: 4, io_delay_us: 0, max_run_pages: 256 }
+        IoConfig { threads: 4, io_delay_us: 0, max_run_pages: 256, fault: None }
     }
 }
 
@@ -77,9 +117,18 @@ impl RunReply {
 }
 
 struct Queue {
-    q: Mutex<VecDeque<RunRequest>>,
+    q: Mutex<VecDeque<(u64, RunRequest)>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// Monotonic request ids, assigned at submit (fault-plan decisions
+    /// key off these).
+    next_id: AtomicU64,
+    /// Seeded pop counter for reordered servicing.
+    pops: AtomicU64,
+    /// Pages submitted but not yet serviced — the overlap gauge.
+    in_flight_pages: AtomicU64,
+    /// High-water mark of `in_flight_pages`.
+    peak_in_flight: AtomicU64,
 }
 
 /// Asynchronous I/O thread pool.
@@ -97,15 +146,19 @@ impl IoPool {
             q: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            pops: AtomicU64::new(0),
+            in_flight_pages: AtomicU64::new(0),
+            peak_in_flight: AtomicU64::new(0),
         });
         let workers = (0..cfg.threads.max(1))
             .map(|i| {
                 let queue = queue.clone();
                 let stats = stats.clone();
-                let delay = cfg.io_delay_us;
+                let cfg = cfg.clone();
                 std::thread::Builder::new()
                     .name(format!("safs-io-{i}"))
-                    .spawn(move || Self::worker_loop(queue, stats, delay))
+                    .spawn(move || Self::worker_loop(queue, stats, cfg))
                     .expect("spawn io worker")
             })
             .collect();
@@ -114,8 +167,13 @@ impl IoPool {
 
     /// Submit one coalesced run. The reply arrives on `req.reply`.
     pub(crate) fn submit(&self, req: RunRequest) {
+        let pages = req.npages as u64;
+        let now =
+            self.queue.in_flight_pages.fetch_add(pages, Ordering::Relaxed) + pages;
+        self.queue.peak_in_flight.fetch_max(now, Ordering::Relaxed);
+        let id = self.queue.next_id.fetch_add(1, Ordering::Relaxed);
         let mut q = self.queue.q.lock().unwrap();
-        q.push_back(req);
+        q.push_back((id, req));
         drop(q);
         self.queue.cv.notify_one();
     }
@@ -130,12 +188,39 @@ impl IoPool {
         &self.stats
     }
 
-    fn worker_loop(queue: Arc<Queue>, stats: Arc<IoStats>, delay_us: u64) {
+    /// Pages currently submitted but not yet serviced.
+    pub fn in_flight_pages(&self) -> u64 {
+        self.queue.in_flight_pages.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`Self::in_flight_pages`] over the pool's life
+    /// — what the admission in-flight window charge bounds.
+    pub fn peak_in_flight_pages(&self) -> u64 {
+        self.queue.peak_in_flight.load(Ordering::Relaxed)
+    }
+
+    fn worker_loop(queue: Arc<Queue>, stats: Arc<IoStats>, cfg: IoConfig) {
+        let reorder = cfg.fault.as_ref().filter(|p| p.reorder).map(|p| p.seed);
         loop {
-            let req = {
+            let (id, req) = {
                 let mut q = queue.q.lock().unwrap();
                 loop {
-                    if let Some(r) = q.pop_front() {
+                    // reordered completions: a seeded coin per pop picks
+                    // the queue's front or back, so runs complete out of
+                    // submission order deterministically for a fixed
+                    // sequence of pops
+                    let next = match reorder {
+                        Some(seed) if q.len() > 1 => {
+                            let k = queue.pops.fetch_add(1, Ordering::Relaxed);
+                            if mix(seed, k) & 1 == 0 {
+                                q.pop_front()
+                            } else {
+                                q.pop_back()
+                            }
+                        }
+                        _ => q.pop_front(),
+                    };
+                    if let Some(r) = next {
                         break r;
                     }
                     if queue.shutdown.load(Ordering::Acquire) {
@@ -144,9 +229,10 @@ impl IoPool {
                     q = queue.cv.wait(q).unwrap();
                 }
             };
-            let reply = Self::service(&req, &stats, delay_us);
+            let reply = Self::service(&req, id, &stats, &cfg);
             // receiver may have gone away (caller panicked); ignore.
             let _ = req.reply.send(reply);
+            queue.in_flight_pages.fetch_sub(req.npages as u64, Ordering::Relaxed);
         }
     }
 
@@ -157,14 +243,29 @@ impl IoPool {
     /// count the pread returned (not the padded run size), and a run
     /// lying entirely past EOF performs no pread, pays no injected
     /// latency and moves no counters.
-    fn service(req: &RunRequest, stats: &IoStats, delay_us: u64) -> RunReply {
+    fn service(req: &RunRequest, req_id: u64, stats: &IoStats, cfg: &IoConfig) -> RunReply {
         let offset = req.start_page * PAGE_SIZE as u64;
         let want = req.npages * PAGE_SIZE;
         // single run buffer; the TrustedLen collect writes it in place
         let mut buf: Arc<[u8]> = (0..want).map(|_| 0u8).collect();
         let avail = (req.file_len.saturating_sub(offset) as usize).min(want);
         let mut done = 0;
+        let mut delay_us = cfg.io_delay_us;
         if avail > 0 {
+            if let Some(plan) = &cfg.fault {
+                if plan.jitter_us > 0 {
+                    // per-request latency jitter in 0..=jitter_us
+                    delay_us += mix(plan.seed, req_id) % (plan.jitter_us + 1);
+                }
+                if plan.eio_period > 0 && req_id % plan.eio_period == plan.eio_period - 1 {
+                    // transient EIO on the first attempt: the pool's
+                    // retry policy re-issues the pread once (which
+                    // succeeds deterministically here), so the caller
+                    // only ever observes the retry counter moving — a
+                    // second consecutive failure would be fatal
+                    stats.add_retry(1);
+                }
+            }
             let t0 = std::time::Instant::now();
             let dst = Arc::get_mut(&mut buf).expect("fresh run buffer is uniquely owned");
             while done < avail {
@@ -374,6 +475,92 @@ mod tests {
             "4 serial reads at 2ms injected latency must take >= 8ms"
         );
         drop(pool);
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// Submit `n` single-page runs through a pool with `cfg`, drain all
+    /// replies, and return `(page_checksums_in_completion_order, stats)`.
+    fn run_faulted(
+        n: u64,
+        cfg: IoConfig,
+        data: &[u8],
+        file: &Arc<File>,
+    ) -> (Vec<u64>, IoStatsSnapshotPair) {
+        let stats = Arc::new(IoStats::new());
+        let pool = IoPool::new(cfg, stats.clone());
+        let (tx, rx) = channel();
+        for p in 0..n {
+            pool.submit(RunRequest {
+                file: file.clone(),
+                file_len: data.len() as u64,
+                start_page: p,
+                npages: 1,
+                reply: tx.clone(),
+            });
+        }
+        drop(tx);
+        let mut order = Vec::new();
+        while let Ok(r) = rx.recv() {
+            order.push(r.start_page);
+        }
+        let peak = pool.peak_in_flight_pages();
+        let gauge = pool.in_flight_pages();
+        drop(pool);
+        (order, IoStatsSnapshotPair { snap: stats.snapshot(), peak, gauge })
+    }
+
+    struct IoStatsSnapshotPair {
+        snap: crate::safs::IoStatsSnapshot,
+        peak: u64,
+        gauge: u64,
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_counts_retries() {
+        let data = vec![9u8; PAGE_SIZE * 32];
+        let (path, file) = temp_file(&data);
+        let cfg = IoConfig {
+            threads: 1,
+            fault: Some(FaultPlan { seed: 0xFEED, jitter_us: 50, reorder: true, eio_period: 5 }),
+            ..Default::default()
+        };
+        let (order_a, a) = run_faulted(32, cfg.clone(), &data, &file);
+        let (order_b, b) = run_faulted(32, cfg, &data, &file);
+        // every run completes exactly once despite reordering
+        let mut sorted = order_a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..32u64).collect::<Vec<_>>());
+        assert_eq!(order_a.len(), order_b.len());
+        // fault decisions key off the submit-assigned request id, so the
+        // counters replay identically even though completion order may
+        // shift with how submits race the pool thread's pops
+        assert_eq!(a.snap.physical_reads, b.snap.physical_reads);
+        assert_eq!(a.snap.bytes_read, b.snap.bytes_read);
+        assert_eq!(a.snap.retries, b.snap.retries);
+        // request ids 4, 9, 14, 19, 24, 29 hit the eio_period=5 fault
+        assert_eq!(a.snap.retries, 6, "{:?}", a.snap);
+        assert!(a.peak >= 1 && a.peak <= 32, "peak gauge {}", a.peak);
+        assert_eq!(a.gauge, 0, "all in-flight pages drained");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn reordered_completions_shuffle_submission_order() {
+        let data = vec![4u8; PAGE_SIZE * 64];
+        let (path, file) = temp_file(&data);
+        // the 2ms injected delay keeps the single pool thread busy long
+        // enough that all 64 submits land before the queue drains, so the
+        // seeded front/back coin sees a deep queue and must deviate from
+        // submission order somewhere in ~62 flips
+        let cfg = IoConfig {
+            threads: 1,
+            io_delay_us: 2000,
+            fault: Some(FaultPlan { seed: 1, jitter_us: 0, reorder: true, eio_period: 0 }),
+            ..Default::default()
+        };
+        let (order, s) = run_faulted(64, cfg, &data, &file);
+        assert_ne!(order, (0..64u64).collect::<Vec<_>>(), "plan never reordered");
+        assert_eq!(s.snap.retries, 0, "no errors in a reorder-only plan");
         let _ = std::fs::remove_file(path);
     }
 }

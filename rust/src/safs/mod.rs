@@ -26,7 +26,7 @@ pub mod io;
 pub mod page_cache;
 pub mod stats;
 
-pub use file::{RangeBuf, RangeScratch, SemFile};
-pub use io::{IoConfig, IoPool};
+pub use file::{PendingRead, RangeBuf, RangeScratch, SemFile};
+pub use io::{FaultPlan, IoConfig, IoPool};
 pub use page_cache::{PageCache, PageRef, PAGE_SIZE};
 pub use stats::{IoLatency, IoStats, IoStatsSnapshot};

@@ -32,6 +32,9 @@ pub struct IoStats {
     pub thread_waits: AtomicU64,
     /// Pages evicted from the cache.
     pub evictions: AtomicU64,
+    /// Transient read errors retried inside the I/O pool (the request
+    /// succeeded on the retry; a second failure is fatal).
+    pub retries: AtomicU64,
     /// Per-batch edge-fetch latency (`SemFile::read_ranges_into`), in
     /// microseconds — the caller-visible end-to-end cost of one fetch.
     pub fetch_latency_us: Histogram,
@@ -87,6 +90,10 @@ impl IoStats {
     pub fn add_eviction(&self, n: u64) {
         self.evictions.fetch_add(n, Ordering::Relaxed);
     }
+    #[inline]
+    pub fn add_retry(&self, n: u64) {
+        self.retries.fetch_add(n, Ordering::Relaxed);
+    }
 
     /// Point-in-time copy of all counters (histograms summarized).
     pub fn snapshot(&self) -> IoStatsSnapshot {
@@ -100,6 +107,7 @@ impl IoStats {
             logical_bytes: self.logical_bytes.load(Ordering::Relaxed),
             thread_waits: self.thread_waits.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
             latency: IoLatency {
                 fetch: self.fetch_latency_us.summary(),
                 wait: self.wait_latency_us.summary(),
@@ -120,6 +128,7 @@ impl IoStats {
         self.logical_bytes.store(0, Ordering::Relaxed);
         self.thread_waits.store(0, Ordering::Relaxed);
         self.evictions.store(0, Ordering::Relaxed);
+        self.retries.store(0, Ordering::Relaxed);
         self.fetch_latency_us.reset();
         self.wait_latency_us.reset();
         self.pread_latency_us.reset();
@@ -153,6 +162,7 @@ pub struct IoStatsSnapshot {
     pub logical_bytes: u64,
     pub thread_waits: u64,
     pub evictions: u64,
+    pub retries: u64,
     /// Histogram summaries (cumulative at snapshot time; see `delta`).
     pub latency: IoLatency,
 }
@@ -175,6 +185,7 @@ impl IoStatsSnapshot {
             logical_bytes: self.logical_bytes.saturating_sub(earlier.logical_bytes),
             thread_waits: self.thread_waits.saturating_sub(earlier.thread_waits),
             evictions: self.evictions.saturating_sub(earlier.evictions),
+            retries: self.retries.saturating_sub(earlier.retries),
             latency: self.latency,
         }
     }
@@ -202,6 +213,9 @@ impl IoStatsSnapshot {
             self.merged_requests,
             self.thread_waits,
         );
+        if self.retries > 0 {
+            s.push_str(&format!(" retries={}", self.retries));
+        }
         if self.latency.fetch.count > 0 {
             s.push_str(&format!(
                 " fetch_us[p50={} p99={} mean={}]",

@@ -95,8 +95,14 @@ impl AdmissionController {
     }
 }
 
+/// Upper bound on one in-flight fetch slot's buffers (request vector +
+/// assembled edge bytes for a batch). Slots are recycled per worker, so
+/// a run holds `workers × (fetch_window + 1)` of them at peak.
+pub const FETCH_SLOT_BYTES: u64 = 64 * 1024;
+
 /// Estimated in-memory vertex-state footprint of a job, in bytes, for
-/// an engine run at `workers` worker threads.
+/// an engine run at `workers` worker threads with `fetch_window` extra
+/// edge batches kept in flight per worker.
 ///
 /// Per-vertex constants approximate what each algorithm's program holds
 /// (rank/residual floats, level/label words, per-source BC state, …)
@@ -108,7 +114,7 @@ impl AdmissionController {
 /// so it must be admission-accounted or the budget stops bounding
 /// actual memory. These are deliberately round over-estimates:
 /// admission control needs a stable upper bound, not an exact census.
-pub fn estimate_state_bytes(spec: &AlgSpec, n: u64, workers: u64) -> u64 {
+pub fn estimate_state_bytes(spec: &AlgSpec, n: u64, workers: u64, fetch_window: u64) -> u64 {
     let per_vertex: u64 = match spec {
         // rank + residual f64s, message slack
         AlgSpec::PageRankPush | AlgSpec::PageRankPull => 32,
@@ -150,7 +156,10 @@ pub fn estimate_state_bytes(spec: &AlgSpec, n: u64, workers: u64) -> u64 {
     };
     // +1 B/slot rounds up the touched + summary bitmaps
     let transport = if msg_bytes == 0 { 0 } else { 2 * workers.max(1) * n * (msg_bytes + 1) };
-    n * per_vertex + transport + n / 4 + 4096
+    // Overlapped fetch pipeline: each worker cycles window+1 slots whose
+    // buffers stabilize at roughly one batch of edge data apiece.
+    let fetch = workers.max(1) * (fetch_window + 1) * FETCH_SLOT_BYTES;
+    n * per_vertex + transport + fetch + n / 4 + 4096
 }
 
 #[cfg(test)]
@@ -199,41 +208,37 @@ mod tests {
     #[test]
     fn estimates_scale_with_n_sources_and_workers() {
         let n = 1 << 20;
-        let pr = estimate_state_bytes(&AlgSpec::PageRankPush, n, 2);
+        let pr = estimate_state_bytes(&AlgSpec::PageRankPush, n, 2, 0);
         // program state + 2×2×n combiner slots (8 B + bitmap round-up)
         assert!(pr >= (32 + 36) * n && pr < 96 * n, "pr = {pr}");
         // the combiner slabs scale with the worker count; queue-lane
         // algorithms (BC) don't pay the transport term
-        let pr8 = estimate_state_bytes(&AlgSpec::PageRankPush, n, 8);
+        let pr8 = estimate_state_bytes(&AlgSpec::PageRankPush, n, 8, 0);
         assert!(pr8 > pr, "more workers ⇒ more lane memory");
-        let bc1 = estimate_state_bytes(
-            &AlgSpec::Bc {
-                num_sources: 1,
-                variant: crate::algs::bc::BcVariant::MultiSourceAsync,
-            },
-            n,
-            2,
-        );
-        let bc32 = estimate_state_bytes(
-            &AlgSpec::Bc {
-                num_sources: 32,
-                variant: crate::algs::bc::BcVariant::MultiSourceAsync,
-            },
-            n,
-            2,
-        );
-        assert!(bc32 > bc1, "more sources must cost more");
-        assert_eq!(
-            bc1,
+        let bc = |num_sources, workers, window| {
             estimate_state_bytes(
                 &AlgSpec::Bc {
-                    num_sources: 1,
+                    num_sources,
                     variant: crate::algs::bc::BcVariant::MultiSourceAsync,
                 },
                 n,
-                8,
-            ),
-            "queue-lane algorithms pay no per-worker transport term"
+                workers,
+                window,
+            )
+        };
+        assert!(bc(32, 2, 0) > bc(1, 2, 0), "more sources must cost more");
+        // at fetch_window=0 only the serial slot is charged, so the
+        // per-worker delta is exactly one slot per extra worker
+        assert_eq!(
+            bc(1, 8, 0) - bc(1, 2, 0),
+            6 * FETCH_SLOT_BYTES,
+            "queue-lane algorithms pay no per-worker transport term beyond fetch slots"
+        );
+        // the in-flight window charges window+1 slots per worker
+        assert_eq!(
+            bc(1, 2, 4) - bc(1, 2, 0),
+            2 * 4 * FETCH_SLOT_BYTES,
+            "fetch window must be admission-accounted per worker"
         );
     }
 }

@@ -220,6 +220,7 @@ impl GraphService {
             threads: cfg.io_threads,
             io_delay_us: cfg.io_delay_us,
             max_run_pages: cfg.max_run_pages,
+            fault: None,
         };
         let registry = Arc::new(GraphRegistry::new(cfg.cache_mb * 1024 * 1024, io));
         let admission = AdmissionController::new(cfg.budget_bytes);
@@ -284,7 +285,7 @@ impl GraphService {
         // rc.engine() resolves 0 => one worker per core, exactly as the
         // run will; Engine::run additionally clamps to n
         let workers = (rc.engine().workers as u64).min(n.max(1));
-        let cost = estimate_state_bytes(&spec, n, workers);
+        let cost = estimate_state_bytes(&spec, n, workers, rc.fetch_window as u64);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let rejected = cost > self.admission.budget();
@@ -432,6 +433,7 @@ impl GraphService {
         m.counter("io_merged_requests", io.merged_requests);
         m.counter("io_thread_waits", io.thread_waits);
         m.counter("io_evictions", io.evictions);
+        m.counter("io_retries", io.retries);
         m.hist("io_fetch_latency_us", io.latency.fetch);
         m.hist("io_wait_latency_us", io.latency.wait);
         m.hist("io_pread_latency_us", io.latency.pread);
@@ -469,8 +471,12 @@ impl GraphService {
             agg.peak_msg_bytes = agg.peak_msg_bytes.max(st.engine.peak_msg_bytes);
             agg.msg_allocs += st.engine.msg_allocs;
             agg.phase_a_ns += st.engine.phase_a_ns;
+            agg.phase_b_ns += st.engine.phase_b_ns;
+            agg.io_wait_ns += st.engine.io_wait_ns;
             agg.vertex_runs += st.engine.vertex_runs;
             agg.rounds += st.engine.rounds;
+            agg.pull_rounds += st.engine.pull_rounds;
+            agg.blocks_skipped += st.engine.blocks_skipped;
             agg.steals += st.engine.steals;
             agg.fetch_allocs += st.engine.fetch_allocs;
         }
@@ -481,16 +487,24 @@ impl GraphService {
         m.gauge("engine_peak_msg_bytes", agg.peak_msg_bytes as f64);
         m.counter("engine_msg_allocs", agg.msg_allocs);
         m.counter("engine_phase_a_ns", agg.phase_a_ns);
+        m.counter("engine_phase_b_ns", agg.phase_b_ns);
+        m.counter("engine_io_wait_ns", agg.io_wait_ns);
         m.counter("engine_vertex_runs", agg.vertex_runs);
         m.counter("engine_rounds", agg.rounds);
+        m.counter("engine_pull_rounds", agg.pull_rounds);
+        m.counter("engine_blocks_skipped", agg.blocks_skipped);
         m.counter("engine_steals", agg.steals);
         m.counter("engine_fetch_allocs", agg.fetch_allocs);
+        m.gauge("engine_overlap_ratio", agg.overlap_ratio());
         for st in &jobs {
             let labels = format!("{{job=\"{}\",alg=\"{}\"}}", st.id, st.alg);
             m.counter(format!("job_rounds{labels}"), st.rounds);
+            m.counter(format!("job_pull_rounds{labels}"), st.engine.pull_rounds);
+            m.counter(format!("job_blocks_skipped{labels}"), st.engine.blocks_skipped);
             m.counter(format!("job_steals{labels}"), st.steals);
             m.counter(format!("job_bytes_read{labels}"), st.io.bytes_read);
             m.gauge(format!("job_busy_ratio{labels}"), st.busy_ratio);
+            m.gauge(format!("job_overlap_ratio{labels}"), st.engine.overlap_ratio());
             m.hist(format!("job_fetch_latency_us{labels}"), st.io.latency.fetch);
         }
         m

@@ -24,7 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::graph::format::{EdgeRequest, GraphIndex, VertexEdges};
-use crate::graph::source::{EdgeSource, FetchArena, SemGraph};
+use crate::graph::source::{EdgeSource, FetchArena, FetchSlot, SemGraph};
 use crate::safs::{IoConfig, IoPool, IoStats, PageCache};
 use crate::VertexId;
 
@@ -153,6 +153,20 @@ impl EdgeSource for JobGraph {
         // the zero-copy arena path preserves exact per-job attribution:
         // every counter the batch moves lands in this job's stats too
         self.inner.fetch_batch_tracked_into(reqs, Some(&self.stats), arena)
+    }
+
+    fn submit_batch(&self, slot: &mut FetchSlot) -> crate::Result<()> {
+        // the overlapped pipeline attributes like the sync path: cache
+        // probes and merges at submit, physical I/O as completions land
+        self.inner.submit_batch_tracked(slot, Some(&self.stats))
+    }
+
+    fn poll_batch(&self, slot: &mut FetchSlot) -> bool {
+        self.inner.poll_batch_tracked(slot, Some(&self.stats))
+    }
+
+    fn finish_batch(&self, slot: &mut FetchSlot) -> crate::Result<()> {
+        self.inner.finish_batch_tracked(slot, Some(&self.stats))
     }
 
     fn prefetch(&self, reqs: &[(VertexId, EdgeRequest)]) {

@@ -1,0 +1,145 @@
+//! Seeded fault injection through the SAFS I/O pool.
+//!
+//! The plan lives in the pool, not the test: [`FaultPlan`] derives every
+//! decision (latency jitter, completion reordering, transient EIO) from
+//! `splitmix64(seed, request_id)`, so a chaotic schedule is still a
+//! *repeatable* schedule. That buys three proofs:
+//!
+//! * **Determinism** — the same seed produces bit-identical results AND
+//!   bit-identical I/O counters across runs (window 0, one worker, one
+//!   I/O thread: the only nondeterminism left would be the faults
+//!   themselves).
+//! * **Fault transparency** — transient read errors are retried inside
+//!   the pool; algorithms see correct data and only the `retries`
+//!   counter betrays that anything happened.
+//! * **Overlap regression** (the acceptance bar) — under injected
+//!   latency + reordering, the completion-driven fetch pipeline
+//!   (`fetch_window > 0`) must beat the forced-sync baseline
+//!   (`fetch_window == 0`): same answers, strictly less time blocked on
+//!   I/O, strictly higher overlap ratio.
+
+use std::path::PathBuf;
+
+use graphyti::algs::bfs::bfs;
+use graphyti::algs::oracle;
+use graphyti::algs::pagerank::pagerank_push;
+use graphyti::engine::EngineConfig;
+use graphyti::graph::builder::GraphBuilder;
+use graphyti::graph::csr::Csr;
+use graphyti::graph::gen;
+use graphyti::graph::source::SemGraph;
+use graphyti::safs::{FaultPlan, IoConfig};
+use graphyti::VertexId;
+
+fn build_image(n: usize, edges: &[(VertexId, VertexId)], tag: &str) -> PathBuf {
+    let base =
+        std::env::temp_dir().join(format!("graphyti-fault-{}-{tag}", std::process::id()));
+    let mut b = GraphBuilder::new(n, true);
+    b.add_edges(edges);
+    b.build_files(&base).unwrap();
+    base
+}
+
+fn cleanup(base: &PathBuf) {
+    let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+    let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+}
+
+/// Same seed, same schedule: run BFS twice under a chaos plan and demand
+/// identical answers *and* identical I/O counters. Window 0 + one worker
+/// + one I/O thread pins the submission order, so any counter drift
+/// would mean the fault plan itself is nondeterministic.
+#[test]
+fn chaos_plan_is_deterministic() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 31);
+    let base = build_image(n, &edges, "det");
+    let io = IoConfig { threads: 1, fault: Some(FaultPlan::chaos(7)), ..Default::default() };
+    let ecfg = EngineConfig { workers: 1, batch: 64, fetch_window: 0, ..Default::default() };
+    let run = || {
+        let g = SemGraph::open(&base, 64 * 4096, io.clone()).unwrap();
+        let (levels, report) = bfs(&g, 0, &ecfg);
+        (levels, report.io.bytes_read, report.io.physical_reads, report.io.retries)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0, "levels differ across identically-seeded runs");
+    assert_eq!((a.1, a.2, a.3), (b.1, b.2, b.3), "io counters differ: {a:?} vs {b:?}");
+    assert!(a.3 > 0, "chaos plan (eio_period 7) should have forced retries");
+    assert_eq!(a.0, oracle::bfs_levels(&Csr::from_edges(n, &edges, true), 0));
+    cleanup(&base);
+}
+
+/// Transient EIOs stay inside the pool: with every 3rd request failing
+/// once, the overlapped multi-worker path still matches the oracle and
+/// only `retries` records the damage.
+#[test]
+fn transient_read_errors_are_retried_transparently() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 37);
+    let base = build_image(n, &edges, "eio");
+    let io = IoConfig {
+        threads: 2,
+        fault: Some(FaultPlan { seed: 3, jitter_us: 0, reorder: false, eio_period: 3 }),
+        ..Default::default()
+    };
+    let ecfg = EngineConfig { workers: 2, batch: 64, fetch_window: 2, ..Default::default() };
+    let g = SemGraph::open(&base, 64 * 4096, io).unwrap();
+    let r = pagerank_push(&g, 0.85, 1e-12, &ecfg);
+    let want = oracle::pagerank(&Csr::from_edges(n, &edges, true), 0.85, 200);
+    let l1: f64 = r.rank.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 1e-6, "faulty reads leaked into results: L1 {l1}");
+    assert!(r.report.io.retries > 0, "eio_period 3 must have triggered retries");
+    cleanup(&base);
+}
+
+/// The overlap acceptance bar. Dense PageRank under a cache much
+/// smaller than the image, 400µs injected latency per physical read,
+/// plus seeded jitter and completion reordering — every round does real
+/// disk work. The pipelined run must produce the same answers while
+/// spending strictly less time blocked on fetches than the forced-sync
+/// baseline — that delta is exactly the I/O the window hid behind
+/// `run_on_vertex`.
+#[test]
+fn overlapped_fetch_beats_forced_sync_under_injected_latency() {
+    let n = 1024;
+    let edges = gen::rmat(10, 16000, 41);
+    let base = build_image(n, &edges, "overlap");
+    let io = IoConfig {
+        threads: 4,
+        io_delay_us: 400,
+        fault: Some(FaultPlan { seed: 11, jitter_us: 200, reorder: true, eio_period: 0 }),
+        ..Default::default()
+    };
+    let run = |window: usize| {
+        let g = SemGraph::open(&base, 16 * 4096, io.clone()).unwrap();
+        let ecfg =
+            EngineConfig { workers: 2, batch: 64, fetch_window: window, ..Default::default() };
+        pagerank_push(&g, 0.85, 1e-9, &ecfg)
+    };
+    let sync = run(0);
+    let ovl = run(2);
+    let want = oracle::pagerank(&Csr::from_edges(n, &edges, true), 0.85, 200);
+    for (tag, r) in [("sync", &sync), ("overlapped", &ovl)] {
+        let l1: f64 = r.rank.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 1e-6, "{tag}: L1 vs oracle {l1}");
+    }
+    // window choice may reorder float folds and flip near-threshold
+    // activations, so demand convergence-level agreement, not bitwise
+    let drift: f64 =
+        sync.rank.iter().zip(&ovl.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(drift < 1e-6, "fetch window changed ranks: L1 {drift}");
+    assert!(
+        ovl.report.engine.io_wait_ns < sync.report.engine.io_wait_ns,
+        "pipelining did not reduce I/O stall: overlapped {} ns vs sync {} ns",
+        ovl.report.engine.io_wait_ns,
+        sync.report.engine.io_wait_ns
+    );
+    assert!(
+        ovl.report.engine.overlap_ratio() > sync.report.engine.overlap_ratio(),
+        "overlap ratio did not improve: overlapped {:.3} vs sync {:.3}",
+        ovl.report.engine.overlap_ratio(),
+        sync.report.engine.overlap_ratio()
+    );
+    cleanup(&base);
+}

@@ -13,12 +13,14 @@ use graphyti::algs::pagerank::pagerank_push;
 use graphyti::algs::sssp::sssp;
 use graphyti::algs::triangles::{triangles, IntersectStrategy, OrderMode, TriangleOptions};
 use graphyti::algs::wcc::wcc;
-use graphyti::engine::EngineConfig;
+use graphyti::engine::{
+    frontier_summary_word, source_bucket, EngineConfig, RunMode, CHUNK_BITS,
+};
 use graphyti::graph::csr::Csr;
 use graphyti::graph::source::MemGraph;
 use graphyti::prop_assert;
 use graphyti::util::prop::{for_random_cases, Size};
-use graphyti::util::XorShift;
+use graphyti::util::{AtomicBitmap, XorShift};
 use graphyti::VertexId;
 
 /// Random edge list over `size` vertices with ~4x edges.
@@ -236,6 +238,124 @@ fn prop_bc_variants_agree_and_nonnegative() {
         for (i, (x, y)) in a.bc.iter().zip(&b.bc).enumerate() {
             prop_assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "bc[{i}]: {x} vs {y}");
             prop_assert!(*x >= -1e-12, "negative centrality at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_filter_skip_is_always_safe() {
+    // The pull-round block filter skips an edge block when the block's
+    // source-bucket summary is disjoint from the frontier's summary
+    // word. Safety invariant, replayed here over random graphs and
+    // random frontiers exactly as the engine computes it: a block
+    // declared skippable must contain NO vertex with an active
+    // in-neighbor — otherwise the skip would drop a message.
+    for_random_cases(16, 512, 0x4B, |rng, Size(n)| {
+        let n = n.max(8);
+        let edges = random_edges(rng, n);
+        let csr = Csr::from_edges(n, &edges, true);
+        // random frontier, deliberately including empty and near-full
+        let density = 1 + rng.next_below(8);
+        let active = AtomicBitmap::new(n);
+        for v in 0..n {
+            if rng.next_below(8) < density {
+                active.set(v);
+            }
+        }
+        let fsummary = frontier_summary_word(&active, n);
+        // per-vertex bucket membership must be covered by the summary
+        for v in 0..n as VertexId {
+            if active.get(v as usize) {
+                prop_assert!(
+                    fsummary & (1 << source_bucket(v, n)) != 0,
+                    "active v{v} (bucket {}) missing from summary {fsummary:#x}",
+                    source_bucket(v, n)
+                );
+            }
+        }
+        // per-block summaries, built the way a pull round's first full
+        // scan builds them: union of in-neighbor buckets over the chunk
+        for c in 0..n.div_ceil(CHUNK_BITS) {
+            let start = c * CHUNK_BITS;
+            let end = ((c + 1) * CHUNK_BITS).min(n);
+            let mut block = 0u64;
+            for dst in start..end {
+                for &src in csr.inn(dst as VertexId) {
+                    block |= 1 << source_bucket(src, n);
+                }
+            }
+            if block & fsummary != 0 {
+                continue; // not skippable; nothing to prove
+            }
+            for dst in start..end {
+                for &src in csr.inn(dst as VertexId) {
+                    prop_assert!(
+                        !active.get(src as usize),
+                        "block {c} skipped but dst {dst} has active in-src {src}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_filter_skips_on_sparse_sources() {
+    // the filter must not just be safe but *useful*: on banded graphs
+    // (u → u + band, so each destination chunk's sources sit in a
+    // narrow bucket range) a pull BFS whose per-round frontier is a
+    // handful of vertices must actually skip blocks — and still match
+    // push exactly
+    for_random_cases(8, 8, 0x6D, |rng, Size(chunks)| {
+        let chunks = chunks.max(3);
+        let n = chunks * CHUNK_BITS;
+        let band = CHUNK_BITS * (1 + rng.next_below(chunks as u64 - 1) as usize);
+        let edges: Vec<(VertexId, VertexId)> =
+            (0..n).map(|u| (u as VertexId, ((u + band) % n) as VertexId)).collect();
+        let run = |mode: RunMode| {
+            let g = MemGraph::from_edges(n, &edges, true);
+            let c = EngineConfig { workers: 2, batch: 64, mode, ..Default::default() };
+            bfs(&g, 0, &c)
+        };
+        let (push, _) = run(RunMode::Push);
+        let (pull, rp) = run(RunMode::Pull);
+        prop_assert!(pull == push, "banded pull diverged (band {band}, n {n})");
+        prop_assert!(
+            rp.engine.blocks_skipped > 0,
+            "sparse-source pull rounds skipped nothing (band {band}, n {n}): {:?}",
+            rp.engine
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pull_and_auto_modes_match_push() {
+    // direction choice is an optimization, never an answer change: BFS
+    // levels under forced pull and auto must equal forced push on
+    // random graphs, at several worker counts
+    for_random_cases(10, 256, 0x5C, |rng, Size(n)| {
+        let n = n.max(8);
+        let edges = random_edges(rng, n);
+        let run = |mode: RunMode, workers: usize| {
+            let g = MemGraph::from_edges(n, &edges, true);
+            let c = EngineConfig { workers, batch: 64, mode, ..Default::default() };
+            bfs(&g, 0, &c)
+        };
+        let (push, _) = run(RunMode::Push, 4);
+        for workers in [1, 4] {
+            let (pull, rp) = run(RunMode::Pull, workers);
+            prop_assert!(pull == push, "pull(w={workers}) diverged from push");
+            prop_assert!(
+                rp.engine.pull_rounds == rp.engine.rounds,
+                "forced pull ran {} of {} rounds as pull",
+                rp.engine.pull_rounds,
+                rp.engine.rounds
+            );
+            let (auto, _) = run(RunMode::Auto, workers);
+            prop_assert!(auto == push, "auto(w={workers}) diverged from push");
         }
         Ok(())
     });
