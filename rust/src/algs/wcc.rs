@@ -1,6 +1,9 @@
 //! Weakly connected components by min-label propagation (library extra).
 
-use crate::engine::{Combiner, Engine, EngineConfig, RunReport, VertexProgram, WorkerCtx};
+use crate::engine::{
+    CheckpointImage, CheckpointWriter, Combiner, Engine, EngineConfig, RunReport, VertexProgram,
+    WorkerCtx,
+};
 use crate::graph::format::{EdgeRequest, VertexEdges};
 use crate::graph::source::EdgeSource;
 use crate::util::SharedVec;
@@ -52,6 +55,20 @@ impl VertexProgram for Wcc {
         // labels are written only in phase A (run_on_message), so the
         // value an active src would have multicast is stable here
         Some(*self.label.get(src as usize))
+    }
+
+    // min-label propagation is order-independent integer folding, so a
+    // resumed run is bit-identical at any worker count
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn checkpoint_save(&self, w: &mut CheckpointWriter) {
+        w.put_u32("label", &self.label);
+    }
+
+    fn checkpoint_restore(&self, img: &CheckpointImage) -> crate::Result<()> {
+        img.restore_u32("label", &self.label)
     }
 }
 

@@ -523,6 +523,7 @@ mod tests {
             engine: Default::default(),
             io: Default::default(),
             trace: None,
+            failure: None,
         };
         r.io.bytes_read = bytes_read;
         r

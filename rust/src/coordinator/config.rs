@@ -72,6 +72,16 @@ pub struct RunConfig {
     /// Per-round trace recording and rendering
     /// (`trace=off|on|table|json`; `on` is an alias for `table`).
     pub trace: TraceMode,
+    /// Write a round-boundary checkpoint every N rounds (0 = off; see
+    /// `checkpoint_path`). Only programs that declare themselves
+    /// checkpointable honor it.
+    pub checkpoint_every: u64,
+    /// Checkpoint file location. Set by the service executor per job or
+    /// via `checkpoint_path=<file>`.
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Resume from `checkpoint_path` if a usable snapshot exists
+    /// (`resume=true`); otherwise start fresh.
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -92,6 +102,9 @@ impl Default for RunConfig {
             seed: 42,
             cancel: None,
             trace: TraceMode::Off,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: false,
         }
     }
 }
@@ -127,6 +140,20 @@ impl RunConfig {
             "alpha" => self.alpha = v.parse().context("alpha")?,
             "threshold" => self.threshold = v.parse().context("threshold")?,
             "seed" => self.seed = v.parse().context("seed")?,
+            "checkpoint_every" => {
+                self.checkpoint_every = v.parse().context("checkpoint_every")?
+            }
+            "checkpoint_path" => {
+                self.checkpoint_path =
+                    if v.is_empty() { None } else { Some(std::path::PathBuf::from(v)) }
+            }
+            "resume" => {
+                self.resume = match v {
+                    "true" | "1" | "on" => true,
+                    "false" | "0" | "off" => false,
+                    other => bail!("resume must be true/false, got '{other}'"),
+                }
+            }
             "trace" => {
                 self.trace = match v {
                     "off" | "false" | "0" => TraceMode::Off,
@@ -171,6 +198,9 @@ impl RunConfig {
         e.fetch_window = self.fetch_window;
         e.cancel = self.cancel.clone();
         e.trace = self.trace.enabled();
+        e.checkpoint_every = self.checkpoint_every;
+        e.checkpoint_path = self.checkpoint_path.clone();
+        e.resume = self.resume;
         e
     }
 
@@ -238,6 +268,19 @@ mod tests {
         assert_eq!(c.fetch_window, 0);
         assert_eq!(c.engine().fetch_window, 0);
         assert!(c.set("fetch_window", "many").is_err());
+        assert_eq!(c.checkpoint_every, 0);
+        assert!(c.checkpoint_path.is_none());
+        assert!(!c.resume);
+        c.set("checkpoint_every", "4").unwrap();
+        c.set("checkpoint_path", "/tmp/job.ckpt").unwrap();
+        c.set("resume", "true").unwrap();
+        let e = c.engine();
+        assert_eq!(e.checkpoint_every, 4);
+        assert_eq!(e.checkpoint_path.as_deref(), Some(std::path::Path::new("/tmp/job.ckpt")));
+        assert!(e.resume);
+        assert!(c.set("resume", "maybe").is_err());
+        c.set("resume", "off").unwrap();
+        c.set("checkpoint_every", "0").unwrap();
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! Round-boundary engine checkpoints.
+//!
+//! SEM's core bargain — O(n) vertex state in memory, O(m) edges on disk
+//! — makes crash recovery cheap: the only state worth persisting is the
+//! per-vertex arrays, the activation frontier and the undelivered
+//! message folds, all O(n). This module defines the on-disk snapshot
+//! format and the typed section API vertex programs use to save and
+//! restore their `SharedVec` state; `runner.rs` decides *when* to write
+//! (the worker-0 bookkeeping step of a round is the engine's only
+//! single-threaded quiescent point, so a snapshot taken there is a
+//! consistent cut by construction — see ARCHITECTURE.md §"Durability &
+//! recovery").
+//!
+//! Format (version 1, little-endian, single file):
+//!
+//! ```text
+//! "GYCK" | version u32 | round u64 | n u64
+//! | frontier: nwords u64, words [u64 × nwords]
+//! | pending u64
+//! | messages: count u64, msg_size u64, (dst u32, msg [msg_size]) × count
+//! | sections: count u64,
+//!     (name_len u8, name, elem_kind u8, len u64, raw bytes) × count
+//! | fnv1a-64 checksum over everything above
+//! ```
+//!
+//! Writes go to a `.tmp` sibling and are published by `rename`, so a
+//! torn write is never observable under the real path; loads verify
+//! magic, version and checksum and fail cleanly on any mismatch — a
+//! corrupt or truncated checkpoint degrades to "no checkpoint", never
+//! to wrong answers.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::util::bitmap::AtomicBitmap;
+use crate::util::shared_vec::SharedVec;
+
+/// File magic: "GYCK" (GraphYti ChecKpoint).
+pub const MAGIC: [u8; 4] = *b"GYCK";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Section element kinds (one byte on disk).
+const KIND_F64: u8 = 0;
+const KIND_U32: u8 = 1;
+const KIND_U64: u8 = 2;
+const KIND_I64: u8 = 3;
+
+fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        KIND_F64 => "f64",
+        KIND_U32 => "u32",
+        KIND_U64 => "u64",
+        KIND_I64 => "i64",
+        _ => "unknown",
+    }
+}
+
+/// FNV-1a 64-bit over a byte slice — cheap, dependency-free, and good
+/// enough to catch torn writes and bit rot (not an integrity MAC).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Collector for a program's typed O(n) state sections. The engine owns
+/// the header (round, frontier, pending messages); the vertex program
+/// contributes named sections via [`VertexProgram::checkpoint_save`].
+///
+/// [`VertexProgram::checkpoint_save`]: crate::engine::VertexProgram::checkpoint_save
+#[derive(Default)]
+pub struct CheckpointWriter {
+    sections: Vec<(String, u8, u64, Vec<u8>)>,
+}
+
+impl CheckpointWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        CheckpointWriter { sections: Vec::new() }
+    }
+
+    fn push(&mut self, name: &str, kind: u8, len: u64, raw: Vec<u8>) {
+        debug_assert!(name.len() <= u8::MAX as usize, "section name too long");
+        self.sections.push((name.to_string(), kind, len, raw));
+    }
+
+    /// Save an `f64` state array under `name`.
+    pub fn put_f64(&mut self, name: &str, v: &SharedVec<f64>) {
+        let mut raw = Vec::with_capacity(v.len() * 8);
+        for x in v.iter() {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        self.push(name, KIND_F64, v.len() as u64, raw);
+    }
+
+    /// Save a `u32` state array under `name`.
+    pub fn put_u32(&mut self, name: &str, v: &SharedVec<u32>) {
+        let mut raw = Vec::with_capacity(v.len() * 4);
+        for x in v.iter() {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        self.push(name, KIND_U32, v.len() as u64, raw);
+    }
+
+    /// Save a `u64` state array under `name`.
+    pub fn put_u64(&mut self, name: &str, v: &SharedVec<u64>) {
+        let mut raw = Vec::with_capacity(v.len() * 8);
+        for x in v.iter() {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        self.push(name, KIND_U64, v.len() as u64, raw);
+    }
+
+    /// Save an `i64` state array under `name`.
+    pub fn put_i64(&mut self, name: &str, v: &SharedVec<i64>) {
+        let mut raw = Vec::with_capacity(v.len() * 8);
+        for x in v.iter() {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        self.push(name, KIND_I64, v.len() as u64, raw);
+    }
+
+    /// Number of collected sections.
+    pub fn len(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// True if no sections were collected.
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty()
+    }
+}
+
+/// Engine-side inputs to a snapshot: everything the runner knows at the
+/// round barrier that the program does not.
+pub struct CheckpointHeader<'a> {
+    /// Round the restored run will start at (the round *after* the
+    /// barrier the snapshot was cut at).
+    pub round: u64,
+    /// Vertex count (restore sanity check).
+    pub n: u64,
+    /// Activation frontier for `round` (the bitmap at parity
+    /// `round % 2`).
+    pub frontier: &'a AtomicBitmap,
+    /// The message plane's pending count for `round`'s parity.
+    pub pending: u64,
+    /// Size in bytes of one message value (0 when no messages follow).
+    pub msg_size: u64,
+    /// Destination vertex per undelivered fold.
+    pub msg_dsts: &'a [u32],
+    /// Raw little-endian message payloads, `msg_size` bytes each.
+    pub msg_bytes: &'a [u8],
+}
+
+/// Serialize and atomically publish a snapshot at `path`. Returns the
+/// number of bytes written (for the `checkpoint_bytes` counter).
+pub fn save(path: &Path, hdr: &CheckpointHeader<'_>, w: &CheckpointWriter) -> crate::Result<u64> {
+    debug_assert_eq!(hdr.msg_dsts.len() as u64 * hdr.msg_size, hdr.msg_bytes.len() as u64);
+    let mut buf = Vec::with_capacity(
+        64 + hdr.n as usize / 8
+            + hdr.msg_bytes.len()
+            + w.sections.iter().map(|(_, _, _, r)| r.len() + 16).sum::<usize>(),
+    );
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&hdr.round.to_le_bytes());
+    buf.extend_from_slice(&hdr.n.to_le_bytes());
+    let nwords = (hdr.n as usize).div_ceil(64);
+    buf.extend_from_slice(&(nwords as u64).to_le_bytes());
+    for wi in 0..nwords {
+        buf.extend_from_slice(&hdr.frontier.word(wi).to_le_bytes());
+    }
+    buf.extend_from_slice(&hdr.pending.to_le_bytes());
+    buf.extend_from_slice(&(hdr.msg_dsts.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&hdr.msg_size.to_le_bytes());
+    for (i, dst) in hdr.msg_dsts.iter().enumerate() {
+        buf.extend_from_slice(&dst.to_le_bytes());
+        let off = i * hdr.msg_size as usize;
+        buf.extend_from_slice(&hdr.msg_bytes[off..off + hdr.msg_size as usize]);
+    }
+    buf.extend_from_slice(&(w.sections.len() as u64).to_le_bytes());
+    for (name, kind, len, raw) in &w.sections {
+        buf.push(name.len() as u8);
+        buf.extend_from_slice(name.as_bytes());
+        buf.push(*kind);
+        buf.extend_from_slice(&len.to_le_bytes());
+        buf.extend_from_slice(raw);
+    }
+    let ck = fnv1a(&buf);
+    buf.extend_from_slice(&ck.to_le_bytes());
+
+    // tmp + rename: a crash mid-write leaves only the tmp file, and the
+    // previous published snapshot (if any) stays intact and loadable
+    let tmp = path.with_extension("ckpt-tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        std::io::Write::write_all(&mut f, &buf)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publish {} -> {}", tmp.display(), path.display()))?;
+    Ok(buf.len() as u64)
+}
+
+/// A parsed, checksum-verified snapshot.
+pub struct CheckpointImage {
+    /// Round the restored run starts at.
+    pub round: u64,
+    /// Vertex count at save time.
+    pub n: u64,
+    /// Raw frontier words (bit `v` set ⇒ vertex `v` active at `round`).
+    pub frontier_words: Vec<u64>,
+    /// Message-plane pending count for `round`'s parity.
+    pub pending: u64,
+    /// Size of one message value, bytes.
+    pub msg_size: u64,
+    /// Destination per undelivered message fold.
+    pub msg_dsts: Vec<u32>,
+    /// Concatenated message payloads, `msg_size` bytes each.
+    pub msg_bytes: Vec<u8>,
+    sections: Vec<(String, u8, u64, Vec<u8>)>,
+}
+
+/// Little-endian cursor over the snapshot body.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.bytes.len(), "checkpoint truncated at byte {}", self.pos);
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+impl CheckpointImage {
+    /// Read and verify a snapshot. Any structural damage — wrong magic,
+    /// version skew, truncation, checksum mismatch — is an error; the
+    /// caller treats it as "no checkpoint" and starts from round 0.
+    pub fn load(path: &Path) -> crate::Result<CheckpointImage> {
+        let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        ensure!(bytes.len() >= MAGIC.len() + 4 + 8, "checkpoint too short ({} B)", bytes.len());
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        let got = fnv1a(body);
+        ensure!(got == want, "checkpoint checksum mismatch ({got:#x} != {want:#x})");
+        let mut c = Cursor { bytes: body, pos: 0 };
+        ensure!(c.take(4)? == MAGIC, "bad checkpoint magic");
+        let version = c.u32()?;
+        ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let round = c.u64()?;
+        let n = c.u64()?;
+        let nwords = c.u64()? as usize;
+        ensure!(nwords == (n as usize).div_ceil(64), "frontier word count mismatch");
+        let mut frontier_words = Vec::with_capacity(nwords);
+        for _ in 0..nwords {
+            frontier_words.push(c.u64()?);
+        }
+        let pending = c.u64()?;
+        let msg_count = c.u64()? as usize;
+        let msg_size = c.u64()?;
+        let mut msg_dsts = Vec::with_capacity(msg_count);
+        let mut msg_bytes = Vec::with_capacity(msg_count * msg_size as usize);
+        for _ in 0..msg_count {
+            msg_dsts.push(c.u32()?);
+            msg_bytes.extend_from_slice(c.take(msg_size as usize)?);
+        }
+        let nsections = c.u64()? as usize;
+        let mut sections = Vec::with_capacity(nsections);
+        for _ in 0..nsections {
+            let name_len = c.u8()? as usize;
+            let name = std::str::from_utf8(c.take(name_len)?)
+                .context("checkpoint section name is not UTF-8")?
+                .to_string();
+            let kind = c.u8()?;
+            let len = c.u64()?;
+            let width: u64 = match kind {
+                KIND_U32 => 4,
+                KIND_F64 | KIND_U64 | KIND_I64 => 8,
+                other => bail!("unknown section kind {other}"),
+            };
+            let raw = c.take((len * width) as usize)?.to_vec();
+            sections.push((name, kind, len, raw));
+        }
+        ensure!(c.pos == body.len(), "trailing bytes in checkpoint");
+        Ok(CheckpointImage {
+            round,
+            n,
+            frontier_words,
+            pending,
+            msg_size,
+            msg_dsts,
+            msg_bytes,
+            sections,
+        })
+    }
+
+    fn section(&self, name: &str, kind: u8) -> crate::Result<(&[u8], u64)> {
+        let Some((_, k, len, raw)) = self.sections.iter().find(|(n, ..)| n == name) else {
+            bail!("checkpoint has no section '{name}'");
+        };
+        ensure!(
+            *k == kind,
+            "section '{name}' is {} (expected {})",
+            kind_name(*k),
+            kind_name(kind)
+        );
+        Ok((raw, *len))
+    }
+
+    /// Restore an `f64` section into `v` (lengths must match).
+    pub fn restore_f64(&self, name: &str, v: &SharedVec<f64>) -> crate::Result<()> {
+        let (raw, len) = self.section(name, KIND_F64)?;
+        ensure!(len as usize == v.len(), "section '{name}' len {len} != state len {}", v.len());
+        for i in 0..v.len() {
+            v.set(i, f64::from_le_bytes(raw[i * 8..i * 8 + 8].try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Restore a `u32` section into `v` (lengths must match).
+    pub fn restore_u32(&self, name: &str, v: &SharedVec<u32>) -> crate::Result<()> {
+        let (raw, len) = self.section(name, KIND_U32)?;
+        ensure!(len as usize == v.len(), "section '{name}' len {len} != state len {}", v.len());
+        for i in 0..v.len() {
+            v.set(i, u32::from_le_bytes(raw[i * 4..i * 4 + 4].try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Restore a `u64` section into `v` (lengths must match).
+    pub fn restore_u64(&self, name: &str, v: &SharedVec<u64>) -> crate::Result<()> {
+        let (raw, len) = self.section(name, KIND_U64)?;
+        ensure!(len as usize == v.len(), "section '{name}' len {len} != state len {}", v.len());
+        for i in 0..v.len() {
+            v.set(i, u64::from_le_bytes(raw[i * 8..i * 8 + 8].try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Restore an `i64` section into `v` (lengths must match).
+    pub fn restore_i64(&self, name: &str, v: &SharedVec<i64>) -> crate::Result<()> {
+        let (raw, len) = self.section(name, KIND_I64)?;
+        ensure!(len as usize == v.len(), "section '{name}' len {len} != state len {}", v.len());
+        for i in 0..v.len() {
+            v.set(i, i64::from_le_bytes(raw[i * 8..i * 8 + 8].try_into().unwrap()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("graphyti-ckpt-{}-{tag}.ckpt", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = tmp("rt");
+        let n = 130usize;
+        let frontier = AtomicBitmap::new(n);
+        for v in [0usize, 5, 63, 64, 129] {
+            frontier.set(v);
+        }
+        let ranks = SharedVec::new(n, 0.0f64);
+        for i in 0..n {
+            ranks.set(i, i as f64 * 0.5);
+        }
+        let labels = SharedVec::new(n, 0u32);
+        for i in 0..n {
+            labels.set(i, (i % 7) as u32);
+        }
+        let mut w = CheckpointWriter::new();
+        w.put_f64("rank", &ranks);
+        w.put_u32("label", &labels);
+        let msgs: Vec<(u32, f64)> = vec![(3, 1.25), (64, -2.0)];
+        let mut dsts = Vec::new();
+        let mut raw = Vec::new();
+        for (d, m) in &msgs {
+            dsts.push(*d);
+            raw.extend_from_slice(&m.to_le_bytes());
+        }
+        let hdr = CheckpointHeader {
+            round: 9,
+            n: n as u64,
+            frontier: &frontier,
+            pending: 2,
+            msg_size: 8,
+            msg_dsts: &dsts,
+            msg_bytes: &raw,
+        };
+        let bytes = save(&path, &hdr, &w).unwrap();
+        assert!(bytes > 0);
+        assert!(
+            !path.with_extension("ckpt-tmp").exists(),
+            "tmp file must be renamed away"
+        );
+
+        let img = CheckpointImage::load(&path).unwrap();
+        assert_eq!(img.round, 9);
+        assert_eq!(img.n, n as u64);
+        assert_eq!(img.pending, 2);
+        assert_eq!(img.msg_dsts, dsts);
+        assert_eq!(img.msg_size, 8);
+        let back = AtomicBitmap::new(n);
+        for (wi, word) in img.frontier_words.iter().enumerate() {
+            let mut w = *word;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                w &= w - 1;
+                back.set(wi * 64 + b);
+            }
+        }
+        assert_eq!(
+            back.iter_set().collect::<Vec<_>>(),
+            vec![0usize, 5, 63, 64, 129]
+        );
+        let r2 = SharedVec::new(n, 0.0f64);
+        img.restore_f64("rank", &r2).unwrap();
+        assert_eq!(r2.to_vec(), ranks.to_vec());
+        let l2 = SharedVec::new(n, 0u32);
+        img.restore_u32("label", &l2).unwrap();
+        assert_eq!(l2.to_vec(), labels.to_vec());
+        // typed accessors reject wrong kind / missing sections
+        assert!(img.restore_u32("rank", &l2).is_err());
+        assert!(img.restore_f64("nope", &r2).is_err());
+        let short = SharedVec::new(n - 1, 0.0f64);
+        assert!(img.restore_f64("rank", &short).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_or_corrupt_checkpoints_fail_cleanly() {
+        let path = tmp("torn");
+        let n = 64usize;
+        let frontier = AtomicBitmap::new(n);
+        frontier.set(1);
+        let state = SharedVec::new(n, 7.0f64);
+        let mut w = CheckpointWriter::new();
+        w.put_f64("s", &state);
+        let hdr = CheckpointHeader {
+            round: 3,
+            n: n as u64,
+            frontier: &frontier,
+            pending: 0,
+            msg_size: 0,
+            msg_dsts: &[],
+            msg_bytes: &[],
+        };
+        save(&path, &hdr, &w).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // truncation (torn write) is rejected by the checksum
+        std::fs::write(&path, &good[..good.len() - 5]).unwrap();
+        assert!(CheckpointImage::load(&path).is_err());
+        // a single flipped byte is rejected
+        let mut bad = good.clone();
+        bad[20] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(CheckpointImage::load(&path).is_err());
+        // garbage is rejected
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(CheckpointImage::load(&path).is_err());
+        // the pristine bytes still load
+        std::fs::write(&path, &good).unwrap();
+        assert!(CheckpointImage::load(&path).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checksum_is_stable() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

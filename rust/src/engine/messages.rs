@@ -311,6 +311,68 @@ impl<M: Clone> CombinerLanes<M> {
             }
         }
     }
+
+    /// Non-destructive snapshot of every undelivered fold staged at
+    /// `parity`: for each touched destination, fold across sender lanes
+    /// in worker-id order — the same structural order [`deliver`] uses,
+    /// so a checkpointed fold is bit-identical to what delivery would
+    /// have produced — and return `(dst, folded)` pairs in ascending
+    /// destination order. Lane state is left untouched.
+    ///
+    /// Protocol: single-threaded quiescent points only (the runner's
+    /// worker-0 bookkeeping step), when no sender is writing `parity`.
+    ///
+    /// [`deliver`]: CombinerLanes::deliver
+    pub fn fold_pending(&self, parity: usize) -> Vec<(VertexId, M)> {
+        let slabs = &self.slabs[parity];
+        let touched = &self.touched[parity];
+        let mut out = Vec::new();
+        let nwords = self.n.div_ceil(64);
+        for wi in 0..nwords {
+            let mut union = 0u64;
+            for t in touched {
+                union |= t.word(wi);
+            }
+            let mut bits = union;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let v = wi * 64 + b;
+                let mut acc: Option<M> = None;
+                for (s, t) in touched.iter().enumerate() {
+                    if t.word(wi) & (1 << b) != 0 {
+                        let m = slabs[s].get(v);
+                        match &mut acc {
+                            None => acc = Some(m.clone()),
+                            Some(a) => (self.combiner.combine)(a, m),
+                        }
+                    }
+                }
+                if let Some(m) = acc {
+                    out.push((v as VertexId, m));
+                }
+            }
+        }
+        out
+    }
+
+    /// Re-seed lane 0 at `parity` with checkpointed folds: slab slot,
+    /// touched bit and summary bit per entry, exactly as if worker 0
+    /// had sent each message. Because [`deliver`] folds a single lane's
+    /// slot verbatim, restoring the pre-folded values into one lane
+    /// reproduces the delivery the interrupted run would have made.
+    ///
+    /// Protocol: single-threaded, before workers are spawned.
+    ///
+    /// [`deliver`]: CombinerLanes::deliver
+    pub fn restore_pending(&self, parity: usize, entries: impl IntoIterator<Item = (VertexId, M)>) {
+        for (dst, m) in entries {
+            let v = dst as usize;
+            self.slabs[parity][0].set(v, m);
+            self.touched[parity][0].set(v);
+            self.summary[parity][0].set(v / 64);
+        }
+    }
 }
 
 // --------------------------------------------------------- queue lanes --
@@ -632,6 +694,28 @@ mod tests {
             lanes.send(0, 0, i % 1000, &i);
         }
         assert_eq!(lanes.mem_bytes(), fixed);
+    }
+
+    #[test]
+    fn fold_pending_snapshots_and_restore_reproduces_delivery() {
+        let lanes = CombinerLanes::new(2, 130, min_combiner());
+        lanes.send(0, 0, 3, &9);
+        lanes.send(0, 1, 3, &5);
+        lanes.send(0, 1, 64, &2);
+        lanes.send(0, 0, 129, &7);
+        let pend = lanes.fold_pending(0);
+        assert_eq!(pend, vec![(3, 5), (64, 2), (129, 7)]);
+        // non-destructive: delivery still sees everything afterwards
+        let mut got = Vec::new();
+        deliver_all(&lanes, 0, 130, &mut |v, m| got.push((v, *m)));
+        assert_eq!(got, vec![(3, 5), (64, 2), (129, 7)]);
+        // restored into a fresh plane (single lane 0), delivery is
+        // bit-identical to what the interrupted plane would have done
+        let fresh = CombinerLanes::new(2, 130, min_combiner());
+        fresh.restore_pending(0, pend);
+        let mut again = Vec::new();
+        deliver_all(&fresh, 0, 130, &mut |v, m| again.push((v, *m)));
+        assert_eq!(again, got);
     }
 
     #[test]

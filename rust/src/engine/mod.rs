@@ -68,6 +68,7 @@
 //! of locks; [`runner::EngineConfig::transport`] can force the queue
 //! baseline for oracle comparisons.
 
+pub mod checkpoint;
 pub mod context;
 pub mod messages;
 pub mod program;
@@ -75,6 +76,7 @@ pub mod runner;
 pub mod stats;
 pub mod trace;
 
+pub use checkpoint::{CheckpointImage, CheckpointWriter};
 pub use context::{EndCtx, WorkerCtx};
 pub use messages::{Combiner, TransportMode};
 pub use program::VertexProgram;

@@ -1,6 +1,7 @@
 //! The [`VertexProgram`] trait — the developer-facing API, mirroring
 //! FlashGraph's programming interface (paper Fig. 1a).
 
+use crate::engine::checkpoint::{CheckpointImage, CheckpointWriter};
 use crate::engine::context::{EndCtx, WorkerCtx};
 use crate::engine::messages::Combiner;
 use crate::graph::format::{EdgeRequest, VertexEdges};
@@ -97,5 +98,29 @@ pub trait VertexProgram: Send + Sync {
     /// values — e.g. PageRank's share — that `pull_message` then reads).
     fn pull_message(&self, _src: VertexId, _dst: VertexId) -> Option<Self::Msg> {
         None
+    }
+
+    /// Opt into round-boundary checkpointing
+    /// ([`crate::engine::EngineConfig::checkpoint_every`]). Default
+    /// `false`: the engine silently skips snapshots for programs that
+    /// have not declared their O(n) state through
+    /// [`Self::checkpoint_save`] / [`Self::checkpoint_restore`].
+    /// Checkpointing additionally requires the combiner transport
+    /// (pending queue-lane entries are not foldable into a snapshot)
+    /// and a `Copy`-like message type.
+    fn checkpointable(&self) -> bool {
+        false
+    }
+
+    /// Write every O(n) state array this program owns as named typed
+    /// sections. Called single-threaded at the round barrier the
+    /// snapshot is cut at. Default: no sections.
+    fn checkpoint_save(&self, _w: &mut CheckpointWriter) {}
+
+    /// Restore state saved by [`Self::checkpoint_save`]. Called
+    /// single-threaded before any worker starts. Default: `Ok` (no
+    /// sections to restore).
+    fn checkpoint_restore(&self, _img: &CheckpointImage) -> crate::Result<()> {
+        Ok(())
     }
 }

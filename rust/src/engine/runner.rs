@@ -48,10 +48,12 @@
 //! sources are all inactive — `blocks_skipped` in the stats.
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::engine::checkpoint::{self, CheckpointHeader, CheckpointImage, CheckpointWriter};
 use crate::engine::context::{EndCtx, WorkerCtx, N_RED_SLOTS};
 use crate::engine::messages::{Delivery, MessagePlane, Transport, TransportMode};
 use crate::engine::program::VertexProgram;
@@ -151,6 +153,23 @@ pub struct EngineConfig {
     /// fetch-then-compute baseline; the service layer charges
     /// `workers × (fetch_window + 1)` slot footprints to admission.
     pub fetch_window: usize,
+    /// Write a round-boundary checkpoint every this many rounds (plus a
+    /// final one when the run is cancelled or hits `max_rounds`). `0`
+    /// disables checkpointing entirely — the hot path takes no extra
+    /// branches beyond one predictable compare per round. Requires
+    /// [`Self::checkpoint_path`], a program that opts in via
+    /// [`VertexProgram::checkpointable`], and the combiner transport.
+    pub checkpoint_every: u64,
+    /// Where the checkpoint snapshot lives (written atomically via a
+    /// temp file + rename, so a crash mid-write never leaves a loadable
+    /// torn image). A run that converges naturally removes it.
+    pub checkpoint_path: Option<PathBuf>,
+    /// Start from the snapshot at `checkpoint_path` instead of
+    /// `init_active`: program state, frontier, pending folded messages
+    /// and the round counter are restored, and the run continues from
+    /// the saved round. A missing or corrupt snapshot falls back to a
+    /// fresh run (logged, never fatal).
+    pub resume: bool,
 }
 
 impl Default for EngineConfig {
@@ -167,6 +186,9 @@ impl Default for EngineConfig {
             mode: RunMode::Push,
             pull_density: 0.125,
             fetch_window: 2,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: false,
         }
     }
 }
@@ -184,6 +206,13 @@ pub struct RunReport {
     pub io: IoStatsSnapshot,
     /// Per-round trace (only when `EngineConfig.trace` was set).
     pub trace: Option<RoundTrace>,
+    /// First permanent I/O failure observed by any worker, if the run
+    /// failed. The engine never panics on substrate errors: workers
+    /// record the failure, ride the barriers to the next round boundary,
+    /// and the run winds down with state intact for the caller to
+    /// report. `None` means the run completed (or was cancelled)
+    /// normally.
+    pub failure: Option<String>,
 }
 
 impl RunReport {
@@ -200,6 +229,7 @@ impl RunReport {
             // runs; a single-run "merge" is an identity, so its trace
             // survives (multi-phase callers keep per-phase reports)
             trace: if reports.len() == 1 { reports[0].trace.clone() } else { None },
+            failure: reports.iter().find_map(|r| r.failure.clone()),
         };
         fn add_per_worker(acc: &mut Vec<u64>, v: &[u64]) {
             if acc.len() < v.len() {
@@ -229,6 +259,8 @@ impl RunReport {
             out.engine.blocks_skipped += r.engine.blocks_skipped;
             out.engine.steals += r.engine.steals;
             out.engine.fetch_allocs += r.engine.fetch_allocs;
+            out.engine.checkpoints += r.engine.checkpoints;
+            out.engine.checkpoint_bytes += r.engine.checkpoint_bytes;
             add_per_worker(&mut out.engine.worker_busy_ns, &r.engine.worker_busy_ns);
             add_per_worker(&mut out.engine.worker_idle_ns, &r.engine.worker_idle_ns);
             out.io.read_requests += r.io.read_requests;
@@ -241,6 +273,10 @@ impl RunReport {
             out.io.thread_waits += r.io.thread_waits;
             out.io.evictions += r.io.evictions;
             out.io.retries += r.io.retries;
+            out.io.transient_errors += r.io.transient_errors;
+            out.io.permanent_errors += r.io.permanent_errors;
+            out.io.backoff_waits += r.io.backoff_waits;
+            out.io.backoff_us += r.io.backoff_us;
         }
         out
     }
@@ -299,6 +335,12 @@ struct Shared<M> {
     /// bookkeeping, when every other worker is parked between barriers
     /// — so the lock is uncontended; `None` when tracing is off.
     trace: Option<Mutex<RoundTrace>>,
+    /// First permanent I/O failure recorded by any worker. A worker that
+    /// hits one stores it here (first writer wins), finishes the round's
+    /// barriers normally — never wedging the crew — and worker 0 winds
+    /// the run down at the next boundary. Uncontended in the happy path:
+    /// locked only to record a failure and once per round by worker 0.
+    failure: Mutex<Option<String>>,
 }
 
 /// Claims frontier chunks: first from this worker's own span, then —
@@ -437,6 +479,11 @@ pub fn frontier_summary_word(bm: &AtomicBitmap, n: usize) -> u64 {
 /// only a blocking wait on a still-in-flight batch is charged to
 /// `io_wait_ns`. With `window == 0` every batch is a synchronous, fully
 /// timed fetch (the forced-baseline the overlap tests compare against).
+///
+/// A permanent fetch failure no longer panics: the pipeline stops
+/// filling, retires every in-flight slot back to the free pool (so later
+/// rounds keep their allocation-free steady state), and returns the
+/// first error for the worker to record.
 fn run_pipeline(
     source: &dyn EdgeSource,
     slots: &mut Vec<FetchSlot>,
@@ -444,34 +491,52 @@ fn run_pipeline(
     io_wait_ns: &mut u64,
     mut fill: impl FnMut(&mut FetchSlot) -> bool,
     mut process: impl FnMut(&FetchSlot),
-) {
-    const FETCH_ERR: &str = "edge fetch failed (graph image unreadable)";
+) -> crate::Result<()> {
     if window == 0 {
         let slot = &mut slots[0];
         while fill(slot) {
             let t = Instant::now();
-            source.finish_batch(slot).expect(FETCH_ERR);
+            let finished = source.finish_batch(slot);
             *io_wait_ns += t.elapsed().as_nanos() as u64;
+            finished?;
             process(slot);
         }
-        return;
+        return Ok(());
     }
     let mut free: Vec<FetchSlot> = std::mem::take(slots);
     let mut inflight: VecDeque<FetchSlot> = VecDeque::with_capacity(free.len());
     let mut drained = false;
+    let mut failure: Option<anyhow::Error> = None;
     loop {
-        // keep the window full before touching completions
-        while !drained && inflight.len() < window + 1 {
+        // keep the window full before touching completions (no refills
+        // once a batch has failed — the round is lost either way)
+        while failure.is_none() && !drained && inflight.len() < window + 1 {
             let Some(mut s) = free.pop() else { break };
             if fill(&mut s) {
-                source.submit_batch(&mut s).expect(FETCH_ERR);
-                inflight.push_back(s);
+                match source.submit_batch(&mut s) {
+                    Ok(()) => inflight.push_back(s),
+                    Err(e) => {
+                        failure = Some(e);
+                        s.reqs.clear();
+                        free.push(s);
+                    }
+                }
             } else {
                 drained = true;
                 free.push(s);
             }
         }
         if inflight.is_empty() {
+            break;
+        }
+        if failure.is_some() {
+            // failure drain: retire every in-flight batch unprocessed so
+            // no slot leaks out of the pool
+            while let Some(mut s) = inflight.pop_front() {
+                let _ = source.finish_batch(&mut s);
+                s.reqs.clear();
+                free.push(s);
+            }
             break;
         }
         // prefer whichever batch's pages have already landed (oldest
@@ -481,7 +546,9 @@ fn run_pipeline(
             Some(i) => {
                 let mut s = inflight.remove(i).unwrap();
                 // completed: finish assembles + decodes without blocking
-                source.finish_batch(&mut s).expect(FETCH_ERR);
+                if let Err(e) = source.finish_batch(&mut s) {
+                    failure = Some(e);
+                }
                 s
             }
             None => {
@@ -489,16 +556,25 @@ fn run_pipeline(
                 // and charge the stall to io_wait
                 let mut s = inflight.pop_front().unwrap();
                 let t = Instant::now();
-                source.finish_batch(&mut s).expect(FETCH_ERR);
+                let finished = source.finish_batch(&mut s);
                 *io_wait_ns += t.elapsed().as_nanos() as u64;
+                if let Err(e) = finished {
+                    failure = Some(e);
+                }
                 s
             }
         };
-        process(&s);
+        if failure.is_none() {
+            process(&s);
+        }
         s.reqs.clear();
         free.push(s);
     }
     *slots = free;
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// The BSP engine.
@@ -550,14 +626,41 @@ impl Engine {
             nchunks,
             phase_ns: SharedVec::new(workers, (0u64, 0u64, 0u64, 0u64)),
             trace: cfg.trace.then(|| Mutex::new(RoundTrace::new(workers, io_before))),
+            failure: Mutex::new(None),
         };
-        for &v in init_active {
-            shared.bitmaps[0].set(v as usize);
+        // resume path: restore program state, frontier, pending folded
+        // messages and the round counter from the snapshot instead of
+        // seeding `init_active`. A missing or corrupt snapshot is not
+        // fatal — the run degrades to a fresh start (the durability
+        // contract is at-least-once completion, never wedging on a torn
+        // file).
+        let mut start_round = 0usize;
+        let mut resumed = false;
+        if cfg.resume {
+            if let Some(path) = &cfg.checkpoint_path {
+                match CheckpointImage::load(path)
+                    .and_then(|img| Self::restore_from(program, &shared, &img, n))
+                {
+                    Ok(k) => {
+                        start_round = k;
+                        resumed = true;
+                    }
+                    Err(e) => {
+                        eprintln!("graphyti: checkpoint unusable ({e:#}); starting fresh");
+                    }
+                }
+            }
         }
-        // round 0's direction, single-threaded (worker 0 decides every
-        // later round at bookkeeping): pull only on opted-in programs,
-        // and under Auto only when the initial frontier is dense enough
-        let init_frontier = shared.bitmaps[0].count();
+        if !resumed {
+            for &v in init_active {
+                shared.bitmaps[0].set(v as usize);
+            }
+        }
+        // the starting round's direction, single-threaded (worker 0
+        // decides every later round at bookkeeping): pull only on
+        // opted-in programs, and under Auto only when the initial
+        // frontier is dense enough
+        let init_frontier = shared.bitmaps[start_round % 2].count();
         let pull0 = program.supports_pull()
             && match cfg.mode {
                 RunMode::Push => false,
@@ -594,12 +697,82 @@ impl Engine {
             t.finish(io_final);
             t
         });
+        let failure = shared.failure.into_inner().unwrap();
         RunReport {
             rounds: shared.stats.rounds.load(Ordering::Relaxed),
             wall,
             engine: shared.stats.snapshot(),
             io,
             trace,
+            failure,
+        }
+    }
+
+    /// Rebuild a run's starting state from a checkpoint image: program
+    /// sections, the frontier bitmap at the saved round's parity, the
+    /// pending folded messages (into sender lane 0 — the delivery fold
+    /// reproduces the pre-fold value bit-identically), and the round
+    /// counter. Validates everything *before* mutating anything, so a
+    /// failed restore leaves the shared state fresh.
+    fn restore_from<P: VertexProgram>(
+        program: &P,
+        shared: &Shared<P::Msg>,
+        img: &CheckpointImage,
+        n: usize,
+    ) -> crate::Result<usize> {
+        anyhow::ensure!(
+            img.n == n as u64,
+            "checkpoint is for a {}-vertex graph, this run has {n}",
+            img.n
+        );
+        let msg_size = std::mem::size_of::<P::Msg>();
+        anyhow::ensure!(
+            img.msg_size == msg_size as u64,
+            "checkpoint message size {} != program message size {msg_size}",
+            img.msg_size
+        );
+        let Transport::Combine(lanes) = &shared.plane.transport else {
+            anyhow::bail!("checkpoint resume requires the combiner transport");
+        };
+        program.checkpoint_restore(img)?;
+        let k = img.round as usize;
+        let parity = k % 2;
+        let bm = &shared.bitmaps[parity];
+        for (wi, &word) in img.frontier_words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                bm.set(wi * 64 + b);
+                w &= w - 1;
+            }
+        }
+        lanes.restore_pending(
+            parity,
+            img.msg_dsts.iter().enumerate().map(|(i, &dst)| {
+                // messages were saved as raw bytes; the save path gated
+                // on a Copy-like (needs_drop-free) message type, so a
+                // byte-wise read reconstructs the exact value
+                let m = unsafe {
+                    std::ptr::read_unaligned(
+                        img.msg_bytes[i * msg_size..].as_ptr() as *const P::Msg
+                    )
+                };
+                (dst, m)
+            }),
+        );
+        shared.plane.add_pending(parity, img.pending as usize);
+        shared.round.store(k, Ordering::Release);
+        Ok(k)
+    }
+
+    /// Record a permanent fetch failure (first writer wins). The worker
+    /// then rides the round's remaining barriers normally — no panic, no
+    /// wedged crew — and worker 0 reads the flag at bookkeeping to wind
+    /// the run down at the boundary.
+    fn record_failure<M>(shared: &Shared<M>, e: &anyhow::Error) {
+        let mut f = shared.failure.lock().unwrap();
+        if f.is_none() {
+            *f = Some(format!("{e:#}"));
         }
     }
 
@@ -737,7 +910,7 @@ impl Engine {
                 let index = source.index();
                 let mut claimer =
                     ChunkClaimer::new(&shared.pull_cursors, shared.nchunks, workers, wid);
-                run_pipeline(
+                let piped = run_pipeline(
                     source,
                     &mut slots,
                     cfg.fetch_window,
@@ -802,6 +975,9 @@ impl Engine {
                         }
                     },
                 );
+                if let Err(e) = piped {
+                    Self::record_failure(shared, &e);
+                }
             } else {
                 let mut stream = FrontierStream {
                     bm: current,
@@ -810,7 +986,7 @@ impl Engine {
                     n,
                     clear: true,
                 };
-                run_pipeline(
+                let piped = run_pipeline(
                     source,
                     &mut slots,
                     cfg.fetch_window,
@@ -833,6 +1009,9 @@ impl Engine {
                         }
                     },
                 );
+                if let Err(e) = piped {
+                    Self::record_failure(shared, &e);
+                }
                 ctx.c_steals += stream.claimer.steals;
             }
             ctx.flush_sends();
@@ -951,10 +1130,83 @@ impl Engine {
                 }
                 let cancelled =
                     cfg.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed));
-                let done = stop_requested
+                let failed = shared.failure.lock().unwrap().is_some();
+                let converged = next_active == 0 && pending == 0 && !continue_requested;
+                let done = failed
+                    || stop_requested
                     || cancelled
-                    || (next_active == 0 && pending == 0 && !continue_requested)
+                    || converged
                     || round + 1 >= cfg.max_rounds;
+                // ---- round-boundary checkpoint -------------------------
+                // Worker 0 is single-threaded here (everyone else parked
+                // between barriers), so the cut is a consistent "start of
+                // round r+1": program O(n) state, the next frontier, and
+                // the folded messages pending for round r+1. Periodic
+                // every `checkpoint_every` rounds, plus a final cut when
+                // the run stops early (cancel / max_rounds) so a resumed
+                // job loses no completed work. Never written on failure
+                // (the state may be partial); removed on convergence so a
+                // finished job leaves no stale snapshot behind.
+                if cfg.checkpoint_every > 0 && program.checkpointable() {
+                    if let Some(path) = &cfg.checkpoint_path {
+                        let eligible = !std::mem::needs_drop::<P::Msg>()
+                            && matches!(&shared.plane.transport, Transport::Combine(_));
+                        let stopping_early = cancelled || round + 1 >= cfg.max_rounds;
+                        let periodic =
+                            !done && (round as u64 + 1) % cfg.checkpoint_every == 0;
+                        if failed || (done && !stopping_early) {
+                            // converged / stopped / failed: a snapshot is
+                            // either stale or unsafe
+                            if done && !failed {
+                                let _ = std::fs::remove_file(path);
+                            }
+                        } else if eligible && (periodic || stopping_early) {
+                            let mut w = CheckpointWriter::new();
+                            program.checkpoint_save(&mut w);
+                            let Transport::Combine(lanes) = &shared.plane.transport
+                            else {
+                                unreachable!()
+                            };
+                            let pend = lanes.fold_pending(nxt_parity);
+                            let msg_size = std::mem::size_of::<P::Msg>();
+                            let mut dsts = Vec::with_capacity(pend.len());
+                            let mut bytes = Vec::with_capacity(pend.len() * msg_size);
+                            for (v, m) in &pend {
+                                dsts.push(*v);
+                                // gated on needs_drop-free messages, so
+                                // the raw bytes are the full value
+                                let p = m as *const P::Msg as *const u8;
+                                bytes.extend_from_slice(unsafe {
+                                    std::slice::from_raw_parts(p, msg_size)
+                                });
+                            }
+                            let hdr = CheckpointHeader {
+                                round: round as u64 + 1,
+                                n: n as u64,
+                                frontier: next,
+                                pending: pending as u64,
+                                msg_size: msg_size as u64,
+                                msg_dsts: &dsts,
+                                msg_bytes: &bytes,
+                            };
+                            match checkpoint::save(path, &hdr, &w) {
+                                Ok(written) => {
+                                    shared
+                                        .stats
+                                        .checkpoints
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    shared
+                                        .stats
+                                        .checkpoint_bytes
+                                        .fetch_add(written, Ordering::Relaxed);
+                                }
+                                Err(e) => eprintln!(
+                                    "graphyti: checkpoint write failed: {e:#}"
+                                ),
+                            }
+                        }
+                    }
+                }
                 // rewind every chunk cursor (frontier and pull sweeps)
                 // for the next round (published to the other workers by
                 // the barrier below)

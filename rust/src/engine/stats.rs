@@ -60,6 +60,11 @@ pub struct EngineStats {
     /// `FetchArena::allocs` at run end. Flat once warm; the trace
     /// overhead test asserts tracing does not move it.
     pub fetch_allocs: AtomicU64,
+    /// Round-boundary checkpoints published
+    /// ([`crate::engine::EngineConfig::checkpoint_every`]; 0 when off).
+    pub checkpoints: AtomicU64,
+    /// Total bytes written by published checkpoints.
+    pub checkpoint_bytes: AtomicU64,
     /// Per-worker time spent working (phases A/B + bookkeeping), ns.
     worker_busy_ns: Vec<AtomicU64>,
     /// Per-worker time spent waiting at barriers, ns.
@@ -116,6 +121,8 @@ impl EngineStats {
             blocks_skipped: self.blocks_skipped.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
             fetch_allocs: self.fetch_allocs.load(Ordering::Relaxed),
+            checkpoints: self.checkpoints.load(Ordering::Relaxed),
+            checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
             worker_busy_ns: self
                 .worker_busy_ns
                 .iter()
@@ -162,6 +169,10 @@ pub struct EngineStatsSnapshot {
     /// Fetch-path heap allocations over the run (warm steady state: 0
     /// per round).
     pub fetch_allocs: u64,
+    /// Round-boundary checkpoints published over the run (0 when off).
+    pub checkpoints: u64,
+    /// Total bytes written by published checkpoints.
+    pub checkpoint_bytes: u64,
     /// Per-worker busy time in nanoseconds (empty when untracked).
     pub worker_busy_ns: Vec<u64>,
     /// Per-worker barrier-wait time in nanoseconds.
@@ -246,6 +257,13 @@ impl EngineStatsSnapshot {
         }
         if self.phase_b_ns > 0 {
             s.push_str(&format!(" overlap={:.2}", self.overlap_ratio()));
+        }
+        if self.checkpoints > 0 {
+            s.push_str(&format!(
+                " checkpoints={} ckpt_bytes={}",
+                self.checkpoints,
+                crate::util::fmt_bytes(self.checkpoint_bytes),
+            ));
         }
         if self.worker_busy_ns.len() >= 2 {
             s.push_str(&format!(

@@ -11,6 +11,7 @@
 //! * `serve`    — run the multi-tenant job service (JSON-lines TCP).
 //! * `submit`   — submit a job to a running service.
 //! * `status`   — query a running service (one job or the whole table).
+//! * `health`   — liveness/durability summary from a running service.
 //! * `metrics`  — dump the unified metrics registry from a running
 //!   service (JSON by default, Prometheus text with `--text`).
 //!
@@ -52,10 +53,11 @@ USAGE:
   graphyti verify   --graph PATH [--iters N]
   graphyti serve    [--port P] [--cache-mb N] [--budget-mb N]
                     [--exec-threads N] [--io-threads N] [--io-delay-us N]
-                    [--workers N]
+                    [--workers N] [--wal-dir DIR]
   graphyti submit ALG --graph PATH [--addr HOST:PORT] [--variant V]
                     [--num N] [--priority 0-9] [--wait] [--timeout-ms N]
   graphyti status   [--addr HOST:PORT] [--job ID]
+  graphyti health   [--addr HOST:PORT]
   graphyti metrics  [--addr HOST:PORT] [--text]
 
 ALG: pagerank (push|pull), coreness (graphyti|pruned|unopt),
@@ -69,7 +71,11 @@ rewrites v1 images as v2 (the default target) and back.
 
 Service mode: `serve` multiplexes concurrent jobs over one shared page
 cache + I/O pool, with an admission budget on summed per-job O(n) state.
-`submit`/`status`/`metrics` speak its JSON-lines TCP protocol.
+`submit`/`status`/`health`/`metrics` speak its JSON-lines TCP protocol.
+With `--wal-dir` every job transition is logged durably and checkpoints
+land beside the log: a restarted service re-admits queued jobs and
+resumes interrupted ones; SIGINT/SIGTERM drain running jobs to a round
+boundary (bounded 30 s) before exiting.
 
 Rounds: `--mode auto` pulls along in-edges on dense frontiers (programs
 that opt in) and pushes otherwise; `--fetch-window N` keeps N edge
@@ -384,23 +390,64 @@ fn cmd_serve(args: &Args) -> graphyti::Result<()> {
             * 1024
             * 1024,
         default_workers: args.get_usize("workers", d.default_workers)?,
+        wal_dir: args.get("wal-dir").map(PathBuf::from),
+        fault: None,
     };
     let svc = GraphService::start(cfg.clone());
-    let server = ServiceServer::start(svc, &format!("127.0.0.1:{port}"))?;
+    let server = ServiceServer::start(svc.clone(), &format!("127.0.0.1:{port}"))?;
     println!(
-        "graphyti service listening on {} (cache {} MiB, budget {}, {} executors)",
+        "graphyti service listening on {} (cache {} MiB, budget {}, {} executors{})",
         server.addr(),
         cfg.cache_mb,
         fmt_bytes(cfg.budget_bytes),
         cfg.exec_threads.max(1),
+        match &cfg.wal_dir {
+            Some(d) => format!(", wal {}", d.display()),
+            None => String::new(),
+        },
     );
     println!(
-        "protocol: one JSON object per line; ops: submit status wait list cancel stats metrics shutdown"
+        "protocol: one JSON object per line; ops: submit status wait list cancel stats metrics health shutdown"
     );
+    install_signal_drain(svc);
     server.wait();
     println!("service stopped");
     Ok(())
 }
+
+/// On SIGINT/SIGTERM, drain running jobs to a round boundary (flushing
+/// final checkpoints and stamping them resumable in the WAL) instead of
+/// dying mid-round. The handler only sets a flag; a watcher thread does
+/// the actual shutdown, since almost nothing is async-signal-safe.
+#[cfg(unix)]
+fn install_signal_drain(svc: Arc<GraphService>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static SIGNALLED: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALLED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+    let _ = std::thread::Builder::new().name("gy-signal".to_string()).spawn(move || loop {
+        if SIGNALLED.load(Ordering::SeqCst) {
+            eprintln!("graphyti: signal received; draining jobs (bounded 30 s)");
+            svc.shutdown_graceful(Duration::from_secs(30));
+            eprintln!("service stopped");
+            std::process::exit(0);
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    });
+}
+
+#[cfg(not(unix))]
+fn install_signal_drain(_svc: Arc<GraphService>) {}
 
 fn default_addr(args: &Args) -> String {
     args.get("addr").unwrap_or("127.0.0.1:7171").to_string()
@@ -554,6 +601,51 @@ fn cmd_status(args: &Args) -> graphyti::Result<()> {
     Ok(())
 }
 
+fn cmd_health(args: &Args) -> graphyti::Result<()> {
+    let addr = default_addr(args);
+    let resp =
+        call(&addr, &Json::obj(vec![("op", Json::s("health"))]), Duration::from_secs(30))?;
+    check_ok(&resp)?;
+    let h = resp
+        .get("health")
+        .ok_or_else(|| anyhow::anyhow!("malformed response: {}", resp.encode()))?;
+    let jobs = h.get("jobs");
+    println!(
+        "status: {} ({} executors, {} graphs open)",
+        h.get("status").and_then(Json::as_str).unwrap_or("?"),
+        job_field_u64(h, "exec_threads"),
+        job_field_u64(h, "graphs_open"),
+    );
+    if let Some(j) = jobs {
+        println!(
+            "jobs: {} queued, {} running, {} done, {} failed, {} cancelled, {} rejected",
+            job_field_u64(j, "queued"),
+            job_field_u64(j, "running"),
+            job_field_u64(j, "done"),
+            job_field_u64(j, "failed"),
+            job_field_u64(j, "cancelled"),
+            job_field_u64(j, "rejected"),
+        );
+    }
+    if h.get("wal_enabled").and_then(Json::as_bool) == Some(true) {
+        println!(
+            "wal: {} records appended, {} replayed, {} skipped, {} jobs resumed",
+            job_field_u64(h, "wal_records"),
+            job_field_u64(h, "wal_replayed"),
+            job_field_u64(h, "wal_skipped"),
+            job_field_u64(h, "resumed_jobs"),
+        );
+    } else {
+        println!("wal: disabled (start serve with --wal-dir for durable jobs)");
+    }
+    println!(
+        "io errors: {} transient (retried), {} permanent",
+        job_field_u64(h, "io_transient_errors"),
+        job_field_u64(h, "io_permanent_errors"),
+    );
+    Ok(())
+}
+
 fn cmd_metrics(args: &Args) -> graphyti::Result<()> {
     let addr = default_addr(args);
     let mut fields = vec![("op", Json::s("metrics"))];
@@ -593,6 +685,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
+        "health" => cmd_health(&args),
         "metrics" => cmd_metrics(&args),
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
-use super::io::{coalesce, IoPool, RunReply, RunRequest};
+use super::io::{coalesce, IoError, IoPool, RunReply, RunRequest};
 use super::page_cache::{PageCache, PageRef, PAGE_SIZE};
 use super::stats::IoStats;
 
@@ -122,6 +122,12 @@ pub struct PendingRead {
     have: Vec<(u64, PageRef)>,
     /// Submit time — end-to-end fetch latency is measured from here.
     t0: std::time::Instant,
+    /// First failed run of the batch, if any. The batch keeps draining
+    /// its remaining completions (so the outstanding count stays exact)
+    /// but [`SemFile::finish_ranges`] returns this error instead of
+    /// assembling — errored runs contribute no pages and are never
+    /// cache-inserted.
+    failure: Option<IoError>,
 }
 
 impl PendingRead {
@@ -142,6 +148,9 @@ pub struct SemFile {
     /// Several `SemFile`s sharing one [`PageCache`] (service mode) get
     /// disjoint key namespaces so their pages never alias.
     key_base: u64,
+    /// The file's path, carried on every [`RunRequest`] so pool errors
+    /// name their file and fault plans can target it.
+    tag: Arc<str>,
 }
 
 impl SemFile {
@@ -167,7 +176,8 @@ impl SemFile {
         let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
         let len = file.metadata()?.len();
         let stats = cache.stats().clone();
-        Ok(SemFile { file: Arc::new(file), len, cache, pool, stats, key_base })
+        let tag: Arc<str> = Arc::from(path.to_string_lossy().as_ref());
+        Ok(SemFile { file: Arc::new(file), len, cache, pool, stats, key_base, tag })
     }
 
     /// File length in bytes.
@@ -292,6 +302,7 @@ impl SemFile {
                     start_page: start,
                     npages: n,
                     reply: tx.clone(),
+                    tag: self.tag.clone(),
                 });
             }
             drop(tx);
@@ -302,8 +313,18 @@ impl SemFile {
                 j.add_thread_wait(1);
             }
             let wait_t0 = std::time::Instant::now();
+            let mut failed: Option<IoError> = None;
             for _ in 0..nruns {
                 let reply = rx.recv().context("io pool reply channel closed")?;
+                if let Some(err) = reply.error {
+                    // a failed run delivered no pages: never cache-insert
+                    // it, keep draining so every run is accounted, and
+                    // surface the first failure after the drain
+                    if failed.is_none() {
+                        failed = Some(err);
+                    }
+                    continue;
+                }
                 if let Some(j) = job {
                     // the pool already counted this run into the global
                     // stats; mirror its actual cost into the job's
@@ -323,6 +344,10 @@ impl SemFile {
             self.stats.wait_latency_us.record(wait_us);
             if let Some(j) = job {
                 j.wait_latency_us.record(wait_us);
+            }
+            if let Some(err) = failed {
+                return Err(anyhow::Error::new(err)
+                    .context(format!("batch read of {} failed", self.tag)));
             }
         }
         have.sort_unstable_by_key(|&(p, _)| p);
@@ -406,11 +431,12 @@ impl SemFile {
                     start_page: start,
                     npages: n,
                     reply: tx.clone(),
+                    tag: self.tag.clone(),
                 });
             }
         }
         drop(tx);
-        Ok(PendingRead { rx, outstanding, have, t0 })
+        Ok(PendingRead { rx, outstanding, have, t0, failure: None })
     }
 
     /// Absorb any completions that have already landed, without
@@ -457,6 +483,10 @@ impl SemFile {
                 j.wait_latency_us.record(wait_us);
             }
         }
+        if let Some(err) = pending.failure.take() {
+            return Err(anyhow::Error::new(err)
+                .context(format!("batch read of {} failed", self.tag)));
+        }
         pending.have.sort_unstable_by_key(|&(p, _)| p);
         let RangeScratch { free, allocs, .. } = scratch;
         assemble(ranges, &pending.have, free, allocs, out);
@@ -470,8 +500,17 @@ impl SemFile {
 
     /// Cache-insert one completed run and credit its cost. The pool
     /// already counted the run into the global stats; only the per-job
-    /// mirror happens here.
+    /// mirror happens here. A failed run contributes no pages and must
+    /// never reach the cache (its buffer is empty); the first failure is
+    /// parked on the batch for [`Self::finish_ranges`] to surface.
     fn absorb_reply(&self, reply: RunReply, pending: &mut PendingRead, job: Option<&IoStats>) {
+        pending.outstanding -= 1;
+        if let Some(err) = reply.error {
+            if pending.failure.is_none() {
+                pending.failure = Some(err);
+            }
+            return;
+        }
         if let Some(j) = job {
             if reply.bytes_read > 0 {
                 j.add_physical_read(1);
@@ -484,7 +523,6 @@ impl SemFile {
             self.cache.insert(self.key_base + p, view.clone());
             pending.have.push((p, view));
         }
-        pending.outstanding -= 1;
     }
 
     /// Prefetch hint: asynchronously warm the cache for the byte ranges
@@ -518,15 +556,20 @@ impl SemFile {
                 start_page: start,
                 npages: n,
                 reply: tx.clone(),
+                tag: self.tag.clone(),
             });
         }
         drop(tx);
-        // fire-and-forget insertion on a helper thread so callers don't block
+        // fire-and-forget insertion on a helper thread so callers don't
+        // block; failed runs are dropped (a prefetch is only a hint)
         let cache = self.cache.clone();
         let key_base = self.key_base;
         std::thread::spawn(move || {
             for _ in 0..nruns {
                 if let Ok(reply) = rx.recv() {
+                    if reply.error.is_some() {
+                        continue;
+                    }
                     for i in 0..reply.npages {
                         cache.insert(key_base + reply.start_page + i as u64, reply.page(i));
                     }

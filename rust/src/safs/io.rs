@@ -27,8 +27,9 @@ use super::stats::IoStats;
 /// Deterministic fault injection for tests: everything keys off
 /// `seed` and the pool-assigned request id through splitmix64, so two
 /// runs submitting the same request sequence observe the same jitter,
-/// the same reorderings and the same transient errors.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// the same reorderings, the same transient errors and the same backoff
+/// waits.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FaultPlan {
     /// Seed for every derived decision.
     pub seed: u64,
@@ -38,16 +39,80 @@ pub struct FaultPlan {
     /// Service queued runs out of submission order (seeded front/back
     /// pops), so completions arrive shuffled relative to submits.
     pub reorder: bool,
-    /// Every `eio_period`-th request suffers a transient read error that
-    /// the pool retries once (deterministically successful; counted in
-    /// [`IoStats::retries`]). 0 = no errors.
+    /// Every `eio_period`-th request suffers a transient read error on
+    /// its **first** service attempt; the pool's bounded backoff retries
+    /// it (deterministically successful on the second attempt, counted
+    /// in [`IoStats::retries`]). 0 = no transient errors.
     pub eio_period: u64,
+    /// Inject a **permanent** failure on every request whose file tag
+    /// contains this substring: the request fails immediately with a
+    /// [`IoErrorClass::Permanent`] error reply — no retries, no backoff
+    /// — which the fetch path must surface as a clean per-job failure.
+    /// `None` = no permanent injection.
+    pub fail_path: Option<Arc<str>>,
 }
 
 impl FaultPlan {
-    /// A plan exercising all three fault classes at once.
+    /// A plan exercising jitter, reordering and transient errors at once
+    /// (no permanent failures: chaos runs must still complete).
     pub fn chaos(seed: u64) -> Self {
-        FaultPlan { seed, jitter_us: 200, reorder: true, eio_period: 7 }
+        FaultPlan { seed, jitter_us: 200, reorder: true, eio_period: 7, fail_path: None }
+    }
+}
+
+/// How a failed substrate read should be treated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoErrorClass {
+    /// Worth retrying: the pool already did, with bounded exponential
+    /// backoff — a reply carrying this class means retries were
+    /// exhausted without the error clearing.
+    Transient,
+    /// Not worth retrying (unreadable device, bad descriptor, injected
+    /// permanent fault): fail the owning job cleanly.
+    Permanent,
+}
+
+/// A typed substrate read failure, delivered inside [`RunReply`] instead
+/// of panicking the pool thread. The fetch path propagates it up to the
+/// engine, which fails the owning job at the next round boundary while
+/// concurrent healthy jobs keep running.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoError {
+    /// Transient-exhausted vs immediately-permanent.
+    pub class: IoErrorClass,
+    /// Human-readable cause, including the file tag.
+    pub message: String,
+}
+
+impl IoError {
+    fn permanent(message: String) -> Self {
+        IoError { class: IoErrorClass::Permanent, message }
+    }
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for IoError {}
+
+/// Retry budget for transient read errors (first attempt + 4 retries).
+const MAX_ATTEMPTS: u64 = 5;
+/// First backoff wait; doubles per retry.
+const BACKOFF_BASE_US: u64 = 100;
+/// Backoff ceiling.
+const BACKOFF_CAP_US: u64 = 10_000;
+
+/// Classify an OS read error. `Interrupted` never reaches this (it is a
+/// free in-place retry, as before); `WouldBlock`/`TimedOut` and raw
+/// `EIO` are worth backing off and retrying, anything else is permanent.
+fn classify(e: &std::io::Error) -> IoErrorClass {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => IoErrorClass::Transient,
+        _ if e.raw_os_error() == Some(5) => IoErrorClass::Transient,
+        _ => IoErrorClass::Permanent,
     }
 }
 
@@ -87,6 +152,9 @@ pub(crate) struct RunRequest {
     pub file_len: u64,
     pub start_page: u64,
     pub npages: usize,
+    /// The owning file's path tag — error messages name it, and the
+    /// fault plan's permanent injection matches on it.
+    pub tag: Arc<str>,
     pub reply: Sender<RunReply>,
 }
 
@@ -103,9 +171,15 @@ pub(crate) struct RunReply {
     /// Pages in the run; `buf.len() == npages * PAGE_SIZE`.
     pub npages: usize,
     /// The run buffer. The tail past `bytes_read` is EOF zero padding.
+    /// Empty (not page-sized) when `error` is set — an errored reply's
+    /// pages must never be used or cached.
     pub buf: Arc<[u8]>,
     /// Bytes actually read from disk (0 for a fully-past-EOF run).
     pub bytes_read: u64,
+    /// Set when the run failed after the pool's retry policy was
+    /// exhausted (or immediately, for permanent errors). The pool never
+    /// panics on a read failure: the caller decides the blast radius.
+    pub error: Option<IoError>,
 }
 
 impl RunReply {
@@ -243,37 +317,115 @@ impl IoPool {
     /// count the pread returned (not the padded run size), and a run
     /// lying entirely past EOF performs no pread, pays no injected
     /// latency and moves no counters.
+    ///
+    /// Read errors never panic the pool thread. `Interrupted` is a free
+    /// in-place retry (uncounted, as always). Transient errors —
+    /// `WouldBlock`, `TimedOut`, raw `EIO` — are retried up to
+    /// [`MAX_ATTEMPTS`] times under exponential backoff
+    /// ([`BACKOFF_BASE_US`] doubling to [`BACKOFF_CAP_US`]) with
+    /// deterministic jitter keyed off the fault-plan seed and
+    /// `(req_id, attempt)`, so chaos runs replay bit-identically.
+    /// Everything else — and transient exhaustion — produces an error
+    /// reply the fetch path turns into a clean per-job failure.
     fn service(req: &RunRequest, req_id: u64, stats: &IoStats, cfg: &IoConfig) -> RunReply {
         let offset = req.start_page * PAGE_SIZE as u64;
         let want = req.npages * PAGE_SIZE;
-        // single run buffer; the TrustedLen collect writes it in place
-        let mut buf: Arc<[u8]> = (0..want).map(|_| 0u8).collect();
         let avail = (req.file_len.saturating_sub(offset) as usize).min(want);
-        let mut done = 0;
+        let mut inject_eio = false;
         let mut delay_us = cfg.io_delay_us;
-        if avail > 0 {
-            if let Some(plan) = &cfg.fault {
+        let mut seed = 0u64;
+        if let Some(plan) = &cfg.fault {
+            seed = plan.seed;
+            if avail > 0 {
+                if let Some(fp) = &plan.fail_path {
+                    if req.tag.contains(&**fp) {
+                        // injected permanent fault: fail immediately,
+                        // no retries, no backoff
+                        stats.add_permanent_error(1);
+                        return Self::error_reply(
+                            req,
+                            IoError::permanent(format!(
+                                "injected permanent I/O failure on {}",
+                                req.tag
+                            )),
+                        );
+                    }
+                }
                 if plan.jitter_us > 0 {
                     // per-request latency jitter in 0..=jitter_us
                     delay_us += mix(plan.seed, req_id) % (plan.jitter_us + 1);
                 }
-                if plan.eio_period > 0 && req_id % plan.eio_period == plan.eio_period - 1 {
-                    // transient EIO on the first attempt: the pool's
-                    // retry policy re-issues the pread once (which
-                    // succeeds deterministically here), so the caller
-                    // only ever observes the retry counter moving — a
-                    // second consecutive failure would be fatal
-                    stats.add_retry(1);
-                }
+                // transient EIO consuming exactly the first attempt: the
+                // backoff policy re-issues the pread, which succeeds
+                // deterministically on attempt 1
+                inject_eio =
+                    plan.eio_period > 0 && req_id % plan.eio_period == plan.eio_period - 1;
             }
+        }
+        // single run buffer; the TrustedLen collect writes it in place
+        let mut buf: Arc<[u8]> = (0..want).map(|_| 0u8).collect();
+        let mut done = 0;
+        if avail > 0 {
             let t0 = std::time::Instant::now();
             let dst = Arc::get_mut(&mut buf).expect("fresh run buffer is uniquely owned");
-            while done < avail {
-                match req.file.read_at(&mut dst[done..avail], offset + done as u64) {
-                    Ok(0) => break,
-                    Ok(n) => done += n,
-                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                    Err(e) => panic!("safs pread failed: {e}"),
+            let mut attempt = 0u64;
+            loop {
+                let res: std::io::Result<()> = if inject_eio && attempt == 0 {
+                    Err(std::io::Error::from_raw_os_error(5))
+                } else {
+                    loop {
+                        if done >= avail {
+                            break Ok(());
+                        }
+                        match req.file.read_at(&mut dst[done..avail], offset + done as u64) {
+                            Ok(0) => break Ok(()),
+                            Ok(n) => done += n,
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                            Err(e) => break Err(e),
+                        }
+                    }
+                };
+                match res {
+                    Ok(()) => break,
+                    Err(e) => {
+                        if classify(&e) == IoErrorClass::Transient {
+                            stats.add_transient_error(1);
+                            if attempt + 1 < MAX_ATTEMPTS {
+                                stats.add_retry(1);
+                                // exponential backoff with deterministic
+                                // jitter in 0..=base/2 (partial progress
+                                // from the failed attempt is kept)
+                                let base =
+                                    (BACKOFF_BASE_US << attempt.min(16)).min(BACKOFF_CAP_US);
+                                let wait =
+                                    base + mix(seed, req_id * 8 + attempt) % (base / 2 + 1);
+                                std::thread::sleep(std::time::Duration::from_micros(wait));
+                                stats.add_backoff(wait);
+                                attempt += 1;
+                                continue;
+                            }
+                            stats.add_permanent_error(1);
+                            return Self::error_reply(
+                                req,
+                                IoError {
+                                    class: IoErrorClass::Transient,
+                                    message: format!(
+                                        "transient I/O error persisted after {MAX_ATTEMPTS} \
+                                         attempts on {}: {e}",
+                                        req.tag
+                                    ),
+                                },
+                            );
+                        }
+                        stats.add_permanent_error(1);
+                        return Self::error_reply(
+                            req,
+                            IoError::permanent(format!(
+                                "permanent I/O error on {}: {e}",
+                                req.tag
+                            )),
+                        );
+                    }
                 }
             }
             if delay_us > 0 {
@@ -292,6 +444,19 @@ impl IoPool {
             npages: req.npages,
             buf,
             bytes_read: done as u64,
+            error: None,
+        }
+    }
+
+    /// Reply for a failed run: empty buffer (never cacheable), zero
+    /// bytes, and the typed error for the fetch path to propagate.
+    fn error_reply(req: &RunRequest, error: IoError) -> RunReply {
+        RunReply {
+            start_page: req.start_page,
+            npages: req.npages,
+            buf: Arc::from(Vec::new().into_boxed_slice()),
+            bytes_read: 0,
+            error: Some(error),
         }
     }
 }
@@ -366,6 +531,7 @@ mod tests {
             file_len: data.len() as u64,
             start_page: 0,
             npages: 2,
+            tag: Arc::from("io-test"),
             reply: tx,
         });
         let reply = rx.recv().unwrap();
@@ -405,6 +571,7 @@ mod tests {
             file_len: data.len() as u64,
             start_page: 8,
             npages: 2,
+            tag: Arc::from("io-test"),
             reply: tx,
         });
         let reply = rx.recv().unwrap();
@@ -432,6 +599,7 @@ mod tests {
                 file_len: data.len() as u64,
                 start_page: p,
                 npages: 1,
+                tag: Arc::from("io-test"),
                 reply: tx.clone(),
             });
         }
@@ -465,6 +633,7 @@ mod tests {
                 file_len: data.len() as u64,
                 start_page: p,
                 npages: 1,
+                tag: Arc::from("io-test"),
                 reply: tx.clone(),
             });
         }
@@ -495,6 +664,7 @@ mod tests {
                 file_len: data.len() as u64,
                 start_page: p,
                 npages: 1,
+                tag: Arc::from("io-test"),
                 reply: tx.clone(),
             });
         }
@@ -521,7 +691,13 @@ mod tests {
         let (path, file) = temp_file(&data);
         let cfg = IoConfig {
             threads: 1,
-            fault: Some(FaultPlan { seed: 0xFEED, jitter_us: 50, reorder: true, eio_period: 5 }),
+            fault: Some(FaultPlan {
+                seed: 0xFEED,
+                jitter_us: 50,
+                reorder: true,
+                eio_period: 5,
+                fail_path: None,
+            }),
             ..Default::default()
         };
         let (order_a, a) = run_faulted(32, cfg.clone(), &data, &file);
@@ -539,6 +715,13 @@ mod tests {
         assert_eq!(a.snap.retries, b.snap.retries);
         // request ids 4, 9, 14, 19, 24, 29 hit the eio_period=5 fault
         assert_eq!(a.snap.retries, 6, "{:?}", a.snap);
+        // each injected fault is one transient error and one backoff
+        // wait; none escalates to permanent (the retry clears it)
+        assert_eq!(a.snap.transient_errors, 6, "{:?}", a.snap);
+        assert_eq!(a.snap.backoff_waits, 6, "{:?}", a.snap);
+        assert_eq!(a.snap.backoff_us, b.snap.backoff_us, "backoff jitter is seeded");
+        assert!(a.snap.backoff_us >= 6 * 100, "base wait is 100us per retry");
+        assert_eq!(a.snap.permanent_errors, 0, "{:?}", a.snap);
         assert!(a.peak >= 1 && a.peak <= 32, "peak gauge {}", a.peak);
         assert_eq!(a.gauge, 0, "all in-flight pages drained");
         let _ = std::fs::remove_file(path);
@@ -555,12 +738,72 @@ mod tests {
         let cfg = IoConfig {
             threads: 1,
             io_delay_us: 2000,
-            fault: Some(FaultPlan { seed: 1, jitter_us: 0, reorder: true, eio_period: 0 }),
+            fault: Some(FaultPlan {
+                seed: 1,
+                jitter_us: 0,
+                reorder: true,
+                eio_period: 0,
+                fail_path: None,
+            }),
             ..Default::default()
         };
         let (order, s) = run_faulted(64, cfg, &data, &file);
         assert_ne!(order, (0..64u64).collect::<Vec<_>>(), "plan never reordered");
         assert_eq!(s.snap.retries, 0, "no errors in a reorder-only plan");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn permanent_injection_fails_matching_requests_cleanly() {
+        let data = vec![8u8; PAGE_SIZE * 4];
+        let (path, file) = temp_file(&data);
+        let stats = Arc::new(IoStats::new());
+        let pool = IoPool::new(
+            IoConfig {
+                threads: 1,
+                fault: Some(FaultPlan {
+                    seed: 2,
+                    jitter_us: 0,
+                    reorder: false,
+                    eio_period: 0,
+                    fail_path: Some(Arc::from("bad-image")),
+                }),
+                ..Default::default()
+            },
+            stats.clone(),
+        );
+        let (tx, rx) = channel();
+        pool.submit(RunRequest {
+            file: file.clone(),
+            file_len: data.len() as u64,
+            start_page: 0,
+            npages: 1,
+            tag: Arc::from("/graphs/bad-image/edges"),
+            reply: tx.clone(),
+        });
+        let bad = rx.recv().unwrap();
+        let err = bad.error.expect("matching tag must fail");
+        assert_eq!(err.class, IoErrorClass::Permanent);
+        assert!(err.message.contains("bad-image"), "{}", err.message);
+        assert_eq!(bad.bytes_read, 0);
+        assert!(bad.buf.is_empty(), "errored replies carry no usable pages");
+        // a non-matching tag on the same pool is untouched
+        pool.submit(RunRequest {
+            file,
+            file_len: data.len() as u64,
+            start_page: 0,
+            npages: 1,
+            tag: Arc::from("/graphs/good-image/edges"),
+            reply: tx,
+        });
+        let good = rx.recv().unwrap();
+        assert!(good.error.is_none());
+        assert_eq!(good.bytes_read, PAGE_SIZE as u64);
+        let s = stats.snapshot();
+        assert_eq!(s.permanent_errors, 1, "{s:?}");
+        assert_eq!(s.retries, 0, "permanent faults are not retried");
+        assert_eq!(s.physical_reads, 1, "only the healthy request touched disk");
+        drop(pool);
         let _ = std::fs::remove_file(path);
     }
 }

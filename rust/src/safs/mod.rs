@@ -27,6 +27,6 @@ pub mod page_cache;
 pub mod stats;
 
 pub use file::{PendingRead, RangeBuf, RangeScratch, SemFile};
-pub use io::{FaultPlan, IoConfig, IoPool};
+pub use io::{FaultPlan, IoConfig, IoError, IoErrorClass, IoPool};
 pub use page_cache::{PageCache, PageRef, PAGE_SIZE};
 pub use stats::{IoLatency, IoStats, IoStatsSnapshot};

@@ -32,9 +32,21 @@ pub struct IoStats {
     pub thread_waits: AtomicU64,
     /// Pages evicted from the cache.
     pub evictions: AtomicU64,
-    /// Transient read errors retried inside the I/O pool (the request
-    /// succeeded on the retry; a second failure is fatal).
+    /// Transient read errors retried inside the I/O pool under bounded
+    /// exponential backoff (each retry is one increment).
     pub retries: AtomicU64,
+    /// Transient-class read errors observed (whether or not a retry
+    /// later cleared them) — `retries` counts the re-issues, this counts
+    /// the failures.
+    pub transient_errors: AtomicU64,
+    /// Requests that failed permanently: permanent-class errors plus
+    /// transient errors that exhausted the retry budget. Each one
+    /// surfaces as a typed error reply, never a panic.
+    pub permanent_errors: AtomicU64,
+    /// Backoff sleeps taken between transient-error retries.
+    pub backoff_waits: AtomicU64,
+    /// Total microseconds spent in backoff sleeps.
+    pub backoff_us: AtomicU64,
     /// Per-batch edge-fetch latency (`SemFile::read_ranges_into`), in
     /// microseconds — the caller-visible end-to-end cost of one fetch.
     pub fetch_latency_us: Histogram,
@@ -94,6 +106,20 @@ impl IoStats {
     pub fn add_retry(&self, n: u64) {
         self.retries.fetch_add(n, Ordering::Relaxed);
     }
+    #[inline]
+    pub fn add_transient_error(&self, n: u64) {
+        self.transient_errors.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_permanent_error(&self, n: u64) {
+        self.permanent_errors.fetch_add(n, Ordering::Relaxed);
+    }
+    /// One backoff sleep of `us` microseconds.
+    #[inline]
+    pub fn add_backoff(&self, us: u64) {
+        self.backoff_waits.fetch_add(1, Ordering::Relaxed);
+        self.backoff_us.fetch_add(us, Ordering::Relaxed);
+    }
 
     /// Point-in-time copy of all counters (histograms summarized).
     pub fn snapshot(&self) -> IoStatsSnapshot {
@@ -108,6 +134,10 @@ impl IoStats {
             thread_waits: self.thread_waits.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             retries: self.retries.load(Ordering::Relaxed),
+            transient_errors: self.transient_errors.load(Ordering::Relaxed),
+            permanent_errors: self.permanent_errors.load(Ordering::Relaxed),
+            backoff_waits: self.backoff_waits.load(Ordering::Relaxed),
+            backoff_us: self.backoff_us.load(Ordering::Relaxed),
             latency: IoLatency {
                 fetch: self.fetch_latency_us.summary(),
                 wait: self.wait_latency_us.summary(),
@@ -129,6 +159,10 @@ impl IoStats {
         self.thread_waits.store(0, Ordering::Relaxed);
         self.evictions.store(0, Ordering::Relaxed);
         self.retries.store(0, Ordering::Relaxed);
+        self.transient_errors.store(0, Ordering::Relaxed);
+        self.permanent_errors.store(0, Ordering::Relaxed);
+        self.backoff_waits.store(0, Ordering::Relaxed);
+        self.backoff_us.store(0, Ordering::Relaxed);
         self.fetch_latency_us.reset();
         self.wait_latency_us.reset();
         self.pread_latency_us.reset();
@@ -163,6 +197,10 @@ pub struct IoStatsSnapshot {
     pub thread_waits: u64,
     pub evictions: u64,
     pub retries: u64,
+    pub transient_errors: u64,
+    pub permanent_errors: u64,
+    pub backoff_waits: u64,
+    pub backoff_us: u64,
     /// Histogram summaries (cumulative at snapshot time; see `delta`).
     pub latency: IoLatency,
 }
@@ -186,6 +224,10 @@ impl IoStatsSnapshot {
             thread_waits: self.thread_waits.saturating_sub(earlier.thread_waits),
             evictions: self.evictions.saturating_sub(earlier.evictions),
             retries: self.retries.saturating_sub(earlier.retries),
+            transient_errors: self.transient_errors.saturating_sub(earlier.transient_errors),
+            permanent_errors: self.permanent_errors.saturating_sub(earlier.permanent_errors),
+            backoff_waits: self.backoff_waits.saturating_sub(earlier.backoff_waits),
+            backoff_us: self.backoff_us.saturating_sub(earlier.backoff_us),
             latency: self.latency,
         }
     }
@@ -215,6 +257,12 @@ impl IoStatsSnapshot {
         );
         if self.retries > 0 {
             s.push_str(&format!(" retries={}", self.retries));
+        }
+        if self.transient_errors > 0 || self.permanent_errors > 0 {
+            s.push_str(&format!(
+                " io_err[transient={} permanent={} backoff={} backoff_us={}]",
+                self.transient_errors, self.permanent_errors, self.backoff_waits, self.backoff_us,
+            ));
         }
         if self.latency.fetch.count > 0 {
             s.push_str(&format!(

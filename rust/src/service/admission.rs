@@ -162,6 +162,33 @@ pub fn estimate_state_bytes(spec: &AlgSpec, n: u64, workers: u64, fetch_window: 
     n * per_vertex + transport + fetch + n / 4 + 4096
 }
 
+/// Extra footprint a job with round-boundary checkpointing enabled
+/// ([`crate::engine::EngineConfig::checkpoint_every`]) holds at a cut:
+/// the serialized snapshot is staged in one contiguous buffer before the
+/// atomic tmp-file write — program O(n) sections plus worst-case folded
+/// pending messages (destination + payload per vertex) plus the frontier
+/// bitmap. Charged additively on top of [`estimate_state_bytes`] only
+/// for jobs that opt in, so checkpoint-off admission costs are
+/// byte-identical to before the feature existed.
+pub fn estimate_checkpoint_bytes(spec: &AlgSpec, n: u64) -> u64 {
+    // per-vertex section bytes the program snapshots (PageRank: three
+    // f64 arrays; WCC: one u32 label array; conservative default for
+    // anything that opts in later)
+    let state: u64 = match spec {
+        AlgSpec::PageRankPush | AlgSpec::PageRankPull => 24,
+        AlgSpec::Wcc => 4,
+        _ => 16,
+    };
+    // worst-case folded message entry: 4 B destination + payload
+    let msg: u64 = match spec {
+        AlgSpec::PageRankPush | AlgSpec::PageRankPull => 4 + 8,
+        AlgSpec::Wcc => 4 + 4,
+        _ => 4 + 8,
+    };
+    // +1 B/vertex rounds up the frontier bitmap; 4 KiB header slack
+    n * (state + msg + 1) + 4096
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,5 +267,21 @@ mod tests {
             2 * 4 * FETCH_SLOT_BYTES,
             "fetch window must be admission-accounted per worker"
         );
+    }
+
+    #[test]
+    fn checkpoint_cost_is_additive_and_scales_with_n() {
+        let n = 1 << 20;
+        // PageRank stages 3×8 B of sections + 12 B of message entry +
+        // 1 B of bitmap per vertex; WCC only 4+8+1
+        assert_eq!(estimate_checkpoint_bytes(&AlgSpec::PageRankPush, n), 37 * n + 4096);
+        assert_eq!(estimate_checkpoint_bytes(&AlgSpec::Wcc, n), 9 * n + 4096);
+        assert!(
+            estimate_checkpoint_bytes(&AlgSpec::Wcc, 2 * n)
+                > estimate_checkpoint_bytes(&AlgSpec::Wcc, n)
+        );
+        // the base estimate is untouched by the checkpoint feature:
+        // exact values are pinned by estimates_scale_with_n_sources_and
+        // _workers and the service-mode budget tests
     }
 }

@@ -16,9 +16,12 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{run_alg, AlgSpec, RunConfig};
 use crate::graph::source::EdgeSource;
-use crate::safs::{IoConfig, IoStatsSnapshot};
-use crate::service::admission::{estimate_state_bytes, AdmissionController, AdmissionDecision};
+use crate::safs::{FaultPlan, IoConfig, IoStatsSnapshot};
+use crate::service::admission::{
+    estimate_checkpoint_bytes, estimate_state_bytes, AdmissionController, AdmissionDecision,
+};
 use crate::service::registry::{GraphRegistry, JobGraph};
+use crate::service::wal::{JobWal, WalJob};
 
 /// Service-wide configuration.
 #[derive(Debug, Clone)]
@@ -38,6 +41,14 @@ pub struct ServiceConfig {
     /// Engine worker threads per job (0 = one per core; keep small so
     /// concurrent jobs share cores rather than oversubscribing).
     pub default_workers: usize,
+    /// Durability directory: when set, job lifecycle transitions go to
+    /// a write-ahead log under it (`jobs.wal`) and checkpointing jobs
+    /// park their snapshots there (`job-<id>.ckpt`). `None` = the
+    /// pre-WAL volatile scheduler.
+    pub wal_dir: Option<PathBuf>,
+    /// I/O fault injection forwarded to the shared pool (tests/chaos
+    /// runs only).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServiceConfig {
@@ -50,6 +61,8 @@ impl Default for ServiceConfig {
             exec_threads: 2,
             budget_bytes: 1 << 30,
             default_workers: 2,
+            wal_dir: None,
+            fault: None,
         }
     }
 }
@@ -178,6 +191,9 @@ struct Job {
     cost: u64,
     seq: u64,
     cancel: Arc<AtomicBool>,
+    /// Replayed from a WAL `running`/`interrupted` record: try to
+    /// resume from the job's checkpoint instead of starting fresh.
+    resume: bool,
 }
 
 #[derive(Default)]
@@ -199,6 +215,34 @@ pub struct JobCounts {
     pub rejected: usize,
 }
 
+/// Service liveness summary, for the `health` protocol op and the
+/// `graphyti health` CLI subcommand.
+#[derive(Debug, Clone)]
+pub struct Health {
+    /// `"ok"`, or `"draining"` once shutdown has begun.
+    pub status: String,
+    /// Executor threads serving the queue.
+    pub exec_threads: usize,
+    /// Graph images currently open in the registry.
+    pub graphs_open: usize,
+    /// Per-state job counts.
+    pub jobs: JobCounts,
+    /// Whether a write-ahead job log is configured.
+    pub wal_enabled: bool,
+    /// WAL records appended since start.
+    pub wal_records: u64,
+    /// WAL records replayed at start.
+    pub wal_replayed: u64,
+    /// Torn/corrupt WAL lines skipped at start.
+    pub wal_skipped: u64,
+    /// Jobs re-queued with resume-from-checkpoint at start.
+    pub resumed_jobs: u64,
+    /// Substrate I/O errors that retried and then succeeded or failed.
+    pub io_transient_errors: u64,
+    /// Substrate I/O errors that exhausted retries or were permanent.
+    pub io_permanent_errors: u64,
+}
+
 /// The multi-tenant graph service: registry + admission + executor.
 pub struct GraphService {
     cfg: ServiceConfig,
@@ -210,20 +254,37 @@ pub struct GraphService {
     next_seq: AtomicU64,
     next_finish: AtomicU64,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Durable job log (None without `wal_dir`).
+    wal: Option<JobWal>,
+    /// Jobs re-queued with resume-from-checkpoint at this start.
+    resumed_jobs: AtomicU64,
+    /// Graceful-shutdown flag: running jobs winding down at a round
+    /// boundary are stamped `interrupted` (resumable), not `cancelled`.
+    draining: AtomicBool,
 }
 
 impl GraphService {
-    /// Start the service: build the shared substrate and spawn the
-    /// executor threads.
+    /// Start the service: build the shared substrate, replay the WAL
+    /// (when configured) and spawn the executor threads.
     pub fn start(cfg: ServiceConfig) -> Arc<Self> {
         let io = IoConfig {
             threads: cfg.io_threads,
             io_delay_us: cfg.io_delay_us,
             max_run_pages: cfg.max_run_pages,
-            fault: None,
+            fault: cfg.fault.clone(),
         };
         let registry = Arc::new(GraphRegistry::new(cfg.cache_mb * 1024 * 1024, io));
         let admission = AdmissionController::new(cfg.budget_bytes);
+        let (wal, replayed) = match &cfg.wal_dir {
+            Some(dir) => match JobWal::open(dir) {
+                Ok((w, jobs)) => (Some(w), jobs),
+                Err(e) => {
+                    eprintln!("graphyti: WAL unusable ({e:#}); running without durability");
+                    (None, Vec::new())
+                }
+            },
+            None => (None, Vec::new()),
+        };
         let svc = Arc::new(GraphService {
             registry,
             admission,
@@ -233,8 +294,14 @@ impl GraphService {
             next_seq: AtomicU64::new(0),
             next_finish: AtomicU64::new(0),
             workers: Mutex::new(Vec::new()),
+            wal,
+            resumed_jobs: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
             cfg,
         });
+        // replay before the executors exist, so re-queued jobs are
+        // re-admitted exactly once and in WAL id order
+        svc.replay_wal_jobs(replayed);
         let nthreads = svc.cfg.exec_threads.max(1);
         let mut handles = Vec::with_capacity(nthreads);
         for i in 0..nthreads {
@@ -248,6 +315,122 @@ impl GraphService {
         }
         *svc.workers.lock().unwrap() = handles;
         svc
+    }
+
+    /// Fold the WAL's replayed job table back into the scheduler:
+    /// terminal jobs become queryable history, non-terminal ones are
+    /// re-queued exactly once (no new `submitted` record — the log
+    /// already holds theirs), and jobs caught mid-run are flagged to
+    /// resume from their checkpoint. Jobs whose graph or spec no longer
+    /// validates are marked `Failed` rather than crashing the start.
+    fn replay_wal_jobs(&self, recs: Vec<WalJob>) {
+        if recs.is_empty() {
+            return;
+        }
+        let max_id = recs.iter().map(|w| w.id).max().unwrap_or(0);
+        self.next_id.fetch_max(max_id, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        for w in recs {
+            let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+            let priority = w.priority.min(9) as u8;
+            let req = JobRequest {
+                graph: PathBuf::from(&w.graph),
+                alg: w.alg.clone(),
+                variant: w.variant.clone(),
+                num: w.num as usize,
+                priority,
+                overrides: w.overrides.clone(),
+            };
+            let mut status = JobStatus {
+                id: w.id,
+                state: JobState::Queued,
+                graph: w.graph.clone(),
+                alg: w.alg.clone(),
+                variant: w.variant.clone(),
+                priority,
+                state_bytes: 0,
+                summary: None,
+                error: w.error.clone(),
+                rounds: 0,
+                steals: 0,
+                busy_ratio: 1.0,
+                combined_msgs: 0,
+                peak_msg_bytes: 0,
+                wall: Duration::ZERO,
+                io: IoStatsSnapshot::default(),
+                engine: Default::default(),
+                finish_seq: 0,
+            };
+            // placeholder spec for entries that will never execute
+            let mut spec = AlgSpec::Degree;
+            let mut cost = 0u64;
+            let mut queued = false;
+            let resume = w.needs_resume();
+            if w.is_terminal() {
+                status.state = match w.state.as_str() {
+                    "done" => JobState::Done,
+                    "cancelled" => JobState::Cancelled,
+                    "rejected" => JobState::Rejected,
+                    _ => JobState::Failed,
+                };
+                status.finish_seq = self.next_finish.fetch_add(1, Ordering::Relaxed) + 1;
+            } else {
+                match AlgSpec::parse(&w.alg, &w.variant, w.num as usize)
+                    .and_then(|s| self.replay_cost(&req, &s).map(|c| (s, c)))
+                {
+                    Ok((s, c)) => {
+                        spec = s;
+                        cost = c;
+                        status.state_bytes = c;
+                        status.error = None;
+                        queued = true;
+                        if resume {
+                            self.resumed_jobs.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Err(e) => {
+                        status.state = JobState::Failed;
+                        status.error = Some(format!("replay: {e:#}"));
+                        status.finish_seq =
+                            self.next_finish.fetch_add(1, Ordering::Relaxed) + 1;
+                        if let Some(wal) = &self.wal {
+                            wal.record_state(w.id, "failed", status.error.as_deref());
+                        }
+                    }
+                }
+            }
+            let id = w.id;
+            let job = Job {
+                status,
+                req,
+                spec,
+                cost,
+                seq,
+                cancel: Arc::new(AtomicBool::new(false)),
+                resume: queued && resume,
+            };
+            inner.jobs.insert(id, job);
+            if queued {
+                inner.queue.push(id);
+            }
+        }
+    }
+
+    /// Recompute a replayed job's admission cost the way [`Self::submit`]
+    /// would, revalidating its overrides and graph image.
+    fn replay_cost(&self, req: &JobRequest, spec: &AlgSpec) -> crate::Result<u64> {
+        let mut rc = RunConfig { workers: self.cfg.default_workers, ..Default::default() };
+        for (k, v) in &req.overrides {
+            rc.set(k, v)?;
+        }
+        let g = self.registry.open(&req.graph)?;
+        let n = g.index().num_vertices() as u64;
+        let workers = (rc.engine().workers as u64).min(n.max(1));
+        let mut cost = estimate_state_bytes(spec, n, workers, rc.fetch_window as u64);
+        if rc.checkpoint_every > 0 {
+            cost += estimate_checkpoint_bytes(spec, n);
+        }
+        Ok(cost)
     }
 
     /// Submit a job. Validates the algorithm spec, the config overrides
@@ -285,7 +468,12 @@ impl GraphService {
         // rc.engine() resolves 0 => one worker per core, exactly as the
         // run will; Engine::run additionally clamps to n
         let workers = (rc.engine().workers as u64).min(n.max(1));
-        let cost = estimate_state_bytes(&spec, n, workers, rc.fetch_window as u64);
+        let mut cost = estimate_state_bytes(&spec, n, workers, rc.fetch_window as u64);
+        if rc.checkpoint_every > 0 {
+            // the checkpoint staging buffer is a real O(n) allocation at
+            // every cut; charge it only for jobs that opt in
+            cost += estimate_checkpoint_bytes(&spec, n);
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let rejected = cost > self.admission.budget();
@@ -316,7 +504,33 @@ impl GraphService {
             ));
         }
         let queued = status.state == JobState::Queued;
-        let job = Job { status, req, spec, cost, seq, cancel: Arc::new(AtomicBool::new(false)) };
+        // write-ahead: the submission is durable before it is visible
+        if let Some(w) = &self.wal {
+            w.record_submitted(&WalJob {
+                id,
+                graph: status.graph.clone(),
+                alg: req.alg.clone(),
+                variant: req.variant.clone(),
+                num: req.num as u64,
+                priority: priority as u64,
+                overrides: req.overrides.clone(),
+                state: String::new(), // forced to "queued" by the WAL
+                error: None,
+                ckpt_round: 0,
+            });
+            if rejected {
+                w.record_state(id, "rejected", status.error.as_deref());
+            }
+        }
+        let job = Job {
+            status,
+            req,
+            spec,
+            cost,
+            seq,
+            cancel: Arc::new(AtomicBool::new(false)),
+            resume: false,
+        };
         {
             let mut inner = self.inner.lock().unwrap();
             anyhow::ensure!(!inner.shutdown, "service is shutting down");
@@ -377,6 +591,9 @@ impl GraphService {
                 j.status.error = Some("cancelled before start".to_string());
                 j.status.finish_seq = self.next_finish.fetch_add(1, Ordering::Relaxed) + 1;
                 drop(inner);
+                if let Some(w) = &self.wal {
+                    w.record_state(id, "cancelled", Some("cancelled before start"));
+                }
                 self.cv.notify_all();
                 true
             }
@@ -434,6 +651,10 @@ impl GraphService {
         m.counter("io_thread_waits", io.thread_waits);
         m.counter("io_evictions", io.evictions);
         m.counter("io_retries", io.retries);
+        m.counter("io_transient_errors", io.transient_errors);
+        m.counter("io_permanent_errors", io.permanent_errors);
+        m.counter("io_backoff_waits", io.backoff_waits);
+        m.counter("io_backoff_us", io.backoff_us);
         m.hist("io_fetch_latency_us", io.latency.fetch);
         m.hist("io_wait_latency_us", io.latency.wait);
         m.hist("io_pread_latency_us", io.latency.pread);
@@ -458,6 +679,16 @@ impl GraphService {
         m.counter("jobs_failed", counts.failed as u64);
         m.counter("jobs_cancelled", counts.cancelled as u64);
         m.counter("jobs_rejected", counts.rejected as u64);
+        m.counter("resumed_jobs", self.resumed_jobs.load(Ordering::Relaxed));
+
+        // durability
+        if let Some(w) = &self.wal {
+            m.counter("wal_records", w.records());
+            m.counter("wal_replays", w.replayed());
+            m.counter("wal_skipped", w.skipped());
+            m.counter("wal_compactions", w.compactions());
+            m.gauge("wal_bytes", w.size() as f64);
+        }
 
         // engine counters: service-wide aggregates over every job that
         // ran, then a labeled per-job breakdown
@@ -479,6 +710,8 @@ impl GraphService {
             agg.blocks_skipped += st.engine.blocks_skipped;
             agg.steals += st.engine.steals;
             agg.fetch_allocs += st.engine.fetch_allocs;
+            agg.checkpoints += st.engine.checkpoints;
+            agg.checkpoint_bytes += st.engine.checkpoint_bytes;
         }
         m.counter("engine_p2p_msgs", agg.p2p_msgs);
         m.counter("engine_multicast_msgs", agg.multicast_msgs);
@@ -495,6 +728,8 @@ impl GraphService {
         m.counter("engine_blocks_skipped", agg.blocks_skipped);
         m.counter("engine_steals", agg.steals);
         m.counter("engine_fetch_allocs", agg.fetch_allocs);
+        m.counter("engine_checkpoints", agg.checkpoints);
+        m.counter("engine_checkpoint_bytes", agg.checkpoint_bytes);
         m.gauge("engine_overlap_ratio", agg.overlap_ratio());
         for st in &jobs {
             let labels = format!("{{job=\"{}\",alg=\"{}\"}}", st.id, st.alg);
@@ -527,7 +762,7 @@ impl GraphService {
 
     /// Stop accepting work, cancel running jobs cooperatively, and join
     /// the executor threads. Queued jobs are left `Queued` (reported by
-    /// status, never run).
+    /// status, never run — though with a WAL they replay next start).
     pub fn shutdown(&self) {
         {
             let mut inner = self.inner.lock().unwrap();
@@ -543,6 +778,90 @@ impl GraphService {
         for h in handles {
             let _ = h.join();
         }
+    }
+
+    /// Graceful shutdown: stop accepting work, let running jobs drain
+    /// to their next round boundary (writing a final checkpoint when
+    /// enabled), bounded by `drain`. Jobs that wind down in time are
+    /// stamped `interrupted` in the WAL — as are any stragglers still
+    /// running at the deadline — so the next start resumes them from
+    /// their checkpoint instead of redoing the work.
+    pub fn shutdown_graceful(&self, drain: Duration) {
+        self.draining.store(true, Ordering::SeqCst);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.shutdown = true;
+            for j in inner.jobs.values() {
+                if j.status.state == JobState::Running {
+                    j.cancel.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+        self.cv.notify_all();
+        let deadline = Instant::now() + drain;
+        let stragglers: Vec<u64> = {
+            let mut inner = self.inner.lock().unwrap();
+            loop {
+                let running: Vec<u64> = inner
+                    .jobs
+                    .values()
+                    .filter(|j| j.status.state == JobState::Running)
+                    .map(|j| j.status.id)
+                    .collect();
+                if running.is_empty() {
+                    break running;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break running;
+                }
+                let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+                inner = guard;
+            }
+        };
+        if let Some(w) = &self.wal {
+            // deadline elapsed mid-run: durably mark the jobs resumable
+            // now, in case the process dies before they reach their
+            // round boundary (a later record supersedes this one)
+            for id in stragglers {
+                w.record_state(id, "interrupted", Some("shutdown deadline elapsed mid-run"));
+            }
+        }
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Liveness/readiness summary for the `health` protocol op and CLI
+    /// subcommand.
+    pub fn health(&self) -> Health {
+        let io = self.substrate_stats();
+        let draining =
+            self.draining.load(Ordering::Relaxed) || self.inner.lock().unwrap().shutdown;
+        Health {
+            status: if draining { "draining" } else { "ok" }.to_string(),
+            exec_threads: self.cfg.exec_threads.max(1),
+            graphs_open: self.registry.num_graphs(),
+            jobs: self.job_counts(),
+            wal_enabled: self.wal.is_some(),
+            wal_records: self.wal.as_ref().map(|w| w.records()).unwrap_or(0),
+            wal_replayed: self.wal.as_ref().map(|w| w.replayed()).unwrap_or(0),
+            wal_skipped: self.wal.as_ref().map(|w| w.skipped()).unwrap_or(0),
+            resumed_jobs: self.resumed_jobs.load(Ordering::Relaxed),
+            io_transient_errors: io.transient_errors,
+            io_permanent_errors: io.permanent_errors,
+        }
+    }
+
+    /// The durable job log, when configured.
+    pub fn wal(&self) -> Option<&JobWal> {
+        self.wal.as_ref()
+    }
+
+    /// Jobs re-queued with resume-from-checkpoint at this start.
+    pub fn resumed_jobs(&self) -> u64 {
+        self.resumed_jobs.load(Ordering::Relaxed)
     }
 
     // ---------------------------------------------------- internals --
@@ -602,21 +921,28 @@ impl GraphService {
     }
 
     fn run_one(&self, id: u64) {
-        let (req, spec, cancel, cost) = {
+        let (req, spec, cancel, cost, resume) = {
             let inner = self.inner.lock().unwrap();
             let j = match inner.jobs.get(&id) {
                 Some(j) => j,
                 None => return,
             };
-            (j.req.clone(), j.spec.clone(), j.cancel.clone(), j.cost)
+            (j.req.clone(), j.spec.clone(), j.cancel.clone(), j.cost, j.resume)
         };
+        if let Some(w) = &self.wal {
+            w.record_state(id, "running", None);
+        }
         let t0 = Instant::now();
         // a panicking job must not take the executor thread down with it
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.execute(&req, &spec, cancel.clone())
+            self.execute(id, &req, &spec, cancel.clone(), resume)
         }));
         let wall = t0.elapsed();
         self.admission.release(cost);
+        let draining = self.draining.load(Ordering::Relaxed);
+        let mut wal_state: Option<&'static str> = None;
+        let mut wal_error: Option<String> = None;
+        let mut wal_ckpt: Option<u64> = None;
         {
             let mut inner = self.inner.lock().unwrap();
             if let Some(j) = inner.jobs.get_mut(&id) {
@@ -631,26 +957,59 @@ impl GraphService {
                             j.status.combined_msgs = r.engine.combined_msgs;
                             j.status.peak_msg_bytes = r.engine.peak_msg_bytes;
                             j.status.engine = r.engine.clone();
+                            if r.engine.checkpoints > 0 {
+                                wal_ckpt = Some(r.rounds);
+                            }
                         }
                         j.status.io = io;
                         j.status.summary = Some(summary);
                         if cancel.load(Ordering::Relaxed) {
                             j.status.state = JobState::Cancelled;
-                            j.status.error =
-                                Some("cancelled at a round boundary".to_string());
+                            if draining {
+                                // graceful shutdown: resumable, not dead
+                                j.status.error = Some(
+                                    "interrupted by shutdown; resumes on restart".to_string(),
+                                );
+                                wal_state = Some("interrupted");
+                            } else {
+                                j.status.error =
+                                    Some("cancelled at a round boundary".to_string());
+                                wal_state = Some("cancelled");
+                            }
                         } else {
                             j.status.state = JobState::Done;
+                            wal_state = Some("done");
                         }
                     }
                     Ok(Err(e)) => {
                         j.status.state = JobState::Failed;
                         j.status.error = Some(format!("{e:#}"));
+                        wal_state = Some("failed");
+                        wal_error = j.status.error.clone();
                     }
-                    Err(_) => {
+                    Err(payload) => {
+                        // surface the panic message, not just the fact
+                        let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                            (*s).to_string()
+                        } else if let Some(s) = payload.downcast_ref::<String>() {
+                            s.clone()
+                        } else {
+                            "non-string panic payload".to_string()
+                        };
                         j.status.state = JobState::Failed;
-                        j.status.error = Some("job panicked".to_string());
+                        j.status.error = Some(format!("job panicked: {msg}"));
+                        wal_state = Some("failed");
+                        wal_error = j.status.error.clone();
                     }
                 }
+            }
+        }
+        if let Some(w) = &self.wal {
+            if let Some(round) = wal_ckpt {
+                w.record_checkpoint(id, round);
+            }
+            if let Some(state) = wal_state {
+                w.record_state(id, state, wal_error.as_deref());
             }
         }
         self.cv.notify_all();
@@ -658,9 +1017,11 @@ impl GraphService {
 
     fn execute(
         &self,
+        id: u64,
         req: &JobRequest,
         spec: &AlgSpec,
         cancel: Arc<AtomicBool>,
+        resume: bool,
     ) -> crate::Result<(String, Option<crate::engine::RunReport>, IoStatsSnapshot)> {
         let shared = self.registry.open(&req.graph)?;
         let jg = JobGraph::new(shared);
@@ -676,8 +1037,22 @@ impl GraphService {
             rc.set(k, v)?;
         }
         rc.cancel = Some(cancel);
+        // durable services park per-job checkpoints next to the WAL;
+        // an explicit checkpoint_path override wins
+        if rc.checkpoint_path.is_none() && (rc.checkpoint_every > 0 || resume) {
+            if let Some(dir) = &self.cfg.wal_dir {
+                rc.checkpoint_path = Some(dir.join(format!("job-{id}.ckpt")));
+            }
+        }
+        rc.resume = rc.resume || resume;
         let out = run_alg(&jg, spec, &rc);
-        Ok((out.summary, out.report, jg.job_stats().snapshot()))
+        let io = jg.job_stats().snapshot();
+        // an engine-recorded failure (e.g. a permanent I/O error) is a
+        // clean per-job failure, never a wedge or a panic
+        if let Some(f) = out.report.as_ref().and_then(|r| r.failure.clone()) {
+            anyhow::bail!("{f}");
+        }
+        Ok((out.summary, out.report, io))
     }
 }
 

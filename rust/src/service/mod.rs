@@ -21,7 +21,11 @@
 //!   jobs' counters are disjoint and sum to the substrate totals.
 //! * [`protocol`] / [`server`] — a JSON-lines TCP protocol (no serde
 //!   needed) with `submit`, `status`, `wait`, `list`, `cancel`,
-//!   `stats` and `shutdown` ops.
+//!   `stats`, `metrics`, `health` and `shutdown` ops.
+//! * [`wal::JobWal`] — optional write-ahead job log (`--wal-dir`):
+//!   every lifecycle transition is appended durably, and a restarted
+//!   service replays it to re-admit queued jobs exactly once and
+//!   resume interrupted ones from their last engine checkpoint.
 //!
 //! # Quickstart
 //!
@@ -67,8 +71,12 @@ pub mod exec;
 pub mod protocol;
 pub mod registry;
 pub mod server;
+pub mod wal;
 
-pub use admission::{estimate_state_bytes, AdmissionController, AdmissionDecision};
-pub use exec::{GraphService, JobCounts, JobRequest, JobState, JobStatus, ServiceConfig};
+pub use admission::{
+    estimate_checkpoint_bytes, estimate_state_bytes, AdmissionController, AdmissionDecision,
+};
+pub use exec::{GraphService, Health, JobCounts, JobRequest, JobState, JobStatus, ServiceConfig};
 pub use registry::{GraphRegistry, JobGraph};
 pub use server::{call, dispatch, ServiceServer};
+pub use wal::{JobWal, WalJob};

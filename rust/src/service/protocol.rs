@@ -19,6 +19,7 @@
 //! {"op":"stats"}
 //! {"op":"metrics"}
 //! {"op":"metrics","format":"text"}
+//! {"op":"health"}
 //! {"op":"shutdown"}
 //! ```
 //!
@@ -29,7 +30,7 @@
 use anyhow::{bail, ensure};
 
 use crate::safs::IoStatsSnapshot;
-use crate::service::exec::{JobRequest, JobStatus};
+use crate::service::exec::{Health, JobRequest, JobStatus};
 use crate::util::HistSummary;
 
 pub use crate::util::json::Json;
@@ -71,6 +72,11 @@ pub fn snapshot_to_json(io: &IoStatsSnapshot) -> Json {
         ("merged_requests", Json::u(io.merged_requests)),
         ("thread_waits", Json::u(io.thread_waits)),
         ("evictions", Json::u(io.evictions)),
+        ("retries", Json::u(io.retries)),
+        ("transient_errors", Json::u(io.transient_errors)),
+        ("permanent_errors", Json::u(io.permanent_errors)),
+        ("backoff_waits", Json::u(io.backoff_waits)),
+        ("backoff_us", Json::u(io.backoff_us)),
         (
             "latency",
             Json::obj(vec![
@@ -111,6 +117,33 @@ pub fn status_to_json(st: &JobStatus) -> Json {
         ("wall_ms", Json::f(st.wall.as_secs_f64() * 1e3)),
         ("finish_seq", Json::u(st.finish_seq)),
         ("io", snapshot_to_json(&st.io)),
+    ])
+}
+
+/// Encode a service health summary.
+pub fn health_to_json(h: &Health) -> Json {
+    Json::obj(vec![
+        ("status", Json::s(h.status.clone())),
+        ("exec_threads", Json::u(h.exec_threads as u64)),
+        ("graphs_open", Json::u(h.graphs_open as u64)),
+        (
+            "jobs",
+            Json::obj(vec![
+                ("queued", Json::u(h.jobs.queued as u64)),
+                ("running", Json::u(h.jobs.running as u64)),
+                ("done", Json::u(h.jobs.done as u64)),
+                ("failed", Json::u(h.jobs.failed as u64)),
+                ("cancelled", Json::u(h.jobs.cancelled as u64)),
+                ("rejected", Json::u(h.jobs.rejected as u64)),
+            ]),
+        ),
+        ("wal_enabled", Json::Bool(h.wal_enabled)),
+        ("wal_records", Json::u(h.wal_records)),
+        ("wal_replayed", Json::u(h.wal_replayed)),
+        ("wal_skipped", Json::u(h.wal_skipped)),
+        ("resumed_jobs", Json::u(h.resumed_jobs)),
+        ("io_transient_errors", Json::u(h.io_transient_errors)),
+        ("io_permanent_errors", Json::u(h.io_permanent_errors)),
     ])
 }
 

@@ -16,7 +16,7 @@ use anyhow::Context;
 
 use crate::service::exec::GraphService;
 use crate::service::protocol::{
-    err_obj, job_request_from_json, ok_obj, snapshot_to_json, status_to_json, Json,
+    err_obj, health_to_json, job_request_from_json, ok_obj, snapshot_to_json, status_to_json, Json,
 };
 
 /// A running JSON-lines server bound to a local address.
@@ -105,7 +105,10 @@ fn handle_conn(
         writer.flush()?;
         if shutdown {
             stop.store(true, Ordering::Release);
-            svc.shutdown();
+            // graceful: running jobs drain to a round boundary (flushing
+            // a final checkpoint when enabled) and are stamped
+            // resumable in the WAL, bounded by the drain deadline
+            svc.shutdown_graceful(Duration::from_secs(30));
             // poke the accept loop awake so it exits
             let _ = TcpStream::connect(addr);
             break;
@@ -219,6 +222,7 @@ fn dispatch_inner(svc: &Arc<GraphService>, line: &str) -> crate::Result<(Json, b
                 _ => (ok_obj(vec![("metrics", m.to_json())]), false),
             }
         }
+        "health" => (ok_obj(vec![("health", health_to_json(&svc.health()))]), false),
         "shutdown" => (ok_obj(vec![]), true),
         other => (err_obj(&format!("unknown op '{other}'")), false),
     })

@@ -1,0 +1,484 @@
+//! Write-ahead job log: durable job lifecycle for the service tier.
+//!
+//! The scheduler's queue and job table live in memory, so before this
+//! module a process crash forgot every queued job and the fate of every
+//! running one. The WAL is an append-only JSON-lines file of lifecycle
+//! transitions — each line `{"ck":"<fnv64 hex>","rec":{...}}` carries
+//! its own checksum so replay can skip a torn tail (a crash mid-append)
+//! without losing the intact prefix. Record kinds:
+//!
+//! * `submitted` — full job request (graph, alg, variant, num,
+//!   priority, overrides) under its assigned id;
+//! * `state` — transition to `running` / `done` / `failed` /
+//!   `cancelled` / `rejected` / `interrupted` (+ error text);
+//! * `checkpoint` — the job published an engine checkpoint at a round;
+//! * `snapshot` — compaction record: the whole live job table in one
+//!   line (replay replaces its state with it, so the log before the
+//!   snapshot is dead weight and compaction can drop it).
+//!
+//! Appends are a single `write(2)` (they survive a process crash);
+//! terminal and `interrupted` transitions additionally `fsync` so an
+//! acknowledged outcome survives power loss. When the log outgrows
+//! [`JobWal::COMPACT_BYTES`] it is rewritten as one snapshot record via
+//! tmp + rename. [`GraphService::start`] replays the log to re-admit
+//! queued jobs exactly once and to resume interrupted ones; see
+//! ARCHITECTURE.md §"Durability & recovery".
+//!
+//! [`GraphService::start`]: crate::service::GraphService::start
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+use crate::engine::checkpoint::fnv1a;
+use crate::util::json::Json;
+
+/// One job as the WAL knows it — both the replay result handed to the
+/// service at start and the unit of the compaction snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalJob {
+    /// Service job id (replay seeds the id counter past the max).
+    pub id: u64,
+    /// Graph image path as submitted.
+    pub graph: String,
+    /// Algorithm name.
+    pub alg: String,
+    /// Algorithm variant ("" when none).
+    pub variant: String,
+    /// Numeric argument (sources, iterations, …).
+    pub num: u64,
+    /// Scheduling priority.
+    pub priority: u64,
+    /// `key=value` config overrides.
+    pub overrides: Vec<(String, String)>,
+    /// Last known state: `queued`/`running`/`done`/`failed`/
+    /// `cancelled`/`rejected`/`interrupted`.
+    pub state: String,
+    /// Error text for failed jobs.
+    pub error: Option<String>,
+    /// Highest engine checkpoint round recorded for this job.
+    pub ckpt_round: u64,
+}
+
+impl WalJob {
+    /// Terminal states need no replay action beyond remembering them.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.state.as_str(), "done" | "failed" | "cancelled" | "rejected")
+    }
+
+    /// A job that was mid-run when the service stopped: re-queue with
+    /// resume-from-checkpoint rather than from scratch. A bare
+    /// `running` state means the process died without ceremony; an
+    /// explicit `interrupted` record means a graceful shutdown marked
+    /// it on the way out — both resume.
+    pub fn needs_resume(&self) -> bool {
+        matches!(self.state.as_str(), "running" | "interrupted")
+    }
+
+    fn to_json(&self) -> Json {
+        let overrides = Json::Arr(
+            self.overrides
+                .iter()
+                .map(|(k, v)| Json::Arr(vec![Json::s(k.clone()), Json::s(v.clone())]))
+                .collect(),
+        );
+        let mut pairs = vec![
+            ("id", Json::u(self.id)),
+            ("graph", Json::s(self.graph.clone())),
+            ("alg", Json::s(self.alg.clone())),
+            ("variant", Json::s(self.variant.clone())),
+            ("num", Json::u(self.num)),
+            ("priority", Json::u(self.priority)),
+            ("overrides", overrides),
+            ("state", Json::s(self.state.clone())),
+            ("ckpt_round", Json::u(self.ckpt_round)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::s(e.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Option<WalJob> {
+        let overrides = v
+            .get("overrides")?
+            .as_array()?
+            .iter()
+            .filter_map(|p| {
+                let p = p.as_array()?;
+                Some((p.first()?.as_str()?.to_string(), p.get(1)?.as_str()?.to_string()))
+            })
+            .collect();
+        Some(WalJob {
+            id: v.get("id")?.as_u64()?,
+            graph: v.get("graph")?.as_str()?.to_string(),
+            alg: v.get("alg")?.as_str()?.to_string(),
+            variant: v.get("variant")?.as_str()?.to_string(),
+            num: v.get("num")?.as_u64()?,
+            priority: v.get("priority")?.as_u64()?,
+            overrides,
+            state: v.get("state")?.as_str()?.to_string(),
+            error: v.get("error").and_then(|e| e.as_str()).map(str::to_string),
+            ckpt_round: v.get("ckpt_round").and_then(|r| r.as_u64()).unwrap_or(0),
+        })
+    }
+}
+
+struct WalInner {
+    file: File,
+    size: u64,
+    table: BTreeMap<u64, WalJob>,
+}
+
+/// Append-only, checksummed, self-compacting job log.
+pub struct JobWal {
+    path: PathBuf,
+    inner: Mutex<WalInner>,
+    records: AtomicU64,
+    replayed: AtomicU64,
+    skipped: AtomicU64,
+    compactions: AtomicU64,
+    compact_bytes: u64,
+}
+
+impl JobWal {
+    /// Compaction threshold: once the log exceeds this, rewrite it as
+    /// one snapshot record.
+    pub const COMPACT_BYTES: u64 = 1 << 20;
+
+    /// Open (or create) `dir/jobs.wal`, replay it, and return the WAL
+    /// plus the replayed job table in id order. Torn or corrupt lines
+    /// are counted and skipped, never fatal.
+    pub fn open(dir: &Path) -> crate::Result<(JobWal, Vec<WalJob>)> {
+        Self::open_with_threshold(dir, Self::COMPACT_BYTES)
+    }
+
+    /// [`JobWal::open`] with an explicit compaction threshold (tests).
+    pub fn open_with_threshold(
+        dir: &Path,
+        compact_bytes: u64,
+    ) -> crate::Result<(JobWal, Vec<WalJob>)> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        let path = dir.join("jobs.wal");
+        let mut table = BTreeMap::new();
+        let mut replayed = 0u64;
+        let mut skipped = 0u64;
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Self::decode_line(line) {
+                    Some(rec) => {
+                        replayed += 1;
+                        Self::apply(&mut table, &rec);
+                    }
+                    None => skipped += 1,
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let size = file.metadata().map(|m| m.len()).unwrap_or(0);
+        let jobs: Vec<WalJob> = table.values().cloned().collect();
+        let wal = JobWal {
+            path,
+            inner: Mutex::new(WalInner { file, size, table }),
+            records: AtomicU64::new(0),
+            replayed: AtomicU64::new(replayed),
+            skipped: AtomicU64::new(skipped),
+            compactions: AtomicU64::new(0),
+            compact_bytes,
+        };
+        Ok((wal, jobs))
+    }
+
+    /// Verify one line's checksum and parse its record.
+    fn decode_line(line: &str) -> Option<Json> {
+        let v = Json::parse(line).ok()?;
+        let ck = v.get("ck")?.as_str()?;
+        let rec = v.get("rec")?.clone();
+        let want = format!("{:016x}", fnv1a(rec.encode().as_bytes()));
+        if ck != want {
+            return None;
+        }
+        Some(rec)
+    }
+
+    /// Fold one record into the job table.
+    fn apply(table: &mut BTreeMap<u64, WalJob>, rec: &Json) {
+        match rec.get("kind").and_then(|k| k.as_str()) {
+            Some("submitted") => {
+                if let Some(job) = WalJob::from_json(rec) {
+                    table.insert(job.id, job);
+                }
+            }
+            Some("state") => {
+                let (Some(id), Some(state)) = (
+                    rec.get("id").and_then(|v| v.as_u64()),
+                    rec.get("state").and_then(|v| v.as_str()),
+                ) else {
+                    return;
+                };
+                if let Some(job) = table.get_mut(&id) {
+                    job.state = state.to_string();
+                    job.error =
+                        rec.get("error").and_then(|e| e.as_str()).map(str::to_string);
+                }
+            }
+            Some("checkpoint") => {
+                let (Some(id), Some(round)) = (
+                    rec.get("id").and_then(|v| v.as_u64()),
+                    rec.get("round").and_then(|v| v.as_u64()),
+                ) else {
+                    return;
+                };
+                if let Some(job) = table.get_mut(&id) {
+                    job.ckpt_round = job.ckpt_round.max(round);
+                }
+            }
+            Some("snapshot") => {
+                table.clear();
+                if let Some(jobs) = rec.get("jobs").and_then(|j| j.as_array()) {
+                    for j in jobs {
+                        if let Some(job) = WalJob::from_json(j) {
+                            table.insert(job.id, job);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn encode_line(rec: &Json) -> String {
+        let body = rec.encode();
+        let ck = format!("{:016x}", fnv1a(body.as_bytes()));
+        format!("{{\"ck\":\"{ck}\",\"rec\":{body}}}\n")
+    }
+
+    /// Append one record; `sync` forces the line to stable storage.
+    fn append(&self, rec: Json, sync: bool) {
+        let line = Self::encode_line(&rec);
+        let mut inner = self.inner.lock().unwrap();
+        // best-effort: a full disk must not take the scheduler down
+        if inner.file.write_all(line.as_bytes()).is_ok() {
+            inner.size += line.len() as u64;
+            self.records.fetch_add(1, Ordering::Relaxed);
+            if sync {
+                let _ = inner.file.sync_all();
+            }
+        }
+        Self::apply(&mut inner.table, &rec);
+        if inner.size > self.compact_bytes {
+            self.compact_locked(&mut inner);
+        }
+    }
+
+    /// Rewrite the log as a single snapshot record (tmp + rename).
+    fn compact_locked(&self, inner: &mut WalInner) {
+        let jobs = Json::Arr(inner.table.values().map(|j| j.to_json()).collect());
+        let rec = Json::obj(vec![("kind", Json::s("snapshot")), ("jobs", jobs)]);
+        let line = Self::encode_line(&rec);
+        let tmp = self.path.with_extension("wal-tmp");
+        let ok = (|| -> std::io::Result<()> {
+            let mut f = File::create(&tmp)?;
+            f.write_all(line.as_bytes())?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, &self.path)?;
+            Ok(())
+        })();
+        if ok.is_ok() {
+            if let Ok(f) = OpenOptions::new().append(true).open(&self.path) {
+                inner.file = f;
+                inner.size = line.len() as u64;
+                self.compactions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Log a fresh submission (state forced to `queued`).
+    pub fn record_submitted(&self, job: &WalJob) {
+        let mut job = job.clone();
+        job.state = "queued".to_string();
+        let mut rec = match job.to_json() {
+            Json::Obj(pairs) => pairs,
+            _ => unreachable!(),
+        };
+        rec.insert(0, ("kind".to_string(), Json::s("submitted")));
+        self.append(Json::Obj(rec), false);
+    }
+
+    /// Log a state transition; terminal and `interrupted` transitions
+    /// are fsync'd.
+    pub fn record_state(&self, id: u64, state: &str, error: Option<&str>) {
+        let sync = matches!(state, "done" | "failed" | "cancelled" | "rejected" | "interrupted");
+        let mut pairs = vec![
+            ("kind", Json::s("state")),
+            ("id", Json::u(id)),
+            ("state", Json::s(state)),
+        ];
+        if let Some(e) = error {
+            pairs.push(("error", Json::s(e)));
+        }
+        self.append(Json::obj(pairs), sync);
+    }
+
+    /// Log a published engine checkpoint for a job.
+    pub fn record_checkpoint(&self, id: u64, round: u64) {
+        self.append(
+            Json::obj(vec![
+                ("kind", Json::s("checkpoint")),
+                ("id", Json::u(id)),
+                ("round", Json::u(round)),
+            ]),
+            false,
+        );
+    }
+
+    /// Log file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Records appended since open (excludes replayed history).
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    /// Valid records replayed at open.
+    pub fn replayed(&self) -> u64 {
+        self.replayed.load(Ordering::Relaxed)
+    }
+
+    /// Torn or corrupt lines skipped at open.
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    /// Compactions performed since open.
+    pub fn compactions(&self) -> u64 {
+        self.compactions.load(Ordering::Relaxed)
+    }
+
+    /// Current log size in bytes.
+    pub fn size(&self) -> u64 {
+        self.inner.lock().unwrap().size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("graphyti-wal-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn job(id: u64) -> WalJob {
+        WalJob {
+            id,
+            graph: format!("/tmp/g{id}"),
+            alg: "pagerank".to_string(),
+            variant: "push".to_string(),
+            num: 8,
+            priority: 4,
+            overrides: vec![("workers".to_string(), "2".to_string())],
+            state: "queued".to_string(),
+            error: None,
+            ckpt_round: 0,
+        }
+    }
+
+    #[test]
+    fn replay_roundtrips_lifecycle() {
+        let dir = tmpdir("rt");
+        {
+            let (wal, jobs) = JobWal::open(&dir).unwrap();
+            assert!(jobs.is_empty());
+            wal.record_submitted(&job(1));
+            wal.record_submitted(&job(2));
+            wal.record_state(1, "running", None);
+            wal.record_checkpoint(1, 4);
+            wal.record_state(2, "running", None);
+            wal.record_state(2, "done", None);
+            wal.record_state(3, "done", None); // unknown id: ignored
+            assert_eq!(wal.records(), 7);
+            assert_eq!(wal.skipped(), 0);
+        }
+        let (wal, jobs) = JobWal::open(&dir).unwrap();
+        assert_eq!(wal.replayed(), 7);
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].id, 1);
+        assert_eq!(jobs[0].state, "running");
+        assert!(jobs[0].needs_resume(), "a job left 'running' resumes");
+        assert_eq!(jobs[0].ckpt_round, 4);
+        assert_eq!(jobs[0].overrides, vec![("workers".to_string(), "2".to_string())]);
+        assert_eq!(jobs[1].id, 2);
+        assert_eq!(jobs[1].state, "done");
+        assert!(jobs[1].is_terminal());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_skipped_not_fatal() {
+        let dir = tmpdir("torn");
+        {
+            let (wal, _) = JobWal::open(&dir).unwrap();
+            wal.record_submitted(&job(1));
+            wal.record_state(1, "done", None);
+        }
+        // simulate a crash mid-append: valid prefix + truncated line
+        let path = dir.join("jobs.wal");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"ck\":\"00ff\",\"rec\":{\"kind\":\"sta").unwrap();
+        drop(f);
+        let (wal, jobs) = JobWal::open(&dir).unwrap();
+        assert_eq!(wal.replayed(), 2);
+        assert_eq!(wal.skipped(), 1, "torn tail is counted, not fatal");
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].state, "done");
+        // a checksum-valid prefix with a corrupted byte is also skipped
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        let good = JobWal::encode_line(&Json::obj(vec![
+            ("kind", Json::s("state")),
+            ("id", Json::u(1)),
+            ("state", Json::s("failed")),
+        ]));
+        let bad = good.replace("failed", "fAiled"); // checksum now stale
+        f.write_all(bad.as_bytes()).unwrap();
+        drop(f);
+        let (wal, jobs) = JobWal::open(&dir).unwrap();
+        assert_eq!(wal.skipped(), 2);
+        assert_eq!(jobs[0].state, "done", "corrupt transition must not apply");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_snapshots_the_table() {
+        let dir = tmpdir("compact");
+        let (wal, _) = JobWal::open_with_threshold(&dir, 600).unwrap();
+        for id in 1..=6 {
+            wal.record_submitted(&job(id));
+            wal.record_state(id, "done", None);
+        }
+        assert!(wal.compactions() > 0, "tiny threshold must have compacted");
+        assert!(wal.size() <= 4096);
+        drop(wal);
+        let (wal, jobs) = JobWal::open_with_threshold(&dir, 600).unwrap();
+        assert_eq!(jobs.len(), 6, "snapshot preserves the whole table");
+        assert!(jobs.iter().all(|j| j.state == "done"));
+        assert_eq!(wal.skipped(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

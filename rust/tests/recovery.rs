@@ -1,0 +1,433 @@
+//! Durable-recovery integration: engine checkpoints, WAL replay, and
+//! clean per-job failure under permanent I/O errors.
+//!
+//! The durability contract under test:
+//!
+//! * **Checkpoint/resume is bit-identical** — a run interrupted at a
+//!   round boundary and resumed from its snapshot produces exactly the
+//!   bytes an uninterrupted run produces (WCC at any worker count;
+//!   PageRank at a fixed single worker, since f64 folding order is
+//!   worker-dependent).
+//! * **Torn files degrade, never wedge** — a corrupt checkpoint falls
+//!   back to a fresh (still correct) run; a torn WAL tail is skipped
+//!   and counted, with the intact prefix fully replayed.
+//! * **WAL replay re-admits exactly once** — queued jobs survive a
+//!   service restart under their original ids and run to completion;
+//!   gracefully-interrupted jobs come back flagged to resume.
+//! * **Permanent I/O errors have a one-job blast radius** — the owning
+//!   job fails cleanly with a descriptive error while a concurrent
+//!   healthy job on another graph completes.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use graphyti::algs::pagerank::pagerank_push;
+use graphyti::algs::wcc::wcc;
+use graphyti::engine::EngineConfig;
+use graphyti::graph::builder::GraphBuilder;
+use graphyti::graph::gen;
+use graphyti::graph::source::SemGraph;
+use graphyti::safs::{FaultPlan, IoConfig};
+use graphyti::service::{GraphService, JobRequest, JobState, ServiceConfig};
+use graphyti::VertexId;
+
+fn build_image(n: usize, edges: &[(VertexId, VertexId)], tag: &str) -> PathBuf {
+    let base =
+        std::env::temp_dir().join(format!("graphyti-recov-{}-{tag}", std::process::id()));
+    let mut b = GraphBuilder::new(n, true);
+    b.add_edges(edges);
+    b.build_files(&base).unwrap();
+    base
+}
+
+fn cleanup_image(base: &PathBuf) {
+    let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+    let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("graphyti-recov-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// rmat core plus a long appended chain, so min-label propagation needs
+/// many rounds — an interruption at a small `max_rounds` is guaranteed
+/// to cut mid-run, never after convergence.
+fn chained_graph() -> (usize, Vec<(VertexId, VertexId)>) {
+    let n = 600usize;
+    let mut edges = gen::rmat(9, 3000, 13);
+    edges.push((0, 512));
+    for v in 512..(n as VertexId - 1) {
+        edges.push((v, v + 1));
+    }
+    (n, edges)
+}
+
+fn block_until_running(svc: &GraphService, id: u64) {
+    for _ in 0..2000 {
+        if svc.status(id).map(|s| s.state) == Some(JobState::Running) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("job {id} never reached Running");
+}
+
+/// Interrupt WCC at a round boundary via `max_rounds`, resume from the
+/// published snapshot, and demand the labels match an uninterrupted run
+/// bit-for-bit — at one, two and eight workers (integer min folding is
+/// order-independent, so worker count must not matter).
+#[test]
+fn wcc_checkpoint_resume_is_bit_identical_at_any_worker_count() {
+    let (n, edges) = chained_graph();
+    let base = build_image(n, &edges, "wcc-ckpt");
+    for workers in [1usize, 2, 8] {
+        let ckpt = std::env::temp_dir()
+            .join(format!("graphyti-recov-wcc-{}-{workers}.ckpt", std::process::id()));
+        let _ = std::fs::remove_file(&ckpt);
+        let cfg = EngineConfig { workers, batch: 64, ..Default::default() };
+        let io = || IoConfig { threads: 2, ..Default::default() };
+
+        let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+        let (full, full_report) = wcc(&g, &cfg);
+        assert!(
+            full_report.rounds > 6,
+            "chain too short to interrupt: converged in {} rounds",
+            full_report.rounds
+        );
+
+        // interrupted leg: stop hard at round 4, with a final snapshot
+        // cut at the stop (stopping_early), plus periodic ones before
+        let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+        let interrupted = EngineConfig {
+            max_rounds: 4,
+            checkpoint_every: 2,
+            checkpoint_path: Some(ckpt.clone()),
+            ..cfg.clone()
+        };
+        let (partial, partial_report) = wcc(&g, &interrupted);
+        assert!(partial_report.engine.checkpoints >= 1, "{partial_report:?}");
+        assert!(partial_report.engine.checkpoint_bytes > 0);
+        assert!(ckpt.exists(), "interrupted run must leave a snapshot");
+        assert_ne!(partial, full, "4 rounds must not be enough to converge");
+
+        // resumed leg: a fresh program restored from the snapshot
+        let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+        let resumed_cfg = EngineConfig {
+            checkpoint_every: 2,
+            checkpoint_path: Some(ckpt.clone()),
+            resume: true,
+            ..cfg.clone()
+        };
+        let (resumed, _) = wcc(&g, &resumed_cfg);
+        assert_eq!(resumed, full, "resumed labels diverged at workers={workers}");
+        assert!(
+            !ckpt.exists(),
+            "a converged run must remove its now-stale snapshot"
+        );
+    }
+    cleanup_image(&base);
+}
+
+/// Same interruption oracle for PageRank at a single fixed worker:
+/// f64 rank/residual/share state plus the pending folded messages
+/// restore exactly, so the resumed ranks are bit-identical (`==` on
+/// f64, no tolerance).
+#[test]
+fn pagerank_checkpoint_resume_is_bit_identical_single_worker() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 21);
+    let base = build_image(n, &edges, "pr-ckpt");
+    let ckpt = std::env::temp_dir()
+        .join(format!("graphyti-recov-pr-{}.ckpt", std::process::id()));
+    let _ = std::fs::remove_file(&ckpt);
+    let cfg = EngineConfig { workers: 1, batch: 64, ..Default::default() };
+    let io = || IoConfig { threads: 1, ..Default::default() };
+
+    let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    let full = pagerank_push(&g, 0.85, 1e-10, &cfg);
+    assert!(full.report.rounds > 6, "converged too fast: {}", full.report.rounds);
+
+    let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    let interrupted = EngineConfig {
+        max_rounds: 5,
+        checkpoint_every: 2,
+        checkpoint_path: Some(ckpt.clone()),
+        ..cfg.clone()
+    };
+    let partial = pagerank_push(&g, 0.85, 1e-10, &interrupted);
+    assert!(partial.report.engine.checkpoints >= 1);
+    assert!(ckpt.exists());
+
+    let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    let resumed_cfg = EngineConfig {
+        checkpoint_every: 2,
+        checkpoint_path: Some(ckpt.clone()),
+        resume: true,
+        ..cfg
+    };
+    let resumed = pagerank_push(&g, 0.85, 1e-10, &resumed_cfg);
+    assert_eq!(resumed.rank, full.rank, "resumed ranks are not bit-identical");
+    assert!(!ckpt.exists(), "converged resume must remove the snapshot");
+    cleanup_image(&base);
+}
+
+/// A corrupt snapshot degrades to "no checkpoint": the resume flag
+/// falls back to a fresh run and the answers are still exactly right.
+#[test]
+fn torn_checkpoint_falls_back_to_fresh_run() {
+    let (n, edges) = chained_graph();
+    let base = build_image(n, &edges, "torn-ckpt");
+    let ckpt = std::env::temp_dir()
+        .join(format!("graphyti-recov-torn-{}.ckpt", std::process::id()));
+    let _ = std::fs::remove_file(&ckpt);
+    let cfg = EngineConfig { workers: 2, batch: 64, ..Default::default() };
+    let io = || IoConfig { threads: 2, ..Default::default() };
+
+    let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    let (full, _) = wcc(&g, &cfg);
+
+    let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    let interrupted = EngineConfig {
+        max_rounds: 4,
+        checkpoint_every: 2,
+        checkpoint_path: Some(ckpt.clone()),
+        ..cfg.clone()
+    };
+    let _ = wcc(&g, &interrupted);
+    assert!(ckpt.exists());
+
+    // tear the snapshot: truncation must fail the checksum, and the
+    // resumed run must start fresh rather than wedge or corrupt state
+    let bytes = std::fs::read(&ckpt).unwrap();
+    std::fs::write(&ckpt, &bytes[..bytes.len() - 10]).unwrap();
+    let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    let resumed_cfg = EngineConfig {
+        checkpoint_every: 2,
+        checkpoint_path: Some(ckpt.clone()),
+        resume: true,
+        ..cfg
+    };
+    let (labels, _) = wcc(&g, &resumed_cfg);
+    assert_eq!(labels, full, "fresh-run fallback must still be correct");
+    let _ = std::fs::remove_file(&ckpt);
+    cleanup_image(&base);
+}
+
+/// Kill a service with queued work; a restart over the same WAL dir
+/// re-admits each queued job exactly once under its original id and
+/// runs it to completion. Terminal history replays as history, and the
+/// id counter resumes past the replayed maximum.
+#[test]
+fn wal_replay_readmits_queued_jobs_exactly_once() {
+    let n = 256;
+    let edges = gen::rmat(8, 1500, 17);
+    let base = build_image(n, &edges, "wal-replay");
+    let wal_dir = tmpdir("wal-replay-dir");
+
+    let mk_cfg = || ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 1,
+        wal_dir: Some(wal_dir.clone()),
+        ..Default::default()
+    };
+    let (blocker_id, wcc_id, deg_id) = {
+        let svc = GraphService::start(mk_cfg());
+        // blocker: negative threshold never converges, so it pins the
+        // single executor until shutdown cancels it
+        let mut blocker = JobRequest::new(base.clone(), "pagerank");
+        blocker.overrides.push(("threshold".into(), "-1".into()));
+        blocker.overrides.push(("workers".into(), "1".into()));
+        let blocker_id = svc.submit(blocker).unwrap();
+        block_until_running(&svc, blocker_id);
+        let wcc_id = svc.submit(JobRequest::new(base.clone(), "wcc")).unwrap();
+        let deg_id = svc.submit(JobRequest::new(base.clone(), "degree")).unwrap();
+        assert_eq!(svc.status(wcc_id).unwrap().state, JobState::Queued);
+        assert_eq!(svc.status(deg_id).unwrap().state, JobState::Queued);
+        // abrupt stop: queued jobs never ran, blocker is cancelled
+        svc.shutdown();
+        assert_eq!(svc.status(blocker_id).unwrap().state, JobState::Cancelled);
+        assert_eq!(svc.status(wcc_id).unwrap().state, JobState::Queued);
+        (blocker_id, wcc_id, deg_id)
+    };
+
+    let svc = GraphService::start(mk_cfg());
+    let h = svc.health();
+    assert!(h.wal_enabled);
+    assert!(h.wal_replayed > 0, "{h:?}");
+    // the queued jobs run to completion under their original ids
+    let w = svc.wait(wcc_id, Duration::from_secs(120)).expect("replayed job known");
+    assert_eq!(w.state, JobState::Done, "{w:?}");
+    assert!(w.summary.as_deref().unwrap_or("").starts_with("wcc:"), "{w:?}");
+    let d = svc.wait(deg_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(d.state, JobState::Done, "{d:?}");
+    // exactly once: one entry per id, no duplicates, history intact
+    let jobs = svc.list();
+    assert_eq!(jobs.len(), 3, "{jobs:?}");
+    for id in [blocker_id, wcc_id, deg_id] {
+        assert_eq!(jobs.iter().filter(|j| j.id == id).count(), 1);
+    }
+    assert_eq!(svc.status(blocker_id).unwrap().state, JobState::Cancelled);
+    // fresh ids continue past the replayed maximum
+    let new_id = svc.submit(JobRequest::new(base.clone(), "degree")).unwrap();
+    assert!(new_id > deg_id, "id counter must resume past the WAL ({new_id})");
+    let st = svc.wait(new_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(st.state, JobState::Done);
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    cleanup_image(&base);
+}
+
+/// Graceful shutdown drains a checkpointing job to its round boundary,
+/// stamps it `interrupted` (resumable) rather than dead, and leaves a
+/// final snapshot behind; the restarted service re-queues it flagged to
+/// resume.
+#[test]
+fn graceful_shutdown_marks_running_job_resumable() {
+    let n = 256;
+    let edges = gen::rmat(8, 1500, 23);
+    let base = build_image(n, &edges, "graceful");
+    let wal_dir = tmpdir("graceful-dir");
+
+    let mk_cfg = || ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 1,
+        wal_dir: Some(wal_dir.clone()),
+        ..Default::default()
+    };
+    let id = {
+        let svc = GraphService::start(mk_cfg());
+        let mut job = JobRequest::new(base.clone(), "pagerank");
+        job.overrides.push(("threshold".into(), "-1".into())); // never converges
+        job.overrides.push(("workers".into(), "1".into()));
+        job.overrides.push(("checkpoint_every".into(), "2".into()));
+        let id = svc.submit(job).unwrap();
+        block_until_running(&svc, id);
+        // let a few rounds (and periodic snapshots) happen
+        std::thread::sleep(Duration::from_millis(300));
+        svc.shutdown_graceful(Duration::from_secs(60));
+        let st = svc.status(id).unwrap();
+        assert_eq!(st.state, JobState::Cancelled, "{st:?}");
+        assert!(
+            st.error.as_deref().unwrap_or("").contains("resumes on restart"),
+            "graceful drain must mark the job resumable: {st:?}"
+        );
+        assert!(st.engine.checkpoints >= 1, "{st:?}");
+        id
+    };
+    // the service parks per-job snapshots next to the WAL
+    let ckpt = wal_dir.join(format!("job-{id}.ckpt"));
+    assert!(ckpt.exists(), "drained job must leave its final snapshot");
+
+    let svc = GraphService::start(mk_cfg());
+    assert_eq!(svc.resumed_jobs(), 1, "interrupted job must come back resumable");
+    assert_eq!(svc.health().resumed_jobs, 1);
+    // it restores from the snapshot and keeps running (threshold=-1
+    // never converges); cancel it cooperatively and wind down
+    block_until_running(&svc, id);
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(svc.cancel(id));
+    let st = svc.wait(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(st.state, JobState::Cancelled, "{st:?}");
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    cleanup_image(&base);
+}
+
+/// A torn WAL tail (crash mid-append) is skipped and counted at the
+/// next start; the intact prefix — including terminal history — replays
+/// fully and the service keeps accepting work.
+#[test]
+fn torn_wal_tail_is_skipped_on_service_restart() {
+    let n = 256;
+    let edges = gen::rmat(8, 1500, 29);
+    let base = build_image(n, &edges, "torn-wal");
+    let wal_dir = tmpdir("torn-wal-dir");
+
+    let mk_cfg = || ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 1,
+        wal_dir: Some(wal_dir.clone()),
+        ..Default::default()
+    };
+    let done_id = {
+        let svc = GraphService::start(mk_cfg());
+        let id = svc.submit(JobRequest::new(base.clone(), "wcc")).unwrap();
+        let st = svc.wait(id, Duration::from_secs(120)).unwrap();
+        assert_eq!(st.state, JobState::Done);
+        svc.shutdown();
+        id
+    };
+    // crash mid-append: a truncated line with no trailing newline
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(wal_dir.join("jobs.wal"))
+        .unwrap();
+    f.write_all(b"{\"ck\":\"dead\",\"rec\":{\"kind\":\"sta").unwrap();
+    drop(f);
+
+    let svc = GraphService::start(mk_cfg());
+    let h = svc.health();
+    assert!(h.wal_skipped >= 1, "torn tail must be counted: {h:?}");
+    assert_eq!(
+        svc.status(done_id).unwrap().state,
+        JobState::Done,
+        "intact prefix must replay"
+    );
+    let id = svc.submit(JobRequest::new(base.clone(), "degree")).unwrap();
+    let st = svc.wait(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(st.state, JobState::Done);
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    cleanup_image(&base);
+}
+
+/// Permanent I/O failure blast radius: the job reading the failing
+/// file fails cleanly with a descriptive error — no panic, no wedge —
+/// while a concurrent job on a healthy graph completes, and the
+/// substrate counters attribute the damage.
+#[test]
+fn permanent_io_failure_fails_job_cleanly_while_healthy_job_completes() {
+    let n = 256;
+    let edges = gen::rmat(8, 1500, 31);
+    let bad = build_image(n, &edges, "badio");
+    let good = build_image(n, &edges, "goodio");
+
+    let svc = GraphService::start(ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 2,
+        // fail every adjacency read whose file path contains "badio";
+        // the index loads outside the pool, so submit-time validation
+        // still passes and the failure surfaces inside the run
+        fault: Some(FaultPlan {
+            seed: 1,
+            jitter_us: 0,
+            reorder: false,
+            eio_period: 0,
+            fail_path: Some(Arc::from("badio")),
+        }),
+        ..Default::default()
+    });
+    let bad_id = svc.submit(JobRequest::new(bad.clone(), "wcc")).unwrap();
+    let good_id = svc.submit(JobRequest::new(good.clone(), "wcc")).unwrap();
+
+    let b = svc.wait(bad_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(b.state, JobState::Failed, "{b:?}");
+    let err = b.error.as_deref().unwrap_or("");
+    assert!(
+        err.contains("injected permanent I/O failure") && err.contains("badio"),
+        "failure must name the cause and the file: {err}"
+    );
+    let g = svc.wait(good_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(g.state, JobState::Done, "healthy job must be unaffected: {g:?}");
+    assert!(g.summary.as_deref().unwrap_or("").starts_with("wcc:"));
+    let io = svc.substrate_stats();
+    assert!(io.permanent_errors >= 1, "{io:?}");
+    assert_eq!(svc.health().io_permanent_errors, io.permanent_errors);
+    svc.shutdown();
+    cleanup_image(&bad);
+    cleanup_image(&good);
+}
