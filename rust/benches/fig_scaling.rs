@@ -10,12 +10,15 @@
 //!    static partition most workers idled; with chunk stealing the
 //!    max/min busy ratio stays bounded and the steal counter shows why.
 //!
-//! Row schema: workers, wall, speedup vs 1 worker, steals, busy ratio,
-//! summed busy/idle, disk bytes.
+//! Row schema: workers, pin (each count runs unpinned then core-pinned),
+//! wall, speedup vs the first unpinned run, steals, busy ratio, parked
+//! wait time, backoff events, disk bytes.
 
 use graphyti::algs::bfs::bfs;
 use graphyti::algs::pagerank::pagerank_push;
-use graphyti::coordinator::benchkit::{banner, bench_scale, rmat_workload, worker_scaling, FigTable};
+use graphyti::coordinator::benchkit::{
+    banner, bench_scale, rmat_workload, worker_scaling_pinned, FigTable,
+};
 use graphyti::engine::EngineConfig;
 
 fn main() {
@@ -39,34 +42,44 @@ fn main() {
     // derive engine knobs (mode / pull_density / fetch_window /
     // transport) from the workload config so GRAPHYTI_BENCH_MODE and
     // config files reach the engine; trace=on so the JSON baseline
-    // carries per-round I/O summaries
-    let pr_reports = worker_scaling(&base, &cfg, &counts, |g, w| {
-        let ecfg = EngineConfig { workers: w, trace: true, ..cfg.engine() };
+    // carries per-round I/O summaries. Each worker count runs unpinned
+    // then core-pinned — results are identical by contract, the table
+    // shows what affinity buys in wall/park time.
+    let pr_reports = worker_scaling_pinned(&base, &cfg, &counts, |g, w, pin| {
+        let ecfg = EngineConfig { workers: w, trace: true, pin_workers: pin, ..cfg.engine() };
         pagerank_push(g, cfg.alpha, thr, &ecfg).report
     });
 
     println!("\n-- BFS from vertex 0 (skew-prone frontier) --");
-    let reports = worker_scaling(&base, &cfg, &counts, |g, w| {
-        let ecfg = EngineConfig { workers: w, trace: true, ..cfg.engine() };
+    let reports = worker_scaling_pinned(&base, &cfg, &counts, |g, w, pin| {
+        let ecfg = EngineConfig { workers: w, trace: true, pin_workers: pin, ..cfg.engine() };
         bfs(g, 0, &ecfg).1
     });
 
+    // reports come back in execution order: each count unpinned then
+    // pinned, so doubling the counts list labels them
+    let widths: Vec<usize> = counts.iter().flat_map(|&w| [w, w]).collect();
+    let variant = |w: usize, pin: bool| if pin { format!("w={w} pinned") } else { format!("w={w}") };
     let mut fig = FigTable::new();
-    for (w, r) in counts.iter().zip(&pr_reports) {
-        fig.add(&format!("pagerank-push w={w}"), r);
+    for (&w, (pin, r)) in widths.iter().zip(&pr_reports) {
+        fig.add(&format!("pagerank-push {}", variant(w, *pin)), r);
     }
-    for (w, r) in counts.iter().zip(&reports) {
-        fig.add(&format!("bfs w={w}"), r);
+    for (&w, (pin, r)) in widths.iter().zip(&reports) {
+        fig.add(&format!("bfs {}", variant(w, *pin)), r);
     }
-    fig.write_json("fig_scaling", &format!("rmat s{scale} ef16 directed, workers 1/2/4/8"))
-        .unwrap();
+    fig.write_json(
+        "fig_scaling",
+        &format!("rmat s{scale} ef16 directed, workers 1/2/4/8, pinned+unpinned"),
+    )
+    .unwrap();
 
     // the scheduler's contract: multi-worker runs stay balanced
-    for r in &reports[1..] {
+    for (pin, r) in &reports[1..] {
         let ratio = r.engine.busy_ratio();
         println!(
-            "workers={}: busy ratio {:.2} ({} steals)",
+            "workers={} pin={}: busy ratio {:.2} ({} steals)",
             r.engine.worker_busy_ns.len(),
+            pin,
             ratio,
             r.engine.steals
         );

@@ -209,6 +209,56 @@ pub fn worker_scaling(
     reports
 }
 
+/// Like [`worker_scaling`], but each worker count runs twice — unpinned
+/// then core-pinned (`run`'s third argument) — so the scaling table
+/// shows what affinity buys at each width. Adds the wait-ladder columns
+/// (`park`, `backoff`) since pinning changes *where* waits happen, not
+/// results. The speedup baseline is the first unpinned run. Returns
+/// `(pinned, report)` pairs in execution order.
+pub fn worker_scaling_pinned(
+    base: &PathBuf,
+    cfg: &RunConfig,
+    counts: &[usize],
+    mut run: impl FnMut(&SemGraph, usize, bool) -> RunReport,
+) -> Vec<(bool, RunReport)> {
+    let mut t = Table::new(&[
+        "workers",
+        "pin",
+        "wall",
+        "speedup",
+        "rounds",
+        "steals",
+        "busy-ratio",
+        "park",
+        "backoff",
+        "disk",
+    ]);
+    let mut reports = Vec::with_capacity(counts.len() * 2);
+    let mut base_wall = None;
+    for &w in counts {
+        for pin in [false, true] {
+            let g = open_sem(base, cfg);
+            let r = run(&g, w, pin);
+            let bw = *base_wall.get_or_insert(r.wall.as_secs_f64());
+            t.row(&[
+                w.to_string(),
+                if pin { "on" } else { "off" }.to_string(),
+                fmt_dur(r.wall),
+                format!("{:.2}x", bw / r.wall.as_secs_f64()),
+                r.rounds.to_string(),
+                r.engine.steals.to_string(),
+                fmt_ratio(r.engine.busy_ratio()),
+                fmt_dur(std::time::Duration::from_nanos(r.engine.park_ns)),
+                r.engine.backoff_events.to_string(),
+                fmt_bytes(r.io.bytes_read),
+            ]);
+            reports.push((pin, r));
+        }
+    }
+    t.print();
+    reports
+}
+
 /// Run `f` against `source` and return its output together with the
 /// snapshot *delta* of the source's own I/O counters over the run.
 ///
@@ -371,6 +421,8 @@ fn report_row_json(variant: &str, r: &RunReport) -> Json {
                 ("vertex_runs", Json::u(r.engine.vertex_runs)),
                 ("pull_rounds", Json::u(r.engine.pull_rounds)),
                 ("blocks_skipped", Json::u(r.engine.blocks_skipped)),
+                ("park_ns", Json::u(r.engine.park_ns)),
+                ("backoff_events", Json::u(r.engine.backoff_events)),
                 ("overlap_ratio", Json::f(r.engine.overlap_ratio())),
                 (
                     "busy_ratio",
@@ -514,6 +566,26 @@ mod tests {
         assert_eq!(reports[0].engine.worker_busy_ns.len(), 1, "1-worker run tracks 1 slot");
         assert_eq!(reports[1].engine.worker_busy_ns.len(), 2, "2-worker run tracks 2 slots");
         assert!(reports[0].rounds > 0 && reports[1].rounds > 0);
+    }
+
+    #[test]
+    fn worker_scaling_pinned_runs_both_variants_per_count() {
+        let (base, mut cfg) = rmat_workload(9, 8, true, "scale-pin-unit");
+        cfg.io_delay_us = 0;
+        let reports = worker_scaling_pinned(&base, &cfg, &[1, 2], |g, w, pin| {
+            let ecfg = crate::engine::EngineConfig {
+                workers: w,
+                pin_workers: pin,
+                ..Default::default()
+            };
+            crate::algs::bfs::bfs(g, 0, &ecfg).1
+        });
+        // unpinned + pinned per count, in order, bit-identical rounds
+        let pins: Vec<bool> = reports.iter().map(|(p, _)| *p).collect();
+        assert_eq!(pins, vec![false, true, false, true]);
+        let rounds: Vec<u64> = reports.iter().map(|(_, r)| r.rounds).collect();
+        assert_eq!(rounds[0], rounds[1], "pinning must not change round count");
+        assert_eq!(rounds[2], rounds[3]);
     }
 
     fn report_with(wall_ms: u64, bytes_read: u64) -> RunReport {

@@ -82,6 +82,10 @@ pub struct RunConfig {
     /// Resume from `checkpoint_path` if a usable snapshot exists
     /// (`resume=true`); otherwise start fresh.
     pub resume: bool,
+    /// Pin engine worker `w` to core `w % cores` (`pin=true`; Linux
+    /// only, no-op elsewhere). A locality hint — results are identical
+    /// either way.
+    pub pin: bool,
 }
 
 impl Default for RunConfig {
@@ -105,6 +109,7 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             checkpoint_path: None,
             resume: false,
+            pin: false,
         }
     }
 }
@@ -154,6 +159,13 @@ impl RunConfig {
                     other => bail!("resume must be true/false, got '{other}'"),
                 }
             }
+            "pin" => {
+                self.pin = match v {
+                    "true" | "1" | "on" => true,
+                    "false" | "0" | "off" => false,
+                    other => bail!("pin must be true/false, got '{other}'"),
+                }
+            }
             "trace" => {
                 self.trace = match v {
                     "off" | "false" | "0" => TraceMode::Off,
@@ -201,6 +213,7 @@ impl RunConfig {
         e.checkpoint_every = self.checkpoint_every;
         e.checkpoint_path = self.checkpoint_path.clone();
         e.resume = self.resume;
+        e.pin_workers = self.pin;
         e
     }
 
@@ -281,6 +294,14 @@ mod tests {
         assert!(c.set("resume", "maybe").is_err());
         c.set("resume", "off").unwrap();
         c.set("checkpoint_every", "0").unwrap();
+        assert!(!c.pin);
+        assert!(!c.engine().pin_workers);
+        c.set("pin", "true").unwrap();
+        assert!(c.pin);
+        assert!(c.engine().pin_workers);
+        c.set("pin", "off").unwrap();
+        assert!(!c.pin);
+        assert!(c.set("pin", "sideways").is_err());
     }
 
     #[test]

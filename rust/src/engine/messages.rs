@@ -189,6 +189,33 @@ impl<M: Clone> CombinerLanes<M> {
         self.summary[parity][sender].clear_all();
     }
 
+    /// Pre-touch every *untouched* slot of `sender`'s slabs (both
+    /// parities) by writing the combiner identity — the value an
+    /// untouched slot already logically holds, so this is
+    /// state-invisible. Purpose: NUMA first-touch. The slabs were
+    /// allocated on the spawning thread before workers existed; for
+    /// zero-representable identities the kernel may have handed back
+    /// untouched copy-on-write zero pages, and the first *real* write
+    /// would fault them in wherever that sender thread happens to run.
+    /// A pinned worker calls this once at startup so the faults land on
+    /// its own core's node. Touched slots are skipped — a resumed run
+    /// restores pending messages into lane 0 before workers spawn, and
+    /// those must survive (the runner additionally skips warm-up
+    /// entirely on resume, making the skip defense-in-depth).
+    ///
+    /// Protocol: only worker `sender`, before its first round.
+    pub fn warm_lane(&self, sender: usize) {
+        for parity in 0..2 {
+            let slab = &self.slabs[parity][sender];
+            let touched = &self.touched[parity][sender];
+            for v in 0..self.n {
+                if !touched.get(v) {
+                    *slab.get_mut(v) = (self.combiner.identity)();
+                }
+            }
+        }
+    }
+
     /// Fold `msg` toward `dst` into `sender`'s lane at `parity`.
     /// Returns `true` when the slot was fresh (a new pending delivery),
     /// `false` when the send combined into an existing one.
@@ -280,6 +307,18 @@ impl<M: Clone> CombinerLanes<M> {
                 }
                 if union == 0 {
                     continue; // stale summary bit: one wasted word load
+                }
+                // prefetch each lane's first touched slot of this word
+                // before the fold walks them: the slab addresses depend
+                // on bits just computed, a stride no hardware prefetcher
+                // predicts, and with several sender lanes the fold is a
+                // chain of dependent cold loads without this
+                for (s, &w) in lane_words.iter().enumerate() {
+                    if w != 0 {
+                        crate::util::prefetch_read(
+                            slabs[s].get(base + w.trailing_zeros() as usize),
+                        );
+                    }
                 }
                 let mut bits = union;
                 while bits != 0 {
@@ -682,6 +721,29 @@ mod tests {
         let mut again = Vec::new();
         deliver_all(&lanes, 0, n, &mut |v, m| again.push((v, *m)));
         assert_eq!(again, vec![(8191, 7)]);
+    }
+
+    #[test]
+    fn warm_lane_is_state_invisible() {
+        // warm-up writes identity into untouched slots only: staged
+        // messages (e.g. checkpoint-restored pending) survive verbatim,
+        // and the fresh/fold semantics of later sends are unchanged
+        let lanes = CombinerLanes::new(2, 200, min_combiner());
+        lanes.send(0, 0, 7, &42);
+        lanes.restore_pending(1, [(123u32, 5u32)]);
+        lanes.warm_lane(0);
+        lanes.warm_lane(1);
+        let mut p0 = Vec::new();
+        deliver_all(&lanes, 0, 200, &mut |v, m| p0.push((v, *m)));
+        assert_eq!(p0, vec![(7, 42)], "staged send survives warm-up");
+        let mut p1 = Vec::new();
+        deliver_all(&lanes, 1, 200, &mut |v, m| p1.push((v, *m)));
+        assert_eq!(p1, vec![(123, 5)], "restored pending survives warm-up");
+        // warmed (identity-filled) slots are still "fresh" to send
+        assert!(lanes.send(0, 1, 9, &3));
+        let mut again = Vec::new();
+        deliver_all(&lanes, 0, 200, &mut |v, m| again.push((v, *m)));
+        assert_eq!(again, vec![(9, 3)]);
     }
 
     #[test]

@@ -170,6 +170,15 @@ pub struct EngineConfig {
     /// the saved round. A missing or corrupt snapshot falls back to a
     /// fresh run (logged, never fatal).
     pub resume: bool,
+    /// Pin worker `w` to core `w % cores` (Linux `sched_setaffinity`;
+    /// no-op elsewhere — see [`crate::util::affinity`]). Keeps each
+    /// worker's decode arenas and combiner lane resident in one cache
+    /// domain and, because `FetchSlot` arenas are allocated inside the
+    /// worker thread, first-touch places them on the pinned core's NUMA
+    /// node. Off by default: on shared boxes pinning fights the
+    /// scheduler. A locality hint only — results are bit-identical
+    /// either way (the determinism tests run both).
+    pub pin_workers: bool,
 }
 
 impl Default for EngineConfig {
@@ -189,6 +198,7 @@ impl Default for EngineConfig {
             checkpoint_every: 0,
             checkpoint_path: None,
             resume: false,
+            pin_workers: false,
         }
     }
 }
@@ -261,6 +271,8 @@ impl RunReport {
             out.engine.fetch_allocs += r.engine.fetch_allocs;
             out.engine.checkpoints += r.engine.checkpoints;
             out.engine.checkpoint_bytes += r.engine.checkpoint_bytes;
+            out.engine.park_ns += r.engine.park_ns;
+            out.engine.backoff_events += r.engine.backoff_events;
             add_per_worker(&mut out.engine.worker_busy_ns, &r.engine.worker_busy_ns);
             add_per_worker(&mut out.engine.worker_idle_ns, &r.engine.worker_idle_ns);
             out.io.read_requests += r.io.read_requests;
@@ -343,16 +355,36 @@ struct Shared<M> {
     failure: Mutex<Option<String>>,
 }
 
-/// Claims frontier chunks: first from this worker's own span, then —
-/// work stealing — from the other workers' remaining spans.
+/// Claim-loop state: where the claimer is sourcing chunks from. A round
+/// never needs a blocking wait state here — chunks are claimed exactly
+/// once and nothing re-adds them mid-round, so a drained walk is a
+/// terminal `Done`, not something to wait out (the engine's genuine
+/// wait state is the fetch pipeline's poll-with-backoff in
+/// [`run_pipeline`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ClaimState {
+    /// Draining this worker's own span (the locality-preserving common
+    /// case — on a balanced frontier the claimer never leaves it).
+    Visit,
+    /// Own span drained: walking the other workers' cursors, claiming
+    /// their leftover chunks.
+    Steal,
+    /// Every span visited; `next_chunk` returns `None` forever.
+    Done,
+}
+
+/// Claims frontier chunks: first from this worker's own span
+/// ([`ClaimState::Visit`]), then — work stealing — from the other
+/// workers' remaining spans ([`ClaimState::Steal`]).
 struct ChunkClaimer<'a> {
     cursors: &'a [AtomicUsize],
     nchunks: usize,
     workers: usize,
     wid: usize,
+    state: ClaimState,
     /// Span currently being drained (own span first).
     victim: usize,
-    /// Spans visited so far this round (terminates the steal walk).
+    /// Spans visited so far this round (drives `Steal` → `Done`).
     visited: usize,
     /// Foreign chunks that yielded work (counted by [`FrontierStream`]).
     steals: u64,
@@ -365,6 +397,7 @@ impl<'a> ChunkClaimer<'a> {
             nchunks,
             workers,
             wid,
+            state: ClaimState::Visit,
             victim: wid,
             visited: 0,
             steals: 0,
@@ -377,6 +410,9 @@ impl<'a> ChunkClaimer<'a> {
     /// work, so it must not inflate the steal metric).
     fn next_chunk(&mut self) -> Option<(usize, bool)> {
         loop {
+            if self.state == ClaimState::Done {
+                return None;
+            }
             let v = self.victim;
             let (_, hi) = chunk_span(v, self.workers, self.nchunks);
             // cheap pre-check bounds cursor overshoot to one fetch_add
@@ -384,13 +420,18 @@ impl<'a> ChunkClaimer<'a> {
             if self.cursors[v].load(Ordering::Relaxed) < hi {
                 let c = self.cursors[v].fetch_add(1, Ordering::Relaxed);
                 if c < hi {
-                    return Some((c, v != self.wid));
+                    return Some((c, self.state == ClaimState::Steal));
                 }
+                // lost the claim race (another worker drained the span
+                // between pre-check and fetch_add): fall through and
+                // move on — there is nothing to wait for
             }
             self.visited += 1;
             if self.visited >= self.workers {
+                self.state = ClaimState::Done;
                 return None;
             }
+            self.state = ClaimState::Steal;
             self.victim = (v + 1) % self.workers;
         }
     }
@@ -471,6 +512,25 @@ pub fn frontier_summary_word(bm: &AtomicBitmap, n: usize) -> u64 {
     out
 }
 
+/// Parked-wait accounting for one worker's round, merged into
+/// [`EngineStats`] alongside the other per-round counters.
+#[derive(Debug, Default, Clone, Copy)]
+struct WaitStats {
+    /// Wall time actually slept in the backoff ladder's park stage, ns
+    /// (also charged to `io_wait_ns` — a park *is* an I/O stall, just
+    /// one that releases the core).
+    park_ns: u64,
+    /// Ladder escalations past pure spinning (yields + parks).
+    backoff_events: u64,
+}
+
+/// Bounded parks the pipeline's wait state takes before giving up on
+/// polling and blocking on the oldest submission (≈ 50+100+200+400 µs
+/// of released-CPU waiting — long enough to catch any out-of-order
+/// completion, short enough that a stalled pool degrades to the old
+/// blocking behavior almost immediately).
+const WAIT_PARK_STEPS: u32 = 4;
+
 /// Drive one worker's vertex phase through the overlapped fetch
 /// pipeline: `fill` stages the next batch of edge requests into a slot
 /// (returning `false` when the frontier is drained), `process` consumes
@@ -479,6 +539,17 @@ pub fn frontier_summary_word(bm: &AtomicBitmap, n: usize) -> u64 {
 /// only a blocking wait on a still-in-flight batch is charged to
 /// `io_wait_ns`. With `window == 0` every batch is a synchronous, fully
 /// timed fetch (the forced-baseline the overlap tests compare against).
+///
+/// **Wait state.** When no in-flight batch has completed, the worker
+/// does not block on the oldest immediately: it re-polls under a
+/// [`crate::util::Backoff`] ladder (spin → yield → bounded park), which
+/// keeps catching *whichever* batch lands first instead of serializing
+/// on submission order, and releases the core while parked instead of
+/// burning it in a poll spin. After [`WAIT_PARK_STEPS`] parks with
+/// nothing ready it falls back to the blocking wait on the oldest
+/// submission, so a completion signal the poll path cannot observe
+/// still makes progress. Parked time is charged to both `io_wait_ns`
+/// (it is an I/O stall) and `wait.park_ns` (it released the CPU).
 ///
 /// A permanent fetch failure no longer panics: the pipeline stops
 /// filling, retires every in-flight slot back to the free pool (so later
@@ -489,6 +560,7 @@ fn run_pipeline(
     slots: &mut Vec<FetchSlot>,
     window: usize,
     io_wait_ns: &mut u64,
+    wait: &mut WaitStats,
     mut fill: impl FnMut(&mut FetchSlot) -> bool,
     mut process: impl FnMut(&FetchSlot),
 ) -> crate::Result<()> {
@@ -507,6 +579,7 @@ fn run_pipeline(
     let mut inflight: VecDeque<FetchSlot> = VecDeque::with_capacity(free.len());
     let mut drained = false;
     let mut failure: Option<anyhow::Error> = None;
+    let mut backoff = crate::util::Backoff::new();
     loop {
         // keep the window full before touching completions (no refills
         // once a batch has failed — the round is lost either way)
@@ -540,8 +613,31 @@ fn run_pipeline(
             break;
         }
         // prefer whichever batch's pages have already landed (oldest
-        // first, so in-memory sources process in submission order)
-        let ready = (0..inflight.len()).find(|&i| source.poll_batch(&mut inflight[i]));
+        // first, so in-memory sources process in submission order).
+        // Wait state: nothing ready → re-poll under the backoff ladder
+        // before paying the blocking path below.
+        let mut parks = 0u32;
+        let ready = loop {
+            if let Some(i) = (0..inflight.len()).find(|&i| source.poll_batch(&mut inflight[i])) {
+                break Some(i);
+            }
+            if parks >= WAIT_PARK_STEPS {
+                break None;
+            }
+            if backoff.is_parking() {
+                parks += 1;
+            }
+            let step = backoff.snooze();
+            if step.escalated {
+                wait.backoff_events += 1;
+            }
+            if !step.parked.is_zero() {
+                let ns = step.parked.as_nanos() as u64;
+                wait.park_ns += ns;
+                *io_wait_ns += ns;
+            }
+        };
+        backoff.reset();
         let mut s = match ready {
             Some(i) => {
                 let mut s = inflight.remove(i).unwrap();
@@ -675,10 +771,17 @@ impl Engine {
         }
 
         let t0 = Instant::now();
+        let ncores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
         std::thread::scope(|s| {
             for wid in 0..workers {
                 let shared = &shared;
                 s.spawn(move || {
+                    if cfg.pin_workers {
+                        // affinity is per-thread, so the pin happens
+                        // inside the worker; failure (denied syscall,
+                        // non-Linux) just means running unpinned
+                        let _ = crate::util::affinity::pin_to_core(wid % ncores);
+                    }
                     Self::worker_loop(program, source, shared, wid, workers, n, cfg);
                 });
             }
@@ -814,6 +917,17 @@ impl Engine {
         // combiner-lane delivery scratch (one word slot per sender lane,
         // reused every round — the sweep allocates nothing once warm)
         let mut lane_words: Vec<u64> = Vec::with_capacity(workers);
+        // pinned workers pre-touch their own combiner sender slabs so
+        // any lazily-mapped (zero) pages fault in on the pinned core and
+        // first-touch lands them on its NUMA node. Fresh runs only: no
+        // touched bit exists anywhere yet and round-0 sends write only a
+        // worker's own lane, so the writes race with nothing; a resumed
+        // run has restored messages in flight and skips the warm-up.
+        if cfg.pin_workers && !cfg.resume {
+            if let Transport::Combine(lanes) = &shared.plane.transport {
+                lanes.warm_lane(wid);
+            }
+        }
 
         loop {
             let round = shared.round.load(Ordering::Acquire);
@@ -877,6 +991,7 @@ impl Engine {
             ctx.in_message_phase = false;
             let current = &shared.bitmaps[cur_parity];
             let mut io_wait_ns = 0u64;
+            let mut wait = WaitStats::default();
             let mut blocks_skipped = 0u64;
             if pull {
                 // ---- B1: edge-less pass over the live frontier --------
@@ -915,6 +1030,7 @@ impl Engine {
                     &mut slots,
                     cfg.fetch_window,
                     &mut io_wait_ns,
+                    &mut wait,
                     |slot| loop {
                         let Some((c, _)) = claimer.next_chunk() else { return false };
                         // block filter: a published summary disjoint
@@ -991,6 +1107,7 @@ impl Engine {
                     &mut slots,
                     cfg.fetch_window,
                     &mut io_wait_ns,
+                    &mut wait,
                     |slot| {
                         slot.reqs.clear();
                         while let Some(v) = stream.next_vertex() {
@@ -1004,8 +1121,21 @@ impl Engine {
                     },
                     |slot| {
                         ctx.c_vertex_runs += slot.reqs.len() as u64;
+                        let edges = slot.edges();
                         for (i, &(v, _)) in slot.reqs.iter().enumerate() {
-                            program.run_on_vertex(&mut ctx, v, &slot.edges()[i]);
+                            // pull the next vertex's decoded neighbor
+                            // arrays toward L1 while this one runs — the
+                            // arena layout is bitmap-dependent, so the
+                            // hardware prefetcher can't see this stride
+                            if let Some(nx) = edges.get(i + 1) {
+                                if let Some(f) = nx.in_neighbors.first() {
+                                    crate::util::prefetch_read(f);
+                                }
+                                if let Some(f) = nx.out_neighbors.first() {
+                                    crate::util::prefetch_read(f);
+                                }
+                            }
+                            program.run_on_vertex(&mut ctx, v, &edges[i]);
                         }
                     },
                 );
@@ -1028,6 +1158,8 @@ impl Engine {
             shared.stats.phase_b_ns.fetch_add((t3 - t2).as_nanos() as u64, Ordering::Relaxed);
             shared.stats.io_wait_ns.fetch_add(io_wait_ns, Ordering::Relaxed);
             shared.stats.blocks_skipped.fetch_add(blocks_skipped, Ordering::Relaxed);
+            shared.stats.park_ns.fetch_add(wait.park_ns, Ordering::Relaxed);
+            shared.stats.backoff_events.fetch_add(wait.backoff_events, Ordering::Relaxed);
             ctx.c_p2p = 0;
             ctx.c_multicast = 0;
             ctx.c_deliveries = 0;
@@ -1462,6 +1594,49 @@ mod tests {
                     got, baseline,
                     "{name}: BFS levels must not depend on parallelism (workers={workers})"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_runs_match_unpinned_bit_identically() {
+        // pinning (and the lane warm-up it triggers on the combiner
+        // transport) is a locality hint: results must be bit-identical
+        // with it on or off, at every worker count, on skewed inputs —
+        // and the warm-up must not corrupt fold counts or message totals
+        let rmat = gen::rmat(9, 4000, 23);
+        let star = gen::star(512);
+        for (name, edges) in [("rmat", &rmat), ("star", &star)] {
+            let g = MemGraph::from_edges(512, edges, true);
+            let baseline = {
+                let prog = Bfs { level: SharedVec::new(512, -1) };
+                prog.level.set(0, 0);
+                Engine::run(
+                    &prog,
+                    &g,
+                    &[0],
+                    &EngineConfig { workers: 1, ..Default::default() },
+                );
+                prog.level.to_vec()
+            };
+            for workers in [1, 2, 8] {
+                for pin in [false, true] {
+                    let prog = Bfs { level: SharedVec::new(512, -1) };
+                    prog.level.set(0, 0);
+                    let cfg = EngineConfig {
+                        workers,
+                        batch: 8,
+                        pin_workers: pin,
+                        ..Default::default()
+                    };
+                    let r = Engine::run(&prog, &g, &[0], &cfg);
+                    assert_eq!(
+                        prog.level.to_vec(),
+                        baseline,
+                        "{name}: workers={workers} pin={pin}"
+                    );
+                    assert_eq!(r.engine.msg_allocs, 0, "warm-up must not allocate");
+                }
             }
         }
     }

@@ -65,6 +65,15 @@ pub struct EngineStats {
     pub checkpoints: AtomicU64,
     /// Total bytes written by published checkpoints.
     pub checkpoint_bytes: AtomicU64,
+    /// Wall time workers spent parked (bounded-sleep stage of the
+    /// [`crate::util::Backoff`] ladder) while waiting for fetch
+    /// completions, ns. Parked time is *released* CPU — unlike the old
+    /// bare-yield spins it shows up here instead of burning a core.
+    pub park_ns: AtomicU64,
+    /// Wait-ladder escalations past pure spinning (yields + parks).
+    /// Zero in a well-fed run; growth localizes which runs are
+    /// wait-bound rather than compute-bound.
+    pub backoff_events: AtomicU64,
     /// Per-worker time spent working (phases A/B + bookkeeping), ns.
     worker_busy_ns: Vec<AtomicU64>,
     /// Per-worker time spent waiting at barriers, ns.
@@ -123,6 +132,8 @@ impl EngineStats {
             fetch_allocs: self.fetch_allocs.load(Ordering::Relaxed),
             checkpoints: self.checkpoints.load(Ordering::Relaxed),
             checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
+            park_ns: self.park_ns.load(Ordering::Relaxed),
+            backoff_events: self.backoff_events.load(Ordering::Relaxed),
             worker_busy_ns: self
                 .worker_busy_ns
                 .iter()
@@ -173,6 +184,10 @@ pub struct EngineStatsSnapshot {
     pub checkpoints: u64,
     /// Total bytes written by published checkpoints.
     pub checkpoint_bytes: u64,
+    /// Wall time parked in the wait ladder (released CPU, not spin), ns.
+    pub park_ns: u64,
+    /// Wait-ladder escalations past pure spinning (yields + parks).
+    pub backoff_events: u64,
     /// Per-worker busy time in nanoseconds (empty when untracked).
     pub worker_busy_ns: Vec<u64>,
     /// Per-worker barrier-wait time in nanoseconds.
@@ -265,6 +280,13 @@ impl EngineStatsSnapshot {
                 crate::util::fmt_bytes(self.checkpoint_bytes),
             ));
         }
+        if self.backoff_events > 0 {
+            s.push_str(&format!(
+                " backoff_events={} park={}",
+                self.backoff_events,
+                crate::util::fmt_dur(std::time::Duration::from_nanos(self.park_ns)),
+            ));
+        }
         if self.worker_busy_ns.len() >= 2 {
             s.push_str(&format!(
                 " busy_ratio={:.2} busy={} idle={}",
@@ -318,6 +340,20 @@ mod tests {
         assert_eq!(s.overlap_ratio(), 0.0);
         s.io_wait_ns = 0;
         assert_eq!(s.overlap_ratio(), 1.0);
+    }
+
+    #[test]
+    fn backoff_counters_surface_in_snapshot_and_report() {
+        let s = EngineStats::new();
+        // silent when no escalation happened — the common well-fed case
+        assert!(!s.snapshot().report().contains("backoff_events"));
+        s.backoff_events.fetch_add(7, Ordering::Relaxed);
+        s.park_ns.fetch_add(1_500_000, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!((snap.backoff_events, snap.park_ns), (7, 1_500_000));
+        let r = snap.report();
+        assert!(r.contains("backoff_events=7"), "{r}");
+        assert!(r.contains("park="), "{r}");
     }
 
     #[test]

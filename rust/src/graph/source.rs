@@ -702,10 +702,15 @@ mod tests {
             let mut slot = FetchSlot::new();
             slot.reqs = reqs.clone();
             src.submit_batch(&mut slot).unwrap();
+            // backoff ladder instead of a bare yield spin: the wakeup
+            // condition is the I/O pool completing the batch, which can
+            // be milliseconds out — parking releases the core to the
+            // pool threads. The deadline bounds the loop either way.
             let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            let mut backoff = crate::util::Backoff::new();
             while !src.poll_batch(&mut slot) {
                 assert!(std::time::Instant::now() < deadline, "slot never became ready");
-                std::thread::yield_now();
+                backoff.snooze();
             }
             src.finish_batch(&mut slot).unwrap();
             assert!(!slot.in_flight());

@@ -89,9 +89,76 @@ pub fn deltas_len(sorted: &[VertexId]) -> usize {
     len
 }
 
+/// Continuation-flag bit of every byte lane in a little-endian u64 load.
+const CONT_MASK: u64 = 0x8080_8080_8080_8080;
+
 /// Decode `count` delta+varint values starting at `*pos`, appending the
 /// reconstructed (absolute) values to `out` and advancing `*pos`.
+///
+/// **Word-level fast path.** Real sorted neighbor lists are dominated by
+/// one-byte deltas (gaps < 128 — the property the v2 format's ~3x
+/// compression rests on), so the scalar decoder's per-byte
+/// load/test/branch is almost all overhead. This decoder loads 8 bytes
+/// at a time and uses the continuation-bit mask to find the leading run
+/// of one-byte values: `conts = w & 0x8080…80`; if byte `j` is the
+/// first with its continuation flag set, `conts.trailing_zeros()/8 == j`
+/// and bytes `0..j` are each a complete value. Those `j` (up to 8)
+/// deltas decode branch-free — one shift+mask+add each, no per-byte
+/// continuation test — and prefix-sum into the running `prev`
+/// (`prev` starts at 0 and the first delta IS the absolute first value,
+/// so the unconditional `wrapping_add` is bit-identical to the scalar
+/// initialisation). Multi-byte deltas and the final <8 bytes of the
+/// buffer fall back to the scalar [`decode_u32`] loop, so the two paths
+/// produce byte-identical output and cursor positions on every stream —
+/// the differential property the test suite pins.
+///
+/// The 8-byte load may peek past this stream's logical end into
+/// whatever follows it in the record slice (the v2 layout concatenates
+/// the in- and out-streams back to back); only `count` values' bytes
+/// are ever *consumed*, so the cursor contract is unchanged.
 pub fn decode_deltas(bytes: &[u8], count: usize, pos: &mut usize, out: &mut Vec<VertexId>) {
+    out.reserve(count);
+    let mut prev: u32 = 0;
+    let mut i = 0usize;
+    let mut p = *pos;
+    while i < count && p + 8 <= bytes.len() {
+        let w = u64::from_le_bytes(bytes[p..p + 8].try_into().unwrap());
+        let conts = w & CONT_MASK;
+        let run = if conts == 0 { 8 } else { (conts.trailing_zeros() / 8) as usize };
+        if run == 0 {
+            // a multi-byte delta leads the window: scalar-decode one
+            // value, then re-enter the fast path
+            let d = decode_u32(bytes, &mut p);
+            prev = if i == 0 { d } else { prev.wrapping_add(d) };
+            out.push(prev);
+            i += 1;
+            continue;
+        }
+        let take = run.min(count - i);
+        for b in 0..take {
+            // continuation flag is clear for these lanes, so the low 7
+            // bits are the whole delta
+            let d = ((w >> (8 * b)) & 0x7F) as u32;
+            prev = prev.wrapping_add(d);
+            out.push(prev);
+        }
+        p += take;
+        i += take;
+    }
+    while i < count {
+        let d = decode_u32(bytes, &mut p);
+        prev = if i == 0 { d } else { prev.wrapping_add(d) };
+        out.push(prev);
+        i += 1;
+    }
+    *pos = p;
+}
+
+/// The byte-at-a-time reference decoder [`decode_deltas`] replaced:
+/// kept public as the differential-test oracle and the `fig_decode`
+/// baseline. Semantics are identical by construction — the fast path's
+/// tests assert bit-identical output and cursor on adversarial streams.
+pub fn decode_deltas_scalar(bytes: &[u8], count: usize, pos: &mut usize, out: &mut Vec<VertexId>) {
     out.reserve(count);
     let mut prev: u32 = 0;
     for i in 0..count {
@@ -182,6 +249,104 @@ mod tests {
         let mut buf = Vec::new();
         encode_deltas(&list, &mut buf);
         assert_eq!(buf.len(), encoded_len(1000) + (list.len() - 1));
+    }
+
+    /// Assert the word-level and scalar decoders produce bit-identical
+    /// output and land the cursor on the same byte.
+    fn differential(list: &[u32]) {
+        let mut buf = Vec::new();
+        encode_deltas(list, &mut buf);
+        let (mut p_word, mut p_scalar) = (0usize, 0usize);
+        let (mut word, mut scalar) = (Vec::new(), Vec::new());
+        decode_deltas(&buf, list.len(), &mut p_word, &mut word);
+        decode_deltas_scalar(&buf, list.len(), &mut p_scalar, &mut scalar);
+        assert_eq!(word, scalar, "decoded values diverge for {list:?}");
+        assert_eq!(word, list, "round-trip broken for {list:?}");
+        assert_eq!(p_word, p_scalar, "cursor diverges for {list:?}");
+        assert_eq!(p_word, buf.len());
+    }
+
+    #[test]
+    fn word_decoder_matches_scalar_on_all_delta_widths() {
+        // every 1–5 byte delta width, alone and surrounded by one-byte
+        // runs of every length 0..=9, so multi-byte varints land at every
+        // offset inside (and straddling) the 8-byte windows
+        let widths: [u32; 5] = [1, 0x80, 0x4000, 0x20_0000, 0x1000_0000];
+        for &big in &widths {
+            for lead in 0..=9usize {
+                for trail in 0..=9usize {
+                    let mut list: Vec<u32> = Vec::new();
+                    let mut v = 3u32;
+                    for _ in 0..lead {
+                        list.push(v);
+                        v += 1; // one-byte deltas
+                    }
+                    v = v.saturating_add(big);
+                    list.push(v);
+                    for _ in 0..trail {
+                        v += 1;
+                        list.push(v);
+                    }
+                    differential(&list);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn word_decoder_matches_scalar_on_max_value_deltas() {
+        // maximal 5-byte deltas, including wrap-adjacent sums
+        differential(&[u32::MAX]);
+        differential(&[0, u32::MAX]);
+        differential(&[1, 2, 3, u32::MAX - 1, u32::MAX]);
+        differential(&[u32::MAX - 7, u32::MAX - 6, u32::MAX]);
+    }
+
+    #[test]
+    fn word_decoder_matches_scalar_randomized() {
+        // adversarial mixed-magnitude streams: each element jumps by a
+        // random gap whose byte width is itself random
+        let mut rng = crate::util::XorShift::new(0xD0DE);
+        for _ in 0..300 {
+            let len = (rng.next_u64() % 48) as usize;
+            let mut v: u32 = (rng.next_u64() % 128) as u32;
+            let mut list = Vec::with_capacity(len);
+            for _ in 0..len {
+                list.push(v);
+                let width = rng.next_u64() % 5;
+                let gap = match width {
+                    0 => rng.next_u64() % 0x80,
+                    1 => 0x80 + rng.next_u64() % 0x3F80,
+                    2 => 0x4000 + rng.next_u64() % 0x1C_0000,
+                    3 => 0x20_0000 + rng.next_u64() % 0xDE0_0000,
+                    _ => 0x1000_0000 + rng.next_u64() % 0x1000_0000,
+                } as u32;
+                v = v.saturating_add(gap.max(1));
+            }
+            list.dedup();
+            differential(&list);
+        }
+    }
+
+    #[test]
+    fn word_decoder_never_consumes_past_its_stream() {
+        // long one-byte-delta stream followed by a second stream: the
+        // 8-byte loads peek across the boundary but must not consume it
+        let first: Vec<u32> = (100..165).collect(); // 65 values, 1-byte deltas
+        let second = vec![7u32, 1_000_000];
+        let mut buf = Vec::new();
+        encode_deltas(&first, &mut buf);
+        let boundary = buf.len();
+        encode_deltas(&second, &mut buf);
+        let mut pos = 0;
+        let mut out = Vec::new();
+        decode_deltas(&buf, first.len(), &mut pos, &mut out);
+        assert_eq!(out, first);
+        assert_eq!(pos, boundary, "fast path consumed peeked bytes");
+        let mut out2 = Vec::new();
+        decode_deltas(&buf, second.len(), &mut pos, &mut out2);
+        assert_eq!(out2, second);
+        assert_eq!(pos, buf.len());
     }
 
     #[test]

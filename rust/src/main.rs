@@ -49,7 +49,7 @@ USAGE:
                     [--cache-mb N] [--io-threads N] [--io-delay-us N]
                     [--workers N] [--mode push|pull|auto] [--pull-density F]
                     [--fetch-window N] [--config FILE]
-                    [--trace off|table|json]
+                    [--trace off|table|json] [--pin]
   graphyti verify   --graph PATH [--iters N]
   graphyti serve    [--port P] [--cache-mb N] [--budget-mb N]
                     [--exec-threads N] [--io-threads N] [--io-delay-us N]
@@ -165,6 +165,7 @@ fn build_config(args: &Args) -> graphyti::Result<RunConfig> {
         "pull-density",
         "fetch-window",
         "trace",
+        "pin",
     ] {
         if let Some(v) = args.get(key) {
             cfg.set(&key.replace('-', "_"), v)?;

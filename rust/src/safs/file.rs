@@ -916,11 +916,16 @@ mod tests {
         ];
         let mut pending = f.submit_ranges(&ranges, None).unwrap();
         assert!(pending.outstanding() > 0, "cold batch must go to the pool");
-        // drive to completion without blocking
+        // drive to completion without blocking the caller thread; the
+        // backoff ladder parks between polls instead of burning a core
+        // with bare yields while the I/O pool works. Deadline-bounded,
+        // and poll_ranges is safe to repeat, so parking cannot miss a
+        // wakeup.
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let mut backoff = crate::util::Backoff::new();
         while !f.poll_ranges(&mut pending, None) {
             assert!(std::time::Instant::now() < deadline, "batch never completed");
-            std::thread::yield_now();
+            backoff.snooze();
         }
         let mut scratch = RangeScratch::new();
         let mut out = Vec::new();

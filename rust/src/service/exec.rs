@@ -712,6 +712,8 @@ impl GraphService {
             agg.fetch_allocs += st.engine.fetch_allocs;
             agg.checkpoints += st.engine.checkpoints;
             agg.checkpoint_bytes += st.engine.checkpoint_bytes;
+            agg.park_ns += st.engine.park_ns;
+            agg.backoff_events += st.engine.backoff_events;
         }
         m.counter("engine_p2p_msgs", agg.p2p_msgs);
         m.counter("engine_multicast_msgs", agg.multicast_msgs);
@@ -730,6 +732,8 @@ impl GraphService {
         m.counter("engine_fetch_allocs", agg.fetch_allocs);
         m.counter("engine_checkpoints", agg.checkpoints);
         m.counter("engine_checkpoint_bytes", agg.checkpoint_bytes);
+        m.counter("engine_park_ns", agg.park_ns);
+        m.counter("engine_backoff_events", agg.backoff_events);
         m.gauge("engine_overlap_ratio", agg.overlap_ratio());
         for st in &jobs {
             let labels = format!("{{job=\"{}\",alg=\"{}\"}}", st.id, st.alg);

@@ -1,0 +1,146 @@
+//! Exponential wait backoff for spin loops: spin → yield → bounded park.
+//!
+//! Every wait loop in the library used to be a bare
+//! `std::thread::yield_now()` spin — cheap when the wakeup is
+//! microseconds away, but a core-burning busy loop when it is not, and
+//! a scheduler-thrash machine on oversubscribed boxes. This helper
+//! implements the classic three-stage ladder (the same shape HVM's
+//! reducer and crossbeam's `Backoff` use):
+//!
+//! 1. **Spin** — a handful of `spin_loop` hints, doubling each step.
+//!    Free if the condition flips within a cache-miss or two.
+//! 2. **Yield** — `yield_now`, giving the holder a scheduling slot
+//!    without leaving the run queue.
+//! 3. **Park** — bounded `thread::sleep`, doubling from
+//!    [`PARK_BASE_US`] to [`PARK_CAP_US`] — the same bounded-backoff
+//!    constants shape as the I/O pool's retry ladder
+//!    (`safs/io.rs`), so a stuck waiter costs microwatts, not a core.
+//!
+//! The caller owns the counters: [`Backoff::snooze`] reports whether the
+//! step escalated past pure spinning (a **backoff event**) and how long
+//! it actually parked, so the engine can fold `backoff_events` /
+//! `park_ns` into [`crate::engine::stats::EngineStats`].
+
+use std::time::{Duration, Instant};
+
+/// Steps spent in the spin stage (2^step `spin_loop` hints each).
+pub const SPIN_LIMIT: u32 = 6;
+/// Steps (inclusive of the spin stage) before the ladder starts
+/// parking; steps in `SPIN_LIMIT..YIELD_LIMIT` are `yield_now` calls.
+pub const YIELD_LIMIT: u32 = 10;
+/// First park duration; doubles per step past [`YIELD_LIMIT`].
+pub const PARK_BASE_US: u64 = 50;
+/// Park ceiling — a waiter never sleeps longer than this per step.
+pub const PARK_CAP_US: u64 = 5_000;
+
+/// What one [`Backoff::snooze`] step did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Snooze {
+    /// The step escalated past pure spinning (yielded or parked) — the
+    /// thing `backoff_events` counts.
+    pub escalated: bool,
+    /// Wall time spent parked (zero for spin and yield steps).
+    pub parked: Duration,
+}
+
+/// One wait loop's backoff state. Create per wait site, [`reset`] after
+/// every successful acquisition so the next wait starts cheap.
+///
+/// [`reset`]: Backoff::reset
+#[derive(Debug, Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    /// Fresh ladder at the spin stage.
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Return to the spin stage (call after the awaited condition held).
+    #[inline]
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// True when the next [`snooze`](Self::snooze) would park (useful
+    /// for loops that want to re-check cheap conditions before paying a
+    /// sleep).
+    #[inline]
+    pub fn is_parking(&self) -> bool {
+        self.step >= YIELD_LIMIT
+    }
+
+    /// Wait one ladder step and escalate. Returns what the step did so
+    /// the caller can count events and parked time.
+    pub fn snooze(&mut self) -> Snooze {
+        let step = self.step;
+        self.step = self.step.saturating_add(1);
+        if step < SPIN_LIMIT {
+            for _ in 0..(1u32 << step) {
+                std::hint::spin_loop();
+            }
+            Snooze { escalated: false, parked: Duration::ZERO }
+        } else if step < YIELD_LIMIT {
+            std::thread::yield_now();
+            Snooze { escalated: true, parked: Duration::ZERO }
+        } else {
+            let us = (PARK_BASE_US << (step - YIELD_LIMIT).min(16)).min(PARK_CAP_US);
+            let t = Instant::now();
+            std::thread::sleep(Duration::from_micros(us));
+            Snooze { escalated: true, parked: t.elapsed() }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_escalates_spin_yield_park() {
+        let mut b = Backoff::new();
+        for _ in 0..SPIN_LIMIT {
+            let s = b.snooze();
+            assert!(!s.escalated, "spin steps are not backoff events");
+            assert_eq!(s.parked, Duration::ZERO);
+        }
+        assert!(!b.is_parking());
+        for _ in SPIN_LIMIT..YIELD_LIMIT {
+            let s = b.snooze();
+            assert!(s.escalated, "yield steps count as backoff events");
+            assert_eq!(s.parked, Duration::ZERO, "yield never parks");
+        }
+        assert!(b.is_parking());
+        let s = b.snooze();
+        assert!(s.escalated);
+        assert!(s.parked >= Duration::from_micros(PARK_BASE_US), "park must actually sleep");
+    }
+
+    #[test]
+    fn park_duration_is_capped() {
+        let mut b = Backoff::new();
+        // drive the step counter far past the cap point
+        for _ in 0..64 {
+            b.step = b.step.saturating_add(1);
+        }
+        let t = Instant::now();
+        let s = b.snooze();
+        assert!(s.escalated);
+        // capped at PARK_CAP_US (plus scheduler slop): well under 10x cap
+        assert!(t.elapsed() < Duration::from_micros(PARK_CAP_US * 10));
+    }
+
+    #[test]
+    fn reset_returns_to_spin() {
+        let mut b = Backoff::new();
+        for _ in 0..YIELD_LIMIT + 2 {
+            b.snooze();
+        }
+        assert!(b.is_parking());
+        b.reset();
+        assert!(!b.is_parking());
+        assert!(!b.snooze().escalated, "post-reset steps spin again");
+    }
+}

@@ -6,22 +6,27 @@
 //! shared vector, a median-of-k bench harness and a tiny property-test
 //! driver.
 
+pub mod affinity;
 pub mod atomic_f64;
+pub mod backoff;
 pub mod bench;
 pub mod bitmap;
 pub mod hist;
 pub mod json;
 pub mod metrics;
+pub mod prefetch;
 pub mod prng;
 pub mod prop;
 pub mod shared_vec;
 
 pub use atomic_f64::{atomic_f64_vec, AtomicF64};
+pub use backoff::Backoff;
 pub use bench::{bench, BenchResult};
 pub use bitmap::AtomicBitmap;
 pub use hist::{HistSummary, Histogram};
 pub use json::Json;
 pub use metrics::MetricsRegistry;
+pub use prefetch::prefetch_read;
 pub use prng::XorShift;
 pub use shared_vec::SharedVec;
 

@@ -1,0 +1,51 @@
+//! Software prefetch hints for pointer-chasing hot loops.
+//!
+//! The combiner delivery sweep and the vertex-dispatch loop both walk
+//! data the hardware prefetcher cannot predict: which message slab slot
+//! or decoded edge list is touched next depends on bitmap contents
+//! computed moments earlier. A `prefetch` hint issued one iteration
+//! ahead turns the dependent-load cache miss into overlapped latency.
+//!
+//! This is a *hint* wrapper: on x86_64 it lowers to `prefetcht0`, on
+//! aarch64 to `prfm pldl1keep`, and on anything else to a no-op — never
+//! a fault, never a behavior change. Prefetching an invalid address is
+//! architecturally harmless, but callers here only ever pass references,
+//! so the address is always live.
+
+/// Hint the CPU to pull the cache line holding `r` toward L1.
+///
+/// Safe on every target: architectures without a stable prefetch
+/// intrinsic compile this to nothing.
+#[inline(always)]
+pub fn prefetch_read<T: ?Sized>(r: &T) {
+    let p = r as *const T as *const u8;
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe {
+        core::arch::asm!("prfm pldl1keep, [{0}]", in(reg) p, options(nostack, readonly));
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_is_behavior_free() {
+        // a hint has no observable effect; this pins the API shape and
+        // exercises the intrinsic path on the build target
+        let v = vec![7u64; 1024];
+        for x in &v {
+            prefetch_read(x);
+        }
+        prefetch_read(&v[..]);
+        assert_eq!(v.iter().sum::<u64>(), 7 * 1024);
+    }
+}

@@ -1,0 +1,224 @@
+//! Differential tests for the word-level varint decode fast path.
+//!
+//! The fast path (`graph::varint::decode_deltas`) must be
+//! bit-identical — output values AND cursor position — to the
+//! byte-at-a-time reference (`decode_deltas_scalar`) on every stream:
+//! round-trips of encoded lists, adversarial width mixes covering all
+//! 1–5 byte varint lengths, runs straddling the 8-byte window boundary,
+//! maximum-value deltas, and whole converted v2 images decoded through
+//! `VertexEdges::decode_into`.
+
+use graphyti::graph::builder::{convert_image, GraphBuilder};
+use graphyti::graph::csr::Csr;
+use graphyti::graph::format::{EdgeRequest, GraphIndex, VertexEdges, VERSION_V1, VERSION_V2};
+use graphyti::graph::gen;
+use graphyti::graph::varint::{
+    decode_deltas, decode_deltas_scalar, deltas_len, encode_deltas, encode_u32,
+};
+use graphyti::util::XorShift;
+use graphyti::VertexId;
+
+/// Assert scalar and word decoders agree (values + cursor) on a raw
+/// delta stream of `count` values, then return the decoded list.
+fn differential(bytes: &[u8], count: usize) -> Vec<VertexId> {
+    let (mut ps, mut pw) = (0usize, 0usize);
+    let (mut outs, mut outw) = (Vec::new(), Vec::new());
+    decode_deltas_scalar(bytes, count, &mut ps, &mut outs);
+    decode_deltas(bytes, count, &mut pw, &mut outw);
+    assert_eq!(outs, outw, "decoded values diverged");
+    assert_eq!(ps, pw, "cursor positions diverged");
+    outw
+}
+
+/// Encode a sorted list and assert the word decoder round-trips it.
+fn roundtrip(sorted: &[VertexId]) {
+    let mut buf = Vec::new();
+    encode_deltas(sorted, &mut buf);
+    assert_eq!(buf.len(), deltas_len(sorted));
+    let got = differential(&buf, sorted.len());
+    assert_eq!(got, sorted, "round-trip mismatch");
+}
+
+#[test]
+fn roundtrip_all_varint_widths() {
+    // first elements (absolute values) at every encoded width boundary
+    let firsts = [
+        0u32,
+        1,
+        0x7F,
+        0x80,
+        0x3FFF,
+        0x4000,
+        0x1F_FFFF,
+        0x20_0000,
+        0xFFF_FFFF,
+        0x1000_0000,
+        u32::MAX - 64,
+    ];
+    for first in firsts {
+        // deltas at every width, in every order relative to the window
+        for gap in [1u32, 0x7F, 0x80, 0x3FFF, 0x4000, 0x1F_FFFF, 0x20_0000, 0xFFF_FFFF] {
+            let mut v = first;
+            let mut list = vec![v];
+            for _ in 0..10 {
+                let Some(next) = v.checked_add(gap) else { break };
+                v = next;
+                list.push(v);
+            }
+            roundtrip(&list);
+        }
+    }
+}
+
+#[test]
+fn window_boundary_straddles() {
+    // lead one-byte values push the first multi-byte delta through every
+    // position of the 8-byte window, including straddling its edge
+    for width_gap in [0x80u32, 0x4000, 0x20_0000, 0x1000_0000] {
+        for lead in 0..=9usize {
+            for trail in 0..=9usize {
+                let mut v = 1u32;
+                let mut list = vec![v];
+                for _ in 0..lead {
+                    v += 1;
+                    list.push(v);
+                }
+                v = v.saturating_add(width_gap);
+                list.push(v);
+                for _ in 0..trail {
+                    v += 1;
+                    list.push(v);
+                }
+                roundtrip(&list);
+            }
+        }
+    }
+}
+
+#[test]
+fn max_value_deltas() {
+    roundtrip(&[u32::MAX]);
+    roundtrip(&[0, u32::MAX]);
+    roundtrip(&[u32::MAX - 1, u32::MAX]);
+    roundtrip(&[0]);
+    roundtrip(&[]);
+    // largest possible gap after a one-byte lead
+    roundtrip(&[1, 2, 3, u32::MAX - 3, u32::MAX - 2, u32::MAX - 1, u32::MAX]);
+}
+
+#[test]
+fn randomized_streams_match_scalar() {
+    let mut rng = XorShift::new(0xFA57_DECD);
+    for trial in 0..500 {
+        let len = (rng.next_below(40) + 1) as usize;
+        let mut v = (rng.next_u64() & 0xFFFF) as u32;
+        let mut list = Vec::with_capacity(len);
+        for _ in 0..len {
+            list.push(v);
+            // mixed gap widths, biased toward one byte like real lists
+            let gap = match rng.next_below(10) {
+                0 => rng.next_below(1 << 28) as u32,
+                1 | 2 => rng.next_below(1 << 14) as u32,
+                _ => rng.next_below(127) as u32,
+            };
+            v = v.saturating_add(gap.max(1));
+        }
+        list.dedup();
+        let mut buf = Vec::new();
+        encode_deltas(&list, &mut buf);
+        let got = differential(&buf, list.len());
+        assert_eq!(got, list, "trial {trial}");
+    }
+}
+
+#[test]
+fn concatenated_streams_do_not_bleed() {
+    // the 8-byte window may PEEK past a stream's end into the next one
+    // (the v2 record layout concatenates [in][out]) but must never
+    // CONSUME across the boundary
+    let a: Vec<VertexId> = (1..=65).collect(); // 65 one-byte deltas
+    let b: Vec<VertexId> = vec![7, 0x5000, 0x5001];
+    let mut buf = Vec::new();
+    encode_deltas(&a, &mut buf);
+    let split = buf.len();
+    encode_deltas(&b, &mut buf);
+    let mut pos = 0usize;
+    let mut out = Vec::new();
+    decode_deltas(&buf, a.len(), &mut pos, &mut out);
+    assert_eq!(out, a);
+    assert_eq!(pos, split, "cursor must stop exactly at the stream boundary");
+    out.clear();
+    decode_deltas(&buf, b.len(), &mut pos, &mut out);
+    assert_eq!(out, b);
+    assert_eq!(pos, buf.len());
+}
+
+#[test]
+fn raw_u32_streams_via_encode_u32() {
+    // decode_deltas over a stream built value-by-value with encode_u32
+    // (what encode_deltas does internally, but exercised independently)
+    let deltas = [5u32, 0x7F, 0x80, 1, 0x3FFF, 0x4000, 2, 3, 4, 5, 6, 7, 8, 9, 0x1F_FFFF, 1];
+    let mut buf = Vec::new();
+    for d in deltas {
+        encode_u32(d, &mut buf);
+    }
+    let got = differential(&buf, deltas.len());
+    let mut prev = 0u32;
+    let want: Vec<u32> = deltas
+        .iter()
+        .map(|&d| {
+            prev = prev.wrapping_add(d);
+            prev
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn decode_into_identical_on_converted_v2_image() {
+    let n = 600usize;
+    let edges = gen::rmat(10, 8000, 99);
+    let edges: Vec<_> =
+        edges.into_iter().filter(|&(u, v)| (u as usize) < n && (v as usize) < n).collect();
+    let csr = Csr::from_edges(n, &edges, true);
+
+    let pid = std::process::id();
+    let v1 = std::env::temp_dir().join(format!("graphyti-decfp-{pid}-v1"));
+    let v2 = std::env::temp_dir().join(format!("graphyti-decfp-{pid}-v2"));
+    let mut b = GraphBuilder::new(n, true);
+    b.add_edges(&edges).format_version(VERSION_V1);
+    b.build_files(&v1).unwrap();
+    convert_image(&v1, &v2, VERSION_V2).unwrap();
+
+    let idx = GraphIndex::decode(&std::fs::read(v2.with_extension("gy-idx")).unwrap()).unwrap();
+    assert_eq!(idx.header().version, VERSION_V2);
+    let adj = std::fs::read(v2.with_extension("gy-adj")).unwrap();
+
+    let mut scratch = VertexEdges::default();
+    for v in 0..n as VertexId {
+        let (off, len) = idx.byte_range(v, EdgeRequest::Both);
+        let rec = &adj[off as usize..off as usize + len];
+        let (in_deg, out_deg) = (idx.in_deg(v), idx.out_deg(v));
+
+        // production path: decode_into (word-level via decode_deltas)
+        scratch.decode_into(rec, in_deg, out_deg, EdgeRequest::Both, idx.encoding());
+
+        // reference path: scalar decoder applied to the same record
+        let mut pos = 0usize;
+        let (mut inn, mut out) = (Vec::new(), Vec::new());
+        decode_deltas_scalar(rec, in_deg as usize, &mut pos, &mut inn);
+        decode_deltas_scalar(rec, out_deg as usize, &mut pos, &mut out);
+        assert_eq!(pos, rec.len(), "v={v}: record not fully consumed");
+
+        assert_eq!(scratch.in_neighbors, inn, "v={v} in");
+        assert_eq!(scratch.out_neighbors, out, "v={v} out");
+        // and both must match the in-memory oracle
+        assert_eq!(scratch.in_neighbors, csr.inn(v), "v={v} in vs oracle");
+        assert_eq!(scratch.out_neighbors, csr.out(v), "v={v} out vs oracle");
+    }
+
+    for base in [&v1, &v2] {
+        let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+        let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+    }
+}

@@ -141,6 +141,39 @@ fn sem_pull_and_auto_match_oracle_under_cache_pressure() {
     cleanup(&base);
 }
 
+/// Core pinning is an execution-placement knob, never an answer change:
+/// the oracle matrix must hold bit-for-bit with `pin_workers` on and
+/// off at every worker count, through the full SEM path. (On kernels or
+/// sandboxes that deny `sched_setaffinity` the pin silently degrades to
+/// unpinned — the equality still must hold, which is the point.)
+#[test]
+fn pinning_never_changes_results_at_any_worker_count() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 29);
+    let base = build_image(n, &edges, "pin");
+    let csr = Csr::from_edges(n, &edges, true);
+    let want_pr = oracle::pagerank(&csr, 0.85, 200);
+    let want_bfs = oracle::bfs_levels(&csr, 0);
+    let want_wcc = oracle::wcc(&csr);
+    for workers in WORKERS {
+        for pin in [false, true] {
+            let c = EngineConfig { pin_workers: pin, ..cfg(RunMode::Auto, workers) };
+            let ctx = format!("workers={workers} pin={pin}");
+
+            let g = SemGraph::open(&base, 64 * 4096, IoConfig::default()).unwrap();
+            let pr = pagerank_push(&g, 0.85, 1e-12, &c);
+            assert!(l1(&pr.rank, &want_pr) < 1e-6, "{ctx}: pagerank L1 {}", l1(&pr.rank, &want_pr));
+
+            let g = SemGraph::open(&base, 64 * 4096, IoConfig::default()).unwrap();
+            assert_eq!(bfs(&g, 0, &c).0, want_bfs, "{ctx}: bfs");
+
+            let g = SemGraph::open(&base, 64 * 4096, IoConfig::default()).unwrap();
+            assert_eq!(wcc(&g, &c).0, want_wcc, "{ctx}: wcc");
+        }
+    }
+    cleanup(&base);
+}
+
 /// The acceptance claim: pull reads strictly fewer bytes than push on a
 /// dense PageRank round.
 ///
