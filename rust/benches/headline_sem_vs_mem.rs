@@ -15,7 +15,14 @@ use graphyti::util::{fmt_bytes, fmt_dur};
 fn open_mem(base: &std::path::PathBuf) -> MemGraph {
     let index =
         GraphIndex::decode(&std::fs::read(base.with_extension("gy-idx")).unwrap()).unwrap();
-    let adj = std::fs::read(base.with_extension("gy-adj")).unwrap();
+    let mut adj = std::fs::read(base.with_extension("gy-adj")).unwrap();
+    if index.header().checksums {
+        // drop the checksum footer so the in-memory baseline holds
+        // exactly the data bytes a plain image would
+        let footer =
+            graphyti::graph::format::ChecksumFooter::from_bytes(&adj).unwrap();
+        adj.truncate(footer.data_len as usize);
+    }
     MemGraph::from_image(RamImage { index, adj })
 }
 

@@ -62,15 +62,22 @@ pub fn rmat_workload_fmt(
     tag: &str,
     version: u32,
 ) -> (PathBuf, RunConfig) {
+    // GRAPHYTI_BENCH_PLAIN=1 builds the image without checksum footers
+    // (the pre-verified-storage layout); CI benches it against the
+    // checksummed default to assert bytes_read parity on clean images.
+    // The marker is part of the cache name so the two variants never
+    // alias each other's cached image.
+    let plain = std::env::var("GRAPHYTI_BENCH_PLAIN").is_ok_and(|v| v == "1");
     let base = std::env::temp_dir().join(format!(
-        "graphyti-bench-{tag}-s{scale}-f{edge_factor}-{}-v{version}",
-        if directed { "d" } else { "u" }
+        "graphyti-bench-{tag}-s{scale}-f{edge_factor}-{}-v{version}{}",
+        if directed { "d" } else { "u" },
+        if plain { "-plain" } else { "" }
     ));
     if !(base.with_extension("gy-idx").exists() && base.with_extension("gy-adj").exists()) {
         let n = 1usize << scale;
         let edges = gen::rmat(scale, n * edge_factor, 42);
         let mut b = GraphBuilder::new(n, directed);
-        b.add_edges(&edges).format_version(version);
+        b.add_edges(&edges).format_version(version).checksums(!plain);
         // build under a pid-suffixed name, then rename into place, so a
         // killed or concurrent run can never leave a half-written image
         // behind the existence check (adj first: idx-present ⇒ adj done)

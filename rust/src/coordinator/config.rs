@@ -86,6 +86,10 @@ pub struct RunConfig {
     /// only, no-op elsewhere). A locality hint — results are identical
     /// either way.
     pub pin: bool,
+    /// Per-run deadline in milliseconds (0 = none). Enforced at round
+    /// boundaries: an expired run fails with a "deadline exceeded"
+    /// message through the normal failure path, never a hard kill.
+    pub timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -110,6 +114,7 @@ impl Default for RunConfig {
             checkpoint_path: None,
             resume: false,
             pin: false,
+            timeout_ms: 0,
         }
     }
 }
@@ -166,6 +171,7 @@ impl RunConfig {
                     other => bail!("pin must be true/false, got '{other}'"),
                 }
             }
+            "timeout_ms" => self.timeout_ms = v.parse().context("timeout_ms")?,
             "trace" => {
                 self.trace = match v {
                     "off" | "false" | "0" => TraceMode::Off,
@@ -214,6 +220,12 @@ impl RunConfig {
         e.checkpoint_path = self.checkpoint_path.clone();
         e.resume = self.resume;
         e.pin_workers = self.pin;
+        if self.timeout_ms > 0 {
+            e.deadline = Some(
+                std::time::Instant::now()
+                    + std::time::Duration::from_millis(self.timeout_ms),
+            );
+        }
         e
     }
 
@@ -302,6 +314,14 @@ mod tests {
         c.set("pin", "off").unwrap();
         assert!(!c.pin);
         assert!(c.set("pin", "sideways").is_err());
+        assert_eq!(c.timeout_ms, 0);
+        assert!(c.engine().deadline.is_none());
+        c.set("timeout_ms", "1500").unwrap();
+        assert_eq!(c.timeout_ms, 1500);
+        let d = c.engine().deadline.expect("deadline set");
+        assert!(d > std::time::Instant::now());
+        assert!(c.set("timeout_ms", "soon").is_err());
+        c.set("timeout_ms", "0").unwrap();
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::bail;
+use anyhow::{bail, ensure, Context};
 
 use crate::algs::bc::{betweenness, BcVariant};
 use crate::algs::bfs::bfs;
@@ -18,7 +18,7 @@ use crate::algs::triangles::{triangles, TriangleOptions};
 use crate::algs::wcc::wcc;
 use crate::coordinator::config::RunConfig;
 use crate::engine::RunReport;
-use crate::graph::format::GraphIndex;
+use crate::graph::format::{ChecksumFooter, GraphIndex, CHECKSUM_PAGE};
 use crate::graph::source::{EdgeSource, MemGraph, SemGraph};
 use crate::VertexId;
 
@@ -45,7 +45,23 @@ pub fn open_graph(
             // load the packed image straight into RAM
             let idx_bytes = std::fs::read(base.with_extension("gy-idx"))?;
             let index = GraphIndex::decode(&idx_bytes)?;
-            let adj = std::fs::read(base.with_extension("gy-adj"))?;
+            let adj_path = base.with_extension("gy-adj");
+            let mut adj = std::fs::read(&adj_path)?;
+            if index.header().checksums {
+                // the whole image is being loaded anyway: verify every
+                // page now, then drop the footer so the RAM image is
+                // byte-identical to one built without checksums
+                let footer = ChecksumFooter::from_bytes(&adj)
+                    .with_context(|| format!("checksum footer of {}", adj_path.display()))?;
+                for p in 0..footer.npages() {
+                    ensure!(
+                        footer.page_ok(p, &adj[p as usize * CHECKSUM_PAGE..]),
+                        "checksum mismatch on page {p} of {}",
+                        adj_path.display()
+                    );
+                }
+                adj.truncate(footer.data_len as usize);
+            }
             Ok(Box::new(MemGraph::from_image(crate::graph::builder::RamImage {
                 index,
                 adj,

@@ -206,6 +206,9 @@ pub fn save(path: &Path, hdr: &CheckpointHeader<'_>, w: &CheckpointWriter) -> cr
     }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("publish {} -> {}", tmp.display(), path.display()))?;
+    // a rename survives a crash only once the parent directory's entry
+    // is on stable storage too
+    crate::util::fsync_parent_dir(path);
     Ok(buf.len() as u64)
 }
 

@@ -179,6 +179,13 @@ pub struct EngineConfig {
     /// scheduler. A locality hint only — results are bit-identical
     /// either way (the determinism tests run both).
     pub pin_workers: bool,
+    /// Per-run deadline, enforced at round boundaries (worker 0's
+    /// bookkeeping phase — the same place cancellation is checked, so
+    /// in-flight vertex work always finishes and state stays
+    /// consistent). Past the deadline the run stops and the report
+    /// carries a `deadline exceeded` failure, which service mode turns
+    /// into `JobState::Failed` with a WAL record. `None` = no deadline.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for EngineConfig {
@@ -199,6 +206,7 @@ impl Default for EngineConfig {
             checkpoint_path: None,
             resume: false,
             pin_workers: false,
+            deadline: None,
         }
     }
 }
@@ -1259,6 +1267,20 @@ impl Engine {
                         io_now,
                         (0..workers).map(|w| shared.phase_ns.get(w)),
                     );
+                }
+                // per-run deadline: checked at the same consistent cut as
+                // cancellation. First-writer-wins into the shared failure
+                // slot, so it rides the existing failure → report →
+                // Failed-job path (never the Cancelled one).
+                if let Some(deadline) = cfg.deadline {
+                    if std::time::Instant::now() >= deadline {
+                        let mut slot = shared.failure.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(format!(
+                                "deadline exceeded at round {round}"
+                            ));
+                        }
+                    }
                 }
                 let cancelled =
                     cfg.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed));

@@ -23,7 +23,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, ensure};
 
 use crate::graph::format::{
-    EdgeRequest, GraphHeader, GraphIndex, VertexEdges, VERSION_V1, VERSION_V2,
+    ChecksumFooter, EdgeRequest, GraphHeader, GraphIndex, PageCrcAccumulator, VertexEdges,
+    VERSION_V1, VERSION_V2,
 };
 use crate::graph::varint;
 use crate::VertexId;
@@ -43,6 +44,7 @@ pub struct GraphBuilder {
     edges: Vec<(VertexId, VertexId)>,
     keep_self_loops: bool,
     format_version: u32,
+    checksums: bool,
 }
 
 impl GraphBuilder {
@@ -56,6 +58,7 @@ impl GraphBuilder {
             edges: Vec::new(),
             keep_self_loops: false,
             format_version: VERSION_V1,
+            checksums: true,
         }
     }
 
@@ -89,6 +92,16 @@ impl GraphBuilder {
             "unknown format version {version}"
         );
         self.format_version = version;
+        self
+    }
+
+    /// Write per-page crc32c checksum footers on both image files
+    /// (default: on — new images are born verified; `--no-checksums`
+    /// on the CLI routes here). RAM images never carry footers; the
+    /// flag only controls what [`write_image`] appends and sets the
+    /// header bit readers use to look for the footer.
+    pub fn checksums(&mut self, on: bool) -> &mut Self {
+        self.checksums = on;
         self
     }
 
@@ -168,6 +181,7 @@ impl GraphBuilder {
             num_edges: m,
             directed: self.directed,
             version: self.format_version,
+            checksums: self.checksums,
         };
         let index = assemble_index(header, offsets, in_degs, out_degs, in_bytes, out_bytes);
         RamImage { index, adj }
@@ -225,7 +239,10 @@ fn assemble_index(
     }
 }
 
-/// Write a RAM image to `<base>.gy-idx` / `<base>.gy-adj`.
+/// Write a RAM image to `<base>.gy-idx` / `<base>.gy-adj`. When the
+/// header's checksum flag is set, each file gets a per-page crc32c
+/// footer appended after its data bytes (FORMAT.md §5); the data
+/// layout itself is byte-identical either way.
 pub fn write_image(img: &RamImage, base: &Path) -> crate::Result<(PathBuf, PathBuf)> {
     let idx_path = base.with_extension("gy-idx");
     let adj_path = base.with_extension("gy-adj");
@@ -234,11 +251,19 @@ pub fn write_image(img: &RamImage, base: &Path) -> crate::Result<(PathBuf, PathB
             std::fs::create_dir_all(dir)?;
         }
     }
+    let checksums = img.index.header().checksums;
     let mut f = std::fs::File::create(&idx_path)?;
-    f.write_all(&img.index.encode())?;
+    let idx_bytes = img.index.encode();
+    f.write_all(&idx_bytes)?;
+    if checksums {
+        f.write_all(&ChecksumFooter::compute(&idx_bytes).encode())?;
+    }
     f.sync_all()?;
     let mut f = std::fs::File::create(&adj_path)?;
     f.write_all(&img.adj)?;
+    if checksums {
+        f.write_all(&ChecksumFooter::compute(&img.adj).encode())?;
+    }
     f.sync_all()?;
     Ok((idx_path, adj_path))
 }
@@ -283,19 +308,37 @@ pub fn convert_ram(img: &RamImage, target_version: u32) -> crate::Result<RamImag
 }
 
 /// Read the image at `<src_base>.gy-idx/.gy-adj`, re-pack it into
+/// `target_version`, and write it to `<dst_base>.gy-idx/.gy-adj` with
+/// checksum footers (the default for newly written images). See
+/// [`convert_image_opts`] to opt out.
+pub fn convert_image(
+    src_base: &Path,
+    dst_base: &Path,
+    target_version: u32,
+) -> crate::Result<(PathBuf, PathBuf)> {
+    convert_image_opts(src_base, dst_base, target_version, true)
+}
+
+/// Read the image at `<src_base>.gy-idx/.gy-adj`, re-pack it into
 /// `target_version`, and write it to `<dst_base>.gy-idx/.gy-adj`.
 /// Returns the two written paths. The source image may be either
-/// version.
+/// version, with or without checksum footers; `checksums` selects
+/// whether the destination gets them (its data bytes are identical
+/// either way, so checksummed ↔ plain conversion round-trips the data
+/// byte-identically).
 ///
 /// Conversion **streams** the adjacency: records are read, re-encoded
 /// and written one vertex at a time through buffered I/O, so edge
 /// memory stays O(max record), never O(m) — images far larger than RAM
 /// convert fine, in keeping with the SEM contract. Only the O(n) index
-/// columns are held in memory (exactly what opening the image costs).
-pub fn convert_image(
+/// columns are held in memory (exactly what opening the image costs);
+/// destination page crcs accumulate in a streaming window, never a
+/// second copy of the adjacency.
+pub fn convert_image_opts(
     src_base: &Path,
     dst_base: &Path,
     target_version: u32,
+    checksums: bool,
 ) -> crate::Result<(PathBuf, PathBuf)> {
     use std::io::{BufReader, BufWriter, Read};
 
@@ -350,6 +393,7 @@ pub fn convert_image(
     let mut ve = VertexEdges::default();
     let mut written = 0u64;
     let mut consumed = 0u64;
+    let mut adj_crcs = PageCrcAccumulator::new();
     for v in 0..n as VertexId {
         // records must tile the file (FORMAT.md §3) for sequential reads
         // to line up with the index's offsets
@@ -372,16 +416,28 @@ pub fn convert_image(
             out_bytes.push(ob);
         }
         writer.write_all(&packed)?;
+        if checksums {
+            adj_crcs.update(&packed);
+        }
         written += packed.len() as u64;
     }
     writer.flush()?;
     drop(writer);
+    if checksums {
+        let (data_len, crcs) = adj_crcs.finish();
+        debug_assert_eq!(data_len, written);
+        (&adj_file).write_all(&ChecksumFooter::from_parts(data_len, crcs).encode())?;
+    }
     adj_file.sync_all()?;
 
-    let header = GraphHeader { version: target_version, ..*src.header() };
+    let header = GraphHeader { version: target_version, checksums, ..*src.header() };
     let index = assemble_index(header, offsets, in_degs, out_degs, in_bytes, out_bytes);
     let mut f = std::fs::File::create(&dst_idx)?;
-    f.write_all(&index.encode())?;
+    let idx_bytes = index.encode();
+    f.write_all(&idx_bytes)?;
+    if checksums {
+        f.write_all(&ChecksumFooter::compute(&idx_bytes).encode())?;
+    }
     f.sync_all()?;
     Ok((dst_idx, dst_adj))
 }
@@ -452,9 +508,66 @@ mod tests {
         let idx = GraphIndex::decode(&idx_bytes).unwrap();
         assert_eq!(idx.num_vertices(), 5);
         assert_eq!(idx.num_edges(), 6);
-        assert_eq!(adj_bytes, ram.adj);
+        // files carry checksum footers by default: the data prefix is
+        // the RAM image, the footer verifies every data page
+        assert!(idx.header().checksums);
+        assert_eq!(&adj_bytes[..ram.adj.len()], &ram.adj[..]);
+        let adj_footer = ChecksumFooter::from_bytes(&adj_bytes).unwrap();
+        assert_eq!(adj_footer.data_len as usize, ram.adj.len());
+        assert!(adj_footer.page_ok(0, &ram.adj));
+        let idx_footer = ChecksumFooter::from_bytes(&idx_bytes).unwrap();
+        assert!(idx_footer.page_ok(0, &idx_bytes[..idx_footer.data_len as usize]));
         let _ = std::fs::remove_file(idx_path);
         let _ = std::fs::remove_file(adj_path);
+    }
+
+    #[test]
+    fn no_checksums_opt_out_writes_bare_files() {
+        let mut b = GraphBuilder::new(5, true);
+        b.add_edges(&[(0, 1), (1, 2), (2, 3)]).checksums(false);
+        let ram = b.build_ram();
+        assert!(!ram.index.header().checksums);
+        let base = std::env::temp_dir()
+            .join(format!("graphyti-builder-plain-{}", std::process::id()));
+        let (idx_path, adj_path) = b.build_files(&base).unwrap();
+        let adj_bytes = std::fs::read(&adj_path).unwrap();
+        assert_eq!(adj_bytes, ram.adj, "opt-out must write exactly the data bytes");
+        let idx = GraphIndex::decode(&std::fs::read(&idx_path).unwrap()).unwrap();
+        assert!(!idx.header().checksums);
+        let _ = std::fs::remove_file(idx_path);
+        let _ = std::fs::remove_file(adj_path);
+    }
+
+    #[test]
+    fn convert_checksummed_and_plain_roundtrip_data_identically() {
+        let edges = crate::graph::gen::rmat(7, 900, 21);
+        let mut b = GraphBuilder::new(128, true);
+        b.add_edges(&edges);
+        let src = std::env::temp_dir()
+            .join(format!("graphyti-convert-ck-src-{}", std::process::id()));
+        let plain = std::env::temp_dir()
+            .join(format!("graphyti-convert-ck-plain-{}", std::process::id()));
+        let back = std::env::temp_dir()
+            .join(format!("graphyti-convert-ck-back-{}", std::process::id()));
+        b.build_files(&src).unwrap();
+        let src_adj = std::fs::read(src.with_extension("gy-adj")).unwrap();
+        let src_footer = ChecksumFooter::from_bytes(&src_adj).unwrap();
+        // checksummed -> plain: data bytes survive, footer dropped
+        convert_image_opts(&src, &plain, VERSION_V1, false).unwrap();
+        let plain_adj = std::fs::read(plain.with_extension("gy-adj")).unwrap();
+        assert_eq!(plain_adj, src_adj[..src_footer.data_len as usize]);
+        assert!(ChecksumFooter::from_bytes(&plain_adj).is_err());
+        // plain -> checksummed: whole files byte-identical to the source
+        convert_image_opts(&plain, &back, VERSION_V1, true).unwrap();
+        assert_eq!(std::fs::read(back.with_extension("gy-adj")).unwrap(), src_adj);
+        assert_eq!(
+            std::fs::read(back.with_extension("gy-idx")).unwrap(),
+            std::fs::read(src.with_extension("gy-idx")).unwrap()
+        );
+        for b in [&src, &plain, &back] {
+            let _ = std::fs::remove_file(b.with_extension("gy-idx"));
+            let _ = std::fs::remove_file(b.with_extension("gy-adj"));
+        }
     }
 
     #[test]

@@ -46,6 +46,21 @@ pub const IDX_ENTRY_LEN_V1: usize = 16;
 /// Bytes per v2 index entry (v1 fields + in_bytes u32, out_bytes u32).
 pub const IDX_ENTRY_LEN_V2: usize = 24;
 
+/// Magic bytes opening the checksum-footer trailer (`docs/FORMAT.md` §5).
+pub const FOOTER_MAGIC: &[u8; 8] = b"GYCRC32C";
+/// Trailer length: magic (8) + data_len u64 + npages u32 + table_crc u32.
+pub const FOOTER_TRAILER_LEN: usize = 24;
+/// Checksum granularity: one crc32c per this many data bytes. Matches
+/// the SAFS page size so verify-on-read checks exactly the pages the
+/// cache moves.
+pub const CHECKSUM_PAGE: usize = 4096;
+
+/// Total footer bytes appended to a file of `data_len` data bytes:
+/// one `u32` crc per (possibly partial) 4 KiB page, plus the trailer.
+pub fn footer_len(data_len: u64) -> u64 {
+    data_len.div_ceil(CHECKSUM_PAGE as u64) * 4 + FOOTER_TRAILER_LEN as u64
+}
+
 /// Typed image-format error. Returned (wrapped in [`anyhow::Error`], so
 /// `downcast_ref::<FormatError>()` recovers it) by the header/index
 /// decoders; callers that care which way an image is invalid — notably
@@ -97,6 +112,10 @@ pub struct GraphHeader {
     pub directed: bool,
     /// Format version ([`VERSION_V1`] or [`VERSION_V2`]).
     pub version: u32,
+    /// Both image files carry a per-page crc32c checksum footer
+    /// ([`ChecksumFooter`]). Header flag bit 1; legacy images without
+    /// it keep opening unchanged (no footer is sought or verified).
+    pub checksums: bool,
 }
 
 impl GraphHeader {
@@ -125,7 +144,7 @@ impl GraphHeader {
         let mut out = [0u8; HEADER_LEN];
         out[..8].copy_from_slice(MAGIC);
         out[8..12].copy_from_slice(&self.version.to_le_bytes());
-        let flags: u32 = self.directed as u32;
+        let flags: u32 = self.directed as u32 | (self.checksums as u32) << 1;
         out[12..16].copy_from_slice(&flags.to_le_bytes());
         out[16..24].copy_from_slice(&self.num_vertices.to_le_bytes());
         out[24..32].copy_from_slice(&self.num_edges.to_le_bytes());
@@ -152,8 +171,193 @@ impl GraphHeader {
             num_vertices: u64::from_le_bytes(bytes[16..24].try_into().unwrap()),
             num_edges: u64::from_le_bytes(bytes[24..32].try_into().unwrap()),
             directed: flags & 1 != 0,
+            checksums: flags & 2 != 0,
             version,
         })
+    }
+}
+
+// ---------------------------------------------- checksum footer -----
+
+/// Streaming per-page crc32c accumulator: feed data in arbitrary-sized
+/// chunks, get one crc per 4 KiB page (final page possibly partial).
+/// The streaming image converter uses this to checksum adjacency bytes
+/// it writes vertex-at-a-time and never holds in memory at once.
+#[derive(Debug, Default)]
+pub struct PageCrcAccumulator {
+    crcs: Vec<u32>,
+    cur: u32,
+    filled: usize,
+    len: u64,
+}
+
+impl PageCrcAccumulator {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed the next chunk of data bytes.
+    pub fn update(&mut self, mut bytes: &[u8]) {
+        use crate::util::crc32c::crc32c_update;
+        self.len += bytes.len() as u64;
+        while !bytes.is_empty() {
+            let room = CHECKSUM_PAGE - self.filled;
+            let take = room.min(bytes.len());
+            self.cur = crc32c_update(self.cur, &bytes[..take]);
+            self.filled += take;
+            bytes = &bytes[take..];
+            if self.filled == CHECKSUM_PAGE {
+                self.crcs.push(self.cur);
+                self.cur = 0;
+                self.filled = 0;
+            }
+        }
+    }
+
+    /// Flush the trailing partial page and return `(data_len, crcs)`.
+    pub fn finish(mut self) -> (u64, Vec<u32>) {
+        if self.filled > 0 {
+            self.crcs.push(self.cur);
+        }
+        (self.len, self.crcs)
+    }
+}
+
+/// Per-page crc32c footer of one image file (`docs/FORMAT.md` §5).
+///
+/// On disk the footer is appended after the data bytes:
+/// `[crc32c u32 × npages][magic 8B][data_len u64][npages u32][table_crc u32]`
+/// where `npages = ceil(data_len / 4096)`, each crc covers
+/// `min(4096, data_len − page·4096)` data bytes (no padding), and
+/// `table_crc` is the crc32c of the table bytes themselves, so a torn
+/// or rotted footer is detected rather than trusted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChecksumFooter {
+    /// Data bytes covered (the file's length without the footer).
+    pub data_len: u64,
+    crcs: Vec<u32>,
+}
+
+impl ChecksumFooter {
+    /// Compute a footer over in-memory data.
+    pub fn compute(data: &[u8]) -> Self {
+        let mut acc = PageCrcAccumulator::new();
+        acc.update(data);
+        let (data_len, crcs) = acc.finish();
+        ChecksumFooter { data_len, crcs }
+    }
+
+    /// Assemble from a finished [`PageCrcAccumulator`].
+    pub fn from_parts(data_len: u64, crcs: Vec<u32>) -> Self {
+        debug_assert_eq!(crcs.len() as u64, data_len.div_ceil(CHECKSUM_PAGE as u64));
+        ChecksumFooter { data_len, crcs }
+    }
+
+    /// Number of checksummed pages.
+    pub fn npages(&self) -> u64 {
+        self.crcs.len() as u64
+    }
+
+    /// Stored crc for page `p` (`None` past the end).
+    pub fn page_crc(&self, p: u64) -> Option<u32> {
+        self.crcs.get(p as usize).copied()
+    }
+
+    /// Decompose into `(data_len, per-page crcs)` — the parts
+    /// [`crate::safs::PageChecksums`] installs into a [`crate::safs::SemFile`].
+    pub fn into_parts(self) -> (u64, Vec<u32>) {
+        (self.data_len, self.crcs)
+    }
+
+    /// Verify page `p` against `bytes`, which must start at data offset
+    /// `p * 4096` and hold at least the page's covered length
+    /// (`min(4096, data_len − p·4096)`); surplus bytes are ignored.
+    /// Pages past the end fail verification.
+    pub fn page_ok(&self, p: u64, bytes: &[u8]) -> bool {
+        let Some(want) = self.page_crc(p) else { return false };
+        let covered = (self.data_len - p * CHECKSUM_PAGE as u64).min(CHECKSUM_PAGE as u64);
+        let covered = covered as usize;
+        if bytes.len() < covered {
+            return false;
+        }
+        crate::util::crc32c::crc32c(&bytes[..covered]) == want
+    }
+
+    /// Serialize to the on-disk footer bytes (table + trailer).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.crcs.len() * 4 + FOOTER_TRAILER_LEN);
+        for &c in &self.crcs {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        let table_crc = crate::util::crc32c::crc32c(&out);
+        out.extend_from_slice(FOOTER_MAGIC);
+        out.extend_from_slice(&self.data_len.to_le_bytes());
+        out.extend_from_slice(&(self.crcs.len() as u32).to_le_bytes());
+        out.extend_from_slice(&table_crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate the footer of a whole file held in memory
+    /// (the `.gy-idx` path). Rejects a missing magic, an inconsistent
+    /// page count or file length, and a table whose own crc disagrees.
+    pub fn from_bytes(file: &[u8]) -> crate::Result<Self> {
+        Self::decode_parts(file.len() as u64, |off, buf| {
+            let off = off as usize;
+            ensure!(off + buf.len() <= file.len(), "footer read out of bounds");
+            buf.copy_from_slice(&file[off..off + buf.len()]);
+            Ok(())
+        })
+    }
+
+    /// Parse and validate the footer of an on-disk file via positioned
+    /// reads (the `.gy-adj` path — the data body is never loaded).
+    pub fn read_from(f: &std::fs::File, file_len: u64) -> crate::Result<Self> {
+        use std::os::unix::fs::FileExt;
+        Self::decode_parts(file_len, |off, buf| {
+            f.read_exact_at(buf, off)?;
+            Ok(())
+        })
+    }
+
+    fn decode_parts(
+        file_len: u64,
+        mut read_at: impl FnMut(u64, &mut [u8]) -> crate::Result<()>,
+    ) -> crate::Result<Self> {
+        ensure!(
+            file_len >= FOOTER_TRAILER_LEN as u64,
+            "file too short ({file_len} bytes) for a checksum footer"
+        );
+        let mut trailer = [0u8; FOOTER_TRAILER_LEN];
+        read_at(file_len - FOOTER_TRAILER_LEN as u64, &mut trailer)?;
+        ensure!(
+            &trailer[..8] == FOOTER_MAGIC,
+            "checksum footer missing: trailer magic mismatch \
+             (image header claims checksums but the file has no footer)"
+        );
+        let data_len = u64::from_le_bytes(trailer[8..16].try_into().unwrap());
+        let npages = u32::from_le_bytes(trailer[16..20].try_into().unwrap()) as u64;
+        let table_crc = u32::from_le_bytes(trailer[20..24].try_into().unwrap());
+        ensure!(
+            npages == data_len.div_ceil(CHECKSUM_PAGE as u64),
+            "checksum footer corrupt: {npages} page crcs for {data_len} data bytes"
+        );
+        ensure!(
+            file_len == data_len + footer_len(data_len),
+            "checksum footer corrupt: file is {file_len} bytes, \
+             footer claims {data_len} data bytes"
+        );
+        let mut table = vec![0u8; npages as usize * 4];
+        read_at(data_len, &mut table)?;
+        ensure!(
+            crate::util::crc32c::crc32c(&table) == table_crc,
+            "checksum footer corrupt: crc table fails its own checksum"
+        );
+        let crcs = table
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(ChecksumFooter { data_len, crcs })
     }
 }
 
@@ -500,15 +704,29 @@ mod tests {
     use super::*;
 
     fn header_v1(n: u64, m: u64, directed: bool) -> GraphHeader {
-        GraphHeader { num_vertices: n, num_edges: m, directed, version: VERSION_V1 }
+        GraphHeader {
+            num_vertices: n,
+            num_edges: m,
+            directed,
+            version: VERSION_V1,
+            checksums: false,
+        }
     }
 
     #[test]
     fn header_roundtrip_both_versions() {
         for version in [VERSION_V1, VERSION_V2] {
-            let h = GraphHeader { num_vertices: 42, num_edges: 99, directed: true, version };
-            let enc = h.encode();
-            assert_eq!(GraphHeader::decode(&enc).unwrap(), h);
+            for checksums in [false, true] {
+                let h = GraphHeader {
+                    num_vertices: 42,
+                    num_edges: 99,
+                    directed: true,
+                    version,
+                    checksums,
+                };
+                let enc = h.encode();
+                assert_eq!(GraphHeader::decode(&enc).unwrap(), h);
+            }
         }
         let h2 = header_v1(0, 0, false);
         assert_eq!(GraphHeader::decode(&h2.encode()).unwrap(), h2);
@@ -568,7 +786,13 @@ mod tests {
 
     #[test]
     fn v2_index_roundtrip_uses_stored_section_bytes() {
-        let h = GraphHeader { num_vertices: 2, num_edges: 4, directed: true, version: VERSION_V2 };
+        let h = GraphHeader {
+            num_vertices: 2,
+            num_edges: 4,
+            directed: true,
+            version: VERSION_V2,
+            checksums: false,
+        };
         // v0: in-section 3 bytes, out-section 5 bytes at offset 0
         // v1: in-section 0 bytes, out-section 2 bytes at offset 8
         let idx = GraphIndex::new_v2(
@@ -652,6 +876,82 @@ mod tests {
         let out_only = VertexEdges::decode(&bytes[in_len..], 2, 3, EdgeRequest::Out, enc);
         assert_eq!(out_only.out_neighbors, outs);
         assert!(out_only.in_neighbors.is_empty());
+    }
+
+    #[test]
+    fn checksum_footer_roundtrip_and_verify() {
+        // 2.5 pages of patterned data: full, full, partial
+        let data: Vec<u8> = (0..CHECKSUM_PAGE * 5 / 2).map(|i| (i * 37 + 11) as u8).collect();
+        let footer = ChecksumFooter::compute(&data);
+        assert_eq!(footer.npages(), 3);
+        assert_eq!(footer.data_len, data.len() as u64);
+        let mut file = data.clone();
+        file.extend_from_slice(&footer.encode());
+        assert_eq!(file.len() as u64, data.len() as u64 + footer_len(data.len() as u64));
+        let dec = ChecksumFooter::from_bytes(&file).unwrap();
+        assert_eq!(dec, footer);
+        for p in 0..3u64 {
+            let s = p as usize * CHECKSUM_PAGE;
+            let e = data.len().min(s + CHECKSUM_PAGE);
+            assert!(dec.page_ok(p, &data[s..e]), "clean page {p} must verify");
+            // a full-page buffer with trailing garbage past the covered
+            // length still verifies the partial last page
+            let mut padded = data[s..e].to_vec();
+            padded.resize(CHECKSUM_PAGE, 0xAB);
+            assert!(dec.page_ok(p, &padded));
+        }
+        assert!(!dec.page_ok(3, &[0u8; CHECKSUM_PAGE]), "page past end must fail");
+        // any single flipped bit in any page is detected
+        let mut dirty = data.clone();
+        dirty[CHECKSUM_PAGE + 100] ^= 0x10;
+        assert!(!dec.page_ok(1, &dirty[CHECKSUM_PAGE..2 * CHECKSUM_PAGE]));
+        assert!(dec.page_ok(0, &dirty[..CHECKSUM_PAGE]), "other pages unaffected");
+    }
+
+    #[test]
+    fn checksum_footer_streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..10_000usize).map(|i| (i * 131) as u8).collect();
+        let mut acc = PageCrcAccumulator::new();
+        // feed in awkward chunk sizes straddling page boundaries
+        let mut off = 0;
+        for step in [1usize, 4095, 4097, 13, 9999].iter().cycle() {
+            if off >= data.len() {
+                break;
+            }
+            let end = data.len().min(off + step);
+            acc.update(&data[off..end]);
+            off = end;
+        }
+        let (len, crcs) = acc.finish();
+        assert_eq!(
+            ChecksumFooter::from_parts(len, crcs),
+            ChecksumFooter::compute(&data)
+        );
+    }
+
+    #[test]
+    fn checksum_footer_rejects_corruption_of_itself() {
+        let data = vec![7u8; 100];
+        let footer = ChecksumFooter::compute(&data);
+        let mut file = data.clone();
+        file.extend_from_slice(&footer.encode());
+        // flip a bit inside the crc table: table_crc must catch it
+        let mut bad = file.clone();
+        bad[data.len()] ^= 1;
+        assert!(ChecksumFooter::from_bytes(&bad).is_err());
+        // wrong magic
+        let mut bad = file.clone();
+        let m = file.len() - FOOTER_TRAILER_LEN;
+        bad[m] = b'X';
+        assert!(ChecksumFooter::from_bytes(&bad).is_err());
+        // truncated file (length no longer matches data_len + footer)
+        let mut bad = file.clone();
+        bad.remove(0);
+        assert!(ChecksumFooter::from_bytes(&bad).is_err());
+        // empty data: footer is just the trailer and still round-trips
+        let empty = ChecksumFooter::compute(&[]);
+        assert_eq!(empty.npages(), 0);
+        assert_eq!(ChecksumFooter::from_bytes(&empty.encode()).unwrap(), empty);
     }
 
     #[test]

@@ -22,12 +22,15 @@ pub mod builder;
 pub mod csr;
 pub mod format;
 pub mod gen;
+pub mod scrub;
 pub mod source;
 pub mod varint;
 
 pub use builder::GraphBuilder;
 pub use csr::Csr;
 pub use format::{
-    EdgeEncoding, EdgeRequest, FormatError, GraphHeader, GraphIndex, VertexEdges,
+    ChecksumFooter, EdgeEncoding, EdgeRequest, FormatError, GraphHeader, GraphIndex,
+    VertexEdges,
 };
+pub use scrub::{scrub_file, scrub_image, ScrubOptions, ScrubReport};
 pub use source::{EdgeSource, FetchArena, FetchSlot, MemGraph, SemGraph};

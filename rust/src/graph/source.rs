@@ -21,10 +21,15 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use anyhow::{ensure, Context};
+
 use crate::graph::builder::RamImage;
-use crate::graph::format::{EdgeRequest, GraphIndex, VertexEdges};
+use crate::graph::format::{
+    ChecksumFooter, EdgeRequest, GraphIndex, VertexEdges, CHECKSUM_PAGE,
+};
 use crate::safs::{
-    IoConfig, IoPool, IoStats, PageCache, PendingRead, RangeBuf, RangeScratch, SemFile,
+    IoConfig, IoPool, IoStats, PageCache, PageChecksums, PendingRead, RangeBuf, RangeScratch,
+    SemFile,
 };
 use crate::VertexId;
 
@@ -277,9 +282,42 @@ impl SemGraph {
         key_base: u64,
     ) -> crate::Result<Self> {
         let stats = cache.stats().clone();
-        let idx_bytes = std::fs::read(base.with_extension("gy-idx"))?;
-        let index = GraphIndex::decode(&idx_bytes)?;
-        let adj = SemFile::open_keyed(&base.with_extension("gy-adj"), cache, pool, key_base)?;
+        let idx_path = base.with_extension("gy-idx");
+        let adj_path = base.with_extension("gy-adj");
+        let idx_bytes = std::fs::read(&idx_path)?;
+        let header = crate::graph::format::GraphHeader::decode(&idx_bytes)?;
+        let mut adj = SemFile::open_keyed(&adj_path, cache, pool, key_base)?;
+        let index = if header.checksums {
+            // The index is RAM-resident and read exactly once, so it is
+            // verified in full here at open; a corrupt index fails loudly
+            // before any job can run on it.
+            let footer = ChecksumFooter::from_bytes(&idx_bytes)
+                .with_context(|| format!("checksum footer of {}", idx_path.display()))?;
+            let data = &idx_bytes[..footer.data_len as usize];
+            for p in 0..footer.npages() {
+                ensure!(
+                    footer.page_ok(p, &data[p as usize * CHECKSUM_PAGE..]),
+                    "checksum mismatch on page {p} of {}",
+                    idx_path.display()
+                );
+            }
+            // The adjacency footer is loaded via direct positioned reads
+            // — outside the pool and the stats — and installed on the
+            // SemFile, which shrinks its visible length to the data
+            // region: page requests, EOF clamping and bytes_read stay
+            // byte-identical to a plain image, and every page entering
+            // the cache is verified against its crc.
+            let adj_file = std::fs::File::open(&adj_path)
+                .with_context(|| format!("open {}", adj_path.display()))?;
+            let adj_len = adj_file.metadata()?.len();
+            let adj_footer = ChecksumFooter::read_from(&adj_file, adj_len)
+                .with_context(|| format!("checksum footer of {}", adj_path.display()))?;
+            let (data_len, crcs) = adj_footer.into_parts();
+            adj.install_checksums(PageChecksums::new(data_len, crcs));
+            GraphIndex::decode(data)?
+        } else {
+            GraphIndex::decode(&idx_bytes)?
+        };
         Ok(SemGraph { index, adj, stats })
     }
 

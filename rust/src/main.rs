@@ -5,6 +5,7 @@
 //!   (`--format v1|v2` selects fixed-width or delta+varint edges).
 //! * `convert`  — rewrite an existing image in the other format version.
 //! * `info`     — print image header + degree statistics (no edge I/O).
+//! * `scrub`    — verify every page of a checksummed image offline.
 //! * `run`      — run a library algorithm in SEM or in-memory mode.
 //! * `verify`   — cross-check SEM PageRank against the AOT XLA/Pallas
 //!   dense-block engine (requires `make artifacts`).
@@ -42,9 +43,10 @@ graphyti — a semi-external memory graph library (Graphyti reproduction)
 USAGE:
   graphyti generate --kind rmat|er|ba|grid --scale N --out PATH
                     [--edge-factor F] [--seed S] [--undirected]
-                    [--format v1|v2]
-  graphyti convert  --graph SRC --out DST [--format v1|v2]
+                    [--format v1|v2] [--no-checksums]
+  graphyti convert  --graph SRC --out DST [--format v1|v2] [--no-checksums]
   graphyti info     --graph PATH
+  graphyti scrub    --graph PATH [--rate-mb N]
   graphyti run ALG  --graph PATH [--mem] [--variant V] [--num N]
                     [--cache-mb N] [--io-threads N] [--io-delay-us N]
                     [--workers N] [--mode push|pull|auto] [--pull-density F]
@@ -54,8 +56,10 @@ USAGE:
   graphyti serve    [--port P] [--cache-mb N] [--budget-mb N]
                     [--exec-threads N] [--io-threads N] [--io-delay-us N]
                     [--workers N] [--wal-dir DIR]
+                    [--scrub-every-secs N] [--scrub-rate-mb N]
   graphyti submit ALG --graph PATH [--addr HOST:PORT] [--variant V]
                     [--num N] [--priority 0-9] [--wait] [--timeout-ms N]
+                    [--job-timeout-ms N]
   graphyti status   [--addr HOST:PORT] [--job ID]
   graphyti health   [--addr HOST:PORT]
   graphyti metrics  [--addr HOST:PORT] [--text]
@@ -68,6 +72,14 @@ Formats: v1 stores each neighbor as a raw u32; v2 delta+varint-compresses
 sorted neighbor lists (~3x smaller on real graphs, proportionally less
 read I/O). Every command reads either version transparently; `convert`
 rewrites v1 images as v2 (the default target) and back.
+
+Integrity: new images carry a crc32c-per-4KiB-page checksum footer
+(opt out with --no-checksums); reads verify pages on every cache miss
+and quarantine persistently-bad pages, failing only the job that
+touched them. `scrub` sweeps a whole image offline and exits non-zero
+if any page fails; `serve --scrub-every-secs N` runs the same sweep in
+the background over every open image, rate-limited by --scrub-rate-mb.
+Legacy images without footers open and run unchanged.
 
 Service mode: `serve` multiplexes concurrent jobs over one shared page
 cache + I/O pool, with an admission budget on summed per-job O(n) state.
@@ -201,13 +213,15 @@ fn cmd_generate(args: &Args) -> graphyti::Result<()> {
         _ => n,
     };
     let version = parse_format(args.get("format").unwrap_or("v1"))?;
+    let checksums = !args.has("no-checksums");
     let mut b = GraphBuilder::new(nv, directed);
-    b.add_edges(&edges).format_version(version);
+    b.add_edges(&edges).format_version(version).checksums(checksums);
     let (idx, adj) = b.build_files(&out)?;
     let index = GraphIndex::decode(&std::fs::read(&idx)?)?;
     println!(
-        "generated {kind} scale={scale} (format v{version}): {} vertices, {} edges \
+        "generated {kind} scale={scale} (format v{version}{}): {} vertices, {} edges \
          ({} idx, {} adj) -> {}",
+        if checksums { ", checksummed" } else { "" },
         index.num_vertices(),
         index.num_edges(),
         fmt_bytes(std::fs::metadata(&idx)?.len()),
@@ -221,14 +235,17 @@ fn cmd_convert(args: &Args) -> graphyti::Result<()> {
     let src = PathBuf::from(args.require("graph")?);
     let dst = PathBuf::from(args.require("out")?);
     let version = parse_format(args.get("format").unwrap_or("v2"))?;
+    let checksums = !args.has("no-checksums");
     let src_adj = std::fs::metadata(src.with_extension("gy-adj"))?.len();
-    let (idx, adj) = graphyti::graph::builder::convert_image(&src, &dst, version)?;
+    let (idx, adj) =
+        graphyti::graph::builder::convert_image_opts(&src, &dst, version, checksums)?;
     let dst_adj = std::fs::metadata(&adj)?.len();
     let index = GraphIndex::decode(&std::fs::read(&idx)?)?;
     println!(
-        "converted {} -> {} (format v{version}): {} vertices, {} edges",
+        "converted {} -> {} (format v{version}{}): {} vertices, {} edges",
         src.display(),
         dst.display(),
+        if checksums { ", checksummed" } else { "" },
         index.num_vertices(),
         index.num_edges(),
     );
@@ -243,7 +260,8 @@ fn cmd_convert(args: &Args) -> graphyti::Result<()> {
 
 fn cmd_info(args: &Args) -> graphyti::Result<()> {
     let base = PathBuf::from(args.require("graph")?);
-    let index = GraphIndex::decode(&std::fs::read(base.with_extension("gy-idx"))?)?;
+    let idx_bytes = std::fs::read(base.with_extension("gy-idx"))?;
+    let index = GraphIndex::decode(&idx_bytes)?;
     let s = degree_stats(&index);
     println!(
         "graph {}: {} vertices, {} edges, directed={}, format v{}",
@@ -265,6 +283,52 @@ fn cmd_info(args: &Args) -> graphyti::Result<()> {
         "adjacency bytes on disk: {}",
         fmt_bytes(std::fs::metadata(base.with_extension("gy-adj"))?.len())
     );
+    if index.header().checksums {
+        use graphyti::graph::format::{footer_len, ChecksumFooter};
+        let idx_footer = ChecksumFooter::from_bytes(&idx_bytes)?;
+        let adj_file = std::fs::File::open(base.with_extension("gy-adj"))?;
+        let adj_len = adj_file.metadata()?.len();
+        let adj_footer = ChecksumFooter::read_from(&adj_file, adj_len)?;
+        println!(
+            "checksums: crc32c per 4 KiB page, {} pages covered \
+             ({} idx + {} adj, {} footer overhead)",
+            idx_footer.npages() + adj_footer.npages(),
+            idx_footer.npages(),
+            adj_footer.npages(),
+            fmt_bytes(footer_len(idx_footer.data_len) + footer_len(adj_footer.data_len)),
+        );
+    } else {
+        println!("checksums: none (legacy image; `convert` re-writes with footers)");
+    }
+    Ok(())
+}
+
+fn cmd_scrub(args: &Args) -> graphyti::Result<()> {
+    use graphyti::graph::scrub::{scrub_image, ScrubOptions};
+    let base = PathBuf::from(args.require("graph")?);
+    let opts = ScrubOptions {
+        rate_limit_bytes_per_sec: args.get_usize("rate-mb", 0)? as u64 * 1024 * 1024,
+        cancel: None,
+    };
+    let reports = scrub_image(&base, &opts, None)?;
+    let mut bad = 0u64;
+    for r in &reports {
+        if r.skipped {
+            println!("{}: skipped (no checksum footer)", r.path.display());
+        } else if r.bad_pages.is_empty() {
+            println!("{}: {} pages verified, all clean", r.path.display(), r.pages_scrubbed);
+        } else {
+            println!(
+                "{}: {} pages verified, {} FAILED: {:?}",
+                r.path.display(),
+                r.pages_scrubbed,
+                r.bad_pages.len(),
+                r.bad_pages
+            );
+        }
+        bad += r.checksum_failures();
+    }
+    anyhow::ensure!(bad == 0, "scrub found {bad} corrupt page(s)");
     Ok(())
 }
 
@@ -393,6 +457,8 @@ fn cmd_serve(args: &Args) -> graphyti::Result<()> {
         default_workers: args.get_usize("workers", d.default_workers)?,
         wal_dir: args.get("wal-dir").map(PathBuf::from),
         fault: None,
+        scrub_every_secs: args.get_usize("scrub-every-secs", 0)? as u64,
+        scrub_rate_mb: args.get_usize("scrub-rate-mb", d.scrub_rate_mb as usize)? as u64,
     };
     let svc = GraphService::start(cfg.clone());
     let server = ServiceServer::start(svc.clone(), &format!("127.0.0.1:{port}"))?;
@@ -476,6 +542,16 @@ fn cmd_submit(args: &Args) -> graphyti::Result<()> {
     }
     if args.has("priority") {
         fields.push(("priority", Json::u(args.get_usize("priority", 4)? as u64)));
+    }
+    if args.has("job-timeout-ms") {
+        // per-job deadline, enforced server-side at round boundaries
+        fields.push((
+            "config",
+            Json::obj(vec![(
+                "timeout_ms",
+                Json::u(args.get_usize("job-timeout-ms", 0)? as u64),
+            )]),
+        ));
     }
     let resp = call(&addr, &Json::obj(fields), Duration::from_millis(timeout_ms + 5000))?;
     check_ok(&resp)?;
@@ -681,6 +757,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(&args),
         "convert" => cmd_convert(&args),
         "info" => cmd_info(&args),
+        "scrub" => cmd_scrub(&args),
         "run" => cmd_run(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),

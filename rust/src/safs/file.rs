@@ -137,6 +137,43 @@ impl PendingRead {
     }
 }
 
+/// Per-page crc32c table installed by the open path when the image
+/// carries a checksum footer. Pages are verified against it **once, on
+/// the way into the cache** — cache hits serve pre-verified bytes, so
+/// the steady-state cost of verification is zero.
+pub struct PageChecksums {
+    /// Length of the covered data region (the footer itself excluded).
+    data_len: u64,
+    /// crc32c of each page's covered bytes (the last page covers only
+    /// `data_len % PAGE_SIZE` bytes when the data isn't page-aligned).
+    crcs: Vec<u32>,
+}
+
+impl PageChecksums {
+    /// Build a table for `data_len` bytes with the given per-page crcs.
+    pub fn new(data_len: u64, crcs: Vec<u32>) -> Self {
+        PageChecksums { data_len, crcs }
+    }
+
+    /// Verify page `p` (file-local). Only the covered prefix is checked:
+    /// EOF zero padding in a run buffer is outside the checksum domain,
+    /// and a page wholly past the data region is vacuously fine.
+    fn page_ok(&self, p: u64, bytes: &[u8]) -> bool {
+        let start = p * PAGE_SIZE as u64;
+        if start >= self.data_len {
+            return true;
+        }
+        let covered = ((self.data_len - start) as usize).min(PAGE_SIZE);
+        if bytes.len() < covered {
+            return false;
+        }
+        match self.crcs.get(p as usize) {
+            Some(&want) => crate::util::crc32c(&bytes[..covered]) == want,
+            None => false,
+        }
+    }
+}
+
 /// Read-only SEM file handle.
 pub struct SemFile {
     file: Arc<File>,
@@ -151,6 +188,9 @@ pub struct SemFile {
     /// The file's path, carried on every [`RunRequest`] so pool errors
     /// name their file and fault plans can target it.
     tag: Arc<str>,
+    /// Verify-on-read table, installed from the image's checksum footer
+    /// by the open path. `None` for plain (unfooted) images.
+    checks: Option<Arc<PageChecksums>>,
 }
 
 impl SemFile {
@@ -177,7 +217,26 @@ impl SemFile {
         let len = file.metadata()?.len();
         let stats = cache.stats().clone();
         let tag: Arc<str> = Arc::from(path.to_string_lossy().as_ref());
-        Ok(SemFile { file: Arc::new(file), len, cache, pool, stats, key_base, tag })
+        Ok(SemFile { file: Arc::new(file), len, cache, pool, stats, key_base, tag, checks: None })
+    }
+
+    /// Install the image's per-page checksum table. The visible file
+    /// length shrinks to `data_len` — the footer region becomes
+    /// unreadable through this handle — so reads, EOF clamping and
+    /// `bytes_read` accounting stay byte-identical to a plain image.
+    /// From here on every page entering the cache is verified first; a
+    /// mismatch gets exactly one corrective re-read (through the pool's
+    /// backoff ladder), and a persistent mismatch quarantines the page
+    /// and fails the owning batch with [`super::IoErrorClass::Corrupt`].
+    pub fn install_checksums(&mut self, checks: PageChecksums) {
+        debug_assert!(checks.data_len <= self.len, "checksum table covers more than the file");
+        self.len = checks.data_len;
+        self.checks = Some(Arc::new(checks));
+    }
+
+    /// True when verify-on-read is active (a checksum table is installed).
+    pub fn verified(&self) -> bool {
+        self.checks.is_some()
     }
 
     /// File length in bytes.
@@ -278,8 +337,14 @@ impl SemFile {
         needed.dedup();
 
         // 2. cache pass — split hits from misses (`have`/`misses` carry
-        //    file-local page numbers; only cache calls add the key base)
+        //    file-local page numbers; only cache calls add the key base).
+        //    A quarantined page fails the batch before any I/O: its
+        //    storage already proved it returns wrong bytes.
         for &p in needed.iter() {
+            if self.cache.is_quarantined(self.key_base + p) {
+                return Err(anyhow::Error::new(self.quarantined_error(p))
+                    .context(format!("batch read of {} failed", self.tag)));
+            }
             match self.cache.get_tracked(self.key_base + p, job) {
                 Some(d) => have.push((p, d)),
                 None => misses.push(p),
@@ -335,9 +400,17 @@ impl SemFile {
                 }
                 for i in 0..reply.npages {
                     let p = reply.start_page + i as u64;
-                    let view = reply.page(i);
-                    self.cache.insert(self.key_base + p, view.clone());
-                    have.push((p, view));
+                    match self.verified_page(p, reply.page(i), job) {
+                        Ok(view) => {
+                            self.cache.insert(self.key_base + p, view.clone());
+                            have.push((p, view));
+                        }
+                        Err(err) => {
+                            if failed.is_none() {
+                                failed = Some(err);
+                            }
+                        }
+                    }
                 }
             }
             let wait_us = wait_t0.elapsed().as_micros() as u64;
@@ -410,6 +483,10 @@ impl SemFile {
         let mut have = Vec::with_capacity(needed.len());
         let mut misses = Vec::new();
         for &p in &needed {
+            if self.cache.is_quarantined(self.key_base + p) {
+                return Err(anyhow::Error::new(self.quarantined_error(p))
+                    .context(format!("batch read of {} failed", self.tag)));
+            }
             match self.cache.get_tracked(self.key_base + p, job) {
                 Some(d) => have.push((p, d)),
                 None => misses.push(p),
@@ -519,10 +596,92 @@ impl SemFile {
         }
         for i in 0..reply.npages {
             let p = reply.start_page + i as u64;
-            let view = reply.page(i);
-            self.cache.insert(self.key_base + p, view.clone());
-            pending.have.push((p, view));
+            match self.verified_page(p, reply.page(i), job) {
+                Ok(view) => {
+                    self.cache.insert(self.key_base + p, view.clone());
+                    pending.have.push((p, view));
+                }
+                Err(err) => {
+                    if pending.failure.is_none() {
+                        pending.failure = Some(err);
+                    }
+                }
+            }
         }
+    }
+
+    /// The error for a read that touched an already-quarantined page.
+    fn quarantined_error(&self, p: u64) -> IoError {
+        IoError::corrupt(
+            p,
+            format!("page {p} of {} is quarantined after a checksum failure", self.tag),
+        )
+    }
+
+    /// Gate a pool-delivered page through the installed checksum table.
+    ///
+    /// Clean images (`checks == None`) pass straight through at zero
+    /// cost. On a mismatch the page gets exactly **one** corrective
+    /// re-read — a fresh single-page run through the pool, which applies
+    /// its own bounded backoff to transient errors — because the first
+    /// read may have been corrupted in flight rather than at rest. If
+    /// the re-read verifies, the good copy is used as if nothing
+    /// happened. If not, the page is quarantined in the shared cache
+    /// (never served, never re-cached, never counted resident) and the
+    /// batch fails with [`super::IoErrorClass::Corrupt`] — the blast
+    /// radius is the owning job only.
+    fn verified_page(
+        &self,
+        p: u64,
+        view: PageRef,
+        job: Option<&IoStats>,
+    ) -> Result<PageRef, IoError> {
+        let Some(checks) = &self.checks else { return Ok(view) };
+        if checks.page_ok(p, &view) {
+            return Ok(view);
+        }
+        self.stats.add_checksum_failure(1);
+        if let Some(j) = job {
+            j.add_checksum_failure(1);
+        }
+        // one corrective re-read; its transient errors still get the
+        // pool's backoff ladder
+        let (tx, rx) = channel();
+        self.pool.submit(RunRequest {
+            file: self.file.clone(),
+            file_len: self.len,
+            start_page: p,
+            npages: 1,
+            reply: tx,
+            tag: self.tag.clone(),
+        });
+        if let Ok(reply) = rx.recv() {
+            if reply.error.is_none() {
+                if let Some(j) = job {
+                    if reply.bytes_read > 0 {
+                        j.add_physical_read(1);
+                        j.add_bytes_read(reply.bytes_read);
+                    }
+                }
+                let fresh = reply.page(0);
+                if checks.page_ok(p, &fresh) {
+                    return Ok(fresh);
+                }
+                self.stats.add_checksum_failure(1);
+                if let Some(j) = job {
+                    j.add_checksum_failure(1);
+                }
+            }
+        }
+        self.cache.quarantine(self.key_base + p);
+        Err(IoError::corrupt(
+            p,
+            format!(
+                "checksum mismatch on page {p} of {} persisted across a re-read: \
+                 page quarantined",
+                self.tag
+            ),
+        ))
     }
 
     /// Prefetch hint: asynchronously warm the cache for the byte ranges
@@ -561,9 +720,13 @@ impl SemFile {
         }
         drop(tx);
         // fire-and-forget insertion on a helper thread so callers don't
-        // block; failed runs are dropped (a prefetch is only a hint)
+        // block; failed runs are dropped (a prefetch is only a hint),
+        // and so are pages that fail verification — the demand read
+        // re-fetches and owns the recovery/quarantine decision
         let cache = self.cache.clone();
         let key_base = self.key_base;
+        let checks = self.checks.clone();
+        let stats = self.stats.clone();
         std::thread::spawn(move || {
             for _ in 0..nruns {
                 if let Ok(reply) = rx.recv() {
@@ -571,7 +734,14 @@ impl SemFile {
                         continue;
                     }
                     for i in 0..reply.npages {
-                        cache.insert(key_base + reply.start_page + i as u64, reply.page(i));
+                        let p = reply.start_page + i as u64;
+                        if let Some(ck) = &checks {
+                            if !ck.page_ok(p, &reply.page(i)) {
+                                stats.add_checksum_failure(1);
+                                continue;
+                            }
+                        }
+                        cache.insert(key_base + p, reply.page(i));
                     }
                 }
             }
@@ -664,7 +834,7 @@ fn take_buf(free: &mut Vec<Vec<u8>>, allocs: &mut u64, len: usize) -> Vec<u8> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::safs::io::IoConfig;
+    use crate::safs::io::{FaultPlan, IoConfig, IoErrorClass};
     use std::io::Write;
 
     fn setup(data: &[u8], cache_pages: usize) -> (std::path::PathBuf, SemFile) {
@@ -1000,6 +1170,156 @@ mod tests {
             let off = batches[i][0].0 as usize;
             assert_eq!(&out[0][..], &data[off..off + PAGE_SIZE * 2], "batch {i}");
         }
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// Like `setup`, but installs a checksum table computed from `data`
+    /// and runs the pool under `fault` (single-threaded, so request ids
+    /// follow submission order deterministically).
+    fn setup_verified(
+        data: &[u8],
+        cache_pages: usize,
+        fault: Option<FaultPlan>,
+    ) -> (std::path::PathBuf, SemFile) {
+        let path = std::env::temp_dir().join(format!(
+            "graphyti-semfile-vrf-{}-{:x}-{}",
+            std::process::id(),
+            data.as_ptr() as usize,
+            data.len()
+        ));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(data).unwrap();
+        f.sync_all().unwrap();
+        let stats = Arc::new(IoStats::new());
+        let cache = Arc::new(PageCache::new(cache_pages * PAGE_SIZE, stats.clone()));
+        let pool =
+            Arc::new(IoPool::new(IoConfig { threads: 1, fault, ..Default::default() }, stats));
+        let mut sem = SemFile::open(&path, cache, pool).unwrap();
+        let crcs = data.chunks(PAGE_SIZE).map(crate::util::crc32c).collect();
+        sem.install_checksums(PageChecksums::new(data.len() as u64, crcs));
+        (path, sem)
+    }
+
+    fn flip_plan(period: u64) -> Option<FaultPlan> {
+        Some(FaultPlan {
+            seed: 0xBAD,
+            jitter_us: 0,
+            reorder: false,
+            eio_period: 0,
+            fail_path: None,
+            flip_period: period,
+            flip_path: None,
+        })
+    }
+
+    #[test]
+    fn verified_clean_reads_are_free_and_correct() {
+        let data = pattern(PAGE_SIZE * 4 + 777); // unaligned tail page
+        let (path, f) = setup_verified(&data, 128, None);
+        assert!(f.verified());
+        assert_eq!(f.len(), data.len() as u64, "visible length is the data length");
+        for &(off, len) in
+            &[(0u64, PAGE_SIZE + 5), (PAGE_SIZE as u64 * 3 + 9, PAGE_SIZE), (data.len() as u64 - 3, 3)]
+        {
+            let got = f.read(off, len).unwrap();
+            assert_eq!(&got[..], &data[off as usize..off as usize + len], "range ({off},{len})");
+        }
+        let s = f.stats().snapshot();
+        assert_eq!(s.checksum_failures, 0, "clean image must not trip verification: {s:?}");
+        assert_eq!(s.quarantined_pages, 0);
+        // warm re-read: hits serve pre-verified bytes, no new I/O
+        let before = f.stats().snapshot();
+        f.read(0, PAGE_SIZE).unwrap();
+        assert_eq!(f.stats().snapshot().delta(&before).physical_reads, 0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn transient_flip_is_healed_by_one_corrective_reread() {
+        let data = pattern(PAGE_SIZE * 4);
+        // flip_period 2: request ids 1, 3, ... are corrupted. The first
+        // read (id 0) is clean; the second (id 1) flips, and its
+        // corrective re-read (id 2) comes back clean.
+        let (path, f) = setup_verified(&data, 128, flip_plan(2));
+        assert_eq!(f.read(0, PAGE_SIZE).unwrap()[..], data[..PAGE_SIZE]);
+        let got = f.read(PAGE_SIZE as u64, PAGE_SIZE).unwrap();
+        assert_eq!(got[..], data[PAGE_SIZE..2 * PAGE_SIZE], "healed read returns true bytes");
+        let s = f.stats().snapshot();
+        assert_eq!(s.checksum_failures, 1, "one detection, cleared on re-read: {s:?}");
+        assert_eq!(s.quarantined_pages, 0, "a healed page is not quarantined: {s:?}");
+        assert_eq!(s.physical_reads, 3, "two demand reads + one corrective: {s:?}");
+        // the healed copy is cached: no further I/O to read it again
+        let before = f.stats().snapshot();
+        assert_eq!(f.read(PAGE_SIZE as u64, PAGE_SIZE).unwrap()[..], data[PAGE_SIZE..2 * PAGE_SIZE]);
+        assert_eq!(f.stats().snapshot().delta(&before).physical_reads, 0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn persistent_flip_quarantines_and_fast_fails_thereafter() {
+        let data = pattern(PAGE_SIZE * 2);
+        // flip_period 1: every read of this file is corrupted, so the
+        // corrective re-read cannot clear the mismatch
+        let (path, f) = setup_verified(&data, 128, flip_plan(1));
+        let err = f.read(0, PAGE_SIZE).unwrap_err();
+        let io = err.downcast_ref::<IoError>().expect("typed IoError in the chain");
+        assert_eq!(io.class, IoErrorClass::Corrupt);
+        assert_eq!(io.page, Some(0));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum mismatch") && msg.contains("quarantined"), "{msg}");
+        let s = f.stats().snapshot();
+        assert_eq!(s.checksum_failures, 2, "detected on read and on re-read: {s:?}");
+        assert_eq!(s.quarantined_pages, 1, "{s:?}");
+        assert_eq!(s.physical_reads, 2, "demand read + one corrective, no more: {s:?}");
+        // subsequent touches fail fast: no I/O, same typed error
+        let before = f.stats().snapshot();
+        let err2 = f.read(100, 8).unwrap_err();
+        assert_eq!(
+            err2.downcast_ref::<IoError>().unwrap().class,
+            IoErrorClass::Corrupt,
+            "{err2:#}"
+        );
+        assert!(format!("{err2:#}").contains("quarantined"), "{err2:#}");
+        let d = f.stats().snapshot().delta(&before);
+        assert_eq!(d.physical_reads, 0, "quarantined pages are never re-read: {d:?}");
+        // the async path refuses the page at submit time too
+        assert!(f.submit_ranges(&[(0, 8)], None).is_err());
+        // other pages of the same file still work... except flips hit
+        // them too here (period 1), so just assert the error names the
+        // right page for a different page number
+        let err3 = f.read(PAGE_SIZE as u64, 8).unwrap_err();
+        assert_eq!(err3.downcast_ref::<IoError>().unwrap().page, Some(1));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn prefetch_drops_unverifiable_pages_silently() {
+        let data = pattern(PAGE_SIZE * 2);
+        let path = std::env::temp_dir()
+            .join(format!("graphyti-semfile-pfv-{}", std::process::id()));
+        std::fs::write(&path, &data).unwrap();
+        let stats = Arc::new(IoStats::new());
+        let cache = Arc::new(PageCache::new(128 * PAGE_SIZE, stats.clone()));
+        let pool = Arc::new(IoPool::new(
+            IoConfig { threads: 1, fault: flip_plan(1), ..Default::default() },
+            stats.clone(),
+        ));
+        let mut f = SemFile::open(&path, cache.clone(), pool).unwrap();
+        let crcs = data.chunks(PAGE_SIZE).map(crate::util::crc32c).collect();
+        f.install_checksums(PageChecksums::new(data.len() as u64, crcs));
+        // both pages coalesce into one run, which the plan corrupts by a
+        // single bit — so exactly one of the two pages fails
+        // verification and is dropped; the other lands normally
+        f.prefetch(&[(0, PAGE_SIZE * 2)]);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while stats.snapshot().checksum_failures + cache.resident_pages() < 2 {
+            assert!(std::time::Instant::now() < deadline, "prefetch never finished");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let s = stats.snapshot();
+        assert_eq!(s.checksum_failures, 1, "{s:?}");
+        assert_eq!(cache.resident_pages(), 1, "the bad page never lands");
+        assert_eq!(s.quarantined_pages, 0, "a hint never quarantines: {s:?}");
         let _ = std::fs::remove_file(path);
     }
 

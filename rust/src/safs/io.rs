@@ -50,13 +50,34 @@ pub struct FaultPlan {
     /// — which the fetch path must surface as a clean per-job failure.
     /// `None` = no permanent injection.
     pub fail_path: Option<Arc<str>>,
+    /// Every `flip_period`-th request has exactly **one bit** of its
+    /// successfully-read payload flipped before the reply is sent — a
+    /// silent-corruption model (misdirected write, bit rot, cable hit)
+    /// that only checksum verification can catch. The flipped bit is
+    /// chosen by splitmix64 off `(seed, req_id)`, so a fixed submit
+    /// sequence corrupts the same bit of the same request every run.
+    /// 0 = no flips.
+    pub flip_period: u64,
+    /// Restrict bit-flips to requests whose file tag contains this
+    /// substring (e.g. `"gy-adj"` to corrupt only edge pages). `None` =
+    /// flips apply to every `flip_period`-th request.
+    pub flip_path: Option<Arc<str>>,
 }
 
 impl FaultPlan {
     /// A plan exercising jitter, reordering and transient errors at once
-    /// (no permanent failures: chaos runs must still complete).
+    /// (no permanent failures or corruption: chaos runs must still
+    /// complete with correct results).
     pub fn chaos(seed: u64) -> Self {
-        FaultPlan { seed, jitter_us: 200, reorder: true, eio_period: 7, fail_path: None }
+        FaultPlan {
+            seed,
+            jitter_us: 200,
+            reorder: true,
+            eio_period: 7,
+            fail_path: None,
+            flip_period: 0,
+            flip_path: None,
+        }
     }
 }
 
@@ -70,6 +91,11 @@ pub enum IoErrorClass {
     /// Not worth retrying (unreadable device, bad descriptor, injected
     /// permanent fault): fail the owning job cleanly.
     Permanent,
+    /// The read completed but the page's checksum did not match its
+    /// recorded crc32c, and one bounded re-read did not clear it: the
+    /// storage is returning wrong bytes. The page is quarantined and the
+    /// owning job fails; co-tenants are untouched.
+    Corrupt,
 }
 
 /// A typed substrate read failure, delivered inside [`RunReply`] instead
@@ -78,15 +104,23 @@ pub enum IoErrorClass {
 /// concurrent healthy jobs keep running.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IoError {
-    /// Transient-exhausted vs immediately-permanent.
+    /// Transient-exhausted vs immediately-permanent vs checksum-corrupt.
     pub class: IoErrorClass,
     /// Human-readable cause, including the file tag.
     pub message: String,
+    /// For [`IoErrorClass::Corrupt`]: the file-local page number that
+    /// failed verification (also named in `message`).
+    pub page: Option<u64>,
 }
 
 impl IoError {
     fn permanent(message: String) -> Self {
-        IoError { class: IoErrorClass::Permanent, message }
+        IoError { class: IoErrorClass::Permanent, message, page: None }
+    }
+
+    /// A verified-corruption failure on `page` (file-local page number).
+    pub fn corrupt(page: u64, message: String) -> Self {
+        IoError { class: IoErrorClass::Corrupt, message, page: Some(page) }
     }
 }
 
@@ -332,6 +366,7 @@ impl IoPool {
         let want = req.npages * PAGE_SIZE;
         let avail = (req.file_len.saturating_sub(offset) as usize).min(want);
         let mut inject_eio = false;
+        let mut inject_flip = false;
         let mut delay_us = cfg.io_delay_us;
         let mut seed = 0u64;
         if let Some(plan) = &cfg.fault {
@@ -360,6 +395,12 @@ impl IoPool {
                 // deterministically on attempt 1
                 inject_eio =
                     plan.eio_period > 0 && req_id % plan.eio_period == plan.eio_period - 1;
+                // silent single-bit corruption of the read payload: the
+                // pread succeeds, the reply carries wrong bytes, and only
+                // checksum verification downstream can tell
+                inject_flip = plan.flip_period > 0
+                    && req_id % plan.flip_period == plan.flip_period - 1
+                    && plan.flip_path.as_ref().map_or(true, |p| req.tag.contains(&**p));
             }
         }
         // single run buffer; the TrustedLen collect writes it in place
@@ -414,6 +455,7 @@ impl IoPool {
                                          attempts on {}: {e}",
                                         req.tag
                                     ),
+                                    page: None,
                                 },
                             );
                         }
@@ -427,6 +469,13 @@ impl IoPool {
                         );
                     }
                 }
+            }
+            if inject_flip && done > 0 {
+                // flip exactly one seeded bit of what was actually read;
+                // the salt keeps the choice independent of the jitter and
+                // backoff draws for the same request
+                let bit = mix(seed, req_id * 8 + 7) % (done as u64 * 8);
+                dst[(bit / 8) as usize] ^= 1 << (bit % 8);
             }
             if delay_us > 0 {
                 // emulate SSD access latency per physical request
@@ -697,6 +746,8 @@ mod tests {
                 reorder: true,
                 eio_period: 5,
                 fail_path: None,
+                flip_period: 0,
+                flip_path: None,
             }),
             ..Default::default()
         };
@@ -744,12 +795,74 @@ mod tests {
                 reorder: true,
                 eio_period: 0,
                 fail_path: None,
+                flip_period: 0,
+                flip_path: None,
             }),
             ..Default::default()
         };
         let (order, s) = run_faulted(64, cfg, &data, &file);
         assert_ne!(order, (0..64u64).collect::<Vec<_>>(), "plan never reordered");
         assert_eq!(s.snap.retries, 0, "no errors in a reorder-only plan");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bit_flip_injection_corrupts_exactly_one_seeded_bit() {
+        let data = vec![0x5Au8; PAGE_SIZE * 6];
+        let (path, file) = temp_file(&data);
+        let flip_cfg = |flip_path: Option<Arc<str>>| IoConfig {
+            threads: 1,
+            fault: Some(FaultPlan {
+                seed: 0xC0FFEE,
+                jitter_us: 0,
+                reorder: false,
+                eio_period: 0,
+                fail_path: None,
+                flip_period: 3,
+                flip_path,
+            }),
+            ..Default::default()
+        };
+        let collect = |cfg: IoConfig, tag: &str| {
+            let stats = Arc::new(IoStats::new());
+            let pool = IoPool::new(cfg, stats);
+            let (tx, rx) = channel();
+            for p in 0..6u64 {
+                pool.submit(RunRequest {
+                    file: file.clone(),
+                    file_len: data.len() as u64,
+                    start_page: p,
+                    npages: 1,
+                    tag: Arc::from(tag),
+                    reply: tx.clone(),
+                });
+            }
+            drop(tx);
+            let mut pages = vec![Vec::new(); 6];
+            while let Ok(r) = rx.recv() {
+                assert!(r.error.is_none(), "flips are silent, never error replies");
+                pages[r.start_page as usize] = r.page(0).to_vec();
+            }
+            pages
+        };
+        let a = collect(flip_cfg(None), "flip-test.gy-adj");
+        let b = collect(flip_cfg(None), "flip-test.gy-adj");
+        assert_eq!(a, b, "flip choice is seeded and replays bit-identically");
+        for (p, got) in a.iter().enumerate() {
+            let wrong: usize = got
+                .iter()
+                .zip(data[p * PAGE_SIZE..(p + 1) * PAGE_SIZE].iter())
+                .map(|(x, y)| (x ^ y).count_ones() as usize)
+                .sum();
+            // request ids 2 and 5 hit flip_period=3
+            let expect = usize::from(p == 2 || p == 5);
+            assert_eq!(wrong, expect, "page {p}: {wrong} flipped bits");
+        }
+        // a non-matching path filter suppresses every flip
+        let c = collect(flip_cfg(Some(Arc::from("gy-idx"))), "flip-test.gy-adj");
+        for (p, got) in c.iter().enumerate() {
+            assert_eq!(got[..], data[p * PAGE_SIZE..(p + 1) * PAGE_SIZE], "page {p}");
+        }
         let _ = std::fs::remove_file(path);
     }
 
@@ -767,6 +880,8 @@ mod tests {
                     reorder: false,
                     eio_period: 0,
                     fail_path: Some(Arc::from("bad-image")),
+                    flip_period: 0,
+                    flip_path: None,
                 }),
                 ..Default::default()
             },

@@ -26,7 +26,7 @@ pub mod io;
 pub mod page_cache;
 pub mod stats;
 
-pub use file::{PendingRead, RangeBuf, RangeScratch, SemFile};
+pub use file::{PageChecksums, PendingRead, RangeBuf, RangeScratch, SemFile};
 pub use io::{FaultPlan, IoConfig, IoError, IoErrorClass, IoPool};
 pub use page_cache::{PageCache, PageRef, PAGE_SIZE};
 pub use stats::{IoLatency, IoStats, IoStatsSnapshot};

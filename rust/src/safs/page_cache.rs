@@ -9,7 +9,7 @@
 //! and a coalesced multi-page read costs one allocation, not one per
 //! page.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -85,6 +85,8 @@ enum Inserted {
     Evicted,
     /// The page was already cached (raced duplicate insert; no change).
     Duplicate,
+    /// The page is quarantined; the insert was refused (no change).
+    Quarantined,
 }
 
 /// One shard: a clock over up to `cap` frames.
@@ -93,17 +95,47 @@ struct Shard {
     frames: Vec<Frame>,
     hand: usize,
     cap: usize,
+    /// Pages with sticky corruption: never served, never re-admitted,
+    /// never counted resident. Empty in every healthy process, so the
+    /// hot-path check is one branch on `is_empty`.
+    quarantined: HashSet<u64>,
 }
 
 impl Shard {
     fn get(&mut self, page_no: u64) -> Option<PageRef> {
+        if !self.quarantined.is_empty() && self.quarantined.contains(&page_no) {
+            return None;
+        }
         let &idx = self.map.get(&page_no)?;
         self.frames[idx].ref_bit = true;
         Some(self.frames[idx].data.clone())
     }
 
+    /// Quarantine a page, dropping its resident frame if present.
+    /// Returns `(newly_quarantined, frame_dropped)`.
+    fn quarantine(&mut self, page_no: u64) -> (bool, bool) {
+        let newly = self.quarantined.insert(page_no);
+        let mut dropped = false;
+        if let Some(idx) = self.map.remove(&page_no) {
+            self.frames.swap_remove(idx);
+            if idx < self.frames.len() {
+                let moved = self.frames[idx].page_no;
+                self.map.insert(moved, idx);
+            }
+            // the clock hand may now point past the shrunk frame list
+            if self.hand >= self.frames.len() {
+                self.hand = 0;
+            }
+            dropped = true;
+        }
+        (newly, dropped)
+    }
+
     /// Insert a page, evicting with second-chance if at capacity.
     fn insert(&mut self, page_no: u64, data: PageRef) -> Inserted {
+        if !self.quarantined.is_empty() && self.quarantined.contains(&page_no) {
+            return Inserted::Quarantined;
+        }
         if let Some(&idx) = self.map.get(&page_no) {
             // raced: someone else inserted; keep theirs (identical bytes)
             self.frames[idx].ref_bit = true;
@@ -157,6 +189,7 @@ impl PageCache {
                     frames: Vec::with_capacity(per_shard),
                     hand: 0,
                     cap: per_shard,
+                    quarantined: HashSet::new(),
                 })
             })
             .collect();
@@ -212,8 +245,39 @@ impl PageCache {
                 self.resident.fetch_add(1, Ordering::Relaxed);
             }
             Inserted::Evicted => self.stats.add_eviction(1),
-            Inserted::Duplicate => {}
+            Inserted::Duplicate | Inserted::Quarantined => {}
         }
+    }
+
+    /// Quarantine a page after sticky corruption (a checksum failure
+    /// that survived its bounded re-read): the page is dropped from the
+    /// cache if resident, will never be served or re-admitted for the
+    /// life of this process, and stops counting toward residency. The
+    /// `quarantined_pages` counter moves once per distinct page.
+    pub fn quarantine(&self, page_no: u64) {
+        let (newly, dropped) = self.shard_of(page_no).lock().unwrap().quarantine(page_no);
+        if dropped {
+            self.resident.fetch_sub(1, Ordering::Relaxed);
+        }
+        if newly {
+            self.stats.add_quarantined(1);
+        }
+    }
+
+    /// Is this page quarantined? The read path fast-fails these before
+    /// probing or issuing I/O, so a quarantined page costs no disk
+    /// traffic — only its owning job's typed failure.
+    pub fn is_quarantined(&self, page_no: u64) -> bool {
+        let sh = self.shard_of(page_no).lock().unwrap();
+        !sh.quarantined.is_empty() && sh.quarantined.contains(&page_no)
+    }
+
+    /// Total pages currently quarantined across all shards.
+    pub fn quarantined_pages(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().quarantined.len() as u64)
+            .sum()
     }
 
     /// Total frame capacity in pages.
@@ -286,7 +350,13 @@ mod tests {
     fn second_chance_prefers_referenced() {
         // single-shard-sized behaviour is hard to isolate through sharding;
         // exercise the Shard directly.
-        let mut sh = Shard { map: HashMap::new(), frames: vec![], hand: 0, cap: 2 };
+        let mut sh = Shard {
+            map: HashMap::new(),
+            frames: vec![],
+            hand: 0,
+            cap: 2,
+            quarantined: HashSet::new(),
+        };
         sh.insert(1, page(1));
         sh.insert(2, page(2));
         // touch page 1 so its ref bit survives the sweep
@@ -449,6 +519,62 @@ mod tests {
         assert_eq!((j.cache_hits, j.cache_misses), (1, 1));
         let g = c.stats().snapshot();
         assert_eq!((g.cache_hits, g.cache_misses), (2, 1), "global aggregates all");
+    }
+
+    #[test]
+    fn quarantine_drops_refuses_and_uncounts() {
+        let c = cache(128);
+        c.insert(5, page(5));
+        c.insert(6, page(6));
+        assert_eq!(c.resident_pages(), 2);
+        c.quarantine(5);
+        assert!(c.is_quarantined(5));
+        assert!(!c.is_quarantined(6));
+        assert_eq!(c.resident_pages(), 1, "quarantined page stops counting resident");
+        assert!(c.get(5).is_none(), "quarantined page is never served");
+        assert!(c.get(6).is_some(), "co-resident pages untouched");
+        c.insert(5, page(5));
+        assert!(c.get(5).is_none(), "re-insert of a quarantined page is refused");
+        assert_eq!(c.resident_pages(), 1);
+        // quarantining again is idempotent for the counter
+        c.quarantine(5);
+        assert_eq!(c.stats().snapshot().quarantined_pages, 1);
+        assert_eq!(c.quarantined_pages(), 1);
+        // quarantining a never-cached page works too
+        c.quarantine(999);
+        assert!(c.is_quarantined(999));
+        assert_eq!(c.stats().snapshot().quarantined_pages, 2);
+        assert_eq!(c.resident_pages(), 1);
+    }
+
+    #[test]
+    fn quarantine_mid_shard_keeps_clock_coherent() {
+        // exercise the swap_remove fixup: quarantine a page whose frame
+        // sits in the middle of a multi-frame shard, then keep using it
+        let mut sh = Shard {
+            map: HashMap::new(),
+            frames: vec![],
+            hand: 0,
+            cap: 4,
+        quarantined: HashSet::new(),
+        };
+        // one shard, four frames
+        for p in [10u64, 11, 12, 13] {
+            sh.insert(p, page(p as u8));
+        }
+        sh.hand = 3;
+        let (newly, dropped) = sh.quarantine(11);
+        assert!(newly && dropped);
+        assert!(sh.get(11).is_none());
+        // the swapped-in frame (13) is still findable with correct bytes
+        for p in [10u64, 12, 13] {
+            assert_eq!(sh.get(p).expect("survivor")[0], p as u8, "page {p}");
+        }
+        assert!(sh.hand < sh.frames.len(), "hand clamped into the shrunk list");
+        // refill to capacity and sweep: clock still terminates
+        assert!(matches!(sh.insert(14, page(14)), Inserted::Fresh));
+        sh.frames.iter_mut().for_each(|f| f.ref_bit = false);
+        assert!(matches!(sh.insert(15, page(15)), Inserted::Evicted));
     }
 
     #[test]

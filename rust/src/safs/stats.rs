@@ -47,6 +47,17 @@ pub struct IoStats {
     pub backoff_waits: AtomicU64,
     /// Total microseconds spent in backoff sleeps.
     pub backoff_us: AtomicU64,
+    /// Pages whose crc32c footer entry disagreed with the bytes read —
+    /// verify-on-read mismatches plus scrub-detected flips. Counted per
+    /// mismatching verification, so a page that fails both the first
+    /// read and its single bounded re-read counts twice.
+    pub checksum_failures: AtomicU64,
+    /// Pages swept and verified by the scrubber (CLI or background).
+    pub pages_scrubbed: AtomicU64,
+    /// Pages quarantined in the page cache after sticky corruption
+    /// (a verify failure that survived the one bounded re-read).
+    /// Monotonic: quarantine is never lifted within a process lifetime.
+    pub quarantined_pages: AtomicU64,
     /// Per-batch edge-fetch latency (`SemFile::read_ranges_into`), in
     /// microseconds — the caller-visible end-to-end cost of one fetch.
     pub fetch_latency_us: Histogram,
@@ -120,6 +131,18 @@ impl IoStats {
         self.backoff_waits.fetch_add(1, Ordering::Relaxed);
         self.backoff_us.fetch_add(us, Ordering::Relaxed);
     }
+    #[inline]
+    pub fn add_checksum_failure(&self, n: u64) {
+        self.checksum_failures.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_pages_scrubbed(&self, n: u64) {
+        self.pages_scrubbed.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_quarantined(&self, n: u64) {
+        self.quarantined_pages.fetch_add(n, Ordering::Relaxed);
+    }
 
     /// Point-in-time copy of all counters (histograms summarized).
     pub fn snapshot(&self) -> IoStatsSnapshot {
@@ -138,6 +161,9 @@ impl IoStats {
             permanent_errors: self.permanent_errors.load(Ordering::Relaxed),
             backoff_waits: self.backoff_waits.load(Ordering::Relaxed),
             backoff_us: self.backoff_us.load(Ordering::Relaxed),
+            checksum_failures: self.checksum_failures.load(Ordering::Relaxed),
+            pages_scrubbed: self.pages_scrubbed.load(Ordering::Relaxed),
+            quarantined_pages: self.quarantined_pages.load(Ordering::Relaxed),
             latency: IoLatency {
                 fetch: self.fetch_latency_us.summary(),
                 wait: self.wait_latency_us.summary(),
@@ -163,6 +189,9 @@ impl IoStats {
         self.permanent_errors.store(0, Ordering::Relaxed);
         self.backoff_waits.store(0, Ordering::Relaxed);
         self.backoff_us.store(0, Ordering::Relaxed);
+        self.checksum_failures.store(0, Ordering::Relaxed);
+        self.pages_scrubbed.store(0, Ordering::Relaxed);
+        self.quarantined_pages.store(0, Ordering::Relaxed);
         self.fetch_latency_us.reset();
         self.wait_latency_us.reset();
         self.pread_latency_us.reset();
@@ -201,6 +230,9 @@ pub struct IoStatsSnapshot {
     pub permanent_errors: u64,
     pub backoff_waits: u64,
     pub backoff_us: u64,
+    pub checksum_failures: u64,
+    pub pages_scrubbed: u64,
+    pub quarantined_pages: u64,
     /// Histogram summaries (cumulative at snapshot time; see `delta`).
     pub latency: IoLatency,
 }
@@ -228,6 +260,13 @@ impl IoStatsSnapshot {
             permanent_errors: self.permanent_errors.saturating_sub(earlier.permanent_errors),
             backoff_waits: self.backoff_waits.saturating_sub(earlier.backoff_waits),
             backoff_us: self.backoff_us.saturating_sub(earlier.backoff_us),
+            checksum_failures: self
+                .checksum_failures
+                .saturating_sub(earlier.checksum_failures),
+            pages_scrubbed: self.pages_scrubbed.saturating_sub(earlier.pages_scrubbed),
+            quarantined_pages: self
+                .quarantined_pages
+                .saturating_sub(earlier.quarantined_pages),
             latency: self.latency,
         }
     }
@@ -263,6 +302,15 @@ impl IoStatsSnapshot {
                 " io_err[transient={} permanent={} backoff={} backoff_us={}]",
                 self.transient_errors, self.permanent_errors, self.backoff_waits, self.backoff_us,
             ));
+        }
+        if self.checksum_failures > 0 || self.quarantined_pages > 0 {
+            s.push_str(&format!(
+                " integrity[crc_fail={} quarantined={}]",
+                self.checksum_failures, self.quarantined_pages,
+            ));
+        }
+        if self.pages_scrubbed > 0 {
+            s.push_str(&format!(" scrubbed={}", self.pages_scrubbed));
         }
         if self.latency.fetch.count > 0 {
             s.push_str(&format!(

@@ -49,6 +49,14 @@ pub struct ServiceConfig {
     /// I/O fault injection forwarded to the shared pool (tests/chaos
     /// runs only).
     pub fault: Option<FaultPlan>,
+    /// Background scrub interval in seconds (0 = no scrubber). When
+    /// set, a dedicated thread sweeps every open checksummed image this
+    /// often, feeding `pages_scrubbed`/`checksum_failures` into the
+    /// substrate stats.
+    pub scrub_every_secs: u64,
+    /// Scrub rate limit in MiB/s (0 = unthrottled). Keeps a sweep from
+    /// competing with job I/O for bandwidth.
+    pub scrub_rate_mb: u64,
 }
 
 impl Default for ServiceConfig {
@@ -63,6 +71,8 @@ impl Default for ServiceConfig {
             default_workers: 2,
             wal_dir: None,
             fault: None,
+            scrub_every_secs: 0,
+            scrub_rate_mb: 8,
         }
     }
 }
@@ -241,6 +251,14 @@ pub struct Health {
     pub io_transient_errors: u64,
     /// Substrate I/O errors that exhausted retries or were permanent.
     pub io_permanent_errors: u64,
+    /// Page checksum verifications that failed (verify-on-read + scrub).
+    pub checksum_failures: u64,
+    /// Pages quarantined after a persistent checksum failure.
+    pub quarantined_pages: u64,
+    /// Pages verified by scrub sweeps (CLI or background).
+    pub pages_scrubbed: u64,
+    /// Completed background scrub sweeps (0 when the scrubber is off).
+    pub scrub_sweeps: u64,
 }
 
 /// The multi-tenant graph service: registry + admission + executor.
@@ -261,6 +279,12 @@ pub struct GraphService {
     /// Graceful-shutdown flag: running jobs winding down at a round
     /// boundary are stamped `interrupted` (resumable), not `cancelled`.
     draining: AtomicBool,
+    /// Cooperative stop flag for the background scrubber thread.
+    scrub_stop: Arc<AtomicBool>,
+    /// The background scrubber thread (None when `scrub_every_secs` is 0).
+    scrubber: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Completed background scrub sweeps.
+    scrub_sweeps: AtomicU64,
 }
 
 impl GraphService {
@@ -297,6 +321,9 @@ impl GraphService {
             wal,
             resumed_jobs: AtomicU64::new(0),
             draining: AtomicBool::new(false),
+            scrub_stop: Arc::new(AtomicBool::new(false)),
+            scrubber: Mutex::new(None),
+            scrub_sweeps: AtomicU64::new(0),
             cfg,
         });
         // replay before the executors exist, so re-queued jobs are
@@ -314,7 +341,72 @@ impl GraphService {
             );
         }
         *svc.workers.lock().unwrap() = handles;
+        if svc.cfg.scrub_every_secs > 0 {
+            let s = svc.clone();
+            let h = std::thread::Builder::new()
+                .name("gy-scrub".to_string())
+                .spawn(move || s.scrub_loop())
+                .expect("spawn scrubber thread");
+            *svc.scrubber.lock().unwrap() = Some(h);
+        }
         svc
+    }
+
+    /// Background scrubber: every `scrub_every_secs`, sweep all open
+    /// images through [`crate::graph::scrub::scrub_image`], rate-limited
+    /// and cancellable, feeding counters into the substrate stats so
+    /// health/metrics show latent corruption without waiting for a job
+    /// to stumble over it.
+    fn scrub_loop(&self) {
+        let interval = Duration::from_secs(self.cfg.scrub_every_secs);
+        let opts = crate::graph::scrub::ScrubOptions {
+            rate_limit_bytes_per_sec: self.cfg.scrub_rate_mb * 1024 * 1024,
+            cancel: Some(self.scrub_stop.clone()),
+        };
+        loop {
+            // sleep in small slices so shutdown never waits a full interval
+            let wake = Instant::now() + interval;
+            while Instant::now() < wake {
+                if self.scrub_stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50).min(interval));
+            }
+            let mut cancelled = false;
+            for base in self.registry.open_image_bases() {
+                if self.scrub_stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                match crate::graph::scrub::scrub_image(
+                    &base,
+                    &opts,
+                    Some(self.registry.stats()),
+                ) {
+                    Ok(reports) => {
+                        cancelled |= reports.iter().any(|r| r.cancelled);
+                        for r in &reports {
+                            if !r.bad_pages.is_empty() {
+                                eprintln!(
+                                    "graphyti: scrub found {} bad page(s) in {}: {:?}",
+                                    r.bad_pages.len(),
+                                    r.path.display(),
+                                    r.bad_pages
+                                );
+                            }
+                        }
+                    }
+                    // an unreadable image is a scrub finding, not a
+                    // reason to kill the scrubber
+                    Err(e) => eprintln!(
+                        "graphyti: scrub of {} failed: {e:#}",
+                        base.display()
+                    ),
+                }
+            }
+            if !cancelled {
+                self.scrub_sweeps.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Fold the WAL's replayed job table back into the scheduler:
@@ -655,6 +747,10 @@ impl GraphService {
         m.counter("io_permanent_errors", io.permanent_errors);
         m.counter("io_backoff_waits", io.backoff_waits);
         m.counter("io_backoff_us", io.backoff_us);
+        m.counter("io_checksum_failures", io.checksum_failures);
+        m.counter("io_quarantined_pages", io.quarantined_pages);
+        m.counter("io_pages_scrubbed", io.pages_scrubbed);
+        m.counter("scrub_sweeps", self.scrub_sweeps.load(Ordering::Relaxed));
         m.hist("io_fetch_latency_us", io.latency.fetch);
         m.hist("io_wait_latency_us", io.latency.wait);
         m.hist("io_pread_latency_us", io.latency.pread);
@@ -768,6 +864,7 @@ impl GraphService {
     /// the executor threads. Queued jobs are left `Queued` (reported by
     /// status, never run — though with a WAL they replay next start).
     pub fn shutdown(&self) {
+        self.stop_scrubber();
         {
             let mut inner = self.inner.lock().unwrap();
             inner.shutdown = true;
@@ -784,6 +881,15 @@ impl GraphService {
         }
     }
 
+    /// Stop and join the background scrubber (idempotent; sweeps in
+    /// flight stop within one chunk).
+    fn stop_scrubber(&self) {
+        self.scrub_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.scrubber.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
     /// Graceful shutdown: stop accepting work, let running jobs drain
     /// to their next round boundary (writing a final checkpoint when
     /// enabled), bounded by `drain`. Jobs that wind down in time are
@@ -791,6 +897,7 @@ impl GraphService {
     /// running at the deadline — so the next start resumes them from
     /// their checkpoint instead of redoing the work.
     pub fn shutdown_graceful(&self, drain: Duration) {
+        self.stop_scrubber();
         self.draining.store(true, Ordering::SeqCst);
         {
             let mut inner = self.inner.lock().unwrap();
@@ -855,6 +962,10 @@ impl GraphService {
             resumed_jobs: self.resumed_jobs.load(Ordering::Relaxed),
             io_transient_errors: io.transient_errors,
             io_permanent_errors: io.permanent_errors,
+            checksum_failures: io.checksum_failures,
+            quarantined_pages: io.quarantined_pages,
+            pages_scrubbed: io.pages_scrubbed,
+            scrub_sweeps: self.scrub_sweeps.load(Ordering::Relaxed),
         }
     }
 
@@ -1124,6 +1235,60 @@ mod tests {
         let id = svc.submit(ok).unwrap();
         let st = svc.wait(id, Duration::from_secs(60)).unwrap();
         assert_eq!(st.state, JobState::Done, "{st:?}");
+        svc.shutdown();
+        cleanup(&base);
+    }
+
+    #[test]
+    fn deadline_fails_exactly_the_overrunning_job() {
+        let base = build("deadline");
+        let svc = GraphService::start(ServiceConfig {
+            cache_mb: 1,
+            exec_threads: 2,
+            ..Default::default()
+        });
+        // negative threshold => never converges; only the deadline stops it
+        let mut runaway = JobRequest::new(base.clone(), "pagerank");
+        runaway.overrides.push(("threshold".into(), "-1".into()));
+        runaway.overrides.push(("timeout_ms".into(), "300".into()));
+        let runaway_id = svc.submit(runaway).unwrap();
+        let ok_id = svc.submit(JobRequest::new(base.clone(), "wcc")).unwrap();
+        let r = svc.wait(runaway_id, Duration::from_secs(120)).unwrap();
+        assert_eq!(r.state, JobState::Failed, "{r:?}");
+        assert!(
+            r.error.as_deref().unwrap_or("").contains("deadline exceeded"),
+            "{r:?}"
+        );
+        let ok = svc.wait(ok_id, Duration::from_secs(120)).unwrap();
+        assert_eq!(ok.state, JobState::Done, "co-tenant unaffected: {ok:?}");
+        svc.shutdown();
+        cleanup(&base);
+    }
+
+    #[test]
+    fn background_scrubber_sweeps_open_images() {
+        let base = build("scrub");
+        let svc = GraphService::start(ServiceConfig {
+            cache_mb: 1,
+            scrub_every_secs: 1,
+            scrub_rate_mb: 0, // unthrottled: the image is tiny
+            ..Default::default()
+        });
+        // open the image by running a job against it
+        let id = svc.submit(JobRequest::new(base.clone(), "degree")).unwrap();
+        let st = svc.wait(id, Duration::from_secs(60)).unwrap();
+        assert_eq!(st.state, JobState::Done, "{st:?}");
+        let t0 = Instant::now();
+        loop {
+            let h = svc.health();
+            if h.scrub_sweeps >= 1 {
+                assert!(h.pages_scrubbed > 0, "{h:?}");
+                assert_eq!(h.checksum_failures, 0, "clean image: {h:?}");
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "no sweep: {h:?}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
         svc.shutdown();
         cleanup(&base);
     }

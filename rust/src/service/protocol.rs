@@ -77,6 +77,9 @@ pub fn snapshot_to_json(io: &IoStatsSnapshot) -> Json {
         ("permanent_errors", Json::u(io.permanent_errors)),
         ("backoff_waits", Json::u(io.backoff_waits)),
         ("backoff_us", Json::u(io.backoff_us)),
+        ("checksum_failures", Json::u(io.checksum_failures)),
+        ("quarantined_pages", Json::u(io.quarantined_pages)),
+        ("pages_scrubbed", Json::u(io.pages_scrubbed)),
         (
             "latency",
             Json::obj(vec![
@@ -144,6 +147,10 @@ pub fn health_to_json(h: &Health) -> Json {
         ("resumed_jobs", Json::u(h.resumed_jobs)),
         ("io_transient_errors", Json::u(h.io_transient_errors)),
         ("io_permanent_errors", Json::u(h.io_permanent_errors)),
+        ("checksum_failures", Json::u(h.checksum_failures)),
+        ("quarantined_pages", Json::u(h.quarantined_pages)),
+        ("pages_scrubbed", Json::u(h.pages_scrubbed)),
+        ("scrub_sweeps", Json::u(h.scrub_sweeps)),
     ])
 }
 

@@ -108,6 +108,28 @@ impl GraphRegistry {
     pub fn resident_index_bytes(&self) -> u64 {
         self.graphs.lock().unwrap().values().map(|g| g.resident_bytes()).sum()
     }
+
+    /// Base paths (no `.gy-idx` / `.gy-adj` extension) of every open
+    /// image, sorted for deterministic iteration. The background
+    /// scrubber sweeps this set; entries registered under a raw path
+    /// (failed canonicalization) are returned as-is.
+    pub fn open_image_bases(&self) -> Vec<PathBuf> {
+        let mut bases: Vec<PathBuf> = self
+            .graphs
+            .lock()
+            .unwrap()
+            .keys()
+            .map(|k| {
+                if k.extension().is_some_and(|e| e == "gy-idx") {
+                    k.with_extension("")
+                } else {
+                    k.clone()
+                }
+            })
+            .collect();
+        bases.sort();
+        bases
+    }
 }
 
 /// A job's view of a shared [`SemGraph`]: same data plane, private

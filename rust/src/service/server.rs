@@ -87,6 +87,65 @@ impl Drop for ServiceServer {
     }
 }
 
+/// Longest request line the server will buffer. Every legitimate
+/// request is well under this; an unbounded `read_line` would let one
+/// newline-free connection grow the buffer without limit.
+pub const MAX_REQUEST_LINE: usize = 1 << 20;
+
+enum LineRead {
+    /// Connection closed cleanly.
+    Eof,
+    /// One complete line (newline stripped) in the buffer.
+    Line,
+    /// Line exceeded the cap; the remainder was drained to its newline
+    /// (or EOF) so the stream is re-synchronized for the next request.
+    Oversized,
+}
+
+/// Read one newline-terminated line of at most `max` bytes into `buf`.
+fn read_bounded_line<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    loop {
+        let budget = (max + 1).saturating_sub(buf.len()) as u64;
+        let n = (&mut *r).take(budget).read_until(b'\n', buf)?;
+        if buf.last() == Some(&b'\n') {
+            buf.pop();
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(LineRead::Line);
+        }
+        if n == 0 {
+            // EOF with no newline: a nonempty tail still dispatches
+            return Ok(if buf.is_empty() { LineRead::Eof } else { LineRead::Line });
+        }
+        if buf.len() > max {
+            // over the cap: skip ahead to the next newline so one huge
+            // request poisons only itself, not the rest of the stream
+            loop {
+                let available = r.fill_buf()?;
+                if available.is_empty() {
+                    return Ok(LineRead::Oversized);
+                }
+                match available.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        r.consume(i + 1);
+                        return Ok(LineRead::Oversized);
+                    }
+                    None => {
+                        let len = available.len();
+                        r.consume(len);
+                    }
+                }
+            }
+        }
+    }
+}
+
 fn handle_conn(
     svc: &Arc<GraphService>,
     stream: TcpStream,
@@ -94,13 +153,29 @@ fn handle_conn(
     addr: SocketAddr,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::with_capacity(1024);
+    loop {
+        match read_bounded_line(&mut reader, &mut buf, MAX_REQUEST_LINE)? {
+            LineRead::Eof => break,
+            LineRead::Oversized => {
+                // structured refusal, connection stays usable
+                let resp =
+                    err_obj(&format!("request line exceeds {MAX_REQUEST_LINE} bytes"));
+                writeln!(writer, "{}", resp.encode())?;
+                writer.flush()?;
+                continue;
+            }
+            LineRead::Line => {}
+        }
+        // malformed (non-UTF-8 or non-JSON) input falls through to
+        // dispatch, which answers with a structured error
+        let line = String::from_utf8_lossy(&buf);
+        let line = line.trim();
+        if line.is_empty() {
             continue;
         }
-        let (resp, shutdown) = dispatch(svc, line.trim());
+        let (resp, shutdown) = dispatch(svc, line);
         writeln!(writer, "{}", resp.encode())?;
         writer.flush()?;
         if shutdown {
@@ -226,6 +301,87 @@ fn dispatch_inner(svc: &Arc<GraphService>, line: &str) -> crate::Result<(Json, b
         "shutdown" => (ok_obj(vec![]), true),
         other => (err_obj(&format!("unknown op '{other}'")), false),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::exec::ServiceConfig;
+
+    fn roundtrip_line(
+        writer: &mut TcpStream,
+        reader: &mut BufReader<TcpStream>,
+        send: &[u8],
+    ) -> Json {
+        writer.write_all(send).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    }
+
+    #[test]
+    fn malformed_and_oversized_requests_get_structured_errors() {
+        let svc = GraphService::start(ServiceConfig::default());
+        let server = ServiceServer::start(svc.clone(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+
+        // not JSON at all => structured error, connection survives
+        let j = roundtrip_line(&mut writer, &mut reader, b"this is not json");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(j.get("error").and_then(Json::as_str).is_some(), "{j:?}");
+
+        // over the line cap => structured refusal, stream re-syncs
+        let huge = vec![b'x'; MAX_REQUEST_LINE + 4096];
+        let j = roundtrip_line(&mut writer, &mut reader, &huge);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(
+            j.get("error").and_then(Json::as_str).unwrap_or("").contains("exceeds"),
+            "{j:?}"
+        );
+
+        // the very next request on the same connection still works
+        let j = roundtrip_line(&mut writer, &mut reader, br#"{"op":"health"}"#);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j:?}");
+        assert_eq!(
+            j.get("health").and_then(|h| h.get("status")).and_then(Json::as_str),
+            Some("ok")
+        );
+
+        server.stop();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bounded_line_reader_edges() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+        // exact-cap line is accepted
+        let mut r = BufReader::new(Cursor::new([vec![b'a'; 10], b"\n".to_vec()].concat()));
+        assert!(matches!(read_bounded_line(&mut r, &mut buf, 10).unwrap(), LineRead::Line));
+        assert_eq!(buf.len(), 10);
+        // one byte over drains to the newline and reports oversized,
+        // leaving the following line intact
+        let mut r =
+            BufReader::new(Cursor::new([vec![b'a'; 11], b"\nok\n".to_vec()].concat()));
+        assert!(matches!(
+            read_bounded_line(&mut r, &mut buf, 10).unwrap(),
+            LineRead::Oversized
+        ));
+        assert!(matches!(read_bounded_line(&mut r, &mut buf, 10).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"ok");
+        assert!(matches!(read_bounded_line(&mut r, &mut buf, 10).unwrap(), LineRead::Eof));
+        // CRLF stripped; EOF-without-newline tail still yields the line
+        let mut r = BufReader::new(Cursor::new(b"hi\r\nbye".to_vec()));
+        assert!(matches!(read_bounded_line(&mut r, &mut buf, 10).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"hi");
+        assert!(matches!(read_bounded_line(&mut r, &mut buf, 10).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"bye");
+    }
 }
 
 /// One-shot client: connect, send one request line, read one response

@@ -294,6 +294,9 @@ impl JobWal {
             f.write_all(line.as_bytes())?;
             f.sync_all()?;
             std::fs::rename(&tmp, &self.path)?;
+            // the rename itself is durable only once the parent
+            // directory entry is synced
+            crate::util::fsync_parent_dir(&self.path);
             Ok(())
         })();
         if ok.is_ok() {

@@ -11,6 +11,7 @@ pub mod atomic_f64;
 pub mod backoff;
 pub mod bench;
 pub mod bitmap;
+pub mod crc32c;
 pub mod hist;
 pub mod json;
 pub mod metrics;
@@ -23,12 +24,31 @@ pub use atomic_f64::{atomic_f64_vec, AtomicF64};
 pub use backoff::Backoff;
 pub use bench::{bench, BenchResult};
 pub use bitmap::AtomicBitmap;
+pub use crc32c::{crc32c, crc32c_update};
 pub use hist::{HistSummary, Histogram};
 pub use json::Json;
 pub use metrics::MetricsRegistry;
 pub use prefetch::prefetch_read;
 pub use prng::XorShift;
 pub use shared_vec::SharedVec;
+
+/// Fsync the directory containing `path`, making a just-published
+/// rename durable (rename alone persists the name only once the parent
+/// directory's metadata hits stable storage). Best-effort: errors are
+/// swallowed — the file's own `sync_all` already guarantees content
+/// durability, this closes the crash window on the directory entry.
+pub fn fsync_parent_dir(path: &std::path::Path) {
+    if let Some(parent) = path.parent() {
+        let dir = if parent.as_os_str().is_empty() {
+            std::path::Path::new(".")
+        } else {
+            parent
+        };
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
 
 /// Format a byte count human-readably (KiB/MiB/GiB).
 pub fn fmt_bytes(b: u64) -> String {

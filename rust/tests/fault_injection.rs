@@ -80,7 +80,15 @@ fn transient_read_errors_are_retried_transparently() {
     let base = build_image(n, &edges, "eio");
     let io = IoConfig {
         threads: 2,
-        fault: Some(FaultPlan { seed: 3, jitter_us: 0, reorder: false, eio_period: 3, fail_path: None }),
+        fault: Some(FaultPlan {
+            seed: 3,
+            jitter_us: 0,
+            reorder: false,
+            eio_period: 3,
+            fail_path: None,
+            flip_period: 0,
+            flip_path: None,
+        }),
         ..Default::default()
     };
     let ecfg = EngineConfig { workers: 2, batch: 64, fetch_window: 2, ..Default::default() };
@@ -108,7 +116,15 @@ fn overlapped_fetch_beats_forced_sync_under_injected_latency() {
     let io = IoConfig {
         threads: 4,
         io_delay_us: 400,
-        fault: Some(FaultPlan { seed: 11, jitter_us: 200, reorder: true, eio_period: 0, fail_path: None }),
+        fault: Some(FaultPlan {
+            seed: 11,
+            jitter_us: 200,
+            reorder: true,
+            eio_period: 0,
+            fail_path: None,
+            flip_period: 0,
+            flip_path: None,
+        }),
         ..Default::default()
     };
     let run = |window: usize| {

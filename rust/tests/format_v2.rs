@@ -213,14 +213,20 @@ fn v2_index_decodes_from_disk_with_section_lengths() {
     let idx = GraphIndex::decode(&std::fs::read(base.with_extension("gy-idx")).unwrap()).unwrap();
     assert_eq!(idx.header().version, VERSION_V2);
     let adj = std::fs::read(base.with_extension("gy-adj")).unwrap();
-    // the last vertex's record must end exactly at EOF: stored section
-    // lengths and offsets tile the adjacency file with no gaps
+    // the last vertex's record must end exactly at the end of the data
+    // region: stored section lengths and offsets tile the adjacency
+    // data with no gaps (the checksum footer, when present, sits after)
+    let data_len = if idx.header().checksums {
+        graphyti::graph::format::ChecksumFooter::from_bytes(&adj).unwrap().data_len
+    } else {
+        adj.len() as u64
+    };
     let mut expected_off = 0u64;
     for v in 0..n as VertexId {
         let (off, len) = idx.byte_range(v, EdgeRequest::Both);
         assert_eq!(off, expected_off, "records must be contiguous at v={v}");
         expected_off = off + len as u64;
     }
-    assert_eq!(expected_off, adj.len() as u64);
+    assert_eq!(expected_off, data_len);
     cleanup(&base);
 }

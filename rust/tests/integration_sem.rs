@@ -186,13 +186,29 @@ fn corrupted_index_is_rejected() {
 fn truncated_adjacency_fails_loudly_not_wrongly() {
     let n = 256;
     let edges = gen::rmat(8, 3000, 3);
+    // default (checksummed) image: truncation clips the checksum
+    // footer, so the image refuses to open at all — failure at the
+    // earliest possible moment
     let base = build_image(n, &edges, true, "truncadj");
-    // cut the adjacency file in half: fetches past EOF must error (the
-    // index promises more data than the file holds)
     let adj = base.with_extension("gy-adj");
     let bytes = std::fs::read(&adj).unwrap();
     std::fs::write(&adj, &bytes[..bytes.len() / 2]).unwrap();
     let cfg = tiny_cache_cfg();
+    assert!(
+        SemGraph::open(&base, 64 * 4096, cfg.io()).is_err(),
+        "a truncated checksummed image must fail to open"
+    );
+    cleanup(&base);
+    // legacy (unfooted) image: opens fine, but fetches past EOF must
+    // error (the index promises more data than the file holds)
+    let base = std::env::temp_dir()
+        .join(format!("graphyti-itest-{}-truncadj-plain", std::process::id()));
+    let mut b = GraphBuilder::new(n, true);
+    b.add_edges(&edges).checksums(false);
+    b.build_files(&base).unwrap();
+    let adj = base.with_extension("gy-adj");
+    let bytes = std::fs::read(&adj).unwrap();
+    std::fs::write(&adj, &bytes[..bytes.len() / 2]).unwrap();
     let g = SemGraph::open(&base, 64 * 4096, cfg.io()).unwrap();
     // some vertex's record now lies past EOF
     let mut saw_error = false;

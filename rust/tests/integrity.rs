@@ -1,0 +1,368 @@
+//! Verified-storage integration: per-page checksums must turn silent
+//! bit rot into loud, job-scoped failures.
+//!
+//! The integrity contract under test:
+//!
+//! * **Detection** — a single flipped bit anywhere in a checksummed
+//!   image (either file, either format version, any worker count) fails
+//!   the read with a checksum error; it never reaches an algorithm as
+//!   plausible-but-wrong edge data.
+//! * **Blast radius** — the failure is confined to the job that touched
+//!   the damage: a concurrent job on a healthy graph in the same
+//!   service completes oracle-correct, and the bad page stays
+//!   quarantined for every later job.
+//! * **Scrub** — `scrub_image` deterministically reports exactly the
+//!   damaged pages, sweep after sweep.
+//! * **Compatibility** — legacy unfooted images still open and run;
+//!   checksummed ↔ plain conversion round-trips the data bytes
+//!   identically.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use graphyti::algs::bfs::bfs;
+use graphyti::algs::oracle;
+use graphyti::algs::wcc::wcc;
+use graphyti::engine::EngineConfig;
+use graphyti::graph::builder::{convert_image_opts, GraphBuilder};
+use graphyti::graph::csr::Csr;
+use graphyti::graph::format::{
+    footer_len, ChecksumFooter, EdgeRequest, VERSION_V1, VERSION_V2,
+};
+use graphyti::graph::gen;
+use graphyti::graph::scrub::{scrub_image, ScrubOptions};
+use graphyti::graph::source::{EdgeSource, SemGraph};
+use graphyti::safs::{FaultPlan, IoConfig};
+use graphyti::service::{GraphService, JobRequest, JobState, ServiceConfig};
+use graphyti::VertexId;
+
+fn build_image(
+    n: usize,
+    edges: &[(VertexId, VertexId)],
+    version: u32,
+    checksums: bool,
+    tag: &str,
+) -> PathBuf {
+    let base = std::env::temp_dir()
+        .join(format!("graphyti-integ-{}-{tag}", std::process::id()));
+    let mut b = GraphBuilder::new(n, true);
+    b.add_edges(edges).format_version(version).checksums(checksums);
+    b.build_files(&base).unwrap();
+    base
+}
+
+fn cleanup(base: &PathBuf) {
+    let _ = std::fs::remove_file(base.with_extension("gy-idx"));
+    let _ = std::fs::remove_file(base.with_extension("gy-adj"));
+}
+
+/// Flip one bit of the file in place — the smallest possible storage
+/// fault, and exactly what a crc32c per-page footer must catch.
+fn flip_bit(path: &Path, byte: u64, bit: u8) {
+    use std::os::unix::fs::FileExt;
+    let f = std::fs::OpenOptions::new().read(true).write(true).open(path).unwrap();
+    let mut b = [0u8; 1];
+    f.read_exact_at(&mut b, byte).unwrap();
+    b[0] ^= 1 << bit;
+    f.write_all_at(&b, byte).unwrap();
+    f.sync_all().unwrap();
+}
+
+/// Checksummed data length of the image's adjacency file (excludes the
+/// footer), so tests can place flips inside real data pages.
+fn adj_data_len(base: &PathBuf) -> u64 {
+    let f = std::fs::File::open(base.with_extension("gy-adj")).unwrap();
+    let len = f.metadata().unwrap().len();
+    ChecksumFooter::read_from(&f, len).unwrap().data_len
+}
+
+fn io() -> IoConfig {
+    IoConfig { threads: 2, ..Default::default() }
+}
+
+fn ncomponents(labels: &[VertexId]) -> usize {
+    let mut ls: Vec<VertexId> = labels.to_vec();
+    ls.sort_unstable();
+    ls.dedup();
+    ls.len()
+}
+
+/// The corruption matrix: one flipped bit in an adjacency page, across
+/// both format versions and 1/2/8 workers. Every cell must (a) fail the
+/// run with a checksum error rather than converge on garbage, (b) leave
+/// the page quarantined on the same open — later reads fast-fail
+/// without re-touching disk — and (c) count the damage in the substrate
+/// stats.
+#[test]
+fn disk_bit_flip_fails_the_run_and_quarantines_across_formats_and_workers() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 17);
+    for version in [VERSION_V1, VERSION_V2] {
+        let base = build_image(n, &edges, version, true, &format!("matrix-v{version}"));
+        let data_len = adj_data_len(&base);
+        assert!(data_len > 4096 + 300, "graph too small to damage page 1: {data_len}");
+        flip_bit(&base.with_extension("gy-adj"), 4096 + 123, 5);
+
+        for workers in [1usize, 2, 8] {
+            let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+            let cfg = EngineConfig { workers, batch: 64, ..Default::default() };
+            let (_labels, report) = wcc(&g, &cfg);
+            let err = report.failure.unwrap_or_else(|| {
+                panic!("v{version} workers={workers}: corrupt page must fail the run")
+            });
+            assert!(
+                err.contains("checksum mismatch") || err.contains("quarantined"),
+                "v{version} workers={workers}: {err}"
+            );
+
+            // quarantine holds on this open: the damaged page refuses
+            // service forever, everything else still reads fine
+            let mut refused = 0usize;
+            for v in 0..n as VertexId {
+                if let Err(e) = g.fetch(v, EdgeRequest::Both) {
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("quarantined"), "unexpected error: {msg}");
+                    refused += 1;
+                }
+            }
+            assert!(refused > 0, "some vertex must live on the quarantined page");
+            assert!(refused < n, "damage must not spread beyond the bad page");
+
+            let s = g.adj_file().stats().snapshot();
+            // the first mismatch plus the failed corrective re-read
+            assert!(s.checksum_failures >= 2, "{s:?}");
+            assert_eq!(s.quarantined_pages, 1, "{s:?}");
+        }
+        cleanup(&base);
+    }
+}
+
+/// The index is verified in full at open (it is RAM-resident and read
+/// once), so a flipped index bit must fail `SemGraph::open` before any
+/// job can run on the graph.
+#[test]
+fn index_corruption_is_detected_eagerly_at_open() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 29);
+    let base = build_image(n, &edges, VERSION_V1, true, "idxflip");
+    // past the 40-byte header, well inside the offsets column
+    flip_bit(&base.with_extension("gy-idx"), 100, 2);
+    let err = SemGraph::open(&base, 64 * 4096, io()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+    cleanup(&base);
+}
+
+/// Single-job blast radius through the whole service stack: the job on
+/// the damaged image fails with a checksum error, the co-tenant on the
+/// healthy image converges oracle-correct, a second job on the damaged
+/// image fast-fails against the quarantine (no new quarantined pages),
+/// and the health op reports the damage.
+#[test]
+fn bit_flip_fails_exactly_the_owning_job_while_cotenant_converges() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 23);
+    let bad = build_image(n, &edges, VERSION_V2, true, "svc-bad");
+    let good = build_image(n, &edges, VERSION_V2, true, "svc-good");
+    assert!(adj_data_len(&bad) > 4096 + 100);
+    flip_bit(&bad.with_extension("gy-adj"), 4096 + 77, 3);
+
+    let svc = GraphService::start(ServiceConfig {
+        cache_mb: 1,
+        exec_threads: 2,
+        ..Default::default()
+    });
+    let bad_id = svc.submit(JobRequest::new(bad.clone(), "wcc")).unwrap();
+    let good_id = svc.submit(JobRequest::new(good.clone(), "wcc")).unwrap();
+
+    let b = svc.wait(bad_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(b.state, JobState::Failed, "{b:?}");
+    let err = b.error.as_deref().unwrap_or("");
+    assert!(err.contains("quarantined"), "failure must name the cause: {err}");
+
+    let g = svc.wait(good_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(g.state, JobState::Done, "co-tenant must be unaffected: {g:?}");
+    let csr = Csr::from_edges(n, &edges, true);
+    let want = format!("wcc: {} components", ncomponents(&oracle::wcc(&csr)));
+    assert_eq!(g.summary.as_deref(), Some(want.as_str()), "co-tenant must be correct");
+
+    let before = svc.substrate_stats();
+    assert!(before.checksum_failures >= 2, "{before:?}");
+    assert!(before.quarantined_pages >= 1, "{before:?}");
+
+    // quarantine outlives the job: the next job on the same image fails
+    // against the quarantined page without growing the quarantine
+    let again_id = svc.submit(JobRequest::new(bad.clone(), "wcc")).unwrap();
+    let a = svc.wait(again_id, Duration::from_secs(120)).unwrap();
+    assert_eq!(a.state, JobState::Failed, "{a:?}");
+    assert!(a.error.as_deref().unwrap_or("").contains("quarantined"), "{a:?}");
+    let after = svc.substrate_stats();
+    assert_eq!(after.quarantined_pages, before.quarantined_pages, "{after:?}");
+
+    let h = svc.health();
+    assert_eq!(h.checksum_failures, after.checksum_failures);
+    assert!(h.quarantined_pages >= 1, "{h:?}");
+    svc.shutdown();
+    cleanup(&bad);
+    cleanup(&good);
+}
+
+/// Seeded in-memory bit-flip injection: with `flip_period: 1` on the
+/// adjacency path every pool read is corrupted — including the
+/// corrective re-read — so verify-on-read must detect, quarantine, and
+/// fail the run. The disk itself is untouched: a clean re-open of the
+/// same image converges oracle-correct and scrubs clean.
+#[test]
+fn injected_bit_flips_are_detected_and_leave_the_disk_clean() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 41);
+    let base = build_image(n, &edges, VERSION_V1, true, "inject");
+    let cfg = EngineConfig { workers: 2, batch: 64, ..Default::default() };
+
+    // CI's corruption-chaos step sweeps several seeds; detection and
+    // quarantine must hold whichever bits the plan picks
+    let seed: u64 = std::env::var("GRAPHYTI_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    let faulty = IoConfig {
+        threads: 2,
+        fault: Some(FaultPlan {
+            seed,
+            jitter_us: 0,
+            reorder: false,
+            eio_period: 0,
+            fail_path: None,
+            flip_period: 1,
+            flip_path: Some(Arc::from("gy-adj")),
+        }),
+        ..Default::default()
+    };
+    let g = SemGraph::open(&base, 64 * 4096, faulty).unwrap();
+    let (_labels, report) = wcc(&g, &cfg);
+    let err = report.failure.expect("every-read flips must fail the run");
+    assert!(err.contains("checksum mismatch") || err.contains("quarantined"), "{err}");
+    let s = g.adj_file().stats().snapshot();
+    assert!(s.checksum_failures >= 2, "{s:?}");
+    assert!(s.quarantined_pages >= 1, "{s:?}");
+
+    // the injection lived in memory only: the image on disk is intact
+    let g2 = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    let (labels, r2) = wcc(&g2, &cfg);
+    assert!(r2.failure.is_none(), "{:?}", r2.failure);
+    let csr = Csr::from_edges(n, &edges, true);
+    assert_eq!(labels, oracle::wcc(&csr));
+
+    let opts = ScrubOptions { rate_limit_bytes_per_sec: 0, cancel: None };
+    for r in scrub_image(&base, &opts, None).unwrap() {
+        assert!(r.bad_pages.is_empty(), "disk must be clean: {r:?}");
+    }
+    cleanup(&base);
+}
+
+/// Scrub determinism: flips in two adjacency pages and one index page
+/// are reported — exactly those pages, in order — on every sweep.
+#[test]
+fn scrub_reports_every_injected_flip_deterministically() {
+    let n = 1024;
+    let edges = gen::rmat(10, 9000, 11);
+    let base = build_image(n, &edges, VERSION_V2, true, "scrub");
+    let data_len = adj_data_len(&base);
+    assert!(data_len > 2 * 4096 + 200, "need at least three adj pages: {data_len}");
+
+    flip_bit(&base.with_extension("gy-adj"), 100, 0);
+    flip_bit(&base.with_extension("gy-adj"), 2 * 4096 + 100, 7);
+    flip_bit(&base.with_extension("gy-idx"), 100, 4);
+
+    let opts = ScrubOptions { rate_limit_bytes_per_sec: 0, cancel: None };
+    for sweep in 0..2 {
+        let reports = scrub_image(&base, &opts, None).unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert!(!r.skipped && !r.cancelled, "sweep {sweep}: {r:?}");
+            let ext = r.path.extension().unwrap().to_str().unwrap();
+            match ext {
+                "gy-idx" => assert_eq!(r.bad_pages, vec![0], "sweep {sweep}"),
+                "gy-adj" => assert_eq!(r.bad_pages, vec![0, 2], "sweep {sweep}"),
+                other => panic!("unexpected scrub target {other}"),
+            }
+            assert!(r.pages_scrubbed >= r.bad_pages.len() as u64);
+        }
+    }
+    cleanup(&base);
+}
+
+/// Legacy compatibility: an image written without footers (the pre-
+/// checksum format, byte-for-byte) opens through the same code path,
+/// runs oracle-correct, and never trips a checksum counter. Scrub
+/// skips it instead of erroring.
+#[test]
+fn legacy_unfooted_images_open_and_run_unchanged() {
+    let n = 512;
+    let edges = gen::rmat(9, 4000, 53);
+    let base = build_image(n, &edges, VERSION_V1, false, "legacy");
+    let g = SemGraph::open(&base, 64 * 4096, io()).unwrap();
+    assert!(!g.index().header().checksums);
+
+    let csr = Csr::from_edges(n, &edges, true);
+    let (lv, report) = bfs(&g, 0, &EngineConfig { workers: 2, ..Default::default() });
+    assert!(report.failure.is_none());
+    assert_eq!(lv, oracle::bfs_levels(&csr, 0));
+    let s = g.adj_file().stats().snapshot();
+    assert_eq!(s.checksum_failures, 0, "{s:?}");
+    assert_eq!(s.quarantined_pages, 0, "{s:?}");
+
+    let opts = ScrubOptions { rate_limit_bytes_per_sec: 0, cancel: None };
+    for r in scrub_image(&base, &opts, None).unwrap() {
+        assert!(r.skipped, "unfooted files are skipped, not failed: {r:?}");
+        assert_eq!(r.pages_scrubbed, 0);
+    }
+    cleanup(&base);
+}
+
+/// Checksummed ↔ plain conversion round-trips byte-identically in both
+/// format versions: adding footers only appends (data region unchanged
+/// except the header flag), and stripping them restores the original
+/// plain files exactly.
+#[test]
+fn checksummed_and_plain_images_round_trip_byte_identically() {
+    for version in [VERSION_V1, VERSION_V2] {
+        let n = 512;
+        let edges = gen::rmat(9, 4000, 61);
+        let plain = build_image(n, &edges, version, false, &format!("rt-plain-v{version}"));
+        let cs = std::env::temp_dir()
+            .join(format!("graphyti-integ-{}-rt-cs-v{version}", std::process::id()));
+        let back = std::env::temp_dir()
+            .join(format!("graphyti-integ-{}-rt-back-v{version}", std::process::id()));
+
+        convert_image_opts(&plain, &cs, version, true).unwrap();
+        // the checksummed adjacency is the plain bytes plus a footer
+        let plain_adj = std::fs::read(plain.with_extension("gy-adj")).unwrap();
+        let cs_adj = std::fs::read(cs.with_extension("gy-adj")).unwrap();
+        assert_eq!(&cs_adj[..plain_adj.len()], &plain_adj[..], "v{version}");
+        assert_eq!(
+            cs_adj.len() as u64,
+            plain_adj.len() as u64 + footer_len(plain_adj.len() as u64),
+            "v{version}"
+        );
+        let g = SemGraph::open(&cs, 64 * 4096, io()).unwrap();
+        assert!(g.index().header().checksums, "v{version}");
+
+        // stripping the footers restores the plain image exactly
+        convert_image_opts(&cs, &back, version, false).unwrap();
+        assert_eq!(
+            std::fs::read(plain.with_extension("gy-idx")).unwrap(),
+            std::fs::read(back.with_extension("gy-idx")).unwrap(),
+            "v{version}"
+        );
+        assert_eq!(
+            std::fs::read(back.with_extension("gy-adj")).unwrap(),
+            plain_adj,
+            "v{version}"
+        );
+        for b in [&plain, &cs, &back] {
+            cleanup(b);
+        }
+    }
+}

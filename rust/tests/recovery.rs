@@ -408,6 +408,8 @@ fn permanent_io_failure_fails_job_cleanly_while_healthy_job_completes() {
             reorder: false,
             eio_period: 0,
             fail_path: Some(Arc::from("badio")),
+            flip_period: 0,
+            flip_path: None,
         }),
         ..Default::default()
     });
